@@ -1,0 +1,22 @@
+//! Multi-task adapter serving demo: one shared frozen backbone, per-task
+//! QR-LoRA adapters hot-swapped by a batching router.
+//!
+//! ```text
+//! cargo run --release --example adapter_server -- --requests 200
+//! ```
+
+use qrlora::experiments::ExpConfig;
+use qrlora::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let cfg = ExpConfig {
+        preset: args.str_or("preset", "tiny").to_string(),
+        pretrain_steps: args.usize_or("pretrain-steps", 600)?,
+        warmup_steps: args.usize_or("warmup-steps", 500)?,
+        steps: args.usize_or("steps", 150)?,
+        ..ExpConfig::default()
+    };
+    qrlora::server::demo(&cfg, args.usize_or("requests", 200)?)
+}

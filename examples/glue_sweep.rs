@@ -1,0 +1,25 @@
+//! Mini Table-3: compare all four methods on a chosen subset of the
+//! synthetic GLUE suite.
+//!
+//! ```text
+//! cargo run --release --example glue_sweep -- --tasks sst2,mnli --steps 300
+//! ```
+
+use qrlora::experiments::{self, ExpConfig};
+use qrlora::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[])?;
+    let cfg = ExpConfig {
+        preset: args.str_or("preset", "tiny").to_string(),
+        pretrain_steps: args.usize_or("pretrain-steps", 600)?,
+        warmup_steps: args.usize_or("warmup-steps", 500)?,
+        steps: args.usize_or("steps", 300)?,
+        train_examples: args.usize_or("train-examples", 5_000)?,
+        ..ExpConfig::default()
+    };
+    let tasks = args.list_str("tasks", &["sst2", "mnli"]);
+    let refs: Vec<&str> = tasks.iter().map(|s| s.as_str()).collect();
+    experiments::table3(&cfg, &refs)
+}

@@ -1,0 +1,163 @@
+"""AOT lowering driver: JAX → HLO text + manifest.json.
+
+Run once at build time (`make artifacts`); the rust coordinator is
+self-contained afterwards. HLO *text* is the interchange format — jax ≥ 0.5
+serializes HloModuleProto with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+The manifest records, per artifact, the exact ordered input/output specs
+(name, shape, dtype, role) so the rust BufferStore can bind buffers by name
+and alias outputs back onto inputs between steps.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.presets import PRESETS
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False: every program in this project returns exactly ONE
+    # array (the state-vector protocol), and the rust `execute_b` hot path
+    # crashes in xla_extension 0.5.1's ToLiteralSync when the root is a
+    # tuple. A plain array root avoids the tuple entirely.
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn, input_specs):
+    # keep_unused: the manifest promises the program signature matches the
+    # spec list exactly; without it jit drops DCE'd inputs (e.g. labels in
+    # eval graphs) and the rust side would feed the wrong arity.
+    return jax.jit(fn, keep_unused=True).lower(*model.example_args(input_specs))
+
+
+def artifact_plan(presets):
+    """Yield (key, filename, builder-thunk) for every artifact."""
+    plan = []
+    for preset in presets:
+        def add(kind, builder, preset=preset):
+            key = f"{preset}/{kind}"
+            plan.append((key, f"{preset}_{kind}.hlo.txt", preset, kind, builder))
+
+        add("pretrain_step", lambda preset=preset: model.build_pretrain_step(preset))
+        add("pretrain_metrics",
+            lambda preset=preset: model.build_read_metrics(
+                model.build_pretrain_step(preset)[3]))
+        for method in ("ft", "lora", "qrlora"):
+            for head in ("cls", "reg"):
+                add(f"train_step_{method}_{head}",
+                    lambda preset=preset, m=method, h=head: model.build_train_step(preset, m, h))
+                add(f"metrics_{method}_{head}",
+                    lambda preset=preset, m=method, h=head: model.build_read_metrics(
+                        model.build_train_step(preset, m, h)[3]))
+                add(f"eval_fwd_{method}_{head}",
+                    lambda preset=preset, m=method, h=head: model.build_eval_fwd(preset, m, h))
+        add("kernel_adapter", lambda preset=preset: model.build_kernel_bench(preset, True))
+        add("kernel_base", lambda preset=preset: model.build_kernel_bench(preset, False))
+    return plan
+
+
+def spec_json(specs):
+    return [
+        {"name": n, "shape": list(s), "dtype": d, "role": r}
+        for (n, s, d, r) in specs
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    ap.add_argument("--only", default=None, help="substring filter on artifact keys")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    presets = [p.strip() for p in args.presets.split(",") if p.strip()]
+    for p in presets:
+        if p not in PRESETS:
+            sys.exit(f"unknown preset {p!r}")
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.json")
+    old = {}
+    if os.path.exists(manifest_path) and not args.force:
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f).get("artifacts", {})
+        except Exception:
+            old = {}
+
+    artifacts = {}
+    t0 = time.time()
+    for key, fname, preset, kind, builder in artifact_plan(presets):
+        if args.only and args.only not in key:
+            if key in old:
+                artifacts[key] = old[key]
+            continue
+        path = os.path.join(args.out, fname)
+        fn, ispecs, ospecs, layout = builder()
+        entry = {
+            "file": fname,
+            "preset": preset,
+            "kind": kind,
+            "inputs": spec_json(ispecs),
+            "outputs": spec_json(ospecs),
+        }
+        if layout is not None:
+            entry["state_layout"] = {
+                "n_params": layout["n_params"],
+                "metrics_len": layout["metrics_len"],
+                "total": layout["total"],
+                "params": [
+                    {"name": n, "shape": list(s), "offset": o}
+                    for n, s, o in layout["params"]
+                ],
+                "metrics": [
+                    {"name": n, "shape": list(s), "offset": o}
+                    for n, s, o in layout["metrics"]
+                ],
+            }
+        # Skip lowering when the spec signature is unchanged and file exists.
+        sig = hashlib.sha256(
+            json.dumps(entry, sort_keys=True).encode()
+        ).hexdigest()[:16]
+        entry["sig"] = sig
+        if (not args.force and key in old and old[key].get("sig") == sig
+                and os.path.exists(path)):
+            artifacts[key] = old[key]
+            print(f"[aot] {key}: up to date")
+            continue
+        t1 = time.time()
+        lowered = lower_one(fn, ispecs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[key] = entry
+        print(f"[aot] {key}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t1:.1f}s")
+
+    manifest = {
+        "version": 1,
+        "presets": {p: PRESETS[p] for p in presets},
+        "adam": {"b1": model.ADAM_B1, "b2": model.ADAM_B2, "eps": model.ADAM_EPS},
+        "artifacts": artifacts,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {manifest_path} ({len(artifacts)} artifacts, "
+          f"{time.time() - t0:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,225 @@
+"""Layer-1 Pallas kernels: the QR-LoRA fused adapter projection and its
+backward-pass companions.
+
+Design notes (TPU mapping, estimated in DESIGN.md §8):
+
+* The hot contraction is ``y = x @ W0 + ((x @ Q) * λ) @ R`` — the base
+  projection plus a rank-r correction. The kernel never materializes
+  ΔW = Q diag(λ) R; the adapter adds O(r/d) FLOPs and **zero** extra
+  HBM round-trips, because (Q, R, λ) are small enough to stay VMEM-resident
+  across the whole grid.
+* Grid is 2-D over (M-tiles, N-tiles). Each program reads a full-K stripe of
+  ``x`` and a full-K column block of ``W0`` — for d_model ≤ 768 and tiles of
+  128×128 this is ≈1.1 MB of VMEM, far under the ~16 MB budget, so no K-loop
+  is needed and the MXU sees two dense (bm×K)@(K×bn) matmuls plus two skinny
+  rank-r ones.
+* ``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+  custom-calls, so kernels lower to plain HLO. Block shapes are still chosen
+  for the TPU layout (multiples of 8×128) so the same code compiles for real
+  hardware.
+
+The same kernel serves LoRA and SVD-LoRA by binding ``q=A, r=B,
+lam=(α/r)·𝟙`` — see ``ref.fused_adapter_matmul_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: multiples of the TPU (8, 128) tile. At build time we shrink
+# them to the actual problem size when the matrices are smaller.
+#
+# Perf note (EXPERIMENTS.md §Perf iteration 2): on the CPU interpret target
+# the grid lowers to an XLA while-loop, so fewer/larger M-tiles are faster;
+# QRLORA_BLOCK_M=512 is used for the shipped CPU artifacts. On real TPU the
+# tile must stay VMEM-sized — with (512, K=768) stripes the x-tile alone is
+# 1.5 MB, still comfortable, but 128 is the MXU-aligned default we keep for
+# TPU lowering.
+import os
+
+BLOCK_M = int(os.environ.get("QRLORA_BLOCK_M", "128"))
+BLOCK_N = int(os.environ.get("QRLORA_BLOCK_N", "128"))
+
+
+def _block(dim, preferred):
+    """Largest divisor of `dim` that is ≤ preferred (keeps grids exact)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Forward: y = x @ w0 + ((x @ q) * lam) @ r
+# ---------------------------------------------------------------------------
+
+
+def _fused_fwd_kernel(x_ref, w0_ref, q_ref, r_ref, lam_ref, o_ref):
+    x = x_ref[...]
+    base = jnp.dot(x, w0_ref[...], preferred_element_type=jnp.float32)
+    xq = jnp.dot(x, q_ref[...], preferred_element_type=jnp.float32)
+    delta = jnp.dot(xq * lam_ref[...][None, :], r_ref[...],
+                    preferred_element_type=jnp.float32)
+    o_ref[...] = base + delta
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fused_adapter_matmul(x, w0, q, r, lam):
+    """Pallas fused adapter projection.
+
+    Args:
+      x:   (M, K) activations.
+      w0:  (K, N) frozen base weight.
+      q:   (K, R) orthonormal basis columns (or LoRA A).
+      r:   (R, N) row factors (or LoRA B).
+      lam: (R,)  per-direction coefficients (masked upstream).
+
+    Returns:
+      (M, N) = x @ (w0 + q·diag(lam)·r).
+    """
+    m, k = x.shape
+    k2, n = w0.shape
+    assert k == k2, (x.shape, w0.shape)
+    rr = q.shape[1]
+    assert q.shape == (k, rr) and r.shape == (rr, n) and lam.shape == (rr,)
+
+    bm = _block(m, BLOCK_M)
+    bn = _block(n, BLOCK_N)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _fused_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k, rr), lambda i, j: (0, 0)),
+            pl.BlockSpec((rr, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((rr,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w0, q, r, lam)
+
+
+# ---------------------------------------------------------------------------
+# Backward helper: dλ_i = Σ_m (x@q)[m,i] * (dy@rᵀ)[m,i]
+# Accumulated across M-tiles; (R,) output stays resident.
+# ---------------------------------------------------------------------------
+
+
+def _dlam_kernel(x_ref, q_ref, rt_ref, dy_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = jnp.dot(x_ref[...], q_ref[...], preferred_element_type=jnp.float32)
+    dyr = jnp.dot(dy_ref[...], rt_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.sum(xq * dyr, axis=0)
+
+
+@jax.jit
+def dlam_accumulate(x, q, r, dy):
+    """Gradient of the fused projection w.r.t. lam. Shapes as in fwd."""
+    m, k = x.shape
+    rr = q.shape[1]
+    n = r.shape[1]
+    assert dy.shape == (m, n)
+    bm = _block(m, BLOCK_M)
+    return pl.pallas_call(
+        _dlam_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, rr), lambda i: (0, 0)),
+            pl.BlockSpec((n, rr), lambda i: (0, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rr,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((rr,), jnp.float32),
+        interpret=True,
+    )(x, q, r.T, dy)
+
+
+# ---------------------------------------------------------------------------
+# Generic tiled matmul (used for LoRA's dA/dB outer products).
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def matmul(x, w):
+    """Tiled (M,K)@(K,N) Pallas matmul with full-K stripes."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm = _block(m, BLOCK_M)
+    bn = _block(n, BLOCK_N)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers (custom VJP; Pallas has no autodiff).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def qr_proj(x, w0, q, r, lam):
+    """QR-LoRA projection, differentiable in (x, lam); w0/q/r frozen."""
+    return fused_adapter_matmul(x, w0, q, r, lam)
+
+
+def _qr_proj_fwd(x, w0, q, r, lam):
+    return fused_adapter_matmul(x, w0, q, r, lam), (x, w0, q, r, lam)
+
+
+def _qr_proj_bwd(res, dy):
+    x, w0, q, r, lam = res
+    # dx = dy@w0ᵀ + ((dy@rᵀ)·λ)@qᵀ — the same fused contraction, transposed.
+    dx = fused_adapter_matmul(dy, w0.T, r.T, q.T, lam)
+    dlam = dlam_accumulate(x, q, r, dy)
+    return dx, jnp.zeros_like(w0), jnp.zeros_like(q), jnp.zeros_like(r), dlam
+
+
+qr_proj.defvjp(_qr_proj_fwd, _qr_proj_bwd)
+
+
+@jax.custom_vjp
+def lora_proj(x, w0, a, b, scale):
+    """LoRA projection y = x@w0 + ((x@a)·scale)@b, differentiable in
+    (x, a, b); w0 frozen, scale (R,) a constant vector (α/r, possibly
+    masked to disable the adapter entirely)."""
+    return fused_adapter_matmul(x, w0, a, b, scale)
+
+
+def _lora_proj_fwd(x, w0, a, b, scale):
+    return fused_adapter_matmul(x, w0, a, b, scale), (x, w0, a, b, scale)
+
+
+def _lora_proj_bwd(res, dy):
+    x, w0, a, b, scale = res
+    dx = fused_adapter_matmul(dy, w0.T, b.T, a.T, scale)
+    dyb = matmul(dy, b.T) * scale[None, :]  # (M, R)
+    da = matmul(x.T, dyb)  # (K, R)
+    xa = matmul(x, a) * scale[None, :]  # (M, R)
+    db = matmul(xa.T, dy)  # (R, N)
+    return dx, jnp.zeros_like(w0), da, db, jnp.zeros_like(scale)
+
+
+lora_proj.defvjp(_lora_proj_fwd, _lora_proj_bwd)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its reference here to float32 tolerance (pytest + hypothesis sweep
+shapes). They are also used directly by `model.py` tests to cross-check the
+custom-vjp wrappers against `jax.grad` of the reference computation.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain x @ w."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def fused_adapter_matmul_ref(x, w0, q, r, lam):
+    """The QR-LoRA fused projection.
+
+    y = x @ W0 + ((x @ Q) * lam) @ R
+
+    with W0 (K, N) frozen, Q (K, R), R (R, N), lam (R,). This computes
+    x @ (W0 + Q diag(lam) R) without materializing the delta — the paper's
+    ΔW = Σ_i λ_i Q_i R_iᵀ evaluated lazily. The *same* contraction serves
+    LoRA/SVD-LoRA by binding q=A, r=B, lam=(α/r)·1.
+    """
+    base = jnp.dot(x, w0, preferred_element_type=jnp.float32)
+    xq = jnp.dot(x, q, preferred_element_type=jnp.float32)
+    delta = jnp.dot(xq * lam[None, :], r, preferred_element_type=jnp.float32)
+    return base + delta
+
+
+def dlam_ref(x, q, r, dy):
+    """Gradient of fused_adapter_matmul w.r.t. lam.
+
+    dλ_i = Σ_m (x @ Q)[m, i] · (dy @ Rᵀ)[m, i]
+    """
+    xq = jnp.dot(x, q, preferred_element_type=jnp.float32)
+    dyr = jnp.dot(dy, r.T, preferred_element_type=jnp.float32)
+    return jnp.sum(xq * dyr, axis=0)

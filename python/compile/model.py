@@ -1,0 +1,562 @@
+"""Layer-2: the JAX transformer encoder + in-graph training step.
+
+Everything the device executes at runtime is defined here and AOT-lowered by
+`aot.py`; the rust coordinator only feeds buffers. Three methods share one
+model skeleton and differ in which attention projections carry an adapter:
+
+* ``ft``      — every parameter trainable (also used for warm-up).
+* ``lora``    — frozen backbone; rank-r A/B adapters on (Wq, Wv). Serves the
+                SVD-LoRA baseline too (identical structure; the coordinator
+                seeds A/B from singular vectors and sets scale = α/r).
+* ``qrlora``  — frozen backbone; per-projection pivoted-QR bases (Q_r, R_r)
+                enter as *frozen inputs* and only the λ coefficients train.
+
+Config variation (τ, layer scope, projection set) is expressed through mask
+inputs rather than separate graphs, so ONE artifact per (method, head) serves
+every configuration in the paper's sweeps.
+
+Train steps carry Adam inside the graph.
+
+**Single-output state-vector protocol.** The PJRT client used by the rust
+side returns multi-output programs as one *tuple* buffer, which cannot be
+re-fed per-leaf. Every program therefore takes and returns ONE flat f32
+"state vector":
+
+    state = [ loss | logits... | train leaves | adam_m | adam_v ]
+
+The train step unpacks leaves from static offsets, computes grads + Adam, and
+re-concatenates — so the output buffer *is* the next step's input buffer and
+training state never leaves the device. Metrics live at offset 0 so the rust
+coordinator reads them with a cheap ranged host copy of the head. `eval_fwd` accepts the same
+state layout (ignoring moments/metrics) so the training-state buffer can be
+evaluated directly. The manifest records the layout (`state_layout`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import fused
+from compile.presets import (ADAPTED_PROJS_LORA, ADAPTED_PROJS_QR, PRESETS)
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: ordered (name, shape) lists — the manifest contract.
+# ---------------------------------------------------------------------------
+
+
+def backbone_specs(p):
+    """Ordered backbone parameter list for preset dict `p`."""
+    d, f, v, s = p["d_model"], p["d_ff"], p["vocab"], p["max_seq"]
+    specs = [
+        ("emb/tok", (v, d)),
+        ("emb/pos", (s, d)),
+        ("emb/type", (2, d)),
+        ("emb/ln_g", (d,)),
+        ("emb/ln_b", (d,)),
+    ]
+    for i in range(p["n_layers"]):
+        L = f"layer{i}"
+        for proj in ("wq", "wk", "wv", "wo"):
+            specs.append((f"{L}/attn/{proj}", (d, d)))
+        for bias in ("bq", "bk", "bv", "bo"):
+            specs.append((f"{L}/attn/{bias}", (d,)))
+        specs += [
+            (f"{L}/ln1_g", (d,)),
+            (f"{L}/ln1_b", (d,)),
+            (f"{L}/ffn/w1", (d, f)),
+            (f"{L}/ffn/b1", (f,)),
+            (f"{L}/ffn/w2", (f, d)),
+            (f"{L}/ffn/b2", (d,)),
+            (f"{L}/ln2_g", (d,)),
+            (f"{L}/ln2_b", (d,)),
+        ]
+    specs.append(("mlm/bias", (v,)))
+    return specs
+
+
+def head_specs(p, head):
+    d = p["d_model"]
+    k = p["n_classes"] if head == "cls" else 1
+    return [
+        ("head/wp", (d, d)),
+        ("head/bp", (d,)),
+        ("head/wc", (d, k)),
+        ("head/bc", (k,)),
+    ]
+
+
+def qr_adapter_specs(p):
+    """(trainable λ, frozen Q/R/mask) specs for QR-LoRA."""
+    d, r = p["d_model"], p["r_max"]
+    train, frozen = [], []
+    for i in range(p["n_layers"]):
+        for proj in ADAPTED_PROJS_QR:
+            base = f"qr/layer{i}/{proj}"
+            train.append((f"{base}/lam", (r,)))
+            frozen += [
+                (f"{base}/Q", (d, r)),
+                (f"{base}/R", (r, d)),
+                (f"{base}/mask", (r,)),
+            ]
+    return train, frozen
+
+
+def lora_adapter_specs(p):
+    """(trainable A/B, frozen scale) specs for LoRA / SVD-LoRA."""
+    d, r = p["d_model"], p["r_lora"]
+    train, frozen = [], []
+    for i in range(p["n_layers"]):
+        for proj in ADAPTED_PROJS_LORA:
+            base = f"lora/layer{i}/{proj}"
+            train += [(f"{base}/A", (d, r)), (f"{base}/B", (r, d))]
+            frozen.append((f"{base}/scale", (r,)))
+    return train, frozen
+
+
+def split_specs(p, method, head):
+    """Return (trainable_specs, frozen_specs) for a finetune graph."""
+    bb = backbone_specs(p)
+    hd = head_specs(p, head)
+    if method == "ft":
+        return bb + hd, []
+    if method == "lora":
+        at, af = lora_adapter_specs(p)
+        return at + hd, bb + af
+    if method == "qrlora":
+        at, af = qr_adapter_specs(p)
+        return at + hd, bb + af
+    raise ValueError(method)
+
+
+def batch_specs(p, head):
+    b, s = p["batch"], p["max_seq"]
+    k = p["n_classes"] if head == "cls" else 1
+    label = ("batch/labels", (b,), "i32") if head == "cls" else ("batch/labels", (b,), "f32")
+    return [
+        ("batch/input_ids", (b, s), "i32"),
+        ("batch/type_ids", (b, s), "i32"),
+        ("batch/attn_mask", (b, s), "f32"),
+        label,
+        ("batch/class_mask", (k,), "f32"),
+        ("batch/example_w", (b,), "f32"),
+    ]
+
+
+def mlm_batch_specs(p):
+    b, s = p["batch"], p["max_seq"]
+    return [
+        ("batch/input_ids", (b, s), "i32"),
+        ("batch/type_ids", (b, s), "i32"),
+        ("batch/attn_mask", (b, s), "f32"),
+        ("batch/mlm_labels", (b, s), "i32"),  # -100 = not predicted
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Forward pass.
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _proj(params, method, layer, proj, x2d):
+    """Adapted or plain projection for layer `layer`, matrix `proj`.
+
+    x2d is (B·S, d). Returns (B·S, d). This is where L1 kernels enter the
+    graph: every adapted projection lowers through the fused Pallas kernel.
+    """
+    w0 = params[f"layer{layer}/attn/{proj}"]
+    bias = params[f"layer{layer}/attn/b{proj[1]}"]
+    if method == "qrlora" and proj in ADAPTED_PROJS_QR:
+        base = f"qr/layer{layer}/{proj}"
+        lam = params[f"{base}/lam"] * params[f"{base}/mask"]
+        y = fused.qr_proj(x2d, w0, params[f"{base}/Q"], params[f"{base}/R"], lam)
+    elif method == "lora" and proj in ADAPTED_PROJS_LORA:
+        base = f"lora/layer{layer}/{proj}"
+        y = fused.lora_proj(x2d, w0, params[f"{base}/A"], params[f"{base}/B"],
+                            params[f"{base}/scale"])
+    else:
+        y = jnp.dot(x2d, w0, preferred_element_type=jnp.float32)
+    return y + bias
+
+
+def encode(params, p, method, input_ids, type_ids, attn_mask):
+    """Transformer encoder → (B, S, d) hidden states."""
+    bsz, seq = input_ids.shape
+    d, nh = p["d_model"], p["n_heads"]
+    dh = d // nh
+
+    h = (params["emb/tok"][input_ids]
+         + params["emb/pos"][None, :seq, :]
+         + params["emb/type"][type_ids])
+    h = layer_norm(h, params["emb/ln_g"], params["emb/ln_b"])
+
+    # additive mask: (B, 1, 1, S)
+    amask = (1.0 - attn_mask)[:, None, None, :] * NEG_INF
+
+    for i in range(p["n_layers"]):
+        x = layer_norm(h, params[f"layer{i}/ln1_g"], params[f"layer{i}/ln1_b"])
+        x2d = x.reshape(bsz * seq, d)
+        q = _proj(params, method, i, "wq", x2d).reshape(bsz, seq, nh, dh)
+        k = _proj(params, method, i, "wk", x2d).reshape(bsz, seq, nh, dh)
+        v = _proj(params, method, i, "wv", x2d).reshape(bsz, seq, nh, dh)
+        # (B, nh, S, S)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        att = jax.nn.softmax(att + amask, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(bsz * seq, d)
+        h = h + _proj(params, method, i, "wo", ctx).reshape(bsz, seq, d)
+
+        x = layer_norm(h, params[f"layer{i}/ln2_g"], params[f"layer{i}/ln2_b"])
+        x2d = x.reshape(bsz * seq, d)
+        f1 = jax.nn.gelu(jnp.dot(x2d, params[f"layer{i}/ffn/w1"]) + params[f"layer{i}/ffn/b1"])
+        f2 = jnp.dot(f1, params[f"layer{i}/ffn/w2"]) + params[f"layer{i}/ffn/b2"]
+        h = h + f2.reshape(bsz, seq, d)
+    return h
+
+
+def task_logits(params, p, method, head, batch):
+    """(B, K) task logits from the CLS position."""
+    h = encode(params, p, method, batch["batch/input_ids"],
+               batch["batch/type_ids"], batch["batch/attn_mask"])
+    cls = h[:, 0, :]
+    pooled = jnp.tanh(jnp.dot(cls, params["head/wp"]) + params["head/bp"])
+    logits = jnp.dot(pooled, params["head/wc"]) + params["head/bc"]
+    if head == "cls":
+        # class_mask: 1 for valid classes, 0 for padded ones (binary tasks
+        # run with K=3 and a masked third class).
+        logits = logits + (1.0 - batch["batch/class_mask"])[None, :] * NEG_INF
+    return logits
+
+
+def task_loss(params, p, method, head, batch):
+    logits = task_logits(params, p, method, head, batch)
+    w = batch["batch/example_w"]
+    wsum = jnp.maximum(jnp.sum(w), 1e-6)
+    if head == "cls":
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["batch/labels"][:, None], axis=1)[:, 0]
+        loss = jnp.sum(nll * w) / wsum
+    else:
+        pred = logits[:, 0]
+        loss = jnp.sum((pred - batch["batch/labels"]) ** 2 * w) / wsum
+    return loss, logits
+
+
+def mlm_loss(params, p, batch):
+    """Masked-LM loss for pretraining / warm-up of the backbone."""
+    h = encode(params, p, "ft", batch["batch/input_ids"],
+               batch["batch/type_ids"], batch["batch/attn_mask"])
+    logits = jnp.einsum("bsd,vd->bsv", h, params["emb/tok"]) + params["mlm/bias"]
+    labels = batch["batch/mlm_labels"]
+    valid = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Adam (in-graph).
+# ---------------------------------------------------------------------------
+
+
+def global_norm_clip(grads, max_norm=1.0):
+    """Scale the whole gradient dict so its global L2 norm is ≤ max_norm."""
+    sq = sum(jnp.sum(g * g) for g in grads.values())
+    norm = jnp.sqrt(sq + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / norm)
+    return {k: g * scale for k, g in grads.items()}
+
+
+def adam_update(train, grads, m, v, lr, t):
+    """One Adam step over dicts of arrays (with global-norm gradient
+    clipping). `t` is the 1-based step (f32)."""
+    grads = global_norm_clip(grads)
+    b1t = 1.0 - ADAM_B1 ** t
+    b2t = 1.0 - ADAM_B2 ** t
+    new_t, new_m, new_v = {}, {}, {}
+    for k in train:
+        g = grads[k]
+        mk = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        vk = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g * g
+        mhat = mk / b1t
+        vhat = vk / b2t
+        new_t[k] = train[k] - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_t, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Step builders — flat-argument functions ready for jax.jit(...).lower().
+# ---------------------------------------------------------------------------
+
+
+def _dtype_of(spec):
+    return spec[2] if len(spec) > 2 else "f32"
+
+
+def _np_dtype(d):
+    return {"f32": jnp.float32, "i32": jnp.int32}[d]
+
+
+def state_layout(t_specs, metric_specs):
+    """Flat state-vector layout: metrics FIRST, then train leaves ×3.
+
+        state = [ metrics | params (P) | adam_m (P) | adam_v (P) ]
+
+    Metrics live at offset 0 so the rust side can read them with a cheap
+    ranged device→host copy (`CopyRawToHost` takes a byte offset but the
+    crate's bounds check counts elements — offset 0 is the only portable
+    choice, see runtime/mod.rs).
+
+    Returns {"metrics": [(name, shape, offset)], "params": [...],
+             "n_params": P, "metrics_len": M, "total": M + 3P}.
+    """
+    metrics = []
+    off = 0
+    for n, s in metric_specs:
+        metrics.append((n, s, off))
+        off += int(np.prod(s)) if s else 1
+    metrics_len = off
+    params = []
+    for n, s in t_specs:
+        params.append((n, s, off))
+        off += int(np.prod(s)) if s else 1
+    n_params = off - metrics_len
+    return {
+        "params": params,
+        "n_params": n_params,
+        "metrics": metrics,
+        "metrics_len": metrics_len,
+        "total": metrics_len + 3 * n_params,
+    }
+
+
+def _unpack(state, specs, base):
+    """Slice leaves out of the flat state vector from static offsets."""
+    out = {}
+    off = base
+    for n, s in specs:
+        size = int(np.prod(s)) if s else 1
+        out[n] = state[off:off + size].reshape(s)
+        off += size
+    return out
+
+
+def _pack(layout, train, m, v, metric_vals):
+    leaves = [val.reshape(-1) for val in metric_vals]
+    for n, _, _ in layout["params"]:
+        leaves.append(train[n].reshape(-1))
+    for n, _, _ in layout["params"]:
+        leaves.append(m[n].reshape(-1))
+    for n, _, _ in layout["params"]:
+        leaves.append(v[n].reshape(-1))
+    return jnp.concatenate(leaves)
+
+
+def build_train_step(preset, method, head):
+    """Returns (fn, input_specs, output_specs, layout).
+
+    Single-output protocol: arg0 / out0 is the flat state vector (see module
+    docstring); remaining inputs are frozen constants, batch tensors, and
+    the (lr, t) scalars.
+    """
+    p = PRESETS[preset]
+    t_specs, f_specs = split_specs(p, method, head)
+    b_specs = batch_specs(p, head)
+    k = p["n_classes"] if head == "cls" else 1
+    metric_specs = [("loss", ()), ("logits", (p["batch"], k))]
+    layout = state_layout(t_specs, metric_specs)
+    total = layout["total"]
+    n_params = layout["n_params"]
+    mlen = layout["metrics_len"]
+
+    input_specs = (
+        [("state", (total,), "f32", "state")]
+        + [(n, s, "f32", "frozen") for n, s in f_specs]
+        + [(n, s, d, "batch") for n, s, d in b_specs]
+        + [("lr", (), "f32", "scalar"), ("t", (), "f32", "scalar")]
+    )
+    output_specs = [("state", (total,), "f32", "state")]
+    nf, nb = len(f_specs), len(b_specs)
+
+    def step(*args):
+        state = args[0]
+        frozen = {n: a for (n, _), a in zip(f_specs, args[1:1 + nf])}
+        batch = {n: a for (n, _, _), a in zip(b_specs, args[1 + nf:1 + nf + nb])}
+        lr, t = args[1 + nf + nb], args[2 + nf + nb]
+
+        train = _unpack(state, t_specs, mlen)
+        m = _unpack(state, t_specs, mlen + n_params)
+        v = _unpack(state, t_specs, mlen + 2 * n_params)
+
+        def loss_fn(tr):
+            loss, logits = task_loss({**tr, **frozen}, p, method, head, batch)
+            return loss, logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(train)
+        new_t, new_m, new_v = adam_update(train, grads, m, v, lr, t)
+        return (_pack(layout, new_t, new_m, new_v, [loss, logits]),)
+
+    return step, input_specs, output_specs, layout
+
+
+def build_eval_fwd(preset, method, head):
+    """Forward-only program. Accepts the *training* state vector layout so
+    the live training buffer can be evaluated without repacking."""
+    p = PRESETS[preset]
+    t_specs, f_specs = split_specs(p, method, head)
+    b_specs = batch_specs(p, head)
+    k = p["n_classes"] if head == "cls" else 1
+    metric_specs = [("loss", ()), ("logits", (p["batch"], k))]
+    layout = state_layout(t_specs, metric_specs)
+
+    input_specs = (
+        [("state", (layout["total"],), "f32", "state")]
+        + [(n, s, "f32", "frozen") for n, s in f_specs]
+        + [(n, s, d, "batch") for n, s, d in b_specs]
+    )
+    output_specs = [("logits", (p["batch"], k), "f32", "metric")]
+    nf, nb = len(f_specs), len(b_specs)
+
+    def fwd(*args):
+        state = args[0]
+        frozen = {n: a for (n, _), a in zip(f_specs, args[1:1 + nf])}
+        batch = {n: a for (n, _, _), a in zip(b_specs, args[1 + nf:1 + nf + nb])}
+        train = _unpack(state, t_specs, layout["metrics_len"])
+        return (task_logits({**train, **frozen}, p, method, head, batch),)
+
+    return fwd, input_specs, output_specs, layout
+
+
+def build_pretrain_step(preset):
+    """MLM step: the whole backbone trains (no task head)."""
+    p = PRESETS[preset]
+    t_specs = backbone_specs(p)
+    b_specs = mlm_batch_specs(p)
+    metric_specs = [("loss", ())]
+    layout = state_layout(t_specs, metric_specs)
+    total = layout["total"]
+    n_params = layout["n_params"]
+    mlen = layout["metrics_len"]
+
+    input_specs = (
+        [("state", (total,), "f32", "state")]
+        + [(n, s, d, "batch") for n, s, d in b_specs]
+        + [("lr", (), "f32", "scalar"), ("t", (), "f32", "scalar")]
+    )
+    output_specs = [("state", (total,), "f32", "state")]
+    nb = len(b_specs)
+
+    def step(*args):
+        state = args[0]
+        batch = {n: a for (n, _, _), a in zip(b_specs, args[1:1 + nb])}
+        lr, t = args[1 + nb], args[2 + nb]
+        train = _unpack(state, t_specs, mlen)
+        m = _unpack(state, t_specs, mlen + n_params)
+        v = _unpack(state, t_specs, mlen + 2 * n_params)
+
+        loss, grads = jax.value_and_grad(lambda tr: mlm_loss(tr, p, batch))(train)
+        new_t, new_m, new_v = adam_update(train, grads, m, v, lr, t)
+        return (_pack(layout, new_t, new_m, new_v, [loss]),)
+
+    return step, input_specs, output_specs, layout
+
+
+def build_read_metrics(layout):
+    """Tiny slice program: state -> metrics head. The PJRT CPU client has no
+    ranged host copy (CopyRawToHost not implemented), so the coordinator
+    reads per-step metrics by running this on-device slice and downloading
+    only its (small) output."""
+    total, mlen = layout["total"], layout["metrics_len"]
+    input_specs = [("state", (total,), "f32", "state")]
+    output_specs = [("metrics", (mlen,), "f32", "metric")]
+
+    def fn(state):
+        return (state[:mlen],)
+
+    return fn, input_specs, output_specs, layout
+
+
+def build_kernel_bench(preset, with_adapter):
+    """Micro artifact: one fused projection (or plain matmul) at the
+    preset's hot shape — used by the rust benches to measure adapter
+    overhead through the full PJRT path."""
+    p = PRESETS[preset]
+    mm = p["batch"] * p["max_seq"]
+    d, r = p["d_model"], p["r_max"]
+    if with_adapter:
+        input_specs = [
+            ("x", (mm, d), "f32", "batch"),
+            ("w0", (d, d), "f32", "frozen"),
+            ("Q", (d, r), "f32", "frozen"),
+            ("R", (r, d), "f32", "frozen"),
+            ("lam", (r,), "f32", "train"),
+        ]
+
+        def fn(x, w0, q, rr, lam):
+            return (fused.fused_adapter_matmul(x, w0, q, rr, lam),)
+    else:
+        input_specs = [
+            ("x", (mm, d), "f32", "batch"),
+            ("w0", (d, d), "f32", "frozen"),
+        ]
+
+        def fn(x, w0):
+            return (fused.matmul(x, w0),)
+
+    output_specs = [("y", (mm, d), "f32", "metric")]
+    return fn, input_specs, output_specs, None
+
+
+def example_args(input_specs):
+    """ShapeDtypeStructs for jax.jit(...).lower(*...)."""
+    return [jax.ShapeDtypeStruct(tuple(s), _np_dtype(d)) for _, s, d, _ in input_specs]
+
+
+# ---------------------------------------------------------------------------
+# Host-side init (used by python tests; the rust side re-implements this
+# with the same formulas, keyed by the manifest's init hints).
+# ---------------------------------------------------------------------------
+
+
+def init_backbone(p, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    d = p["d_model"]
+    for name, shape in backbone_specs(p):
+        if name.endswith(("_g",)) or "/ln_g" in name:
+            out[name] = np.ones(shape, np.float32)
+        elif name.endswith(("_b", "bias")) or "/b" in name.split("/")[-1]:
+            out[name] = np.zeros(shape, np.float32)
+        elif len(shape) == 2:
+            std = (2.0 / (shape[0] + shape[1])) ** 0.5
+            out[name] = rng.standard_normal(shape).astype(np.float32) * std
+        else:
+            out[name] = np.zeros(shape, np.float32)
+    # embeddings: N(0, 0.02) like BERT
+    for k in ("emb/tok", "emb/pos", "emb/type"):
+        out[k] = rng.standard_normal(out[k].shape).astype(np.float32) * 0.02
+    out["emb/ln_g"] = np.ones((d,), np.float32)
+    return out
+
+
+def init_head(p, head, seed=1):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, shape in head_specs(p, head):
+        if name.endswith(("bp", "bc")):
+            out[name] = np.zeros(shape, np.float32)
+        else:
+            std = (2.0 / sum(shape)) ** 0.5
+            out[name] = rng.standard_normal(shape).astype(np.float32) * std
+    return out

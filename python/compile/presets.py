@@ -1,0 +1,66 @@
+"""Model presets. Mirrored by `rust/src/config/` (the manifest carries these
+numbers so the two sides can never drift).
+
+The paper uses RoBERTa-base (d=768, 12 layers). The repro testbed is a single
+CPU core, so presets scale the architecture down while preserving every
+structural property the method depends on: multi-head attention with four
+adaptable projections per layer, a pre-LN residual stack, and a pooled
+classification head. Parameter-count *ratios* between methods are preserved
+and reported next to the paper's.
+"""
+
+PRESETS = {
+    # Test-speed preset: used by pytest, cargo integration tests.
+    "tiny": dict(
+        d_model=64,
+        n_layers=2,
+        n_heads=2,
+        d_ff=256,
+        vocab=512,
+        max_seq=32,
+        batch=8,
+        r_max=32,   # max retained QR rank per projection
+        r_lora=2,   # LoRA rank (paper: r=2)
+        n_classes=3,
+    ),
+    # Experiment preset: all tables/figures run on this.
+    "small": dict(
+        d_model=128,
+        n_layers=4,
+        n_heads=4,
+        d_ff=512,
+        vocab=4096,
+        max_seq=64,
+        batch=32,
+        r_max=64,
+        r_lora=2,
+        n_classes=3,
+    ),
+    # Scale-demonstration preset (quickstart --preset mid): ~8M params.
+    "mid": dict(
+        d_model=256,
+        n_layers=6,
+        n_heads=8,
+        d_ff=1024,
+        vocab=8192,
+        max_seq=64,
+        batch=16,
+        r_max=128,
+        r_lora=2,
+        n_classes=3,
+    ),
+}
+
+METHODS = ("ft", "lora", "qrlora")
+HEADS = ("cls", "reg")
+
+ADAPTED_PROJS_QR = ("wq", "wk", "wv", "wo")  # QR-LoRA can adapt any of these
+ADAPTED_PROJS_LORA = ("wq", "wv")            # LoRA baseline adapts Wq, Wv
+
+
+def n_backbone_params(p):
+    """Total backbone parameter count for a preset dict."""
+    d, f, v, s, nl = p["d_model"], p["d_ff"], p["vocab"], p["max_seq"], p["n_layers"]
+    emb = v * d + s * d + 2 * d + 2 * d
+    per_layer = 4 * (d * d + d) + 2 * d + (d * f + f) + (f * d + d) + 2 * d
+    return emb + nl * per_layer + v  # + mlm bias

@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; fixed cases pin the shapes the model actually uses.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def assert_close(a, b, atol=2e-4, rtol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape smoke cases (the shapes the model presets actually emit).
+# ---------------------------------------------------------------------------
+
+PRESET_SHAPES = [
+    # (M, K, N, R): tokens × d_in × d_out × max adapter rank
+    (256, 64, 64, 32),    # tiny preset attention proj
+    (2048, 128, 128, 64), # small preset attention proj
+    (256, 64, 256, 32),   # tiny FFN up-proj
+]
+
+
+@pytest.mark.parametrize("m,k,n,r", PRESET_SHAPES)
+def test_fused_adapter_matmul_preset_shapes(m, k, n, r):
+    rng = np.random.default_rng(0)
+    x, w0, q, rr = rand(rng, m, k), rand(rng, k, n), rand(rng, k, r), rand(rng, r, n)
+    lam = rand(rng, r)
+    got = fused.fused_adapter_matmul(x, w0, q, rr, lam)
+    want = ref.fused_adapter_matmul_ref(x, w0, q, rr, lam)
+    assert_close(got, want, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("m,k,n,r", PRESET_SHAPES[:2])
+def test_dlam_accumulate_preset_shapes(m, k, n, r):
+    rng = np.random.default_rng(1)
+    x, q, rr, dy = rand(rng, m, k), rand(rng, k, r), rand(rng, r, n), rand(rng, m, n)
+    got = fused.dlam_accumulate(x, q, rr, dy)
+    want = ref.dlam_ref(x, q, rr, dy)
+    # Accumulation over M rows: scale tolerance with M.
+    assert_close(got, want, atol=5e-2 * np.sqrt(m), rtol=1e-3)
+
+
+def test_matmul_matches_ref():
+    rng = np.random.default_rng(2)
+    x, w = rand(rng, 96, 48), rand(rng, 48, 80)
+    assert_close(fused.matmul(x, w), ref.matmul_ref(x, w), atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis shape sweeps.
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=96)
+small_dims = st.integers(min_value=1, max_value=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, r=small_dims, seed=st.integers(0, 2**31 - 1))
+def test_fused_adapter_matmul_hypothesis(m, k, n, r, seed):
+    rng = np.random.default_rng(seed)
+    x, w0, q, rr = rand(rng, m, k), rand(rng, k, n), rand(rng, k, r), rand(rng, r, n)
+    lam = rand(rng, r)
+    got = fused.fused_adapter_matmul(x, w0, q, rr, lam)
+    want = ref.fused_adapter_matmul_ref(x, w0, q, rr, lam)
+    assert_close(got, want, atol=2e-3, rtol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=small_dims, n=small_dims, r=small_dims,
+       seed=st.integers(0, 2**31 - 1))
+def test_dlam_hypothesis(m, k, n, r, seed):
+    rng = np.random.default_rng(seed)
+    x, q, rr, dy = rand(rng, m, k), rand(rng, k, r), rand(rng, r, n), rand(rng, m, n)
+    got = fused.dlam_accumulate(x, q, rr, dy)
+    want = ref.dlam_ref(x, q, rr, dy)
+    assert_close(got, want, atol=1e-2 * max(1.0, np.sqrt(m)), rtol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    assert_close(fused.matmul(x, w), ref.matmul_ref(x, w), atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Algebraic properties of the fused contraction.
+# ---------------------------------------------------------------------------
+
+def test_zero_lambda_is_base_matmul():
+    """λ=0 must leave the base projection bit-exact — the frozen-backbone
+    guarantee QR-LoRA relies on for non-adapted layers."""
+    rng = np.random.default_rng(3)
+    x, w0, q, rr = rand(rng, 32, 16), rand(rng, 16, 24), rand(rng, 16, 8), rand(rng, 8, 24)
+    got = fused.fused_adapter_matmul(x, w0, q, rr, jnp.zeros(8))
+    want = ref.matmul_ref(x, w0)
+    assert_close(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_linear_in_lambda():
+    rng = np.random.default_rng(4)
+    x, w0, q, rr = rand(rng, 16, 8), rand(rng, 8, 8), rand(rng, 8, 4), rand(rng, 4, 8)
+    l1, l2 = rand(rng, 4), rand(rng, 4)
+    base = ref.matmul_ref(x, w0)
+    y1 = fused.fused_adapter_matmul(x, w0, q, rr, l1) - base
+    y2 = fused.fused_adapter_matmul(x, w0, q, rr, l2) - base
+    y12 = fused.fused_adapter_matmul(x, w0, q, rr, l1 + l2) - base
+    assert_close(y12, y1 + y2, atol=1e-3, rtol=1e-3)
+
+
+def test_full_rank_identity_lambda_reconstructs():
+    """With Q,R from an exact factorization W0 = Q·R and λ≡1, the adapter
+    doubles the projection: x@(W0 + QR) = 2·x@W0."""
+    rng = np.random.default_rng(5)
+    w0 = rand(rng, 12, 12)
+    qf, rf = jnp.linalg.qr(w0)
+    x = rand(rng, 20, 12)
+    got = fused.fused_adapter_matmul(x, w0, qf, rf, jnp.ones(12))
+    assert_close(got, 2.0 * ref.matmul_ref(x, w0), atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Custom-vjp wrappers vs jax.grad of the reference.
+# ---------------------------------------------------------------------------
+
+def test_qr_proj_gradients_match_reference():
+    rng = np.random.default_rng(6)
+    m, k, n, r = 24, 16, 20, 6
+    x, w0, q, rr = rand(rng, m, k), rand(rng, k, n), rand(rng, k, r), rand(rng, r, n)
+    lam = rand(rng, r)
+
+    def loss_kernel(x, lam):
+        return jnp.sum(fused.qr_proj(x, w0, q, rr, lam) ** 2)
+
+    def loss_ref(x, lam):
+        return jnp.sum(ref.fused_adapter_matmul_ref(x, w0, q, rr, lam) ** 2)
+
+    gx_k, gl_k = jax.grad(loss_kernel, argnums=(0, 1))(x, lam)
+    gx_r, gl_r = jax.grad(loss_ref, argnums=(0, 1))(x, lam)
+    assert_close(gx_k, gx_r, atol=5e-3, rtol=5e-3)
+    assert_close(gl_k, gl_r, atol=5e-3, rtol=5e-3)
+
+
+def test_lora_proj_gradients_match_reference():
+    rng = np.random.default_rng(7)
+    m, k, n, r = 24, 16, 20, 4
+    x, w0, a, b = rand(rng, m, k), rand(rng, k, n), rand(rng, k, r), rand(rng, r, n)
+    scale = jnp.full((r,), 0.5)
+
+    def loss_kernel(x, a, b):
+        return jnp.sum(fused.lora_proj(x, w0, a, b, scale) ** 2)
+
+    def loss_ref(x, a, b):
+        return jnp.sum(ref.fused_adapter_matmul_ref(x, w0, a, b, scale) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, a, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, a, b)
+    for got, want in zip(gk, gr):
+        assert_close(got, want, atol=5e-3, rtol=5e-3)
+
+
+def test_frozen_factors_get_zero_grads():
+    rng = np.random.default_rng(8)
+    x, w0, q, rr = rand(rng, 8, 8), rand(rng, 8, 8), rand(rng, 8, 4), rand(rng, 4, 8)
+    lam = rand(rng, 4)
+
+    g = jax.grad(lambda w: jnp.sum(fused.qr_proj(x, w, q, rr, lam)), argnums=0)(w0)
+    assert float(jnp.max(jnp.abs(g))) == 0.0

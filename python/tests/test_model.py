@@ -1,0 +1,253 @@
+"""L2 model correctness: shapes, adapter equivalences, training dynamics.
+
+All step programs follow the single-output state-vector protocol:
+arg0/out0 is the flat f32 state [train | m | v | loss | logits...].
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.presets import PRESETS
+
+P = PRESETS["tiny"]
+
+
+def init_state(layout, t_init, seed=0):
+    """Build the flat state vector: params from t_init dict (or random),
+    zero moments, zero metrics tail."""
+    rng = np.random.default_rng(seed)
+    state = np.zeros(layout["total"], np.float32)
+    for name, shape, off in layout["params"]:
+        size = int(np.prod(shape)) if shape else 1
+        if name in t_init:
+            state[off:off + size] = np.asarray(t_init[name], np.float32).reshape(-1)
+        else:
+            state[off:off + size] = (rng.standard_normal(size) * 0.05).astype(np.float32)
+    return state
+
+
+def read_param(state, layout, name):
+    for n, shape, off in layout["params"]:
+        if n == name:
+            size = int(np.prod(shape)) if shape else 1
+            return np.asarray(state[off:off + size]).reshape(shape)
+    raise KeyError(name)
+
+
+def read_metric(state, layout, name):
+    for n, shape, off in layout["metrics"]:
+        if n == name:
+            size = int(np.prod(shape)) if shape else 1
+            return np.asarray(state[off:off + size]).reshape(shape)
+    raise KeyError(name)
+
+
+def make_rest(ispecs, seed=0, overrides=None):
+    """Host values for all non-state inputs, keyed by spec order."""
+    rng = np.random.default_rng(seed)
+    overrides = overrides or {}
+    args = []
+    for name, shape, dtype, role in ispecs[1:]:
+        if name in overrides:
+            args.append(jnp.asarray(overrides[name]))
+            continue
+        if dtype == "i32":
+            hi = P["vocab"] if "input_ids" in name else 2
+            if "labels" in name:
+                arr = rng.integers(0, 2, size=shape).astype(np.int32)
+            else:
+                arr = rng.integers(0, hi, size=shape).astype(np.int32)
+        elif name == "lr":
+            arr = np.float32(1e-3)
+        elif name == "t":
+            arr = np.float32(1.0)
+        elif name.endswith("/mask"):
+            arr = np.ones(shape, np.float32)
+        elif "attn_mask" in name or "class_mask" in name or "example_w" in name:
+            arr = np.ones(shape, np.float32)
+        elif "scale" in name:
+            arr = np.full(shape, 0.5, np.float32)
+        else:
+            arr = (rng.standard_normal(shape) * 0.05).astype(np.float32)
+        args.append(jnp.asarray(arr))
+    return args
+
+
+@pytest.mark.parametrize("method", ["ft", "lora", "qrlora"])
+@pytest.mark.parametrize("head", ["cls", "reg"])
+def test_train_step_shapes_and_finite_loss(method, head):
+    fn, ispecs, ospecs, layout = model.build_train_step("tiny", method, head)
+    state = jnp.asarray(init_state(layout, {}))
+    outs = fn(state, *make_rest(ispecs))
+    assert len(outs) == 1
+    new_state = outs[0]
+    assert new_state.shape == (layout["total"],)
+    loss = read_metric(new_state, layout, "loss")
+    assert np.isfinite(float(loss)), f"{method}/{head} loss not finite"
+    logits = read_metric(new_state, layout, "logits")
+    assert logits.shape == (P["batch"], P["n_classes"] if head == "cls" else 1)
+
+
+@pytest.mark.parametrize("method", ["ft", "lora", "qrlora"])
+def test_eval_fwd_shapes(method):
+    fn, ispecs, ospecs, layout = model.build_eval_fwd("tiny", method, "cls")
+    state = jnp.asarray(init_state(layout, {}))
+    outs = fn(state, *make_rest(ispecs))
+    assert tuple(outs[0].shape) == tuple(ospecs[0][1])
+
+
+def test_train_then_eval_consistency():
+    """eval_fwd on the post-step state must reproduce the training logits
+    when fed the same batch (same forward graph, no dropout)."""
+    fn_t, ispecs_t, _, layout = model.build_train_step("tiny", "qrlora", "cls")
+    fn_e, ispecs_e, _, _ = model.build_eval_fwd("tiny", "qrlora", "cls")
+    state = jnp.asarray(init_state(layout, {}, seed=9))
+    rest_t = make_rest(ispecs_t, seed=9)
+    new_state = fn_t(state, *rest_t)[0]
+    # eval on new_state with the same frozen+batch inputs (minus scalars)
+    rest_e = rest_t[:len(ispecs_e) - 1]
+    logits_eval = np.asarray(fn_e(new_state, *rest_e)[0])
+    # One more train step from new_state with t=2 gives training logits
+    # computed at the *same* params new_state holds.
+    rest_t2 = list(rest_t)
+    rest_t2[-1] = jnp.float32(2.0)
+    state3 = fn_t(new_state, *rest_t2)[0]
+    logits_train = read_metric(state3, layout, "logits")
+    np.testing.assert_allclose(logits_eval, logits_train, atol=2e-4, rtol=2e-4)
+
+
+def test_pretrain_step_decreases_loss():
+    fn, ispecs, _, layout = model.build_pretrain_step("tiny")
+    rng = np.random.default_rng(2)
+    from compile.model import init_backbone
+    state = jnp.asarray(init_state(layout, init_backbone(P, seed=3)))
+    rest = make_rest(ispecs, seed=2)
+    # Proper mlm labels: mask ~15%
+    for i, (name, shape, dtype, role) in enumerate(ispecs[1:]):
+        if name == "batch/mlm_labels":
+            lab = rng.integers(0, P["vocab"], size=shape).astype(np.int32)
+            mask = rng.random(shape) < 0.15
+            rest[i] = jnp.asarray(np.where(mask, lab, -100).astype(np.int32))
+    step = jax.jit(fn)
+    losses = []
+    rest = list(rest)
+    for t in range(1, 6):
+        rest[-1] = jnp.float32(t)
+        state = step(state, *rest)[0]
+        losses.append(float(read_metric(state, layout, "loss")))
+    assert losses[-1] < losses[0], losses
+
+
+def test_qrlora_zero_lambda_matches_frozen_model():
+    """λ=0 ⇒ QR-LoRA forward == plain FT forward on the same backbone."""
+    fn_qr, ispecs_qr, _, layout_qr = model.build_eval_fwd("tiny", "qrlora", "cls")
+    fn_ft, ispecs_ft, _, layout_ft = model.build_eval_fwd("tiny", "ft", "cls")
+    rng = np.random.default_rng(3)
+
+    bb = model.init_backbone(P, seed=7)
+    hd = model.init_head(P, "cls", seed=8)
+
+    batch = {}
+    for name, shape, dtype, role in ispecs_ft[1:]:
+        if role == "batch":
+            if dtype == "i32":
+                hi = P["vocab"] if "input_ids" in name else 2
+                batch[name] = rng.integers(0, hi, size=shape).astype(np.int32)
+            else:
+                batch[name] = np.ones(shape, np.float32)
+
+    # FT state: backbone+head as trainables.
+    state_ft = jnp.asarray(init_state(layout_ft, {**bb, **hd}))
+    rest_ft = [jnp.asarray(batch[n]) for n, _, _, r in ispecs_ft[1:]]
+
+    # QR state: λ=0 trainables; backbone frozen inputs; random bases.
+    lam0 = {n: np.zeros(s, np.float32) for n, s, _ in layout_qr["params"]
+            if n.endswith("/lam")}
+    state_qr = jnp.asarray(init_state(layout_qr, {**lam0, **hd}))
+    rest_qr = []
+    for name, shape, dtype, role in ispecs_qr[1:]:
+        if name in bb:
+            rest_qr.append(jnp.asarray(bb[name]))
+        elif name in batch:
+            rest_qr.append(jnp.asarray(batch[name]))
+        elif name.endswith("/mask"):
+            rest_qr.append(jnp.ones(shape, jnp.float32))
+        else:  # Q/R bases — arbitrary, must not matter at λ=0
+            rest_qr.append(jnp.asarray(rng.standard_normal(shape).astype(np.float32)))
+
+    out_qr = np.asarray(fn_qr(state_qr, *rest_qr)[0])
+    out_ft = np.asarray(fn_ft(state_ft, *rest_ft)[0])
+    np.testing.assert_allclose(out_qr, out_ft, atol=2e-4, rtol=2e-4)
+
+
+def test_qrlora_mask_freezes_masked_directions():
+    fn, ispecs, _, layout = model.build_train_step("tiny", "qrlora", "cls")
+    keep = 4
+    masks = {}
+    for name, shape, dtype, role in ispecs[1:]:
+        if name.endswith("/mask"):
+            m = np.zeros(shape, np.float32)
+            m[:keep] = 1.0
+            masks[name] = m
+    state0 = init_state(layout, {}, seed=5)
+    outs = fn(jnp.asarray(state0), *make_rest(ispecs, seed=5, overrides=masks))
+    state1 = np.asarray(outs[0])
+    for name, shape, off in layout["params"]:
+        if name.endswith("/lam"):
+            before = state0[off:off + shape[0]]
+            after = state1[off:off + shape[0]]
+            np.testing.assert_array_equal(before[keep:], after[keep:],
+                                          err_msg=f"{name}: masked λ moved")
+            assert not np.allclose(before[:keep], after[:keep]), \
+                f"{name}: unmasked λ frozen"
+
+
+def test_class_mask_blocks_padded_class():
+    fn, ispecs, _, layout = model.build_eval_fwd("tiny", "ft", "cls")
+    overrides = {"batch/class_mask": np.array([1.0, 1.0, 0.0], np.float32)}
+    state = jnp.asarray(init_state(layout, {}, seed=6))
+    logits = np.asarray(fn(state, *make_rest(ispecs, seed=6, overrides=overrides))[0])
+    assert (logits[:, 2] < -1e8).all()
+
+
+def test_adam_bias_correction_first_step():
+    train = {"w": jnp.asarray(np.array([1.0, -2.0], np.float32))}
+    grads = {"w": jnp.asarray(np.array([0.3, -0.7], np.float32))}
+    m = {"w": jnp.zeros(2)}
+    v = {"w": jnp.zeros(2)}
+    new_t, _, _ = model.adam_update(train, grads, m, v, 0.01, 1.0)
+    step = np.asarray(new_t["w"]) - np.asarray(train["w"])
+    np.testing.assert_allclose(step, -0.01 * np.sign(np.asarray(grads["w"])),
+                               atol=1e-4)
+
+
+def test_state_layout_roundtrip():
+    _, _, _, layout = model.build_train_step("tiny", "qrlora", "cls")
+    # metrics first (offset 0), then params; offsets strictly increasing
+    assert layout["metrics"][0][2] == 0
+    offs = [o for _, _, o in layout["params"]]
+    assert offs == sorted(offs)
+    assert offs[0] == layout["metrics_len"]
+    total_params = sum(int(np.prod(s)) if s else 1 for _, s, _ in layout["params"])
+    assert total_params == layout["n_params"]
+    assert layout["total"] == layout["metrics_len"] + 3 * layout["n_params"]
+
+
+def test_param_counts_match_formula():
+    from compile.presets import n_backbone_params
+    bb = model.backbone_specs(P)
+    total = sum(int(np.prod(s)) for _, s in bb)
+    assert total == n_backbone_params(P)
+
+
+def test_qrlora_trainable_count_is_tiny():
+    """The paper's headline: QR-LoRA trains orders of magnitude fewer
+    parameters than FT. Structural check on the tiny preset."""
+    _, _, _, lq = model.build_train_step("tiny", "qrlora", "cls")
+    _, _, _, lf = model.build_train_step("tiny", "ft", "cls")
+    head = sum(int(np.prod(s)) for n, s, _ in lq["params"] if n.startswith("head/"))
+    adapters_q = lq["n_params"] - head
+    assert adapters_q < lf["n_params"] / 20

@@ -1,0 +1,182 @@
+//! Benchmark harness (criterion is unavailable offline; this is a
+//! self-contained timing harness with warmup, repetitions, and mean/σ
+//! reporting). Covers the performance-relevant paths of each layer:
+//!
+//! * P1  pivoted-QR basis extraction (L3 host linalg) vs matrix size
+//! * P2  adapter merge (W + Q diag(λ) R)
+//! * P3  device kernel: base matmul vs fused adapter matmul (L1 overhead)
+//! * P4  train-step latency per method (end-to-end device step)
+//! * P5  eval-forward latency + adapter hot-swap cost (serving path)
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use qrlora::adapters::{factorize, Proj, Scope};
+use qrlora::data::{task, Batcher, Lexicon, TaskData};
+use qrlora::linalg::RankRule;
+use qrlora::runtime::{DType, Runtime};
+use qrlora::tensor::Tensor;
+use qrlora::training::{Method, Methods, Session};
+use qrlora::util::log::Stats;
+use qrlora::util::rng::Rng;
+
+fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        stats.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "{name:<48} {:>9.3} ms  ±{:>7.3}  (n={iters}, min {:.3}, max {:.3})",
+        stats.mean(),
+        stats.std(),
+        stats.min,
+        stats.max
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("qrlora bench harness — all times per call\n");
+
+    // ---- P1: pivoted QR scaling --------------------------------------
+    println!("# P1 pivoted-QR factorization (host)");
+    let mut rng = Rng::new(1);
+    for n in [64usize, 128, 256] {
+        let w = Tensor::randn(&[n, n], &mut rng, 1.0);
+        bench(&format!("pivoted_qr {n}x{n}"), 1, 5, || {
+            let f = qrlora::linalg::pivoted_qr(&w);
+            std::hint::black_box(f.diag());
+        });
+    }
+
+    // ---- P2: adapter merge --------------------------------------------
+    println!("\n# P2 adapter merge W + Q diag(λ) R (host)");
+    for n in [64usize, 128] {
+        let w = Tensor::randn(&[n, n], &mut rng, 1.0);
+        let f = factorize(&w, 0.5, RankRule::DiagRatio, n / 2);
+        let lam = vec![0.1f32; n / 2];
+        bench(&format!("merge {n}x{n} r={}", f.used), 1, 10, || {
+            let mut qs = f.q.clone();
+            for i in 0..qs.rows() {
+                for j in 0..qs.cols() {
+                    qs.set(i, j, qs.at(i, j) * lam[j] * f.mask[j]);
+                }
+            }
+            let mut out = w.clone();
+            out.add_assign(&qs.matmul(&f.r));
+            std::hint::black_box(out.data[0]);
+        });
+    }
+
+    // ---- device-side benches -------------------------------------------
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let preset_name = std::env::var("QRLORA_BENCH_PRESET").unwrap_or_else(|_| "small".into());
+    let preset = rt.manifest.preset(&preset_name)?.clone();
+
+    // P3: kernel microbench through PJRT.
+    println!("\n# P3 device kernel: base vs fused adapter matmul ({preset_name})");
+    for key in ["kernel_base", "kernel_adapter"] {
+        let exe = rt.load(&format!("{preset_name}/{key}"))?;
+        let args: Vec<xla::PjRtBuffer> = exe
+            .spec
+            .inputs
+            .iter()
+            .map(|t| match t.dtype {
+                DType::F32 => rt.upload_f32(&vec![0.01f32; t.numel()], &t.shape).unwrap(),
+                DType::I32 => rt.upload_i32(&vec![0; t.numel()], &t.shape).unwrap(),
+            })
+            .collect();
+        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+        bench(&format!("{key} (fwd)"), 3, 20, || {
+            let outs = exe.run(&refs).unwrap();
+            std::hint::black_box(outs.len());
+        });
+    }
+
+    // P4: train-step latency per method.
+    println!("\n# P4 train step latency per method ({preset_name})");
+    let lex = Lexicon::new(preset.vocab);
+    let spec = task("sst2")?;
+    let data = TaskData::generate(spec, &lex, 3);
+    let batcher = Batcher::new(&preset, false);
+    let refs: Vec<&qrlora::data::Example> = data.train[..preset.batch].iter().collect();
+    let batch = batcher.assemble(&refs);
+
+    // Synthetic backbone (random — latency doesn't depend on values).
+    let mut backbone: BTreeMap<String, Tensor> = BTreeMap::new();
+    {
+        let mut brng = Rng::new(7);
+        let exe = rt.load(&format!("{preset_name}/train_step_ft_cls"))?;
+        for f in &exe.spec.layout()?.params {
+            if !f.name.starts_with("head/") {
+                backbone.insert(f.name.clone(), Tensor::randn(&f.shape, &mut brng, 0.05));
+            }
+        }
+    }
+    let methods: Vec<(&str, Method)> = vec![
+        ("FT", Method::FullFt),
+        ("LoRA", Methods::lora(&backbone, &preset, 2.0, 1)?),
+        (
+            "QR-LoRA",
+            Methods::qr_lora(
+                &backbone,
+                &preset,
+                Scope::all_layers(&[Proj::Q, Proj::K, Proj::V, Proj::O]),
+                0.5,
+                RankRule::DiagRatio,
+            )?,
+        ),
+    ];
+    for (name, method) in &methods {
+        let mut session = Session::finetune(
+            &rt,
+            &preset,
+            method,
+            qrlora::data::HeadKind::Cls,
+            &backbone,
+            None,
+            9,
+        )?;
+        bench(&format!("train_step {name}"), 3, 15, || {
+            session.step(&batch, 2, 1e-3).unwrap();
+        });
+        bench(&format!("metrics read {name}"), 2, 10, || {
+            std::hint::black_box(session.last_loss().unwrap());
+        });
+    }
+
+    // P5: eval forward + adapter swap.
+    println!("\n# P5 serving path ({preset_name})");
+    let method = &methods.iter().find(|(n, _)| *n == "QR-LoRA").unwrap().1;
+    let mut session = Session::finetune(
+        &rt,
+        &preset,
+        method,
+        qrlora::data::HeadKind::Cls,
+        &backbone,
+        None,
+        10,
+    )?;
+    bench("eval_fwd QR-LoRA", 3, 15, || {
+        std::hint::black_box(session.forward(&batch, 2).unwrap());
+    });
+    let state = session.download_state()?;
+    bench("adapter hot-swap (upload state)", 2, 15, || {
+        session.upload_state(&state).unwrap();
+    });
+
+    // Footprint summary for the serving claim.
+    let qr_state_kib = (session.layout().total * 4) as f64 / 1024.0;
+    let ft_params = qrlora::runtime::Preset::approx_backbone_params(&preset);
+    println!(
+        "\nadapter state {qr_state_kib:.1} KiB vs full-model copy {:.1} MiB ({}x smaller)",
+        (ft_params * 4) as f64 / (1024.0 * 1024.0),
+        (ft_params * 4) / (session.layout().total * 4).max(1)
+    );
+
+    Ok(())
+}

@@ -1,0 +1,540 @@
+//! Adapter construction: QR-LoRA basis extraction, LoRA / SVD-LoRA
+//! initialization, scope configuration, and parameter accounting.
+//!
+//! This is the paper's §3 on the coordinator side. For each adapted weight
+//! matrix `W` (d×d) the coordinator computes a pivoted QR factorization
+//! `W P = Q R`, selects the retained rank `r` from the diagonal of R via the
+//! τ rule, and ships `(Q_r, R̃_r, mask)` to the device as frozen inputs —
+//! zero-padded to the artifact's fixed `r_max` so one artifact serves every
+//! (τ, scope, projection) configuration. Only the λ coefficients train.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::{pivoted_qr, select_rank, RankRule};
+use crate::runtime::Preset;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Which attention projections to adapt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Proj {
+    Q,
+    K,
+    V,
+    O,
+}
+
+impl Proj {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Proj::Q => "wq",
+            Proj::K => "wk",
+            Proj::V => "wv",
+            Proj::O => "wo",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Proj> {
+        Ok(match s {
+            "wq" | "q" => Proj::Q,
+            "wk" | "k" => Proj::K,
+            "wv" | "v" => Proj::V,
+            "wo" | "o" => Proj::O,
+            _ => anyhow::bail!("unknown projection {s:?} (q|k|v|o)"),
+        })
+    }
+}
+
+/// All projections the QR-LoRA artifacts carry adapter slots for.
+pub const QR_SLOTS: [Proj; 4] = [Proj::Q, Proj::K, Proj::V, Proj::O];
+/// Projections the LoRA artifacts adapt (the baseline's fixed choice).
+pub const LORA_SLOTS: [Proj; 2] = [Proj::Q, Proj::V];
+
+/// Adapter scope: which layers and projections are active.
+#[derive(Clone, Debug)]
+pub struct Scope {
+    /// `None` = all layers; `Some(k)` = last k layers only.
+    pub last_k: Option<usize>,
+    pub projs: Vec<Proj>,
+}
+
+impl Scope {
+    pub fn all_layers(projs: &[Proj]) -> Scope {
+        Scope { last_k: None, projs: projs.to_vec() }
+    }
+
+    pub fn last_layers(k: usize, projs: &[Proj]) -> Scope {
+        Scope { last_k: Some(k), projs: projs.to_vec() }
+    }
+
+    pub fn active(&self, layer: usize, n_layers: usize, proj: Proj) -> bool {
+        let layer_ok = match self.last_k {
+            None => true,
+            Some(k) => layer + k >= n_layers,
+        };
+        layer_ok && self.projs.contains(&proj)
+    }
+
+    /// Human-readable label for experiment tables.
+    pub fn label(&self, n_layers: usize) -> String {
+        let layers = match self.last_k {
+            None => format!("all {n_layers} layers"),
+            Some(k) => format!("last {k} layers"),
+        };
+        let projs: Vec<&str> = self.projs.iter().map(|p| match p {
+            Proj::Q => "Wq",
+            Proj::K => "Wk",
+            Proj::V => "Wv",
+            Proj::O => "Wo",
+        }).collect();
+        format!("{layers}, {}", projs.join(","))
+    }
+}
+
+/// One adapted matrix's QR factors, padded to r_max.
+#[derive(Clone, Debug)]
+pub struct QrFactors {
+    /// (d, r_max), columns ≥ r zeroed.
+    pub q: Tensor,
+    /// (r_max, d), rows ≥ r zeroed; columns un-permuted so Q·R̃ ≈ W.
+    pub r: Tensor,
+    /// (r_max,) 1/0 mask of retained directions.
+    pub mask: Vec<f32>,
+    /// Retained rank after the τ rule (pre-clamp).
+    pub selected: usize,
+    /// Rank actually used (= min(selected, r_max)).
+    pub used: usize,
+}
+
+/// QR-LoRA adapter set for a whole model.
+#[derive(Clone, Debug)]
+pub struct QrAdapterSet {
+    pub factors: BTreeMap<String, QrFactors>,
+    pub scope: Scope,
+    pub tau: f64,
+    pub rule: RankRule,
+    n_layers: usize,
+    d_model: usize,
+    r_max: usize,
+}
+
+impl QrAdapterSet {
+    /// Factorize every in-scope projection of the (frozen) backbone.
+    pub fn build(
+        backbone: &BTreeMap<String, Tensor>,
+        preset: &Preset,
+        scope: Scope,
+        tau: f64,
+        rule: RankRule,
+    ) -> anyhow::Result<QrAdapterSet> {
+        let mut factors = BTreeMap::new();
+        for layer in 0..preset.n_layers {
+            for proj in QR_SLOTS {
+                if !scope.active(layer, preset.n_layers, proj) {
+                    continue;
+                }
+                let wname = format!("layer{layer}/attn/{}", proj.key());
+                let w = backbone
+                    .get(&wname)
+                    .ok_or_else(|| anyhow::anyhow!("backbone missing {wname}"))?;
+                let f = factorize(w, tau, rule, preset.r_max);
+                factors.insert(format!("layer{layer}/{}", proj.key()), f);
+            }
+        }
+        Ok(QrAdapterSet {
+            factors,
+            scope,
+            tau,
+            rule,
+            n_layers: preset.n_layers,
+            d_model: preset.d_model,
+            r_max: preset.r_max,
+        })
+    }
+
+    /// Number of trainable adapter parameters (Σ used ranks) — the paper's
+    /// headline count (task head excluded, as in the paper's tables).
+    pub fn trainable_params(&self) -> usize {
+        self.factors.values().map(|f| f.used).sum()
+    }
+
+    /// Frozen inputs for the device graph: (name, flat data) for every
+    /// Q/R/mask slot of every layer × projection, zeros when out of scope.
+    pub fn frozen_inputs(&self) -> Vec<(String, Vec<f32>)> {
+        let (d, rm) = (self.d_model, self.r_max);
+        let mut out = Vec::new();
+        for layer in 0..self.n_layers {
+            for proj in QR_SLOTS {
+                let key = format!("layer{layer}/{}", proj.key());
+                let base = format!("qr/layer{layer}/{}", proj.key());
+                match self.factors.get(&key) {
+                    Some(f) => {
+                        out.push((format!("{base}/Q"), f.q.data.clone()));
+                        out.push((format!("{base}/R"), f.r.data.clone()));
+                        out.push((format!("{base}/mask"), f.mask.clone()));
+                    }
+                    None => {
+                        out.push((format!("{base}/Q"), vec![0.0; d * rm]));
+                        out.push((format!("{base}/R"), vec![0.0; rm * d]));
+                        out.push((format!("{base}/mask"), vec![0.0; rm]));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Merge a trained λ set into dense weights: W ← W + Q_r diag(λ) R̃_r.
+    /// `lams` maps "layer{i}/{proj}" → λ vector (length r_max).
+    pub fn merge_into(
+        &self,
+        backbone: &mut BTreeMap<String, Tensor>,
+        lams: &BTreeMap<String, Vec<f32>>,
+    ) -> anyhow::Result<()> {
+        for (key, f) in &self.factors {
+            let lam = lams
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("missing λ for {key}"))?;
+            let (layer_proj, proj) = key
+                .rsplit_once('/')
+                .ok_or_else(|| anyhow::anyhow!("bad adapter key {key}"))?;
+            let wname = format!("{layer_proj}/attn/{proj}");
+            let w = backbone
+                .get_mut(&wname)
+                .ok_or_else(|| anyhow::anyhow!("backbone missing {wname}"))?;
+            // ΔW = Q diag(λ·mask) R
+            let mut qs = f.q.clone(); // (d, r_max)
+            for i in 0..qs.rows() {
+                for j in 0..qs.cols() {
+                    qs.set(i, j, qs.at(i, j) * lam[j] * f.mask[j]);
+                }
+            }
+            let delta = qs.matmul(&f.r);
+            w.add_assign(&delta);
+        }
+        Ok(())
+    }
+}
+
+/// Pivoted-QR factorization of one weight matrix with τ-rank selection,
+/// zero-padded to `r_max`.
+pub fn factorize(w: &Tensor, tau: f64, rule: RankRule, r_max: usize) -> QrFactors {
+    let f = pivoted_qr(w);
+    let diag = f.diag();
+    let selected = select_rank(&diag, tau, rule);
+    let used = selected.min(r_max);
+    let (q_r, r_r) = f.truncate(used);
+
+    let d_rows = w.rows();
+    let d_cols = w.cols();
+    let mut q = Tensor::zeros(&[d_rows, r_max]);
+    for i in 0..d_rows {
+        for j in 0..used {
+            q.set(i, j, q_r.at(i, j));
+        }
+    }
+    let mut r = Tensor::zeros(&[r_max, d_cols]);
+    for i in 0..used {
+        for j in 0..d_cols {
+            r.set(i, j, r_r.at(i, j));
+        }
+    }
+    let mut mask = vec![0.0; r_max];
+    for m in mask.iter_mut().take(used) {
+        *m = 1.0;
+    }
+    QrFactors { q, r, mask, selected, used }
+}
+
+// ---------------------------------------------------------------------------
+// LoRA / SVD-LoRA
+// ---------------------------------------------------------------------------
+
+/// LoRA initialization flavour.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LoraInit {
+    /// A ~ N(0, 0.02), B = 0 (the LoRA paper's default).
+    Standard,
+    /// SVD-LoRA: seed the first k slots from the top-k singular triplets of
+    /// W (B = U_k √Σ, A = √Σ V_kᵀ), remaining slots standard.
+    Svd { k: usize },
+}
+
+/// LoRA adapter values: per (layer, proj in LORA_SLOTS) initial A/B plus the
+/// frozen scale vector (α/r, 0 where inactive).
+#[derive(Clone, Debug)]
+pub struct LoraAdapterSet {
+    /// "layer{i}/{proj}" → (A: d×r, B: r×d)
+    pub init: BTreeMap<String, (Tensor, Tensor)>,
+    pub scale: f32,
+    n_layers: usize,
+    d_model: usize,
+    r_lora: usize,
+}
+
+impl LoraAdapterSet {
+    pub fn build(
+        backbone: &BTreeMap<String, Tensor>,
+        preset: &Preset,
+        init: LoraInit,
+        alpha: f32,
+        seed: u64,
+    ) -> anyhow::Result<LoraAdapterSet> {
+        let r = preset.r_lora;
+        let mut rng = Rng::new(seed);
+        let mut map = BTreeMap::new();
+        for layer in 0..preset.n_layers {
+            for proj in LORA_SLOTS {
+                let wname = format!("layer{layer}/attn/{}", proj.key());
+                let w = backbone
+                    .get(&wname)
+                    .ok_or_else(|| anyhow::anyhow!("backbone missing {wname}"))?;
+                let mut a = Tensor::randn(&[preset.d_model, r], &mut rng, 0.02);
+                let mut b = Tensor::zeros(&[r, preset.d_model]);
+                if let LoraInit::Svd { k } = init {
+                    let svd = crate::linalg::jacobi_svd(w);
+                    let (bu, av) = svd.split_factors(k.min(r));
+                    // bu: d×k → A's first k columns; av: k×d → B's first k rows
+                    for i in 0..preset.d_model {
+                        for j in 0..k.min(r) {
+                            a.set(i, j, bu.at(i, j));
+                        }
+                    }
+                    for i in 0..k.min(r) {
+                        for j in 0..preset.d_model {
+                            b.set(i, j, av.at(i, j));
+                        }
+                    }
+                }
+                map.insert(format!("layer{layer}/{}", proj.key()), (a, b));
+            }
+        }
+        Ok(LoraAdapterSet {
+            init: map,
+            scale: alpha / r as f32,
+            n_layers: preset.n_layers,
+            d_model: preset.d_model,
+            r_lora: preset.r_lora,
+        })
+    }
+
+    /// Trainable parameter count: 2·d·r per adapted matrix.
+    pub fn trainable_params(&self) -> usize {
+        self.init.len() * 2 * self.d_model * self.r_lora
+    }
+
+    /// Frozen scale inputs for the graph.
+    pub fn frozen_inputs(&self) -> Vec<(String, Vec<f32>)> {
+        let mut out = Vec::new();
+        for layer in 0..self.n_layers {
+            for proj in LORA_SLOTS {
+                let base = format!("lora/layer{layer}/{}", proj.key());
+                out.push((format!("{base}/scale"), vec![self.scale; self.r_lora]));
+            }
+        }
+        out
+    }
+
+    /// Initial values to write into the state vector's A/B leaves.
+    pub fn state_writes(&self) -> Vec<(String, Tensor)> {
+        let mut out = Vec::new();
+        for (key, (a, b)) in &self.init {
+            let (layer, proj) = key.rsplit_once('/').unwrap();
+            out.push((format!("lora/{layer}/{proj}/A"), a.clone()));
+            out.push((format!("lora/{layer}/{proj}/B"), b.clone()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormality_defect;
+
+    fn preset() -> Preset {
+        Preset {
+            name: "test".into(),
+            d_model: 16,
+            n_layers: 3,
+            n_heads: 2,
+            d_ff: 32,
+            vocab: 128,
+            max_seq: 16,
+            batch: 4,
+            r_max: 8,
+            r_lora: 2,
+            n_classes: 3,
+        }
+    }
+
+    fn backbone(p: &Preset, seed: u64) -> BTreeMap<String, Tensor> {
+        let mut rng = Rng::new(seed);
+        let mut map = BTreeMap::new();
+        for layer in 0..p.n_layers {
+            for proj in QR_SLOTS {
+                map.insert(
+                    format!("layer{layer}/attn/{}", proj.key()),
+                    Tensor::randn(&[p.d_model, p.d_model], &mut rng, 0.3),
+                );
+            }
+        }
+        map
+    }
+
+    #[test]
+    fn scope_semantics() {
+        let s = Scope::last_layers(2, &[Proj::Q, Proj::V]);
+        assert!(!s.active(0, 4, Proj::Q));
+        assert!(s.active(2, 4, Proj::Q));
+        assert!(s.active(3, 4, Proj::V));
+        assert!(!s.active(3, 4, Proj::O));
+        let all = Scope::all_layers(&[Proj::O]);
+        assert!(all.active(0, 4, Proj::O));
+        assert!(!all.active(0, 4, Proj::Q));
+    }
+
+    #[test]
+    fn factorize_reconstructs_with_full_mask() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(&[12, 12], &mut rng, 1.0);
+        let f = factorize(&w, 0.0, RankRule::DiagRatio, 12);
+        // τ=0 keeps every direction with |R_ii| > 0 → full rank
+        assert_eq!(f.used, 12);
+        let approx = f.q.matmul(&f.r);
+        assert!(approx.max_abs_diff(&w) < 5e-4, "{}", approx.max_abs_diff(&w));
+    }
+
+    #[test]
+    fn factorize_clamps_to_rmax() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(&[16, 16], &mut rng, 1.0);
+        let f = factorize(&w, 0.0, RankRule::DiagRatio, 4);
+        assert_eq!(f.used, 4);
+        assert!(f.selected >= f.used);
+        assert_eq!(f.mask.iter().filter(|&&m| m == 1.0).count(), 4);
+        // padded tail is zero
+        for i in 0..16 {
+            for j in 4..f.q.cols() {
+                assert_eq!(f.q.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn higher_tau_keeps_fewer_directions() {
+        let mut rng = Rng::new(7);
+        let w = Tensor::randn(&[16, 16], &mut rng, 1.0);
+        let lo = factorize(&w, 0.3, RankRule::DiagRatio, 16);
+        let hi = factorize(&w, 0.8, RankRule::DiagRatio, 16);
+        assert!(hi.used <= lo.used, "{} > {}", hi.used, lo.used);
+    }
+
+    #[test]
+    fn padded_q_columns_orthonormal() {
+        let mut rng = Rng::new(8);
+        let w = Tensor::randn(&[16, 16], &mut rng, 1.0);
+        let f = factorize(&w, 0.3, RankRule::DiagRatio, 16);
+        let q_used = f.q.slice_cols(0, f.used);
+        assert!(orthonormality_defect(&q_used) < 1e-4);
+    }
+
+    #[test]
+    fn adapter_set_counts_and_inputs() {
+        let p = preset();
+        let bb = backbone(&p, 9);
+        let set = QrAdapterSet::build(
+            &bb,
+            &p,
+            Scope::last_layers(1, &[Proj::Q]),
+            0.5,
+            RankRule::DiagRatio,
+        )
+        .unwrap();
+        assert_eq!(set.factors.len(), 1);
+        assert!(set.trainable_params() > 0);
+        assert!(set.trainable_params() <= p.r_max);
+        // 3 layers × 4 slots × 3 tensors
+        let inputs = set.frozen_inputs();
+        assert_eq!(inputs.len(), 3 * 4 * 3);
+        // out-of-scope slots are all zeros
+        let q0: &Vec<f32> = &inputs.iter().find(|(n, _)| n == "qr/layer0/wq/Q").unwrap().1;
+        assert!(q0.iter().all(|&v| v == 0.0));
+        let q2: &Vec<f32> = &inputs.iter().find(|(n, _)| n == "qr/layer2/wq/Q").unwrap().1;
+        assert!(q2.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn param_count_scales_with_scope() {
+        let p = preset();
+        let bb = backbone(&p, 10);
+        let narrow = QrAdapterSet::build(&bb, &p, Scope::last_layers(1, &[Proj::Q]), 0.5, RankRule::DiagRatio).unwrap();
+        let wide = QrAdapterSet::build(&bb, &p, Scope::all_layers(&[Proj::Q, Proj::V, Proj::O]), 0.5, RankRule::DiagRatio).unwrap();
+        assert!(wide.trainable_params() > narrow.trainable_params());
+    }
+
+    #[test]
+    fn merge_matches_factors() {
+        let p = preset();
+        let bb = backbone(&p, 11);
+        let set = QrAdapterSet::build(&bb, &p, Scope::last_layers(1, &[Proj::V]), 0.4, RankRule::DiagRatio).unwrap();
+        let key = "layer2/wv".to_string();
+        let f = &set.factors[&key];
+        let mut lam = vec![0.0f32; p.r_max];
+        lam[0] = 2.0;
+        let mut lams = BTreeMap::new();
+        lams.insert(key.clone(), lam);
+        let mut merged = bb.clone();
+        set.merge_into(&mut merged, &lams).unwrap();
+        // ΔW = 2 · q₀ r₀ᵀ
+        let w0 = &bb["layer2/attn/wv"];
+        let w1 = &merged["layer2/attn/wv"];
+        let mut want = w0.clone();
+        for i in 0..p.d_model {
+            for j in 0..p.d_model {
+                let delta = 2.0 * f.q.at(i, 0) * f.r.at(0, j);
+                want.set(i, j, want.at(i, j) + delta);
+            }
+        }
+        assert!(w1.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn lora_standard_init_starts_at_zero_delta() {
+        let p = preset();
+        let bb = backbone(&p, 12);
+        let set = LoraAdapterSet::build(&bb, &p, LoraInit::Standard, 2.0, 13).unwrap();
+        assert_eq!(set.trainable_params(), 6 * 2 * 16 * 2); // 6 matrices × 2·d·r
+        for (a, b) in set.init.values() {
+            assert!(a.data.iter().any(|&v| v != 0.0));
+            assert!(b.data.iter().all(|&v| v == 0.0));
+        }
+        assert_eq!(set.scale, 1.0);
+    }
+
+    #[test]
+    fn svd_init_first_slot_reconstructs_top_direction() {
+        let p = preset();
+        let bb = backbone(&p, 14);
+        let set = LoraAdapterSet::build(&bb, &p, LoraInit::Svd { k: 1 }, 2.0, 15).unwrap();
+        let (a, b) = &set.init["layer0/wq"];
+        let w = &bb["layer0/attn/wq"];
+        // BA (using only slot 0) should equal σ₁ u₁ v₁ᵀ — the best rank-1
+        // approximation; its Frobenius norm is σ₁.
+        let a0 = a.slice_cols(0, 1);
+        let b0 = b.slice_rows(0, 1);
+        let approx = a0.matmul(&b0);
+        let svd = crate::linalg::jacobi_svd(w);
+        assert!((approx.fro_norm() - svd.s[0] as f64).abs() < 1e-2);
+    }
+
+    #[test]
+    fn lora_frozen_scales() {
+        let p = preset();
+        let bb = backbone(&p, 16);
+        let set = LoraAdapterSet::build(&bb, &p, LoraInit::Standard, 4.0, 17).unwrap();
+        let inputs = set.frozen_inputs();
+        assert_eq!(inputs.len(), 3 * 2);
+        assert!(inputs.iter().all(|(_, v)| v.iter().all(|&s| s == 2.0)));
+    }
+}

@@ -1,0 +1,238 @@
+//! Batching: examples → fixed-shape device tensors matching the manifest's
+//! batch specs ([CLS] a [SEP] b [SEP], padding, type ids, masks).
+
+use super::tasks::{Example, Label};
+use super::vocab::{CLS, PAD, SEP};
+use crate::runtime::Preset;
+use crate::util::rng::Rng;
+
+/// A fully assembled batch, host side.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub input_ids: Vec<i32>,
+    pub type_ids: Vec<i32>,
+    pub attn_mask: Vec<f32>,
+    /// i32 class labels (classification) — parallel to examples.
+    pub labels_i32: Vec<i32>,
+    /// f32 targets (regression).
+    pub labels_f32: Vec<f32>,
+    /// 1.0 for real examples, 0.0 for tail padding.
+    pub example_w: Vec<f32>,
+    pub batch: usize,
+    pub seq: usize,
+    pub n_real: usize,
+}
+
+/// Assembles batches for one preset.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub batch: usize,
+    pub seq: usize,
+    regression: bool,
+}
+
+impl Batcher {
+    pub fn new(preset: &Preset, regression: bool) -> Batcher {
+        Batcher {
+            batch: preset.batch,
+            seq: preset.max_seq,
+            regression,
+        }
+    }
+
+    /// Encode one example into (ids, types) of length `seq`.
+    fn encode(&self, ex: &Example) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut ids = vec![CLS as i32];
+        let mut types = vec![0i32];
+        for &t in &ex.a {
+            ids.push(t as i32);
+            types.push(0);
+        }
+        ids.push(SEP as i32);
+        types.push(0);
+        if !ex.b.is_empty() {
+            for &t in &ex.b {
+                ids.push(t as i32);
+                types.push(1);
+            }
+            ids.push(SEP as i32);
+            types.push(1);
+        }
+        ids.truncate(self.seq);
+        types.truncate(self.seq);
+        let used = ids.len();
+        let mut mask = vec![1.0f32; used];
+        ids.resize(self.seq, PAD as i32);
+        types.resize(self.seq, 0);
+        mask.resize(self.seq, 0.0);
+        (ids, types, mask)
+    }
+
+    /// Build a batch from up to `batch` examples; short batches are padded
+    /// with zero-weight copies of the first example.
+    pub fn assemble(&self, examples: &[&Example]) -> Batch {
+        assert!(!examples.is_empty() && examples.len() <= self.batch);
+        let n_real = examples.len();
+        let mut b = Batch {
+            input_ids: Vec::with_capacity(self.batch * self.seq),
+            type_ids: Vec::with_capacity(self.batch * self.seq),
+            attn_mask: Vec::with_capacity(self.batch * self.seq),
+            labels_i32: Vec::with_capacity(self.batch),
+            labels_f32: Vec::with_capacity(self.batch),
+            example_w: Vec::with_capacity(self.batch),
+            batch: self.batch,
+            seq: self.seq,
+            n_real,
+        };
+        for i in 0..self.batch {
+            let (ex, w) = if i < n_real {
+                (examples[i], 1.0)
+            } else {
+                (examples[0], 0.0)
+            };
+            let (ids, types, mask) = self.encode(ex);
+            b.input_ids.extend(ids);
+            b.type_ids.extend(types);
+            b.attn_mask.extend(mask);
+            match ex.label {
+                Label::Class(c) => {
+                    b.labels_i32.push(c as i32);
+                    b.labels_f32.push(c as f32);
+                }
+                Label::Score(s) => {
+                    b.labels_i32.push(0);
+                    b.labels_f32.push(s);
+                }
+            }
+            b.example_w.push(w);
+        }
+        b
+    }
+
+    /// Iterate a dataset in shuffled minibatches (one epoch).
+    pub fn epoch<'a>(&'a self, data: &'a [Example], rng: &mut Rng) -> Vec<Vec<&'a Example>> {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        order
+            .chunks(self.batch)
+            .map(|chunk| chunk.iter().map(|&i| &data[i]).collect())
+            .collect()
+    }
+
+    /// Class-mask vector for a task with `n_classes` (padded head width `k`).
+    pub fn class_mask(n_classes: usize, k: usize) -> Vec<f32> {
+        (0..k).map(|i| if i < n_classes { 1.0 } else { 0.0 }).collect()
+    }
+
+    pub fn is_regression(&self) -> bool {
+        self.regression
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{task, Lexicon, TaskData};
+
+    fn preset() -> Preset {
+        Preset {
+            name: "tiny".into(),
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 256,
+            vocab: 512,
+            max_seq: 32,
+            batch: 8,
+            r_max: 32,
+            r_lora: 2,
+            n_classes: 3,
+        }
+    }
+
+    fn data(name: &str) -> TaskData {
+        let lex = Lexicon::new(512);
+        TaskData::generate(task(name).unwrap(), &lex, 21)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let d = data("mnli");
+        let b = Batcher::new(&preset(), false);
+        let refs: Vec<&Example> = d.train[..8].iter().collect();
+        let batch = b.assemble(&refs);
+        assert_eq!(batch.input_ids.len(), 8 * 32);
+        assert_eq!(batch.attn_mask.len(), 8 * 32);
+        assert_eq!(batch.labels_i32.len(), 8);
+        assert_eq!(batch.example_w, vec![1.0; 8]);
+    }
+
+    #[test]
+    fn cls_and_sep_structure() {
+        let d = data("mrpc");
+        let b = Batcher::new(&preset(), false);
+        let refs: Vec<&Example> = d.train[..1].iter().collect();
+        let batch = b.assemble(&refs);
+        assert_eq!(batch.input_ids[0], CLS as i32);
+        let sep_count = batch.input_ids[..32]
+            .iter()
+            .filter(|&&t| t == SEP as i32)
+            .count();
+        assert_eq!(sep_count, 2, "pair tasks carry two separators");
+        // type ids flip to 1 in the second segment
+        assert!(batch.type_ids[..32].iter().any(|&t| t == 1));
+    }
+
+    #[test]
+    fn short_batch_padded_with_zero_weight() {
+        let d = data("sst2");
+        let b = Batcher::new(&preset(), false);
+        let refs: Vec<&Example> = d.train[..3].iter().collect();
+        let batch = b.assemble(&refs);
+        assert_eq!(batch.n_real, 3);
+        assert_eq!(&batch.example_w[..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&batch.example_w[3..], &[0.0; 5]);
+    }
+
+    #[test]
+    fn mask_zero_past_content() {
+        let d = data("sst2");
+        let b = Batcher::new(&preset(), false);
+        let refs: Vec<&Example> = d.train[..1].iter().collect();
+        let batch = b.assemble(&refs);
+        let used = 1 + d.train[0].a.len().min(30) + 1;
+        for s in 0..32 {
+            let want = if s < used.min(32) { 1.0 } else { 0.0 };
+            assert_eq!(batch.attn_mask[s], want, "pos {s}");
+        }
+        for s in used..32 {
+            assert_eq!(batch.input_ids[s], PAD as i32);
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_examples() {
+        let d = data("rte");
+        let b = Batcher::new(&preset(), false);
+        let mut rng = Rng::new(5);
+        let batches = b.epoch(&d.train[..100], &mut rng);
+        let total: usize = batches.iter().map(|x| x.len()).sum();
+        assert_eq!(total, 100);
+        assert_eq!(batches.len(), 13); // ceil(100/8)
+    }
+
+    #[test]
+    fn class_mask_padding() {
+        assert_eq!(Batcher::class_mask(2, 3), vec![1.0, 1.0, 0.0]);
+        assert_eq!(Batcher::class_mask(3, 3), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn regression_labels_flow() {
+        let d = data("stsb");
+        let b = Batcher::new(&preset(), true);
+        let refs: Vec<&Example> = d.train[..4].iter().collect();
+        let batch = b.assemble(&refs);
+        assert!(batch.labels_f32.iter().take(4).all(|&s| (0.0..=5.0).contains(&s)));
+    }
+}

@@ -1,0 +1,192 @@
+//! Semantic partition of the synthetic vocabulary.
+//!
+//! Content ids are split into fields (negation, sentiment, relations,
+//! question/answer types, agreement determiners/nouns) plus per-genre
+//! entity and filler pools. All ranges scale with the vocabulary so the
+//! same generators work for every preset.
+
+use super::vocab::Vocab;
+use crate::util::rng::Rng;
+
+pub const N_GENRES: usize = 5;
+
+/// An index range into the content-word space.
+#[derive(Clone, Copy, Debug)]
+pub struct Field {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl Field {
+    /// Sample a content index from this field.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        self.start + rng.below(self.len)
+    }
+
+    pub fn contains(&self, idx: usize) -> bool {
+        idx >= self.start && idx < self.start + self.len
+    }
+
+    pub fn nth(&self, i: usize) -> usize {
+        self.start + (i % self.len)
+    }
+}
+
+/// The full semantic partition.
+#[derive(Clone, Debug)]
+pub struct Lexicon {
+    pub vocab: Vocab,
+    pub negation: Field,
+    pub sent_pos: Field,
+    pub sent_neg: Field,
+    /// Relations come in synonym pairs: rel 2k and 2k+1 are synonyms.
+    pub relations: Field,
+    pub qtypes: Field,
+    pub atypes: Field,
+    pub det_sg: Field,
+    pub det_pl: Field,
+    pub noun_sg: Field,
+    pub noun_pl: Field,
+    pub entities: [Field; N_GENRES],
+    pub fillers: [Field; N_GENRES],
+}
+
+impl Lexicon {
+    pub fn new(vocab_size: usize) -> Lexicon {
+        let vocab = Vocab::synthetic(vocab_size);
+        let n = vocab_size - super::vocab::N_RESERVED as usize;
+        // Fixed-fraction partition (sums to < 1.0; remainder unused slack).
+        let mut cursor = 0usize;
+        let mut take = |frac: f64, min: usize| {
+            let len = ((n as f64 * frac) as usize).max(min);
+            let f = Field { start: cursor, len };
+            cursor += len;
+            f
+        };
+        let negation = take(0.01, 4);
+        let sent_pos = take(0.05, 8);
+        let sent_neg = take(0.05, 8);
+        let relations = take(0.04, 8); // even count → synonym pairs
+        let qtypes = take(0.015, 6);
+        let atypes = take(0.015, 6);
+        let det_sg = take(0.008, 3);
+        let det_pl = take(0.008, 3);
+        let noun_sg = take(0.04, 8);
+        let noun_pl = take(0.04, 8);
+        let per_genre_ent = ((n as f64 * 0.07) as usize).max(10);
+        let per_genre_fill = ((n as f64 * 0.06) as usize).max(10);
+        let entities = std::array::from_fn(|_| {
+            let f = Field { start: cursor, len: per_genre_ent };
+            cursor += per_genre_ent;
+            f
+        });
+        let fillers = std::array::from_fn(|_| {
+            let f = Field { start: cursor, len: per_genre_fill };
+            cursor += per_genre_fill;
+            f
+        });
+        assert!(
+            cursor <= n,
+            "lexicon partition overflows vocab: {cursor} > {n} (vocab_size {vocab_size})"
+        );
+        Lexicon {
+            vocab,
+            negation,
+            sent_pos,
+            sent_neg,
+            relations,
+            qtypes,
+            atypes,
+            det_sg,
+            det_pl,
+            noun_sg,
+            noun_pl,
+            entities,
+            fillers,
+        }
+    }
+
+    /// Token id for a content index.
+    pub fn id(&self, content_idx: usize) -> u32 {
+        self.vocab.content_id(content_idx)
+    }
+
+    /// The synonym partner of a relation index.
+    pub fn rel_synonym(&self, rel_idx: usize) -> usize {
+        let local = rel_idx - self.relations.start;
+        self.relations.start + (local ^ 1).min(self.relations.len - 1)
+    }
+
+    /// The answer-type paired with a question-type (same local index).
+    pub fn atype_for(&self, qtype_idx: usize) -> usize {
+        self.atypes.start + (qtype_idx - self.qtypes.start) % self.atypes.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_tiny_vocab() {
+        let lex = Lexicon::new(512);
+        assert!(lex.fillers[N_GENRES - 1].start + lex.fillers[N_GENRES - 1].len <= 512 - 5);
+    }
+
+    #[test]
+    fn fits_small_vocab() {
+        let _ = Lexicon::new(4096);
+    }
+
+    #[test]
+    fn fields_disjoint() {
+        let lex = Lexicon::new(1024);
+        let mut fields = vec![
+            lex.negation, lex.sent_pos, lex.sent_neg, lex.relations,
+            lex.qtypes, lex.atypes, lex.det_sg, lex.det_pl,
+            lex.noun_sg, lex.noun_pl,
+        ];
+        fields.extend_from_slice(&lex.entities);
+        fields.extend_from_slice(&lex.fillers);
+        for (i, a) in fields.iter().enumerate() {
+            for b in &fields[i + 1..] {
+                let overlap = a.start < b.start + b.len && b.start < a.start + a.len;
+                assert!(!overlap, "{a:?} overlaps {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn synonym_is_involution() {
+        let lex = Lexicon::new(1024);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let r = lex.relations.sample(&mut rng);
+            let s = lex.rel_synonym(r);
+            assert!(lex.relations.contains(s));
+            if lex.relations.len % 2 == 0 {
+                assert_eq!(lex.rel_synonym(s), r);
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_stays_in_field() {
+        let lex = Lexicon::new(512);
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            assert!(lex.sent_pos.contains(lex.sent_pos.sample(&mut rng)));
+            let g = rng.below(N_GENRES);
+            assert!(lex.entities[g].contains(lex.entities[g].sample(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn atype_pairing_consistent() {
+        let lex = Lexicon::new(1024);
+        let q0 = lex.qtypes.start;
+        let q1 = lex.qtypes.start + 1;
+        assert_ne!(lex.atype_for(q0), lex.atype_for(q1));
+        assert!(lex.atypes.contains(lex.atype_for(q0)));
+    }
+}

@@ -1,0 +1,57 @@
+//! Synthetic GLUE suite — the data substitution described in DESIGN.md §3.
+//!
+//! Each of the paper's eight GLUE tasks is mirrored by a generator that
+//! plants a *latent rule* a transformer must learn (entity/relation
+//! matching, negation, agreement, compositional entailment, lexical
+//! overlap), with the task's class structure, metric, data sizes, and —
+//! for MNLI — genre-based matched/mismatched evaluation all preserved.
+
+mod batch;
+mod lexicon;
+mod tasks;
+pub mod vocab;
+
+pub use batch::{Batch, Batcher};
+pub use lexicon::{Lexicon, N_GENRES};
+pub use tasks::{gen_example, Example, Label, Split, TaskData, TaskSpec, ALL_TASKS};
+
+use crate::metrics::MetricKind;
+
+/// Head type a task trains on the device graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadKind {
+    Cls,
+    Reg,
+}
+
+impl HeadKind {
+    pub fn artifact_suffix(&self) -> &'static str {
+        match self {
+            HeadKind::Cls => "cls",
+            HeadKind::Reg => "reg",
+        }
+    }
+}
+
+/// Look up a task spec by name.
+pub fn task(name: &str) -> anyhow::Result<&'static TaskSpec> {
+    ALL_TASKS
+        .iter()
+        .find(|t| t.name == name)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown task {name:?} (have: {})",
+                ALL_TASKS.iter().map(|t| t.name).collect::<Vec<_>>().join(", ")
+            )
+        })
+}
+
+/// The headline metric for a task (GLUE conventions).
+pub fn metric_kind(name: &str) -> MetricKind {
+    match name {
+        "mrpc" | "qqp" => MetricKind::AccuracyAndF1,
+        "cola" => MetricKind::Matthews,
+        "stsb" => MetricKind::PearsonSpearman,
+        _ => MetricKind::Accuracy,
+    }
+}

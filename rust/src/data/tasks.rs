@@ -1,0 +1,561 @@
+//! The eight GLUE-analogue task generators.
+//!
+//! Latent rules (what the model must learn):
+//! * `mnli`  — 3-way NLI over (entity, relation, entity) facts: entailment =
+//!   relation-synonym paraphrase, neutral = different relation/object,
+//!   contradiction = negated paraphrase. Genres partition the lexicon;
+//!   matched eval draws from the training genres, mismatched from held-out.
+//! * `rte`   — *compositional* 2-way entailment: the premise states two
+//!   chained facts (a r1 b, b r2 c) and the hypothesis claims (a r3 c);
+//!   entailed iff r3 equals the composition table's entry for (r1, r2).
+//!   Only 2.5k train examples — the paper's low-resource anomaly task.
+//! * `mrpc`/`qqp` — paraphrase detection: positives share content with
+//!   synonym substitution + filler shuffling, negatives perturb one
+//!   content token (hard negatives).
+//! * `sst2`  — sentiment: sum of sentiment-token polarities, negation
+//!   markers flip the token that follows.
+//! * `cola`  — acceptability: determiner–noun number agreement plus a
+//!   no-relation-initial word-order constraint.
+//! * `qnli`  — question answerability: the passage answers the question iff
+//!   it contains the answer-type paired with the question-type AND the
+//!   question's entity.
+//! * `stsb`  — similarity regression: score ∝ content-token overlap.
+
+use super::lexicon::{Lexicon, N_GENRES};
+use super::HeadKind;
+use crate::util::rng::Rng;
+
+/// Task label.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Label {
+    Class(usize),
+    Score(f32),
+}
+
+/// One generated example (token ids, pre-[CLS]/[SEP] assembly).
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub a: Vec<u32>,
+    pub b: Vec<u32>,
+    pub label: Label,
+    pub genre: usize,
+}
+
+/// Static description of a task.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub n_classes: usize,
+    pub head: HeadKind,
+    pub train_size: usize,
+    pub dev_size: usize,
+    pub train_genres: &'static [usize],
+    /// Mismatched-eval genres (MNLI only).
+    pub mm_genres: Option<&'static [usize]>,
+    /// Fraction of examples whose label is resampled uniformly — injects a
+    /// Bayes-error floor so methods have headroom to differ (the synthetic
+    /// rules are otherwise perfectly separable, unlike real GLUE text).
+    pub label_noise: f64,
+}
+
+pub static ALL_TASKS: &[TaskSpec] = &[
+    TaskSpec { name: "mnli", n_classes: 3, head: HeadKind::Cls, train_size: 50_000, dev_size: 2_000, train_genres: &[0, 1, 2], mm_genres: Some(&[3, 4]), label_noise: 0.22 },
+    TaskSpec { name: "sst2", n_classes: 2, head: HeadKind::Cls, train_size: 10_000, dev_size: 2_000, train_genres: &[0, 1, 2], mm_genres: None, label_noise: 0.08 },
+    TaskSpec { name: "mrpc", n_classes: 2, head: HeadKind::Cls, train_size: 3_700, dev_size: 1_700, train_genres: &[1, 2], mm_genres: None, label_noise: 0.10 },
+    TaskSpec { name: "cola", n_classes: 2, head: HeadKind::Cls, train_size: 8_500, dev_size: 1_000, train_genres: &[0, 2, 3], mm_genres: None, label_noise: 0.12 },
+    TaskSpec { name: "qnli", n_classes: 2, head: HeadKind::Cls, train_size: 10_000, dev_size: 2_000, train_genres: &[0, 1, 3], mm_genres: None, label_noise: 0.08 },
+    TaskSpec { name: "qqp", n_classes: 2, head: HeadKind::Cls, train_size: 10_000, dev_size: 2_000, train_genres: &[1, 3], mm_genres: None, label_noise: 0.10 },
+    TaskSpec { name: "rte", n_classes: 2, head: HeadKind::Cls, train_size: 2_500, dev_size: 1_000, train_genres: &[0, 1, 2, 3, 4], mm_genres: None, label_noise: 0.05 },
+    TaskSpec { name: "stsb", n_classes: 1, head: HeadKind::Reg, train_size: 5_700, dev_size: 1_500, train_genres: &[0, 1, 2], mm_genres: None, label_noise: 0.0 },
+];
+
+fn fillers(lex: &Lexicon, rng: &mut Rng, genre: usize, n: usize) -> Vec<u32> {
+    (0..n).map(|_| lex.id(lex.fillers[genre].sample(rng))).collect()
+}
+
+/// Relation-composition table for RTE: comp(r1, r2) is a fixed pseudo-random
+/// relation index (deterministic in the pair).
+fn compose(lex: &Lexicon, r1: usize, r2: usize) -> usize {
+    // Bucketed composition: only the relation *classes* (mod 4) matter, so
+    // the table has 16 entries — hard (second-order) but learnable from the
+    // 2.5k examples RTE provides.
+    let l1 = (r1 - lex.relations.start) % 4;
+    let l2 = (r2 - lex.relations.start) % 4;
+    lex.relations.start + (l1 * 7 + l2 * 3 + 1) % lex.relations.len.min(16)
+}
+
+fn gen_mnli(lex: &Lexicon, rng: &mut Rng, genre: usize, label: usize) -> Example {
+    let ea = lex.id(lex.entities[genre].sample(rng));
+    let rel = lex.relations.sample(rng);
+    let eb = lex.id(lex.entities[genre].sample(rng));
+    let mut a = vec![ea, lex.id(rel), eb];
+    let nf = rng.range(2, 6);
+    a.extend(fillers(lex, rng, genre, nf));
+    let syn = lex.id(lex.rel_synonym(rel));
+    let b = match label {
+        0 => vec![ea, syn, eb], // entailment: synonym paraphrase
+        1 => {
+            // neutral: same subject, different relation and object
+            let mut rel2 = lex.relations.sample(rng);
+            while rel2 == rel || rel2 == lex.rel_synonym(rel) {
+                rel2 = lex.relations.sample(rng);
+            }
+            let mut ec = lex.id(lex.entities[genre].sample(rng));
+            while ec == eb {
+                ec = lex.id(lex.entities[genre].sample(rng));
+            }
+            vec![ea, lex.id(rel2), ec]
+        }
+        _ => {
+            // contradiction: negated paraphrase
+            let neg = lex.id(lex.negation.sample(rng));
+            vec![neg, ea, syn, eb]
+        }
+    };
+    Example { a, b, label: Label::Class(label), genre }
+}
+
+fn gen_rte(lex: &Lexicon, rng: &mut Rng, genre: usize, label: usize) -> Example {
+    let ea = lex.id(lex.entities[genre].sample(rng));
+    let eb = lex.id(lex.entities[genre].sample(rng));
+    let ec = lex.id(lex.entities[genre].sample(rng));
+    let r1 = lex.relations.sample(rng);
+    let r2 = lex.relations.sample(rng);
+    let comp = compose(lex, r1, r2);
+    let mut a = vec![ea, lex.id(r1), eb, lex.id(r2), ec];
+    let nf = rng.range(1, 4);
+    a.extend(fillers(lex, rng, genre, nf));
+    let r3 = if label == 0 {
+        comp // entailed: the composed relation
+    } else {
+        let mut r = lex.relations.sample(rng);
+        while r == comp {
+            r = lex.relations.sample(rng);
+        }
+        r
+    };
+    let b = vec![ea, lex.id(r3), ec];
+    Example { a, b, label: Label::Class(label), genre }
+}
+
+fn gen_paraphrase(
+    lex: &Lexicon,
+    rng: &mut Rng,
+    genre: usize,
+    label: usize,
+    question_style: bool,
+) -> Example {
+    let ea = lex.id(lex.entities[genre].sample(rng));
+    let rel = lex.relations.sample(rng);
+    let eb = lex.id(lex.entities[genre].sample(rng));
+    let mut a = Vec::new();
+    if question_style {
+        a.push(lex.id(lex.qtypes.sample(rng)));
+    }
+    a.extend([ea, lex.id(rel), eb]);
+    let nf = rng.range(1, 4);
+    a.extend(fillers(lex, rng, genre, nf));
+
+    let mut b = Vec::new();
+    if question_style {
+        b.push(a[0]);
+    }
+    if label == 1 {
+        // paraphrase: echo the full content (synonym relation), so the
+        // lexical-overlap signal is strong — mirrors the overlap cue real
+        // paraphrase pairs carry.
+        b.extend([ea, lex.id(lex.rel_synonym(rel)), eb, ea, eb]);
+        let nf = rng.range(1, 3);
+        b.extend(fillers(lex, rng, genre, nf));
+    } else {
+        // negative: non-synonym relation AND a different object (two-token
+        // divergence, mirroring the signal MNLI's neutral class carries)
+        let mut rel2 = lex.relations.sample(rng);
+        while rel2 == rel || rel2 == lex.rel_synonym(rel) {
+            rel2 = lex.relations.sample(rng);
+        }
+        let mut eb2 = lex.id(lex.entities[genre].sample(rng));
+        while eb2 == eb {
+            eb2 = lex.id(lex.entities[genre].sample(rng));
+        }
+        let mut ea2 = lex.id(lex.entities[genre].sample(rng));
+        while ea2 == ea {
+            ea2 = lex.id(lex.entities[genre].sample(rng));
+        }
+        b.extend([ea2, lex.id(rel2), eb2]);
+        let nf = rng.range(1, 3);
+        b.extend(fillers(lex, rng, genre, nf));
+        let nf = rng.range(1, 4);
+        b.extend(fillers(lex, rng, genre, nf));
+    }
+    Example { a, b, label: Label::Class(label), genre }
+}
+
+fn gen_sst2(lex: &Lexicon, rng: &mut Rng, genre: usize, label: usize) -> Example {
+    // Build a sentence whose net polarity matches `label` (1 = positive).
+    let want: i32 = if label == 1 { 1 } else { -1 };
+    let nf = rng.range(2, 5);
+    let mut a = fillers(lex, rng, genre, nf);
+    let mut score = 0i32;
+    let n_sent = rng.range(2, 5);
+    for _ in 0..n_sent {
+        let pos = rng.chance(0.5);
+        let tok = if pos {
+            lex.id(lex.sent_pos.sample(rng))
+        } else {
+            lex.id(lex.sent_neg.sample(rng))
+        };
+        let negated = rng.chance(0.25);
+        if negated {
+            a.push(lex.id(lex.negation.sample(rng)));
+        }
+        a.push(tok);
+        score += if pos != negated { 1 } else { -1 };
+    }
+    // Force the net score to the wanted sign by appending unambiguous
+    // sentiment tokens.
+    while score * want <= 0 {
+        let tok = if want > 0 {
+            lex.id(lex.sent_pos.sample(rng))
+        } else {
+            lex.id(lex.sent_neg.sample(rng))
+        };
+        a.push(tok);
+        score += want;
+    }
+    let nf = rng.range(0, 3);
+    a.extend(fillers(lex, rng, genre, nf));
+    Example { a, b: Vec::new(), label: Label::Class(label), genre }
+}
+
+fn gen_cola(lex: &Lexicon, rng: &mut Rng, genre: usize, label: usize) -> Example {
+    // Acceptable: all det–noun pairs agree in number AND no relation token
+    // sentence-initial. Unacceptable: violate one of the two rules.
+    let n_pairs = rng.range(1, 3);
+    let mut a = Vec::new();
+    a.extend(fillers(lex, rng, genre, 1)); // safe non-initial start
+    let mut pairs = Vec::new();
+    for _ in 0..n_pairs {
+        let sg = rng.chance(0.5);
+        let (det, noun) = if sg {
+            (lex.det_sg.sample(rng), lex.noun_sg.sample(rng))
+        } else {
+            (lex.det_pl.sample(rng), lex.noun_pl.sample(rng))
+        };
+        pairs.push((det, noun, sg));
+    }
+    if label == 0 {
+        // corrupt: either break one agreement or move a relation to front
+        if rng.chance(0.7) {
+            let k = rng.below(pairs.len());
+            let (_, _, sg) = pairs[k];
+            // mismatched noun number
+            let noun = if sg {
+                lex.noun_pl.sample(rng)
+            } else {
+                lex.noun_sg.sample(rng)
+            };
+            pairs[k].1 = noun;
+        } else {
+            a.insert(0, lex.id(lex.relations.sample(rng)));
+        }
+    }
+    for (det, noun, _) in &pairs {
+        a.push(lex.id(*det));
+        a.push(lex.id(*noun));
+        if rng.chance(0.4) {
+            a.extend(fillers(lex, rng, genre, 1));
+        }
+    }
+    a.push(lex.id(lex.relations.sample(rng))); // non-initial relation is fine
+    let nf = rng.range(0, 3);
+    a.extend(fillers(lex, rng, genre, nf));
+    Example { a, b: Vec::new(), label: Label::Class(label), genre }
+}
+
+fn gen_qnli(lex: &Lexicon, rng: &mut Rng, genre: usize, label: usize) -> Example {
+    // Answerable iff the passage contains the SAME question-type token as the
+    // question AND mentions the question's entity (identity matching — the
+    // mechanism a small encoder learns reliably).
+    let qt = lex.id(lex.qtypes.sample(rng));
+    let ea = lex.id(lex.entities[genre].sample(rng));
+    let a = vec![qt, ea];
+
+    let rel = lex.relations.sample(rng);
+    let eb = lex.id(lex.entities[genre].sample(rng));
+    let mut b = vec![ea, lex.id(rel), eb];
+    if label == 0 {
+        b.push(qt); // answerable: echoes the question type
+    } else if rng.chance(0.5) {
+        // wrong question type echoed
+        let mut qt2 = lex.id(lex.qtypes.sample(rng));
+        while qt2 == qt {
+            qt2 = lex.id(lex.qtypes.sample(rng));
+        }
+        b.push(qt2);
+    } else {
+        // right type but wrong entity
+        let mut ea2 = lex.id(lex.entities[genre].sample(rng));
+        while ea2 == ea {
+            ea2 = lex.id(lex.entities[genre].sample(rng));
+        }
+        b[0] = ea2;
+        b.push(qt);
+    }
+    let nf = rng.range(1, 3);
+    b.extend(fillers(lex, rng, genre, nf));
+    Example { a, b, label: Label::Class(label), genre }
+}
+
+fn gen_stsb(lex: &Lexicon, rng: &mut Rng, genre: usize) -> Example {
+    // Similarity = fraction of sentence-a content echoed in sentence b.
+    // b carries `keep` of a's entity tokens (same order) and fillers for the
+    // rest, so the graded signal is carried by *which and how many* content
+    // tokens recur — learnable by a small encoder, graded like STS-B.
+    let n = 4;
+    let a: Vec<u32> = (0..n)
+        .map(|_| lex.id(lex.entities[genre].sample(rng)))
+        .collect();
+    let keep = rng.below(n + 1); // 0..=n echoed tokens
+    let mut b: Vec<u32> = a[..keep].to_vec();
+    let nf = n - keep + 1;
+    b.extend(fillers(lex, rng, genre, nf));
+    // Paper-scale score in [0, 5]; correlation metrics are scale-invariant.
+    let score = 5.0 * keep as f32 / n as f32;
+    Example { a, b, label: Label::Score(score), genre }
+}
+
+/// Generate one example for `task` in `genre` with a chosen label bucket
+/// (round-robin over classes keeps datasets balanced; stsb ignores it).
+pub fn gen_example(spec: &TaskSpec, lex: &Lexicon, rng: &mut Rng, genre: usize, bucket: usize) -> Example {
+    assert!(genre < N_GENRES);
+    match spec.name {
+        "mnli" => gen_mnli(lex, rng, genre, bucket % 3),
+        "rte" => gen_rte(lex, rng, genre, bucket % 2),
+        "mrpc" => gen_paraphrase(lex, rng, genre, if bucket % 3 == 0 { 0 } else { 1 }, false),
+        "qqp" => gen_paraphrase(lex, rng, genre, if bucket % 8 < 3 { 1 } else { 0 }, true),
+        "sst2" => gen_sst2(lex, rng, genre, bucket % 2),
+        "cola" => gen_cola(lex, rng, genre, if bucket % 10 < 7 { 1 } else { 0 }),
+        "qnli" => gen_qnli(lex, rng, genre, bucket % 2),
+        "stsb" => gen_stsb(lex, rng, genre),
+        other => panic!("unknown task {other}"),
+    }
+}
+
+/// Which split of a task's data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Dev,
+    /// MNLI only: dev drawn from held-out genres.
+    DevMismatched,
+}
+
+/// Materialized datasets for one task.
+#[derive(Clone, Debug)]
+pub struct TaskData {
+    pub spec: &'static TaskSpec,
+    pub train: Vec<Example>,
+    pub dev: Vec<Example>,
+    pub dev_mm: Vec<Example>,
+}
+
+impl TaskData {
+    /// Deterministically generate all splits.
+    pub fn generate(spec: &'static TaskSpec, lex: &Lexicon, seed: u64) -> TaskData {
+        let gen_split = |tag: u64, n: usize, genres: &[usize]| -> Vec<Example> {
+            let mut rng = Rng::new(seed ^ 0x9E37_79B9 ^ tag.wrapping_mul(0x1000_0001));
+            (0..n)
+                .map(|i| {
+                    let genre = genres[i % genres.len()];
+                    let mut ex = gen_example(spec, lex, &mut rng, genre, i);
+                    if spec.label_noise > 0.0 && rng.chance(spec.label_noise) {
+                        if let Label::Class(_) = ex.label {
+                            ex.label = Label::Class(rng.below(spec.n_classes));
+                        }
+                    }
+                    ex
+                })
+                .collect()
+        };
+        let train = gen_split(1, spec.train_size, spec.train_genres);
+        let dev = gen_split(2, spec.dev_size, spec.train_genres);
+        let dev_mm = match spec.mm_genres {
+            Some(g) => gen_split(3, spec.dev_size, g),
+            None => Vec::new(),
+        };
+        TaskData { spec, train, dev, dev_mm }
+    }
+
+    pub fn split(&self, s: Split) -> &[Example] {
+        match s {
+            Split::Train => &self.train,
+            Split::Dev => &self.dev,
+            Split::DevMismatched => &self.dev_mm,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::task;
+
+    fn lex() -> Lexicon {
+        Lexicon::new(512)
+    }
+
+    #[test]
+    fn all_tasks_generate() {
+        let lex = lex();
+        let mut rng = Rng::new(3);
+        for spec in ALL_TASKS {
+            for i in 0..50 {
+                let g = spec.train_genres[i % spec.train_genres.len()];
+                let ex = gen_example(spec, &lex, &mut rng, g, i);
+                assert!(!ex.a.is_empty(), "{}: empty sentence", spec.name);
+                match ex.label {
+                    Label::Class(c) => assert!(c < spec.n_classes.max(2), "{}", spec.name),
+                    Label::Score(s) => assert!((0.0..=5.0).contains(&s), "{}", spec.name),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let lex = lex();
+        let spec = task("mrpc").unwrap();
+        let d1 = TaskData::generate(spec, &lex, 7);
+        let d2 = TaskData::generate(spec, &lex, 7);
+        assert_eq!(d1.train.len(), d2.train.len());
+        for (a, b) in d1.train.iter().zip(&d2.train) {
+            assert_eq!(a.a, b.a);
+            assert_eq!(a.b, b.b);
+            assert_eq!(a.label, b.label);
+        }
+    }
+
+    #[test]
+    fn seeds_change_data() {
+        let lex = lex();
+        let spec = task("sst2").unwrap();
+        let d1 = TaskData::generate(spec, &lex, 1);
+        let d2 = TaskData::generate(spec, &lex, 2);
+        let same = d1.train.iter().zip(&d2.train).filter(|(a, b)| a.a == b.a).count();
+        assert!(same < d1.train.len() / 10);
+    }
+
+    #[test]
+    fn sizes_match_spec() {
+        let lex = lex();
+        for name in ["rte", "mrpc"] {
+            let spec = task(name).unwrap();
+            let d = TaskData::generate(spec, &lex, 5);
+            assert_eq!(d.train.len(), spec.train_size);
+            assert_eq!(d.dev.len(), spec.dev_size);
+        }
+    }
+
+    #[test]
+    fn rte_is_small() {
+        assert_eq!(task("rte").unwrap().train_size, 2_500);
+    }
+
+    #[test]
+    fn mnli_genre_split_is_disjoint() {
+        let lex = lex();
+        let spec = task("mnli").unwrap();
+        let mut d = TaskData::generate(spec, &lex, 9);
+        d.train.truncate(2000);
+        let train_genres: std::collections::HashSet<_> =
+            d.train.iter().map(|e| e.genre).collect();
+        let mm_genres: std::collections::HashSet<_> =
+            d.dev_mm.iter().map(|e| e.genre).collect();
+        assert!(train_genres.is_disjoint(&mm_genres));
+        assert!(!d.dev_mm.is_empty());
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let lex = lex();
+        for name in ["mnli", "sst2", "qnli", "rte"] {
+            let spec = task(name).unwrap();
+            let mut d = TaskData::generate(spec, &lex, 11);
+            d.train.truncate(3000);
+            let mut counts = [0usize; 3];
+            for e in &d.train {
+                if let Label::Class(c) = e.label {
+                    counts[c] += 1;
+                }
+            }
+            let total: usize = counts[..spec.n_classes].iter().sum();
+            for c in 0..spec.n_classes {
+                let frac = counts[c] as f64 / total as f64;
+                assert!(
+                    frac > 0.8 / spec.n_classes as f64,
+                    "{name}: class {c} frac {frac}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mrpc_positive_skew() {
+        // MRPC is ~2:1 positive in GLUE; generator mirrors that.
+        let lex = lex();
+        let spec = task("mrpc").unwrap();
+        let d = TaskData::generate(spec, &lex, 13);
+        let pos = d.train.iter().filter(|e| e.label == Label::Class(1)).count();
+        let frac = pos as f64 / d.train.len() as f64;
+        assert!((0.6..0.75).contains(&frac), "pos frac {frac}");
+    }
+
+    #[test]
+    fn stsb_scores_cover_range() {
+        let lex = lex();
+        let spec = task("stsb").unwrap();
+        let d = TaskData::generate(spec, &lex, 15);
+        let scores: Vec<f32> = d
+            .train
+            .iter()
+            .map(|e| match e.label {
+                Label::Score(s) => s,
+                _ => panic!(),
+            })
+            .collect();
+        assert!(scores.iter().any(|&s| s < 1.0));
+        assert!(scores.iter().any(|&s| s > 4.0));
+    }
+
+    #[test]
+    fn sst2_label_matches_polarity_rule() {
+        // Recompute the latent rule from the surface tokens and check it
+        // agrees with the generated label.
+        let lex = lex();
+        let spec = task("sst2").unwrap();
+        let mut rng = Rng::new(17);
+        for i in 0..200 {
+            let ex = gen_example(spec, &lex, &mut rng, 0, i);
+            let mut score = 0i32;
+            let mut negate = false;
+            for &tok in &ex.a {
+                // Reverse-map token id to content index.
+                let idx = (tok - super::super::vocab::N_RESERVED) as usize;
+                if lex.negation.contains(idx) {
+                    negate = true;
+                } else if lex.sent_pos.contains(idx) {
+                    score += if negate { -1 } else { 1 };
+                    negate = false;
+                } else if lex.sent_neg.contains(idx) {
+                    score += if negate { 1 } else { -1 };
+                    negate = false;
+                } else {
+                    negate = false;
+                }
+            }
+            let want = if score > 0 { 1 } else { 0 };
+            assert_eq!(ex.label, Label::Class(want), "example {i}");
+        }
+    }
+}

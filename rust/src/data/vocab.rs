@@ -1,0 +1,160 @@
+//! Synthetic vocabulary + word-level tokenizer.
+//!
+//! The GLUE substitution (DESIGN.md §3) generates text over a synthetic
+//! lexicon: pronounceable CV-syllable words partitioned into *genres* and
+//! *semantic fields* (entities, relations, sentiment, fillers). The
+//! tokenizer is word-level — the lexicon is closed by construction, so BPE
+//! would be an identity transform; OOV still maps to `UNK` for robustness.
+
+/// Reserved token ids (match `python/compile/model.py` conventions).
+pub const PAD: u32 = 0;
+pub const CLS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const MASK: u32 = 3;
+pub const UNK: u32 = 4;
+pub const N_RESERVED: u32 = 5;
+
+const CONSONANTS: &[&str] = &[
+    "b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "ch", "sh",
+];
+const VOWELS: &[&str] = &["a", "e", "i", "o", "u"];
+
+/// Deterministically generate the `i`-th synthetic word (2–3 syllables).
+pub fn word(i: usize) -> String {
+    let nc = CONSONANTS.len();
+    let nv = VOWELS.len();
+    let s1 = format!("{}{}", CONSONANTS[i % nc], VOWELS[(i / nc) % nv]);
+    let j = i / (nc * nv);
+    let s2 = format!("{}{}", CONSONANTS[(j + 3) % nc], VOWELS[(j / nc + 1) % nv]);
+    let k = j / (nc * nv);
+    if k == 0 {
+        format!("{s1}{s2}")
+    } else {
+        let s3 = format!("{}{}", CONSONANTS[(k + 7) % nc], VOWELS[(k + 2) % nv]);
+        format!("{s1}{s2}{s3}")
+    }
+}
+
+/// A closed word-level vocabulary.
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    words: Vec<String>,
+    index: std::collections::HashMap<String, u32>,
+}
+
+impl Vocab {
+    /// Build the synthetic lexicon with `size` total ids (incl. reserved).
+    pub fn synthetic(size: usize) -> Vocab {
+        assert!(size > N_RESERVED as usize + 16, "vocab too small: {size}");
+        let n_words = size - N_RESERVED as usize;
+        let mut words = Vec::with_capacity(n_words);
+        let mut index = std::collections::HashMap::new();
+        for i in 0..n_words {
+            let w = word(i);
+            index.entry(w.clone()).or_insert(N_RESERVED + words.len() as u32);
+            // `word` is injective over the ranges we use, but guard anyway.
+            if index[&w] == N_RESERVED + words.len() as u32 {
+                words.push(w);
+            }
+        }
+        Vocab { words, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len() + N_RESERVED as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Encode one word to its id (UNK if unknown).
+    pub fn encode_word(&self, w: &str) -> u32 {
+        *self.index.get(w).unwrap_or(&UNK)
+    }
+
+    /// Encode a whitespace-separated sentence.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace().map(|w| self.encode_word(w)).collect()
+    }
+
+    /// Decode an id back to its surface form.
+    pub fn decode_id(&self, id: u32) -> &str {
+        match id {
+            PAD => "[PAD]",
+            CLS => "[CLS]",
+            SEP => "[SEP]",
+            MASK => "[MASK]",
+            UNK => "[UNK]",
+            _ => self
+                .words
+                .get((id - N_RESERVED) as usize)
+                .map(|s| s.as_str())
+                .unwrap_or("[UNK]"),
+        }
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter().map(|&i| self.decode_id(i)).collect::<Vec<_>>().join(" ")
+    }
+
+    /// Id of the `i`-th content word (for generators that address the
+    /// lexicon by index rather than surface form).
+    pub fn content_id(&self, i: usize) -> u32 {
+        N_RESERVED + (i % self.words.len()) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn words_are_distinct_prefix() {
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..4000 {
+            assert!(seen.insert(word(i)), "duplicate word at {i}: {}", word(i));
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let v = Vocab::synthetic(512);
+        for i in 0..(512 - N_RESERVED as usize) {
+            let w = word(i);
+            let id = v.encode_word(&w);
+            assert_eq!(v.decode_id(id), w);
+        }
+    }
+
+    #[test]
+    fn sentence_roundtrip() {
+        let v = Vocab::synthetic(256);
+        let sent = format!("{} {} {}", word(3), word(17), word(40));
+        let ids = v.encode(&sent);
+        assert_eq!(v.decode(&ids), sent);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = Vocab::synthetic(128);
+        assert_eq!(v.encode_word("xyzzy"), UNK);
+    }
+
+    #[test]
+    fn content_id_in_range() {
+        let v = Vocab::synthetic(512);
+        for i in 0..2000 {
+            let id = v.content_id(i);
+            assert!(id >= N_RESERVED && (id as usize) < v.len());
+        }
+    }
+
+    #[test]
+    fn ids_below_vocab_size() {
+        let v = Vocab::synthetic(512);
+        assert_eq!(v.len(), 512);
+        let ids = v.encode(&(0..100).map(word).collect::<Vec<_>>().join(" "));
+        assert!(ids.iter().all(|&i| (i as usize) < 512));
+    }
+}

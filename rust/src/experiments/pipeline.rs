@@ -1,0 +1,151 @@
+//! Pipeline caching: pretrained backbone and per-task warm-up results are
+//! computed once per (preset, seed) and cached under `runs/` so table
+//! harnesses that share a task don't redo the expensive phases.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use super::ExpConfig;
+use crate::data::{task, Lexicon, TaskData};
+use crate::model::checkpoint;
+use crate::runtime::{Preset, Runtime};
+use crate::tensor::Tensor;
+use crate::training::{self, TrainConfig};
+
+type Params = BTreeMap<String, Tensor>;
+
+pub struct Pipeline {
+    pub rt: &'static Runtime,
+    pub preset: Preset,
+    pub lexicon: Lexicon,
+    cfg: ExpConfig,
+    runs_dir: PathBuf,
+    backbone: Option<Params>,
+    warmed: BTreeMap<String, (Params, Params)>,
+    data: BTreeMap<String, TaskData>,
+}
+
+/// The PJRT client is created once per thread and leaked — sessions borrow
+/// it for the process lifetime. (Runtime holds Rc caches, so it is
+/// deliberately thread-local; experiment driving is single-threaded.)
+fn global_runtime() -> anyhow::Result<&'static Runtime> {
+    thread_local! {
+        static RT: std::cell::OnceCell<&'static Runtime> = const { std::cell::OnceCell::new() };
+    }
+    RT.with(|cell| {
+        if let Some(rt) = cell.get() {
+            return Ok(*rt);
+        }
+        let dir = std::env::var("QRLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let rt: &'static Runtime =
+            Box::leak(Box::new(Runtime::new(std::path::Path::new(&dir))?));
+        let _ = cell.set(rt);
+        Ok(rt)
+    })
+}
+
+impl Pipeline {
+    pub fn new(cfg: &ExpConfig) -> anyhow::Result<Pipeline> {
+        let rt = global_runtime()?;
+        let preset = rt.manifest.preset(&cfg.preset)?.clone();
+        let lexicon = Lexicon::new(preset.vocab);
+        Ok(Pipeline {
+            rt,
+            preset,
+            lexicon,
+            cfg: cfg.clone(),
+            runs_dir: PathBuf::from("runs"),
+            backbone: None,
+            warmed: BTreeMap::new(),
+            data: BTreeMap::new(),
+        })
+    }
+
+    /// Task data (cached).
+    pub fn data(&mut self, name: &str) -> anyhow::Result<TaskData> {
+        if !self.data.contains_key(name) {
+            let spec = task(name)?;
+            let d = TaskData::generate(spec, &self.lexicon, self.cfg.seed);
+            self.data.insert(name.to_string(), d);
+        }
+        Ok(self.data[name].clone())
+    }
+
+    /// MLM-pretrained backbone (cached on disk per preset+seed).
+    pub fn backbone(&mut self) -> anyhow::Result<Params> {
+        if let Some(bb) = &self.backbone {
+            return Ok(bb.clone());
+        }
+        let path = self.runs_dir.join(format!(
+            "backbone_{}_s{}_p{}.qck",
+            self.cfg.preset, self.cfg.seed, self.cfg.pretrain_steps
+        ));
+        let bb = if path.exists() {
+            crate::info!("loading cached backbone {path:?}");
+            checkpoint::load_params(&path)?
+        } else {
+            crate::info!(
+                "pretraining backbone ({} steps, preset {})",
+                self.cfg.pretrain_steps,
+                self.cfg.preset
+            );
+            let (bb, losses) = training::pretrain(
+                self.rt,
+                &self.cfg.preset,
+                &self.lexicon,
+                self.cfg.pretrain_steps,
+                1e-3,
+                self.cfg.seed,
+            )?;
+            crate::info!(
+                "pretrain mlm loss {:.3} → {:.3}",
+                losses.first().map(|x| x.1).unwrap_or(f32::NAN),
+                losses.last().map(|x| x.1).unwrap_or(f32::NAN)
+            );
+            checkpoint::save_params(&path, &bb)?;
+            bb
+        };
+        self.backbone = Some(bb.clone());
+        Ok(bb)
+    }
+
+    /// Warm-up FT for a task (cached in memory and on disk).
+    pub fn warmed(&mut self, name: &str) -> anyhow::Result<(Params, Params)> {
+        if let Some(w) = self.warmed.get(name) {
+            return Ok(w.clone());
+        }
+        let bb_path = self.runs_dir.join(format!(
+            "warm_{}_{}_s{}_w{}.qck",
+            self.cfg.preset, name, self.cfg.seed, self.cfg.warmup_steps
+        ));
+        let head_path = bb_path.with_extension("head.qck");
+        let result = if bb_path.exists() && head_path.exists() {
+            crate::info!("loading cached warmup for {name}");
+            (checkpoint::load_params(&bb_path)?, checkpoint::load_params(&head_path)?)
+        } else {
+            let backbone = self.backbone()?;
+            let data = self.data(name)?;
+            crate::info!("warm-up FT on {name} ({} steps)", self.cfg.warmup_steps);
+            let wcfg = TrainConfig {
+                steps: self.cfg.warmup_steps,
+                lr: self.cfg.lr_ft.max(5e-4),
+                warmup_steps: (self.cfg.warmup_steps / 10).max(5),
+                train_examples: self.cfg.train_examples,
+                log_every: (self.cfg.warmup_steps / 4).max(1),
+            };
+            let (bb, head) = training::warmup(
+                self.rt,
+                &self.cfg.preset,
+                &data,
+                &backbone,
+                &wcfg,
+                self.cfg.seed ^ 0x77,
+            )?;
+            checkpoint::save_params(&bb_path, &bb)?;
+            checkpoint::save_params(&head_path, &head)?;
+            (bb, head)
+        };
+        self.warmed.insert(name.to_string(), result.clone());
+        Ok(result)
+    }
+}

@@ -1,0 +1,24 @@
+//! QR-LoRA: QR-based low-rank adaptation for efficient fine-tuning.
+//!
+//! Three-layer architecture:
+//! - Layer 3 (this crate): rust coordinator — config, data, linalg (pivoted QR),
+//!   adapter state, training/eval loops, experiment harnesses, serving router.
+//! - Layer 2: JAX transformer model (build-time python, `python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts.
+//! - Layer 1: Pallas kernels for the adapter-fused projections
+//!   (`python/compile/kernels/`), lowered into the same HLO.
+//!
+//! Python never runs on the training/serving path: the rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and drives everything.
+
+pub mod adapters;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod experiments;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod training;
+pub mod util;

@@ -1,0 +1,118 @@
+//! Numerical linear algebra substrate: pivoted QR (the heart of QR-LoRA),
+//! one-sided Jacobi SVD (for the SVD-LoRA baseline), and rank-selection
+//! rules.
+//!
+//! The paper extracts an orthonormal basis from each frozen weight matrix
+//! with QR decomposition **with column pivoting** (Businger–Golub), so the
+//! diagonal of R ranks basis directions by energy: |R₁₁| ≥ |R₂₂| ≥ ….
+//! The coordinator performs this extraction host-side once per adapted
+//! matrix; the resulting (Q_r, R_r) factors are then fed to the XLA graph
+//! as frozen inputs.
+
+mod qr;
+mod svd;
+
+pub use qr::{householder_qr, pivoted_qr, PivotedQr};
+pub use svd::{jacobi_svd, Svd};
+
+use crate::tensor::Tensor;
+
+/// How to choose the retained rank r from the pivoted-R diagonal.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RankRule {
+    /// §4.1 of the paper: r = #{ i : |R_ii| > τ·|R₁₁| }.
+    DiagRatio,
+    /// Eq. (4): smallest r with Σ_{i≤r} R_ii² / Σ_i R_ii² ≥ τ.
+    EnergyCumulative,
+}
+
+/// Select the retained rank from the diagonal of a pivoted R factor.
+/// Always returns at least 1 (an adapter with zero directions is useless
+/// and would break downstream shape plumbing).
+pub fn select_rank(diag: &[f32], tau: f64, rule: RankRule) -> usize {
+    assert!(!diag.is_empty());
+    assert!((0.0..=1.0).contains(&tau), "tau must be in [0,1], got {tau}");
+    let r = match rule {
+        RankRule::DiagRatio => {
+            let head = diag[0].abs() as f64;
+            if head == 0.0 {
+                1
+            } else {
+                diag.iter().filter(|d| d.abs() as f64 > tau * head).count()
+            }
+        }
+        RankRule::EnergyCumulative => {
+            let total: f64 = diag.iter().map(|&d| (d as f64) * (d as f64)).sum();
+            if total == 0.0 {
+                1
+            } else {
+                let mut acc = 0.0;
+                let mut r = diag.len();
+                for (i, &d) in diag.iter().enumerate() {
+                    acc += (d as f64) * (d as f64);
+                    if acc / total >= tau {
+                        r = i + 1;
+                        break;
+                    }
+                }
+                r
+            }
+        }
+    };
+    r.max(1)
+}
+
+/// Max |QᵀQ - I| — orthonormality defect of the columns of `q`.
+pub fn orthonormality_defect(q: &Tensor) -> f32 {
+    let qtq = q.t().matmul(q);
+    let n = qtq.rows();
+    let mut worst = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((qtq.at(i, j) - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diag_ratio_rule() {
+        let diag = [10.0, 6.0, 5.0, 0.5, 0.1];
+        // Strict inequality: |R_ii| > τ·|R₁₁|.
+        assert_eq!(select_rank(&diag, 0.49, RankRule::DiagRatio), 3);
+        assert_eq!(select_rank(&diag, 0.5, RankRule::DiagRatio), 2);
+        assert_eq!(select_rank(&diag, 0.04, RankRule::DiagRatio), 4);
+        assert_eq!(select_rank(&diag, 0.99, RankRule::DiagRatio), 1);
+    }
+
+    #[test]
+    fn energy_rule() {
+        let diag = [3.0, 4.0, 0.0]; // energies 9, 16 — unordered on purpose
+        // cumulative: 9/25 = 0.36, 25/25 = 1.0
+        assert_eq!(select_rank(&diag, 0.3, RankRule::EnergyCumulative), 1);
+        assert_eq!(select_rank(&diag, 0.5, RankRule::EnergyCumulative), 2);
+        assert_eq!(select_rank(&diag, 1.0, RankRule::EnergyCumulative), 2);
+    }
+
+    #[test]
+    fn energy_rule_monotone_in_tau() {
+        let diag: Vec<f32> = (1..=20).rev().map(|x| x as f32).collect();
+        let mut last = 0;
+        for t in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let r = select_rank(&diag, t, RankRule::EnergyCumulative);
+            assert!(r >= last, "rank not monotone at tau={t}");
+            last = r;
+        }
+    }
+
+    #[test]
+    fn rank_at_least_one() {
+        assert_eq!(select_rank(&[0.0, 0.0], 0.9, RankRule::DiagRatio), 1);
+        assert_eq!(select_rank(&[0.0, 0.0], 0.9, RankRule::EnergyCumulative), 1);
+    }
+}

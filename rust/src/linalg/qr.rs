@@ -1,0 +1,380 @@
+//! Householder QR with column pivoting (Businger–Golub; Golub & Van Loan
+//! §5.4.2). Produces the ordered orthonormal basis QR-LoRA adapts over.
+
+use crate::tensor::Tensor;
+
+/// Result of a pivoted QR factorization of `A` (m×n):
+/// `A[:, perm] = Q R` with Q (m×t) orthonormal, R (t×n) upper-triangular,
+/// t = min(m, n), and `|R[0,0]| ≥ |R[1,1]| ≥ …` by construction.
+#[derive(Clone, Debug)]
+pub struct PivotedQr {
+    pub q: Tensor,
+    pub r: Tensor,
+    /// Column permutation: original column `perm[j]` landed in position `j`.
+    pub perm: Vec<usize>,
+}
+
+impl PivotedQr {
+    /// |diagonal of R| — the energy ranking of basis directions.
+    pub fn diag(&self) -> Vec<f32> {
+        let t = self.r.rows().min(self.r.cols());
+        (0..t).map(|i| self.r.at(i, i)).collect()
+    }
+
+    /// R with its columns mapped back to the original column order of A:
+    /// `R̃[:, perm[j]] = R[:, j]`, so `A = Q · R̃` exactly.
+    ///
+    /// The paper's update ΔW = Σ λᵢ Qᵢ Rᵢᵀ implicitly works in the original
+    /// column space; with pivoting this is only well-defined after
+    /// un-permuting R (with λ ≡ 1 for all i, ΔW then reconstructs W itself).
+    pub fn r_unpermuted(&self) -> Tensor {
+        let (t, n) = (self.r.rows(), self.r.cols());
+        let mut out = Tensor::zeros(&[t, n]);
+        for i in 0..t {
+            for j in 0..n {
+                out.set(i, self.perm[j], self.r.at(i, j));
+            }
+        }
+        out
+    }
+
+    /// Q·R (still in permuted column order).
+    pub fn reconstruct_permuted(&self) -> Tensor {
+        self.q.matmul(&self.r)
+    }
+
+    /// Q·R̃ — reconstruction in the original column order (equals A up to
+    /// floating-point error).
+    pub fn reconstruct(&self) -> Tensor {
+        self.q.matmul(&self.r_unpermuted())
+    }
+
+    /// The rank-r truncated factors in original column order:
+    /// (Q_r: m×r, R̃_r: r×n). ΔW = Q_r · diag(λ) · R̃_r.
+    pub fn truncate(&self, r: usize) -> (Tensor, Tensor) {
+        let r = r.min(self.q.cols());
+        let q_r = self.q.slice_cols(0, r);
+        let r_full = self.r_unpermuted();
+        let r_r = r_full.slice_rows(0, r);
+        (q_r, r_r)
+    }
+}
+
+/// Pivoted Householder QR. `a` is m×n; returns thin factors with
+/// t = min(m, n) columns of Q / rows of R.
+pub fn pivoted_qr(a: &Tensor) -> PivotedQr {
+    qr_impl(a, true)
+}
+
+/// Unpivoted Householder QR (perm = identity). Used where a plain
+/// orthonormal basis is enough (e.g. OLoRA-style ablations).
+pub fn householder_qr(a: &Tensor) -> PivotedQr {
+    qr_impl(a, false)
+}
+
+fn qr_impl(a: &Tensor, pivot: bool) -> PivotedQr {
+    let (m, n) = (a.rows(), a.cols());
+    let t = m.min(n);
+    // Working copy; Householder vectors are stored below the diagonal,
+    // R on and above it.
+    let mut w = a.clone();
+    let mut perm: Vec<usize> = (0..n).collect();
+    // Squared column norms for pivot selection, downdated each step and
+    // recomputed when cancellation makes them unreliable.
+    let mut norms: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| (w.at(i, j) as f64).powi(2)).sum())
+        .collect();
+    let norms_orig = norms.clone();
+    // Householder scalars β_k (H = I - β v vᵀ).
+    let mut betas = vec![0.0f64; t];
+
+    for k in 0..t {
+        if pivot {
+            // Select the remaining column with the largest updated norm.
+            let (p, _) = norms
+                .iter()
+                .enumerate()
+                .skip(k)
+                .fold((k, f64::NEG_INFINITY), |acc, (j, &v)| {
+                    if v > acc.1 {
+                        (j, v)
+                    } else {
+                        acc
+                    }
+                });
+            if p != k {
+                for i in 0..m {
+                    let tmp = w.at(i, k);
+                    w.set(i, k, w.at(i, p));
+                    w.set(i, p, tmp);
+                }
+                norms.swap(k, p);
+                perm.swap(k, p);
+            }
+        }
+
+        // Householder vector for column k, rows k..m.
+        let mut sig = 0.0f64;
+        for i in k..m {
+            sig += (w.at(i, k) as f64).powi(2);
+        }
+        let norm = sig.sqrt();
+        if norm == 0.0 {
+            betas[k] = 0.0;
+            continue;
+        }
+        let x0 = w.at(k, k) as f64;
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        // v = x - alpha e1, stored in-place; R[k,k] = alpha.
+        let v0 = x0 - alpha;
+        let vtv = sig - x0 * x0 + v0 * v0;
+        let beta = if vtv == 0.0 { 0.0 } else { 2.0 / vtv };
+        betas[k] = beta;
+        w.set(k, k, alpha as f32);
+        // Store v (rows k+1..m keep their x values; v0 kept separately via
+        // implicit convention). To keep things simple we scale v so v0 = 1:
+        // v_i <- x_i / v0 for i > k, and fold v0 into beta.
+        if v0 != 0.0 {
+            for i in k + 1..m {
+                w.set(i, k, (w.at(i, k) as f64 / v0) as f32);
+            }
+            betas[k] = beta * v0 * v0;
+        }
+
+        // Apply H_k to the trailing columns.
+        let bk = betas[k];
+        if bk != 0.0 {
+            for j in k + 1..n {
+                // s = vᵀ col_j  (v0 = 1 implicit)
+                let mut s = w.at(k, j) as f64;
+                for i in k + 1..m {
+                    s += (w.at(i, k) as f64) * (w.at(i, j) as f64);
+                }
+                let s = s * bk;
+                w.set(k, j, (w.at(k, j) as f64 - s) as f32);
+                for i in k + 1..m {
+                    let wi = w.at(i, j) as f64 - s * (w.at(i, k) as f64);
+                    w.set(i, j, wi as f32);
+                }
+            }
+        }
+
+        if pivot {
+            // Downdate norms; recompute when cancellation is severe.
+            for j in k + 1..n {
+                let rij = (w.at(k, j) as f64).powi(2);
+                norms[j] -= rij;
+                if norms[j] < 1e-10 * norms_orig[j] || norms[j] < 0.0 {
+                    norms[j] = (k + 1..m).map(|i| (w.at(i, j) as f64).powi(2)).sum();
+                }
+            }
+        }
+    }
+
+    // Extract R (t×n upper triangular).
+    let mut r = Tensor::zeros(&[t, n]);
+    for i in 0..t {
+        for j in i..n {
+            r.set(i, j, w.at(i, j));
+        }
+    }
+
+    // Accumulate thin Q (m×t): apply H_0 … H_{t-1} to the first t columns
+    // of the identity, in reverse order.
+    let mut q = Tensor::zeros(&[m, t]);
+    for j in 0..t {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..t).rev() {
+        let bk = betas[k];
+        if bk == 0.0 {
+            continue;
+        }
+        for j in 0..t {
+            let mut s = q.at(k, j) as f64;
+            for i in k + 1..m {
+                s += (w.at(i, k) as f64) * (q.at(i, j) as f64);
+            }
+            let s = s * bk;
+            q.set(k, j, (q.at(k, j) as f64 - s) as f32);
+            for i in k + 1..m {
+                let qi = q.at(i, j) as f64 - s * (w.at(i, k) as f64);
+                q.set(i, j, qi as f32);
+            }
+        }
+    }
+
+    PivotedQr { q, r, perm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormality_defect;
+    use crate::util::rng::Rng;
+
+    fn reconstruction_error(a: &Tensor, f: &PivotedQr) -> f32 {
+        f.reconstruct().max_abs_diff(a)
+    }
+
+    #[test]
+    fn square_random_reconstructs() {
+        let mut rng = Rng::new(10);
+        for n in [1usize, 2, 5, 16, 48] {
+            let a = Tensor::randn(&[n, n], &mut rng, 1.0);
+            let f = pivoted_qr(&a);
+            assert!(
+                reconstruction_error(&a, &f) < 2e-4,
+                "n={n} err={}",
+                reconstruction_error(&a, &f)
+            );
+            assert!(orthonormality_defect(&f.q) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        let mut rng = Rng::new(11);
+        for (m, n) in [(8usize, 3usize), (3, 8), (16, 5), (5, 16), (1, 4), (4, 1)] {
+            let a = Tensor::randn(&[m, n], &mut rng, 1.0);
+            let f = pivoted_qr(&a);
+            let t = m.min(n);
+            assert_eq!(f.q.shape, vec![m, t]);
+            assert_eq!(f.r.shape, vec![t, n]);
+            assert!(reconstruction_error(&a, &f) < 2e-4, "{m}x{n}");
+            assert!(orthonormality_defect(&f.q) < 1e-4, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn diag_nonincreasing() {
+        let mut rng = Rng::new(12);
+        for _ in 0..10 {
+            let a = Tensor::randn(&[24, 24], &mut rng, 1.0);
+            let d = pivoted_qr(&a).diag();
+            for i in 1..d.len() {
+                assert!(
+                    d[i].abs() <= d[i - 1].abs() * (1.0 + 1e-4),
+                    "diag not ordered at {i}: {} > {}",
+                    d[i].abs(),
+                    d[i - 1].abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(13);
+        let a = Tensor::randn(&[10, 10], &mut rng, 1.0);
+        let f = pivoted_qr(&a);
+        for i in 0..10 {
+            for j in 0..i {
+                assert_eq!(f.r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_exposes_zero_tail() {
+        // Build a rank-3 10×10 matrix; pivoted diag should collapse after 3.
+        let mut rng = Rng::new(14);
+        let u = Tensor::randn(&[10, 3], &mut rng, 1.0);
+        let v = Tensor::randn(&[3, 10], &mut rng, 1.0);
+        let a = u.matmul(&v);
+        let d = pivoted_qr(&a).diag();
+        assert!(d[2].abs() > 1e-2);
+        for &x in &d[3..] {
+            assert!(x.abs() < 1e-3, "tail diag {x}");
+        }
+    }
+
+    #[test]
+    fn pivoting_beats_no_pivoting_on_graded_matrix() {
+        // Columns with wildly different scales: pivoted diag must be ordered,
+        // unpivoted generally is not.
+        let mut rng = Rng::new(15);
+        let n = 12;
+        let mut a = Tensor::randn(&[n, n], &mut rng, 1.0);
+        for j in 0..n {
+            let s = 10f32.powi(-(((j * 7) % n) as i32) / 2);
+            for i in 0..n {
+                a.set(i, j, a.at(i, j) * s);
+            }
+        }
+        let dp = pivoted_qr(&a).diag();
+        for i in 1..dp.len() {
+            assert!(dp[i].abs() <= dp[i - 1].abs() * (1.0 + 1e-4));
+        }
+        let f = householder_qr(&a);
+        assert!(reconstruction_error(&a, &f) < 2e-4);
+    }
+
+    #[test]
+    fn truncate_full_rank_reconstructs() {
+        let mut rng = Rng::new(16);
+        let a = Tensor::randn(&[8, 8], &mut rng, 1.0);
+        let f = pivoted_qr(&a);
+        let (q, r) = f.truncate(8);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 2e-4);
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_rank() {
+        let mut rng = Rng::new(17);
+        let a = Tensor::randn(&[16, 16], &mut rng, 1.0);
+        let f = pivoted_qr(&a);
+        let mut last = f64::INFINITY;
+        for r in [2usize, 4, 8, 12, 16] {
+            let (q, rr) = f.truncate(r);
+            let mut diff = a.clone();
+            let approx = q.matmul(&rr);
+            for (d, ap) in diff.data.iter_mut().zip(&approx.data) {
+                *d -= ap;
+            }
+            let err = diff.fro_norm();
+            assert!(err <= last + 1e-4, "r={r}: {err} > {last}");
+            last = err;
+        }
+        assert!(last < 2e-3);
+    }
+
+    #[test]
+    fn identity_matrix() {
+        let a = Tensor::eye(6);
+        let f = pivoted_qr(&a);
+        assert!(reconstruction_error(&a, &f) < 1e-6);
+        for d in f.diag() {
+            assert!((d.abs() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn zero_matrix_is_handled() {
+        let a = Tensor::zeros(&[5, 5]);
+        let f = pivoted_qr(&a);
+        assert!(f.reconstruct().max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn property_random_sizes() {
+        // Generative sweep: arbitrary shapes and scales reconstruct and
+        // stay orthonormal.
+        let mut rng = Rng::new(18);
+        for trial in 0..25 {
+            let m = rng.range(1, 30);
+            let n = rng.range(1, 30);
+            let scale = 10f32.powi(rng.range(0, 5) as i32 - 2);
+            let a = Tensor::randn(&[m, n], &mut rng, scale);
+            let f = pivoted_qr(&a);
+            let err = reconstruction_error(&a, &f);
+            let tol = 2e-4 * scale.max(1.0);
+            assert!(err < tol, "trial {trial} ({m}x{n}, scale {scale}): err {err}");
+            assert!(orthonormality_defect(&f.q) < 1e-4, "trial {trial}");
+            let d = f.diag();
+            for i in 1..d.len() {
+                assert!(d[i].abs() <= d[i - 1].abs() * (1.0 + 1e-3));
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! One-sided Jacobi SVD. Used to initialize the SVD-LoRA baseline (the
+//! paper's comparator that seeds LoRA's A/B from the top-k singular
+//! vectors) and in tests as an independent check on the QR energy ranking.
+
+use crate::tensor::Tensor;
+
+/// Thin SVD of `A` (m×n, m ≥ n after internal transposition handling):
+/// `A = U · diag(s) · Vᵀ`, U m×n, s length n (descending), V n×n.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor,
+}
+
+impl Svd {
+    pub fn reconstruct(&self) -> Tensor {
+        let n = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..n {
+                us.set(i, j, us.at(i, j) * self.s[j]);
+            }
+        }
+        us.matmul(&self.v.t())
+    }
+
+    /// Rank-k truncation: (U_k scaled by √s, √s V_kᵀ) — the symmetric split
+    /// SVD-LoRA uses for B/A initialization.
+    pub fn split_factors(&self, k: usize) -> (Tensor, Tensor) {
+        let k = k.min(self.s.len());
+        let m = self.u.rows();
+        let n = self.v.rows();
+        let mut b = Tensor::zeros(&[m, k]);
+        let mut a = Tensor::zeros(&[k, n]);
+        for j in 0..k {
+            let rs = self.s[j].max(0.0).sqrt();
+            for i in 0..m {
+                b.set(i, j, self.u.at(i, j) * rs);
+            }
+            for i in 0..n {
+                a.set(j, i, self.v.at(i, j) * rs);
+            }
+        }
+        (b, a)
+    }
+}
+
+/// One-sided Jacobi SVD. Handles any m×n by transposing internally when
+/// m < n. Converges quadratically; `max_sweeps` bounds worst-case work.
+pub fn jacobi_svd(a: &Tensor) -> Svd {
+    let (m, n) = (a.rows(), a.cols());
+    if m < n {
+        // A = U S Vᵀ  ⇔  Aᵀ = V S Uᵀ
+        let f = jacobi_svd(&a.t());
+        return Svd {
+            u: f.v,
+            s: f.s,
+            v: f.u,
+        };
+    }
+
+    let mut u = a.clone(); // columns get orthogonalized in place
+    let mut v = Tensor::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-12f64;
+
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries over columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let up = u.at(i, p) as f64;
+                    let uq = u.at(i, q) as f64;
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation that zeroes the (p,q) Gram entry.
+                let zeta = (aqq - app) / (2.0 * apq);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u.at(i, p) as f64;
+                    let uq = u.at(i, q) as f64;
+                    u.set(i, p, (c * up - s * uq) as f32);
+                    u.set(i, q, (s * up + c * uq) as f32);
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p) as f64;
+                    let vq = v.at(i, q) as f64;
+                    v.set(i, p, (c * vp - s * vq) as f32);
+                    v.set(i, q, (s * vp + c * vq) as f32);
+                }
+            }
+        }
+        if off < 1e-10 {
+            break;
+        }
+    }
+
+    // Singular values = column norms; normalize U.
+    let mut s: Vec<f32> = (0..n)
+        .map(|j| {
+            let nrm = (0..m).map(|i| (u.at(i, j) as f64).powi(2)).sum::<f64>().sqrt();
+            nrm as f32
+        })
+        .collect();
+    for j in 0..n {
+        if s[j] > 0.0 {
+            for i in 0..m {
+                u.set(i, j, u.at(i, j) / s[j]);
+            }
+        }
+    }
+
+    // Sort descending by singular value.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+    let u = u.permute_cols(&order);
+    let v = v.permute_cols(&order);
+    s = order.iter().map(|&i| s[i]).collect();
+
+    Svd { u, s, v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::orthonormality_defect;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs_random() {
+        let mut rng = Rng::new(20);
+        for (m, n) in [(6usize, 6usize), (10, 4), (4, 10), (1, 5), (12, 12)] {
+            let a = Tensor::randn(&[m, n], &mut rng, 1.0);
+            let f = jacobi_svd(&a);
+            let err = f.reconstruct().max_abs_diff(&a);
+            assert!(err < 5e-4, "{m}x{n}: err {err}");
+        }
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let mut rng = Rng::new(21);
+        let a = Tensor::randn(&[9, 6], &mut rng, 1.0);
+        let f = jacobi_svd(&a);
+        assert!(orthonormality_defect(&f.u) < 1e-4);
+        assert!(orthonormality_defect(&f.v) < 1e-4);
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        let mut rng = Rng::new(22);
+        let a = Tensor::randn(&[8, 8], &mut rng, 2.0);
+        let f = jacobi_svd(&a);
+        for i in 0..f.s.len() {
+            assert!(f.s[i] >= 0.0);
+            if i > 0 {
+                assert!(f.s[i] <= f.s[i - 1] + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let mut a = Tensor::zeros(&[4, 4]);
+        for (i, v) in [3.0f32, 7.0, 1.0, 5.0].iter().enumerate() {
+            a.set(i, i, *v);
+        }
+        let f = jacobi_svd(&a);
+        let want = [7.0, 5.0, 3.0, 1.0];
+        for (got, want) in f.s.iter().zip(want.iter()) {
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn rank_deficient_trailing_zeros() {
+        let mut rng = Rng::new(23);
+        let u = Tensor::randn(&[8, 2], &mut rng, 1.0);
+        let v = Tensor::randn(&[2, 8], &mut rng, 1.0);
+        let a = u.matmul(&v);
+        let f = jacobi_svd(&a);
+        assert!(f.s[1] > 1e-3);
+        for &x in &f.s[2..] {
+            assert!(x < 1e-3, "trailing σ {x}");
+        }
+    }
+
+    #[test]
+    fn split_factors_product_matches_truncation() {
+        let mut rng = Rng::new(24);
+        let a = Tensor::randn(&[6, 6], &mut rng, 1.0);
+        let f = jacobi_svd(&a);
+        let (b, aa) = f.split_factors(6);
+        assert!(b.matmul(&aa).max_abs_diff(&a) < 5e-4);
+        // k=1 gives the best rank-1 approximation; error bounded by σ₂.
+        let (b1, a1) = f.split_factors(1);
+        let approx = b1.matmul(&a1);
+        let mut diff = a.clone();
+        for (d, ap) in diff.data.iter_mut().zip(&approx.data) {
+            *d -= ap;
+        }
+        // Spectral norm of the residual is σ₂; Frobenius ≤ √(n-1)·σ₂.
+        let bound = ((f.s.len() - 1) as f64).sqrt() * f.s[1] as f64 + 1e-3;
+        assert!(diff.fro_norm() <= bound);
+    }
+
+    #[test]
+    fn svd_energy_agrees_with_qr_ordering() {
+        // The pivoted-QR diagonal and the singular values both measure
+        // column-space energy; their totals must match (|det| invariance
+        // is too strong for f32, but Frobenius energy matches exactly:
+        // Σ R_ij² = Σ σ_i² = ||A||_F²).
+        let mut rng = Rng::new(25);
+        let a = Tensor::randn(&[10, 10], &mut rng, 1.0);
+        let sv = jacobi_svd(&a);
+        let total_sv: f64 = sv.s.iter().map(|&x| (x as f64).powi(2)).sum();
+        let fro2 = a.fro_norm().powi(2);
+        assert!((total_sv - fro2).abs() / fro2 < 1e-4);
+    }
+}

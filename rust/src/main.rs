@@ -1,0 +1,239 @@
+//! qrlora — QR-LoRA coordinator CLI.
+//!
+//! The leader binary: loads AOT artifacts, drives pretraining / warm-up /
+//! adapter fine-tuning, regenerates the paper's tables and figure, inspects
+//! rank selection, and runs the multi-adapter serving demo. Python never
+//! runs here — only `make artifacts` (build time) uses it.
+
+use qrlora::adapters::{Proj, Scope};
+use qrlora::data::ALL_TASKS;
+use qrlora::experiments::{self, ExpConfig, Pipeline};
+use qrlora::linalg::{select_rank, RankRule};
+use qrlora::training::{self, FinetuneJob, Method, Methods};
+use qrlora::util::cli::{render_help, Args, Command};
+use qrlora::{errorln, info};
+
+const COMMANDS: &[Command] = &[
+    Command { name: "info", about: "summarize manifest, presets, artifacts" },
+    Command { name: "pretrain", about: "MLM-pretrain a backbone and cache it under runs/" },
+    Command { name: "train", about: "fine-tune one task with one method (full pipeline)" },
+    Command { name: "ranks", about: "pivoted-QR rank-selection report for a backbone" },
+    Command { name: "exp", about: "regenerate a paper table/figure: table1..table4, figure1, all" },
+    Command { name: "serve", about: "multi-adapter serving router demo" },
+];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "help" {
+        print!("{}", render_help("qrlora", "QR-LoRA reproduction coordinator", COMMANDS));
+        return;
+    }
+    let cmd = raw[0].clone();
+    let args = match Args::parse(&raw[1..], &["verbose", "force"]) {
+        Ok(a) => a,
+        Err(e) => {
+            errorln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(level) = args.get("log") {
+        let _ = qrlora::util::log::set_level_str(level);
+    } else if args.has("verbose") {
+        qrlora::util::log::set_level(qrlora::util::log::Level::Debug);
+    }
+
+    let result = match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "ranks" => cmd_ranks(&args),
+        "exp" => cmd_exp(&args),
+        "serve" => cmd_serve(&args),
+        other => {
+            errorln!("unknown command {other:?}");
+            print!("{}", render_help("qrlora", "QR-LoRA reproduction coordinator", COMMANDS));
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        errorln!("{e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn exp_config(args: &Args) -> anyhow::Result<ExpConfig> {
+    let mut cfg = ExpConfig {
+        preset: args.str_or("preset", "tiny").to_string(),
+        ..ExpConfig::default()
+    };
+    cfg.pretrain_steps = args.usize_or("pretrain-steps", cfg.pretrain_steps)?;
+    cfg.warmup_steps = args.usize_or("warmup-steps", cfg.warmup_steps)?;
+    cfg.steps = args.usize_or("steps", cfg.steps)?;
+    cfg.train_examples = args.usize_or("train-examples", cfg.train_examples)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.lr_ft = args.f64_or("lr-ft", cfg.lr_ft)?;
+    cfg.lr_adapter = args.f64_or("lr", cfg.lr_adapter)?;
+    Ok(cfg)
+}
+
+fn cmd_info(_args: &Args) -> anyhow::Result<()> {
+    let dir = std::env::var("QRLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = qrlora::runtime::Runtime::new(std::path::Path::new(&dir))?;
+    println!("presets:");
+    for (name, p) in &rt.manifest.presets {
+        println!(
+            "  {name}: d={} layers={} heads={} ffn={} vocab={} seq={} batch={} r_max={}",
+            p.d_model, p.n_layers, p.n_heads, p.d_ff, p.vocab, p.max_seq, p.batch, p.r_max
+        );
+    }
+    println!("artifacts ({}):", rt.manifest.artifacts.len());
+    for (key, a) in &rt.manifest.artifacts {
+        println!(
+            "  {key}: {} inputs, {} outputs{}",
+            a.inputs.len(),
+            a.outputs.len(),
+            a.state_layout
+                .as_ref()
+                .map(|l| format!(", state {} f32 ({} trainable)", l.total, l.n_params))
+                .unwrap_or_default()
+        );
+    }
+    println!("tasks: {}", ALL_TASKS.iter().map(|t| t.name).collect::<Vec<_>>().join(", "));
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let mut pipe = Pipeline::new(&cfg)?;
+    let bb = pipe.backbone()?;
+    println!("backbone ready: {} parameter tensors (cached under runs/)", bb.len());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let task_name = args.str_or("task", "sst2").to_string();
+    let method_name = args.str_or("method", "qrlora").to_string();
+    let tau = args.f64_or("tau", 0.5)?;
+    let projs: Vec<Proj> = args
+        .list_str("projs", &["q", "v"])
+        .iter()
+        .map(|s| Proj::parse(s))
+        .collect::<anyhow::Result<_>>()?;
+    let scope = match args.get("last-k") {
+        Some(k) => Scope::last_layers(k.parse()?, &projs),
+        None => Scope::all_layers(&projs),
+    };
+
+    let mut pipe = Pipeline::new(&cfg)?;
+    let preset = pipe.preset.clone();
+    let (warm_bb, warm_head) = pipe.warmed(&task_name)?;
+    let method = match method_name.as_str() {
+        "ft" => Method::FullFt,
+        "lora" => Methods::lora(&warm_bb, &preset, 2.0, cfg.seed)?,
+        "svdlora" | "svd-lora" => Methods::svd_lora(&warm_bb, &preset, 1, 2.0, cfg.seed)?,
+        "qrlora" | "qr-lora" => {
+            Methods::qr_lora(&warm_bb, &preset, scope, tau, RankRule::DiagRatio)?
+        }
+        other => anyhow::bail!("unknown method {other:?} (ft|lora|svdlora|qrlora)"),
+    };
+
+    let data = pipe.data(&task_name)?;
+    let is_ft = matches!(method, Method::FullFt);
+    let tc = qrlora::training::TrainConfig {
+        steps: cfg.steps,
+        lr: if is_ft { cfg.lr_ft } else { cfg.lr_adapter },
+        warmup_steps: (cfg.steps / 20).max(5),
+        train_examples: cfg.train_examples,
+        log_every: (cfg.steps / 10).max(1),
+    };
+    let job = FinetuneJob {
+        rt: pipe.rt,
+        preset: &cfg.preset,
+        task: &data,
+        lexicon: &pipe.lexicon,
+        backbone: &warm_bb,
+        head: Some(&warm_head),
+        config: tc,
+        seed: cfg.seed,
+    };
+    let r = training::run_finetune(&job, &method)?;
+    println!("task:        {}", r.task);
+    println!("method:      {}", r.method_label);
+    println!("trainable:   {}", r.trainable_params);
+    println!("steps:       {}", r.steps);
+    println!("final loss:  {:.4}", r.final_loss);
+    println!("accuracy:    {:.2}%", 100.0 * r.dev.accuracy);
+    println!("f1:          {:.2}%", 100.0 * r.dev.f1);
+    println!("matthews:    {:.3}", r.dev.matthews);
+    println!("pearson:     {:.3}", r.dev.pearson);
+    if let Some(mm) = &r.dev_mm {
+        println!("mismatched:  {:.2}%", 100.0 * mm.accuracy);
+    }
+    println!("loss curve:  {:?}", r.losses);
+    Ok(())
+}
+
+fn cmd_ranks(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let mut pipe = Pipeline::new(&cfg)?;
+    let bb = pipe.backbone()?;
+    let taus = args.list_f64("taus", &[0.3, 0.5, 0.7, 0.8, 0.9])?;
+    println!("pivoted-QR rank selection (preset {}, DiagRatio rule):\n", cfg.preset);
+    println!("| matrix | {} |", taus.iter().map(|t| format!("τ={t}")).collect::<Vec<_>>().join(" | "));
+    println!("|---|{}", "---:|".repeat(taus.len()));
+    for (name, w) in bb.iter().filter(|(n, _)| n.contains("/attn/w")) {
+        let f = qrlora::linalg::pivoted_qr(w);
+        let diag = f.diag();
+        let ranks: Vec<String> = taus
+            .iter()
+            .map(|&t| select_rank(&diag, t, RankRule::DiagRatio).to_string())
+            .collect();
+        println!("| {name} | {} |", ranks.join(" | "));
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let which = args.positional().first().cloned().unwrap_or_else(|| "all".to_string());
+    let t0 = std::time::Instant::now();
+    match which.as_str() {
+        "table1" => experiments::table1(&cfg)?,
+        "table2" => experiments::table2(&cfg)?,
+        "table3" => {
+            let tasks = args.list_str(
+                "tasks",
+                &["mnli", "sst2", "mrpc", "cola", "qnli", "qqp", "rte", "stsb"],
+            );
+            let refs: Vec<&str> = tasks.iter().map(|s| s.as_str()).collect();
+            experiments::table3(&cfg, &refs)?
+        }
+        "table4" => {
+            let sizes: Vec<usize> = args
+                .list_f64("sizes", &[2000.0, 10000.0, 50000.0])?
+                .into_iter()
+                .map(|f| f as usize)
+                .collect();
+            experiments::table4(&cfg, &sizes)?
+        }
+        "figure1" => experiments::figure1(&cfg)?,
+        "all" => {
+            experiments::table1(&cfg)?;
+            experiments::table2(&cfg)?;
+            let refs: Vec<&str> = ALL_TASKS.iter().map(|t| t.name).collect();
+            experiments::table3(&cfg, &refs)?;
+            experiments::table4(&cfg, &[2000, 10000, 50000])?;
+            experiments::figure1(&cfg)?;
+        }
+        other => anyhow::bail!("unknown experiment {other:?} (table1..table4, figure1, all)"),
+    }
+    info!("experiment {which} finished in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let requests = args.usize_or("requests", 200)?;
+    qrlora::server::demo(&cfg, requests)
+}

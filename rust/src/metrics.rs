@@ -1,0 +1,252 @@
+//! Evaluation metrics matching the GLUE per-task conventions:
+//! accuracy (MNLI, SST-2, QNLI, RTE), accuracy + F1 (MRPC, QQP),
+//! Matthews correlation (CoLA), Pearson/Spearman (STS-B).
+
+/// Binary/multiclass accuracy.
+pub fn accuracy(preds: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hit = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hit as f64 / preds.len() as f64
+}
+
+/// F1 of the positive class (label 1), GLUE's convention for MRPC/QQP.
+pub fn f1_binary(preds: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let mut tp = 0f64;
+    let mut fp = 0f64;
+    let mut fne = 0f64;
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fne);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Matthews correlation coefficient (CoLA).
+pub fn matthews_corr(preds: &[usize], labels: &[usize]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let (mut tp, mut tn, mut fp, mut fne) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (1, 1) => tp += 1.0,
+            (0, 0) => tn += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => {}
+        }
+    }
+    let denom = ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fne) / denom
+    }
+}
+
+/// Pearson correlation (STS-B).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.is_empty() {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Ranks with average ties (helper for Spearman).
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation (STS-B).
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// Argmax over a logits row.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The per-task headline metric, as GLUE reports it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MetricKind {
+    Accuracy,
+    AccuracyAndF1,
+    Matthews,
+    PearsonSpearman,
+}
+
+/// Aggregated evaluation result.
+#[derive(Clone, Debug, Default)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub f1: f64,
+    pub matthews: f64,
+    pub pearson: f64,
+    pub spearman: f64,
+    pub n: usize,
+}
+
+impl EvalResult {
+    /// Classification eval from (logits rows, labels).
+    pub fn classification(preds: &[usize], labels: &[usize]) -> EvalResult {
+        EvalResult {
+            accuracy: accuracy(preds, labels),
+            f1: f1_binary(preds, labels),
+            matthews: matthews_corr(preds, labels),
+            n: preds.len(),
+            ..Default::default()
+        }
+    }
+
+    /// Regression eval from (predictions, targets).
+    pub fn regression(preds: &[f64], targets: &[f64]) -> EvalResult {
+        EvalResult {
+            pearson: pearson(preds, targets),
+            spearman: spearman(preds, targets),
+            n: preds.len(),
+            ..Default::default()
+        }
+    }
+
+    /// The headline number for a metric kind, in percent.
+    pub fn headline(&self, kind: MetricKind) -> f64 {
+        100.0
+            * match kind {
+                MetricKind::Accuracy => self.accuracy,
+                MetricKind::AccuracyAndF1 => self.accuracy,
+                MetricKind::Matthews => self.matthews,
+                MetricKind::PearsonSpearman => self.pearson,
+            }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 2, 1], &[0, 1, 1, 1]), 0.75);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_known_value() {
+        // tp=2, fp=1, fn=1 → p=2/3, r=2/3, f1=2/3
+        let preds = [1, 1, 1, 0, 0];
+        let labels = [1, 1, 0, 1, 0];
+        assert!((f1_binary(&preds, &labels) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_degenerate() {
+        assert_eq!(f1_binary(&[0, 0], &[1, 1]), 0.0);
+        assert_eq!(f1_binary(&[1, 1], &[1, 1]), 1.0);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverse() {
+        let y = [0, 1, 0, 1, 1, 0];
+        assert!((matthews_corr(&y, &y) - 1.0).abs() < 1e-12);
+        let inv: Vec<usize> = y.iter().map(|&v| 1 - v).collect();
+        assert!((matthews_corr(&inv, &y) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_uninformative_is_zero() {
+        assert_eq!(matthews_corr(&[1, 1, 1, 1], &[0, 1, 0, 1]), 0.0);
+    }
+
+    #[test]
+    fn pearson_linear() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 8.0, 27.0, 64.0, 125.0]; // monotone → ρ=1
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_ties() {
+        let x = [1.0, 2.0, 2.0, 3.0];
+        let y = [1.0, 2.0, 2.0, 3.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+
+    #[test]
+    fn eval_result_headline() {
+        let r = EvalResult {
+            accuracy: 0.9,
+            f1: 0.8,
+            matthews: 0.5,
+            pearson: 0.7,
+            spearman: 0.6,
+            n: 10,
+        };
+        assert_eq!(r.headline(MetricKind::Accuracy), 90.0);
+        assert_eq!(r.headline(MetricKind::Matthews), 50.0);
+        assert_eq!(r.headline(MetricKind::PearsonSpearman), 70.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Checkpoint I/O: a single-file format holding named f32 tensors
+//! (JSON header + packed little-endian data), plus raw state-vector
+//! save/load. Interops with nothing — it's the coordinator's own durable
+//! format — but tensors can also be exported per-leaf as `.npy`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"QRLORA01";
+
+/// Save a named tensor map.
+pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> anyhow::Result<()> {
+    let mut header = Vec::new();
+    let mut offset = 0usize;
+    for (name, t) in params {
+        header.push((name.clone(), t.shape.clone(), offset));
+        offset += t.numel();
+    }
+    let hjson = Json::Arr(
+        header
+            .iter()
+            .map(|(n, s, o)| {
+                Json::obj(vec![
+                    ("name", Json::str(n.clone())),
+                    ("shape", Json::arr_usize(s.iter())),
+                    ("offset", Json::num(*o as f64)),
+                ])
+            })
+            .collect(),
+    )
+    .to_string();
+
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(hjson.len() as u64).to_le_bytes())?;
+    f.write_all(hjson.as_bytes())?;
+    let mut buf = Vec::with_capacity(offset * 4);
+    for t in params.values() {
+        for v in &t.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load a named tensor map.
+pub fn load_params(path: &Path) -> anyhow::Result<BTreeMap<String, Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open checkpoint {path:?}: {e}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "{path:?}: not a qrlora checkpoint");
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb)?;
+    let hlen = u64::from_le_bytes(lenb) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+    let mut body = Vec::new();
+    f.read_to_end(&mut body)?;
+
+    let mut out = BTreeMap::new();
+    for entry in header.as_arr().unwrap_or_default() {
+        let name = entry.req("name")?.as_str().unwrap_or("").to_string();
+        let shape: Vec<usize> = entry
+            .req("shape")?
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .filter_map(|d| d.as_usize())
+            .collect();
+        let offset = entry.req("offset")?.as_usize().unwrap_or(0);
+        let numel: usize = shape.iter().product();
+        let start = offset * 4;
+        anyhow::ensure!(
+            start + numel * 4 <= body.len(),
+            "{path:?}: truncated tensor {name}"
+        );
+        let data: Vec<f32> = body[start..start + numel * 4]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(name, Tensor::from_vec(&shape, data));
+    }
+    Ok(out)
+}
+
+/// Save a raw state vector with a tiny JSON sidecar for provenance.
+pub fn save_state(path: &Path, state: &[f32], meta: &Json) -> anyhow::Result<()> {
+    let t = Tensor::from_vec(&[state.len()], state.to_vec());
+    t.save_npy(path)?;
+    std::fs::write(path.with_extension("json"), meta.pretty())?;
+    Ok(())
+}
+
+/// Load a raw state vector.
+pub fn load_state(path: &Path) -> anyhow::Result<Vec<f32>> {
+    Ok(Tensor::load_npy(path)?.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qrlora_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut params = BTreeMap::new();
+        params.insert("a/w".to_string(), Tensor::randn(&[3, 4], &mut rng, 1.0));
+        params.insert("b".to_string(), Tensor::randn(&[7], &mut rng, 2.0));
+        params.insert("empty_name/x".to_string(), Tensor::zeros(&[1]));
+        let p = tmp("params.qck");
+        save_params(&p, &params).unwrap();
+        let loaded = load_params(&p).unwrap();
+        assert_eq!(loaded, params);
+    }
+
+    #[test]
+    fn state_roundtrip() {
+        let state: Vec<f32> = (0..100).map(|i| i as f32 / 7.0).collect();
+        let p = tmp("state.npy");
+        save_state(&p, &state, &Json::obj(vec![("step", Json::num(5.0))])).unwrap();
+        assert_eq!(load_state(&p).unwrap(), state);
+        let meta = std::fs::read_to_string(p.with_extension("json")).unwrap();
+        assert!(meta.contains("step"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.qck");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(load_params(&p).is_err());
+    }
+
+    #[test]
+    fn missing_file_reports_path() {
+        let err = load_params(Path::new("/nonexistent/x.qck"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("x.qck"));
+    }
+}

@@ -1,0 +1,230 @@
+//! Host-side model state management: initialization of the flat state
+//! vector, named parameter access, and backbone checkpointing.
+//!
+//! The actual math lives in the AOT graphs; this module only knows the
+//! *layout* (from the manifest) and the initialization rules, which mirror
+//! `python/compile/model.py::init_backbone`.
+
+pub mod checkpoint;
+
+use std::collections::BTreeMap;
+
+use crate::runtime::StateLayout;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Initialization rule for one named parameter.
+fn init_leaf(name: &str, shape: &[usize], rng: &mut Rng, out: &mut [f32]) {
+    let last = name.rsplit('/').next().unwrap_or(name);
+    let is_gain = last.ends_with("_g") || last == "ln_g";
+    let is_bias = last.starts_with('b') && shape.len() == 1 || last.ends_with("_b") || last == "bias";
+    let is_emb = name.starts_with("emb/") && shape.len() == 2;
+    let is_lam = last == "lam";
+    let is_lora_b = name.starts_with("lora/") && last == "B";
+    let is_lora_a = name.starts_with("lora/") && last == "A";
+
+    if is_gain {
+        out.fill(1.0);
+    } else if is_lam || is_lora_b {
+        // Adapters start at ΔW = 0: λ=0 (QR-LoRA), B=0 (LoRA).
+        out.fill(0.0);
+    } else if is_emb {
+        for v in out.iter_mut() {
+            *v = rng.normal() * 0.02;
+        }
+    } else if is_lora_a {
+        for v in out.iter_mut() {
+            *v = rng.normal() * 0.02;
+        }
+    } else if is_bias || shape.len() == 1 {
+        out.fill(0.0);
+    } else {
+        // Xavier for matrices.
+        let fan: usize = shape.iter().sum();
+        let std = (2.0 / fan as f32).sqrt();
+        for v in out.iter_mut() {
+            *v = rng.normal() * std;
+        }
+    }
+}
+
+/// Build a freshly initialized flat state vector for a layout.
+/// Moments and the metrics head start at zero.
+pub fn init_state(layout: &StateLayout, seed: u64) -> Vec<f32> {
+    let mut state = vec![0f32; layout.total];
+    let rng = Rng::new(seed);
+    for field in &layout.params {
+        let mut leaf_rng = rng.split(hash_name(&field.name));
+        init_leaf(
+            &field.name,
+            &field.shape,
+            &mut leaf_rng,
+            &mut state[field.offset..field.offset + field.numel()],
+        );
+    }
+    state
+}
+
+fn hash_name(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Read one named parameter out of a state vector.
+pub fn read_param(state: &[f32], layout: &StateLayout, name: &str) -> anyhow::Result<Tensor> {
+    let f = layout.param(name)?;
+    Ok(Tensor::from_vec(
+        &f.shape,
+        state[f.offset..f.offset + f.numel()].to_vec(),
+    ))
+}
+
+/// Write one named parameter into a state vector.
+pub fn write_param(
+    state: &mut [f32],
+    layout: &StateLayout,
+    name: &str,
+    value: &Tensor,
+) -> anyhow::Result<()> {
+    let f = layout.param(name)?;
+    anyhow::ensure!(
+        f.shape == value.shape,
+        "{name}: shape mismatch {:?} vs {:?}",
+        f.shape,
+        value.shape
+    );
+    state[f.offset..f.offset + f.numel()].copy_from_slice(&value.data);
+    Ok(())
+}
+
+/// Extract every named parameter from a state vector (e.g. to hand a
+/// pretrained backbone to an adapter run as frozen inputs).
+pub fn extract_all(state: &[f32], layout: &StateLayout) -> BTreeMap<String, Tensor> {
+    layout
+        .params
+        .iter()
+        .map(|f| {
+            (
+                f.name.clone(),
+                Tensor::from_vec(&f.shape, state[f.offset..f.offset + f.numel()].to_vec()),
+            )
+        })
+        .collect()
+}
+
+/// Copy parameters that exist in both layouts from `src` into `dst`
+/// (e.g. seed an FT fine-tune run with pretrained backbone weights, or
+/// carry the warmed head into an adapter run). Returns the copied names.
+pub fn transfer_params(
+    src: &[f32],
+    src_layout: &StateLayout,
+    dst: &mut [f32],
+    dst_layout: &StateLayout,
+) -> Vec<String> {
+    let mut copied = Vec::new();
+    for f in &dst_layout.params {
+        if let Ok(sf) = src_layout.param(&f.name) {
+            if sf.shape == f.shape {
+                dst[f.offset..f.offset + f.numel()]
+                    .copy_from_slice(&src[sf.offset..sf.offset + sf.numel()]);
+                copied.push(f.name.clone());
+            }
+        }
+    }
+    copied
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{StateField, StateLayout};
+
+    fn layout() -> StateLayout {
+        let fields = vec![
+            StateField { name: "emb/tok".into(), shape: vec![8, 4], offset: 2 },
+            StateField { name: "layer0/ln1_g".into(), shape: vec![4], offset: 34 },
+            StateField { name: "layer0/attn/wq".into(), shape: vec![4, 4], offset: 38 },
+            StateField { name: "qr/layer0/wq/lam".into(), shape: vec![6], offset: 54 },
+            StateField { name: "head/bc".into(), shape: vec![3], offset: 60 },
+        ];
+        StateLayout {
+            n_params: 61,
+            metrics_len: 2,
+            total: 2 + 3 * 61,
+            params: fields,
+            metrics: vec![StateField { name: "loss".into(), shape: vec![], offset: 0 }],
+        }
+    }
+
+    #[test]
+    fn init_rules() {
+        let l = layout();
+        let s = init_state(&l, 42);
+        // metrics head zero
+        assert_eq!(&s[..2], &[0.0, 0.0]);
+        // ln gain ones
+        assert_eq!(&s[34..38], &[1.0; 4]);
+        // λ zero
+        assert_eq!(&s[54..60], &[0.0; 6]);
+        // bias zero
+        assert_eq!(&s[60..63], &[0.0; 3]);
+        // embeddings small but nonzero
+        let emb = &s[2..34];
+        assert!(emb.iter().any(|&v| v != 0.0));
+        assert!(emb.iter().all(|&v| v.abs() < 0.2));
+        // wq xavier-ish
+        let wq = &s[38..54];
+        assert!(wq.iter().any(|&v| v != 0.0));
+        // moments region zero
+        assert!(s[2 + 61..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn init_deterministic_and_order_free() {
+        let l = layout();
+        assert_eq!(init_state(&l, 1), init_state(&l, 1));
+        assert_ne!(init_state(&l, 1), init_state(&l, 2));
+    }
+
+    #[test]
+    fn read_write_roundtrip() {
+        let l = layout();
+        let mut s = init_state(&l, 3);
+        let t = Tensor::filled(&[4, 4], 0.5);
+        write_param(&mut s, &l, "layer0/attn/wq", &t).unwrap();
+        let r = read_param(&s, &l, "layer0/attn/wq").unwrap();
+        assert_eq!(r, t);
+    }
+
+    #[test]
+    fn write_shape_mismatch_errors() {
+        let l = layout();
+        let mut s = init_state(&l, 3);
+        let t = Tensor::filled(&[2, 2], 0.5);
+        assert!(write_param(&mut s, &l, "layer0/attn/wq", &t).is_err());
+    }
+
+    #[test]
+    fn transfer_copies_matching() {
+        let l = layout();
+        let src = init_state(&l, 9);
+        let mut dst = init_state(&l, 10);
+        let copied = transfer_params(&src, &l, &mut dst, &l);
+        assert_eq!(copied.len(), l.params.len());
+        assert_eq!(&dst[2..2 + 61], &src[2..2 + 61]);
+    }
+
+    #[test]
+    fn extract_all_names() {
+        let l = layout();
+        let s = init_state(&l, 4);
+        let map = extract_all(&s, &l);
+        assert_eq!(map.len(), 5);
+        assert!(map.contains_key("emb/tok"));
+        assert_eq!(map["head/bc"].shape, vec![3]);
+    }
+}

@@ -1,0 +1,380 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Element dtype of a device tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => anyhow::bail!("unknown dtype {s:?}"),
+        }
+    }
+}
+
+/// Role of an input/output in the step protocol. Determines buffer
+/// lifecycle: `Train`/`OptM`/`OptV` outputs alias back onto the same-named
+/// inputs of the next step; `Frozen` is uploaded once; `Batch`/`Scalar`
+/// re-upload per step; `Metric` outputs are copied to host.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// The flat state vector (arg0/out0 of every step program).
+    State,
+    Train,
+    Frozen,
+    Batch,
+    Scalar,
+    Metric,
+}
+
+impl Role {
+    fn parse(s: &str) -> anyhow::Result<Role> {
+        Ok(match s {
+            "state" => Role::State,
+            "train" => Role::Train,
+            "frozen" => Role::Frozen,
+            "batch" => Role::Batch,
+            "scalar" => Role::Scalar,
+            "metric" => Role::Metric,
+            _ => anyhow::bail!("unknown role {s:?}"),
+        })
+    }
+}
+
+/// One named region of the flat state vector.
+#[derive(Clone, Debug)]
+pub struct StateField {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl StateField {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> anyhow::Result<StateField> {
+        Ok(StateField {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            offset: j
+                .req("offset")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad offset"))?,
+        })
+    }
+}
+
+/// Layout of the flat state vector:
+/// `[ metrics | params (P) | adam_m (P) | adam_v (P) ]`.
+/// Metrics sit at offset 0 so they can be read with a ranged host copy
+/// (the buffer API's bounds check makes nonzero offsets unusable).
+#[derive(Clone, Debug)]
+pub struct StateLayout {
+    pub n_params: usize,
+    pub metrics_len: usize,
+    pub total: usize,
+    pub params: Vec<StateField>,
+    pub metrics: Vec<StateField>,
+}
+
+impl StateLayout {
+    pub fn param(&self, name: &str) -> anyhow::Result<&StateField> {
+        self.params
+            .iter()
+            .find(|f| f.name == name)
+            .ok_or_else(|| anyhow::anyhow!("state param {name:?} not in layout"))
+    }
+
+    pub fn metric(&self, name: &str) -> anyhow::Result<&StateField> {
+        self.metrics
+            .iter()
+            .find(|f| f.name == name)
+            .ok_or_else(|| anyhow::anyhow!("state metric {name:?} not in layout"))
+    }
+
+    /// Offset of the params region (= metrics_len).
+    pub fn params_offset(&self) -> usize {
+        self.metrics_len
+    }
+
+    fn parse(j: &Json) -> anyhow::Result<StateLayout> {
+        let fields = |key: &str| -> anyhow::Result<Vec<StateField>> {
+            j.req(key)?
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .map(StateField::parse)
+                .collect()
+        };
+        Ok(StateLayout {
+            n_params: j
+                .req("n_params")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad n_params"))?,
+            metrics_len: j
+                .req("metrics_len")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad metrics_len"))?,
+            total: j
+                .req("total")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad total"))?,
+            params: fields("params")?,
+            metrics: fields("metrics")?,
+        })
+    }
+}
+
+/// One named tensor in an artifact's input or output list.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub role: Role,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: DType::parse(j.req("dtype")?.as_str().unwrap_or(""))?,
+            role: Role::parse(j.req("role")?.as_str().unwrap_or(""))?,
+        })
+    }
+}
+
+/// One AOT-lowered executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub key: String,
+    pub file: String,
+    pub preset: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Present on step programs (train/pretrain/eval).
+    pub state_layout: Option<StateLayout>,
+}
+
+impl ArtifactSpec {
+    pub fn layout(&self) -> anyhow::Result<&StateLayout> {
+        self.state_layout
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{}: no state layout", self.key))
+    }
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|t| t.name == name)
+    }
+
+    pub fn inputs_with_role(&self, role: Role) -> impl Iterator<Item = (usize, &TensorSpec)> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(move |(_, t)| t.role == role)
+    }
+}
+
+/// Model architecture constants for a preset (mirrors python presets.py).
+#[derive(Clone, Debug)]
+pub struct Preset {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub r_max: usize,
+    pub r_lora: usize,
+    pub n_classes: usize,
+}
+
+impl Preset {
+    /// Approximate backbone parameter count (embeddings + encoder + mlm
+    /// bias) — mirrors python presets.n_backbone_params.
+    pub fn approx_backbone_params(p: &Preset) -> usize {
+        let (d, f, v, s, nl) = (p.d_model, p.d_ff, p.vocab, p.max_seq, p.n_layers);
+        let emb = v * d + s * d + 2 * d + 2 * d;
+        let per_layer = 4 * (d * d + d) + 2 * d + (d * f + f) + (f * d + d) + 2 * d;
+        emb + nl * per_layer + v
+    }
+
+    fn parse(name: &str, j: &Json) -> anyhow::Result<Preset> {
+        let get = |k: &str| -> anyhow::Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("preset {name}: bad {k}"))
+        };
+        Ok(Preset {
+            name: name.to_string(),
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_ff: get("d_ff")?,
+            vocab: get("vocab")?,
+            max_seq: get("max_seq")?,
+            batch: get("batch")?,
+            r_max: get("r_max")?,
+            r_lora: get("r_lora")?,
+            n_classes: get("n_classes")?,
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub presets: BTreeMap<String, Preset>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}. Run `make artifacts`."))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.req("presets")?.as_obj().unwrap_or(&[]) {
+            presets.insert(name.clone(), Preset::parse(name, pj)?);
+        }
+        let mut artifacts = BTreeMap::new();
+        for (key, aj) in j.req("artifacts")?.as_obj().unwrap_or(&[]) {
+            let inputs = aj
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = aj
+                .req("outputs")?
+                .as_arr()
+                .unwrap_or_default()
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let state_layout = match aj.get("state_layout") {
+                Some(lj) => Some(StateLayout::parse(lj)?),
+                None => None,
+            };
+            artifacts.insert(
+                key.clone(),
+                ArtifactSpec {
+                    key: key.clone(),
+                    file: aj.req("file")?.as_str().unwrap_or("").to_string(),
+                    preset: aj.req("preset")?.as_str().unwrap_or("").to_string(),
+                    kind: aj.req("kind")?.as_str().unwrap_or("").to_string(),
+                    inputs,
+                    outputs,
+                    state_layout,
+                },
+            );
+        }
+        Ok(Manifest { presets, artifacts })
+    }
+
+    pub fn artifact(&self, key: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("artifact {key:?} not in manifest (run `make artifacts`)"))
+    }
+
+    pub fn preset(&self, name: &str) -> anyhow::Result<&Preset> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("preset {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "presets": {"tiny": {"d_model": 64, "n_layers": 2, "n_heads": 2,
+        "d_ff": 256, "vocab": 512, "max_seq": 32, "batch": 8,
+        "r_max": 32, "r_lora": 2, "n_classes": 3}},
+      "adam": {"b1": 0.9, "b2": 0.999, "eps": 1e-8},
+      "artifacts": {
+        "tiny/eval": {"file": "tiny_eval.hlo.txt", "preset": "tiny",
+          "kind": "eval",
+          "inputs": [
+            {"name": "w", "shape": [64, 64], "dtype": "f32", "role": "train"},
+            {"name": "ids", "shape": [8, 32], "dtype": "i32", "role": "batch"},
+            {"name": "lr", "shape": [], "dtype": "f32", "role": "scalar"}],
+          "outputs": [
+            {"name": "logits", "shape": [8, 3], "dtype": "f32", "role": "metric"}]
+        }}}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let p = m.preset("tiny").unwrap();
+        assert_eq!(p.d_model, 64);
+        assert_eq!(p.batch, 8);
+        let a = m.artifact("tiny/eval").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.inputs[2].shape.len(), 0);
+        assert_eq!(a.inputs[2].numel(), 1);
+        assert_eq!(a.outputs[0].role, Role::Metric);
+        assert_eq!(a.input_index("ids"), Some(1));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_err());
+        assert!(m.preset("nope").is_err());
+    }
+
+    #[test]
+    fn role_filtering() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("tiny/eval").unwrap();
+        let batch: Vec<_> = a.inputs_with_role(Role::Batch).collect();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].1.name, "ids");
+    }
+}

@@ -1,0 +1,399 @@
+//! Host-side dense f32 matrix/tensor type.
+//!
+//! The coordinator needs real numerics of its own — pivoted QR / SVD basis
+//! extraction, adapter merging, metric math — independent of the XLA device
+//! graph. This module provides a row-major f32 `Tensor` with the operations
+//! those paths need, plus `.npy` I/O for interop with the python build-time
+//! tests.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Dense row-major f32 tensor. Rank ≤ 4 in practice; most linalg paths use
+/// rank-2 views via `rows()`/`cols()`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// Random normal entries scaled by `std` (for init and tests).
+    pub fn randn(shape: &[usize], rng: &mut crate::util::rng::Rng, std: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal() * std).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Number of rows (rank-2 only).
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on rank-{} tensor", self.shape.len());
+        self.shape[0]
+    }
+
+    /// Number of columns (rank-2 only).
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on rank-{} tensor", self.shape.len());
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Immutable row slice (rank-2).
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Copy of column `j` (rank-2).
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows()).map(|i| self.at(i, j)).collect()
+    }
+
+    /// Matrix transpose (rank-2).
+    pub fn t(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..m {
+            for j in 0..n {
+                out.data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        out
+    }
+
+    /// Matrix multiply `self (m×k) @ other (k×n)`. Cache-friendly i-k-j
+    /// loop order with the inner j loop over contiguous rows.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul shape mismatch: {:?} @ {:?}", self.shape, other.shape);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise in-place add.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute entrywise difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Rows `[lo, hi)` as a new tensor (rank-2).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let c = self.cols();
+        Tensor::from_vec(&[hi - lo, c], self.data[lo * c..hi * c].to_vec())
+    }
+
+    /// Columns `[lo, hi)` as a new tensor (rank-2).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let w = hi - lo;
+        let mut out = Tensor::zeros(&[m, w]);
+        for i in 0..m {
+            out.data[i * w..(i + 1) * w].copy_from_slice(&self.data[i * n + lo..i * n + hi]);
+        }
+        out
+    }
+
+    /// Reorder columns by `perm`: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        assert_eq!(perm.len(), n);
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for (j, &p) in perm.iter().enumerate() {
+                out.data[i * n + j] = self.data[i * n + p];
+            }
+        }
+        out
+    }
+
+    /// Write in NumPy `.npy` v1.0 format (f32 little-endian, C order).
+    pub fn save_npy(&self, path: &Path) -> anyhow::Result<()> {
+        let shape_str = match self.shape.len() {
+            1 => format!("({},)", self.shape[0]),
+            _ => format!(
+                "({})",
+                self.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+        );
+        // Pad so that magic(6)+ver(2)+hlen(2)+header is a multiple of 64.
+        let unpadded = 10 + header.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        header.push_str(&" ".repeat(pad));
+        header.push('\n');
+
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(b"\x93NUMPY\x01\x00")?;
+        f.write_all(&(header.len() as u16).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Read a `.npy` file (f32 or f64 little-endian, C order).
+    pub fn load_npy(path: &Path) -> anyhow::Result<Tensor> {
+        let mut f = std::fs::File::open(path)?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        if buf.len() < 10 || &buf[..6] != b"\x93NUMPY" {
+            anyhow::bail!("{path:?}: not an npy file");
+        }
+        let (hlen, hstart) = if buf[6] == 1 {
+            (u16::from_le_bytes([buf[8], buf[9]]) as usize, 10)
+        } else {
+            (
+                u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize,
+                12,
+            )
+        };
+        let header = std::str::from_utf8(&buf[hstart..hstart + hlen])?;
+        let fortran = header.contains("'fortran_order': True");
+        if fortran {
+            anyhow::bail!("{path:?}: fortran order unsupported");
+        }
+        let descr_f32 = header.contains("'<f4'");
+        let descr_f64 = header.contains("'<f8'");
+        if !descr_f32 && !descr_f64 {
+            anyhow::bail!("{path:?}: unsupported dtype in {header}");
+        }
+        let shape_txt = header
+            .split("'shape':")
+            .nth(1)
+            .and_then(|s| s.split('(').nth(1))
+            .and_then(|s| s.split(')').next())
+            .ok_or_else(|| anyhow::anyhow!("bad npy header: {header}"))?;
+        let shape: Vec<usize> = shape_txt
+            .split(',')
+            .filter_map(|p| {
+                let p = p.trim();
+                if p.is_empty() {
+                    None
+                } else {
+                    Some(p.parse::<usize>())
+                }
+            })
+            .collect::<Result<_, _>>()?;
+        let n: usize = shape.iter().product();
+        let body = &buf[hstart + hlen..];
+        let data: Vec<f32> = if descr_f32 {
+            if body.len() < n * 4 {
+                anyhow::bail!("{path:?}: truncated body");
+            }
+            body.chunks_exact(4)
+                .take(n)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        } else {
+            if body.len() < n * 8 {
+                anyhow::bail!("{path:?}: truncated body");
+            }
+            body.chunks_exact(8)
+                .take(n)
+                .map(|c| {
+                    f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as f32
+                })
+                .collect()
+        };
+        let shape = if shape.is_empty() { vec![1] } else { shape };
+        Ok(Tensor::from_vec(&shape, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(1);
+        let a = Tensor::randn(&[5, 5], &mut r, 1.0);
+        let i = Tensor::eye(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-6);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let mut r = Rng::new(2);
+        let a = Tensor::randn(&[3, 7], &mut r, 1.0);
+        let b = Tensor::randn(&[7, 4], &mut r, 1.0);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape, vec![3, 4]);
+        // Spot-check one entry.
+        let mut want = 0.0f32;
+        for k in 0..7 {
+            want += a.at(1, k) * b.at(k, 2);
+        }
+        assert!((c.at(1, 2) - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(3);
+        let a = Tensor::randn(&[4, 6], &mut r, 1.0);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn transpose_matmul_identity() {
+        // (AB)^T = B^T A^T
+        let mut r = Rng::new(4);
+        let a = Tensor::randn(&[3, 5], &mut r, 1.0);
+        let b = Tensor::randn(&[5, 2], &mut r, 1.0);
+        let lhs = a.matmul(&b).t();
+        let rhs = b.t().matmul(&a.t());
+        assert!(lhs.max_abs_diff(&rhs) < 1e-5);
+    }
+
+    #[test]
+    fn slices() {
+        let a = Tensor::from_vec(&[3, 3], (0..9).map(|x| x as f32).collect());
+        assert_eq!(a.slice_rows(1, 3).data, vec![3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.slice_cols(0, 2).data, vec![0.0, 1.0, 3.0, 4.0, 6.0, 7.0]);
+        assert_eq!(a.col(2), vec![2.0, 5.0, 8.0]);
+    }
+
+    #[test]
+    fn permute_cols_roundtrip() {
+        let mut r = Rng::new(5);
+        let a = Tensor::randn(&[4, 6], &mut r, 1.0);
+        let perm = vec![3, 1, 5, 0, 2, 4];
+        let mut inv = vec![0; 6];
+        for (j, &p) in perm.iter().enumerate() {
+            inv[p] = j;
+        }
+        assert!(a.permute_cols(&perm).permute_cols(&inv).max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn npy_roundtrip() {
+        let dir = std::env::temp_dir().join("qrlora_test_npy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.npy");
+        let mut r = Rng::new(6);
+        for shape in [vec![7usize], vec![3, 4], vec![2, 3, 4]] {
+            let a = Tensor::randn(&shape, &mut r, 2.0);
+            a.save_npy(&path).unwrap();
+            let b = Tensor::load_npy(&path).unwrap();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn fro_norm() {
+        let a = Tensor::from_vec(&[2, 2], vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+    }
+}

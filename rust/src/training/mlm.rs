@@ -1,0 +1,230 @@
+//! Masked-LM pretraining support: synthetic corpus + BERT-style masking +
+//! the pretrain driver.
+
+use std::collections::BTreeMap;
+
+use crate::data::vocab::{CLS, MASK, N_RESERVED, PAD, SEP};
+use crate::data::{gen_example, Lexicon, ALL_TASKS};
+use crate::model;
+use crate::runtime::{Preset, Role, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Build a pretraining corpus by sampling surface sentences from every task
+/// generator across all genres — the synthetic analogue of the heterogeneous
+/// pretraining text that gives real checkpoints their structured spectra.
+pub fn make_corpus(lex: &Lexicon, n_sentences: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n_sentences);
+    for i in 0..n_sentences {
+        let spec = &ALL_TASKS[i % ALL_TASKS.len()];
+        let genre = rng.below(crate::data::N_GENRES);
+        let ex = gen_example(spec, lex, &mut rng, genre, i);
+        let mut sent = ex.a;
+        if !ex.b.is_empty() {
+            sent.push(SEP);
+            sent.extend(ex.b);
+        }
+        out.push(sent);
+    }
+    out
+}
+
+/// Assembles MLM batches with BERT-style 80/10/10 masking.
+pub struct MlmBatcher {
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub mask_prob: f64,
+}
+
+impl MlmBatcher {
+    pub fn new(preset: &Preset) -> MlmBatcher {
+        MlmBatcher {
+            batch: preset.batch,
+            seq: preset.max_seq,
+            vocab: preset.vocab,
+            mask_prob: 0.15,
+        }
+    }
+
+    /// Build one MLM batch: (input_ids, type_ids, attn_mask, labels).
+    /// Labels are -100 everywhere except masked positions.
+    pub fn assemble(
+        &self,
+        sentences: &[&Vec<u32>],
+        rng: &mut Rng,
+    ) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+        let mut ids = Vec::with_capacity(self.batch * self.seq);
+        let mut types = vec![0i32; self.batch * self.seq];
+        let mut mask = Vec::with_capacity(self.batch * self.seq);
+        let mut labels = Vec::with_capacity(self.batch * self.seq);
+        for i in 0..self.batch {
+            let sent = sentences[i % sentences.len()];
+            let mut row = vec![CLS as i32];
+            row.extend(sent.iter().map(|&t| t as i32));
+            row.push(SEP as i32);
+            row.truncate(self.seq);
+            let used = row.len();
+            row.resize(self.seq, PAD as i32);
+            for (s, tok) in row.iter_mut().enumerate() {
+                let maskable = s < used && *tok >= N_RESERVED as i32;
+                if maskable && rng.chance(self.mask_prob) {
+                    labels.push(*tok);
+                    let roll = rng.f64();
+                    if roll < 0.8 {
+                        *tok = MASK as i32;
+                    } else if roll < 0.9 {
+                        *tok = (N_RESERVED as usize + rng.below(self.vocab - N_RESERVED as usize))
+                            as i32;
+                    } // else keep original
+                } else {
+                    labels.push(-100);
+                }
+                mask.push(if s < used { 1.0 } else { 0.0 });
+            }
+            ids.extend(row);
+        }
+        // types already zeroed
+        let _ = &mut types;
+        (ids, types, mask, labels)
+    }
+}
+
+/// Run MLM pretraining and return the backbone parameter map.
+pub fn pretrain(
+    rt: &Runtime,
+    preset_name: &str,
+    lex: &Lexicon,
+    steps: usize,
+    lr: f64,
+    seed: u64,
+) -> anyhow::Result<(BTreeMap<String, Tensor>, Vec<(usize, f32)>)> {
+    let preset = rt.manifest.preset(preset_name)?.clone();
+    let exe = rt.load(&format!("{preset_name}/pretrain_step"))?;
+    let exe_metrics = rt.load(&format!("{preset_name}/pretrain_metrics"))?;
+    let layout = exe.spec.layout()?.clone();
+
+    let corpus = make_corpus(lex, 4096, seed ^ 0xC0FFEE);
+    let batcher = MlmBatcher::new(&preset);
+    let mut rng = Rng::new(seed);
+
+    let state = model::init_state(&layout, seed);
+    let mut state_buf = rt.upload_f32(&state, &[layout.total])?;
+    let mut losses = Vec::new();
+
+    for step in 1..=steps {
+        let sents: Vec<&Vec<u32>> = (0..preset.batch)
+            .map(|_| &corpus[rng.below(corpus.len())])
+            .collect();
+        let (ids, types, mask, labels) = batcher.assemble(&sents, &mut rng);
+        let lr_now = if step <= 20 {
+            lr * step as f64 / 20.0
+        } else {
+            lr
+        } as f32;
+        let spec = exe.spec.clone();
+        let b = preset.batch;
+        let s = preset.max_seq;
+        let ids_b = rt.upload_i32(&ids, &[b, s])?;
+        let types_b = rt.upload_i32(&types, &[b, s])?;
+        let mask_b = rt.upload_f32(&mask, &[b, s])?;
+        let labels_b = rt.upload_i32(&labels, &[b, s])?;
+        let lr_b = rt.upload_scalar(lr_now)?;
+        let t_b = rt.upload_scalar(step as f32)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        for t in &spec.inputs {
+            match (t.role, t.name.as_str()) {
+                (Role::State, _) => args.push(&state_buf),
+                (Role::Batch, "batch/input_ids") => args.push(&ids_b),
+                (Role::Batch, "batch/type_ids") => args.push(&types_b),
+                (Role::Batch, "batch/attn_mask") => args.push(&mask_b),
+                (Role::Batch, "batch/mlm_labels") => args.push(&labels_b),
+                (Role::Scalar, "lr") => args.push(&lr_b),
+                (Role::Scalar, _) => args.push(&t_b),
+                (role, name) => anyhow::bail!("unexpected pretrain input {name:?} ({role:?})"),
+            }
+        }
+        let mut outs = exe.run(&args)?;
+        state_buf = outs.swap_remove(0);
+        if step % 20 == 0 || step == steps || step == 1 {
+            let head = rt.read_metrics(&exe_metrics, &state_buf)?;
+            losses.push((step, head[0]));
+            crate::debugln!("pretrain step {step}: mlm loss {:.4}", head[0]);
+        }
+    }
+
+    let state = rt.download_f32(&state_buf)?;
+    Ok((model::extract_all(&state, &layout), losses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_sentences_nonempty() {
+        let lex = Lexicon::new(512);
+        let c = make_corpus(&lex, 64, 1);
+        assert_eq!(c.len(), 64);
+        assert!(c.iter().all(|s| !s.is_empty()));
+    }
+
+    #[test]
+    fn mlm_masking_rates() {
+        let lex = Lexicon::new(512);
+        let c = make_corpus(&lex, 32, 2);
+        let b = MlmBatcher {
+            batch: 16,
+            seq: 32,
+            vocab: 512,
+            mask_prob: 0.15,
+        };
+        let refs: Vec<&Vec<u32>> = c.iter().take(16).collect();
+        let mut rng = Rng::new(3);
+        let mut masked = 0usize;
+        let mut maskable = 0usize;
+        for _ in 0..50 {
+            let (ids, _, mask, labels) = b.assemble(&refs, &mut rng);
+            assert_eq!(ids.len(), 16 * 32);
+            for (i, &l) in labels.iter().enumerate() {
+                if mask[i] > 0.0 && ids[i] != CLS as i32 && ids[i] != SEP as i32 {
+                    maskable += 1;
+                }
+                if l >= 0 {
+                    masked += 1;
+                    assert!(mask[i] > 0.0, "masked a padding position");
+                }
+            }
+        }
+        let rate = masked as f64 / maskable as f64;
+        assert!((0.10..0.22).contains(&rate), "mask rate {rate}");
+    }
+
+    #[test]
+    fn labels_match_original_tokens() {
+        let lex = Lexicon::new(512);
+        let c = make_corpus(&lex, 8, 4);
+        let b = MlmBatcher {
+            batch: 4,
+            seq: 32,
+            vocab: 512,
+            mask_prob: 0.5,
+        };
+        let refs: Vec<&Vec<u32>> = c.iter().take(4).collect();
+        let mut rng = Rng::new(5);
+        let (ids, _, _, labels) = b.assemble(&refs, &mut rng);
+        for (i, &l) in labels.iter().enumerate() {
+            if l >= 0 {
+                // label is a real vocab id; if the input kept the token it
+                // must equal the label
+                assert!(l >= N_RESERVED as i32 && (l as usize) < 512);
+                if ids[i] != MASK as i32 && ids[i] >= N_RESERVED as i32 {
+                    // either "keep" (10%) or "random" (10%) case — can't
+                    // distinguish, but both are legal
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! Training + evaluation sessions over the AOT step programs.
+//!
+//! A `Session` owns the device-resident training state and drives it with
+//! batches: one PJRT `execute_b` per step, state never leaving the device.
+//! Higher-level drivers implement the paper's pipeline:
+//!
+//!   pretrain (MLM) → warm-up FT on the task → freeze → adapter training
+//!
+//! and the evaluation protocol (dev / dev-mismatched with per-task metrics).
+
+mod mlm;
+mod session;
+
+pub use mlm::{make_corpus, pretrain, MlmBatcher};
+pub use session::{EvalOutput, Method, Session, TrainConfig};
+
+use std::collections::BTreeMap;
+
+use crate::adapters::{LoraAdapterSet, QrAdapterSet};
+use crate::data::{metric_kind, Batcher, HeadKind, Lexicon, Split, TaskData};
+use crate::metrics::EvalResult;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Everything needed to fine-tune one (task, method) pair.
+pub struct FinetuneJob<'a> {
+    pub rt: &'a Runtime,
+    pub preset: &'a str,
+    pub task: &'a TaskData,
+    pub lexicon: &'a Lexicon,
+    pub backbone: &'a BTreeMap<String, Tensor>,
+    /// Warmed task head (from the warm-up phase), if any.
+    pub head: Option<&'a BTreeMap<String, Tensor>>,
+    pub config: TrainConfig,
+    pub seed: u64,
+}
+
+/// Result of a fine-tune run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub task: String,
+    pub method_label: String,
+    pub trainable_params: usize,
+    pub dev: EvalResult,
+    pub dev_mm: Option<EvalResult>,
+    pub final_loss: f32,
+    pub steps: usize,
+    pub losses: Vec<(usize, f32)>,
+}
+
+impl RunResult {
+    /// Headline metric (task convention) in percent.
+    pub fn headline(&self) -> f64 {
+        self.dev.headline(metric_kind(&self.task))
+    }
+}
+
+/// Run one fine-tuning job with a given method.
+pub fn run_finetune(job: &FinetuneJob, method: &Method) -> anyhow::Result<RunResult> {
+    let preset = job.rt.manifest.preset(job.preset)?.clone();
+    let head_kind = job.task.spec.head;
+    let mut session = Session::finetune(
+        job.rt,
+        &preset,
+        method,
+        head_kind,
+        job.backbone,
+        job.head,
+        job.seed,
+    )?;
+
+    let batcher = Batcher::new(&preset, head_kind == HeadKind::Reg);
+    let mut rng = Rng::new(job.seed ^ 0xFEED);
+    let cfg = &job.config;
+
+    let train = &job.task.train[..cfg.train_examples.min(job.task.train.len())];
+    let mut losses = Vec::new();
+    let mut step = 0usize;
+    'outer: loop {
+        for chunk in batcher.epoch(train, &mut rng) {
+            if step >= cfg.steps {
+                break 'outer;
+            }
+            let batch = batcher.assemble(&chunk);
+            let lr = cfg.lr_at(step);
+            session.step(&batch, job.task.spec.n_classes, lr)?;
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                let loss = session.last_loss()?;
+                losses.push((step, loss));
+                crate::debugln!(
+                    "{}/{} step {step}: loss {loss:.4} lr {lr:.2e}",
+                    job.task.spec.name,
+                    session.method_label()
+                );
+            }
+            step += 1;
+        }
+        if train.is_empty() {
+            anyhow::bail!("empty training set");
+        }
+    }
+
+    let dev = session.evaluate(&batcher, job.task, Split::Dev)?;
+    let dev_mm = if job.task.spec.mm_genres.is_some() {
+        Some(session.evaluate(&batcher, job.task, Split::DevMismatched)?)
+    } else {
+        None
+    };
+
+    Ok(RunResult {
+        task: job.task.spec.name.to_string(),
+        method_label: session.method_label().to_string(),
+        trainable_params: session.trainable_params(),
+        dev: dev.result,
+        dev_mm: dev_mm.map(|e| e.result),
+        final_loss: losses.last().map(|(_, l)| *l).unwrap_or(f32::NAN),
+        steps: step,
+        losses,
+    })
+}
+
+/// Warm-up: full fine-tune on the task for `steps`, returning the updated
+/// backbone and the trained task head (the paper warm-up fine-tunes for
+/// three epochs before attaching adapters).
+pub fn warmup(
+    rt: &Runtime,
+    preset_name: &str,
+    task: &TaskData,
+    backbone: &BTreeMap<String, Tensor>,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> anyhow::Result<(BTreeMap<String, Tensor>, BTreeMap<String, Tensor>)> {
+    let preset = rt.manifest.preset(preset_name)?.clone();
+    let head_kind = task.spec.head;
+    let method = Method::FullFt;
+    let mut session =
+        Session::finetune(rt, &preset, &method, head_kind, backbone, None, seed)?;
+    let batcher = Batcher::new(&preset, head_kind == HeadKind::Reg);
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+
+    let mut step = 0usize;
+    'outer: loop {
+        for chunk in batcher.epoch(&task.train, &mut rng) {
+            if step >= cfg.steps {
+                break 'outer;
+            }
+            let batch = batcher.assemble(&chunk);
+            session.step(&batch, task.spec.n_classes, cfg.lr_at(step))?;
+            step += 1;
+        }
+    }
+    let params = session.download_params()?;
+    let mut bb = BTreeMap::new();
+    let mut head = BTreeMap::new();
+    for (name, t) in params {
+        if name.starts_with("head/") {
+            head.insert(name, t);
+        } else {
+            bb.insert(name, t);
+        }
+    }
+    Ok((bb, head))
+}
+
+/// Build the method descriptor objects from backbone + preset (adapter
+/// factorization happens here).
+pub struct Methods;
+
+impl Methods {
+    pub fn qr_lora(
+        backbone: &BTreeMap<String, Tensor>,
+        preset: &crate::runtime::Preset,
+        scope: crate::adapters::Scope,
+        tau: f64,
+        rule: crate::linalg::RankRule,
+    ) -> anyhow::Result<Method> {
+        let set = QrAdapterSet::build(backbone, preset, scope, tau, rule)?;
+        Ok(Method::QrLora(set))
+    }
+
+    pub fn lora(
+        backbone: &BTreeMap<String, Tensor>,
+        preset: &crate::runtime::Preset,
+        alpha: f32,
+        seed: u64,
+    ) -> anyhow::Result<Method> {
+        let set = LoraAdapterSet::build(
+            backbone,
+            preset,
+            crate::adapters::LoraInit::Standard,
+            alpha,
+            seed,
+        )?;
+        Ok(Method::Lora { set, label: "LoRA".into() })
+    }
+
+    pub fn svd_lora(
+        backbone: &BTreeMap<String, Tensor>,
+        preset: &crate::runtime::Preset,
+        k: usize,
+        alpha: f32,
+        seed: u64,
+    ) -> anyhow::Result<Method> {
+        let set = LoraAdapterSet::build(
+            backbone,
+            preset,
+            crate::adapters::LoraInit::Svd { k },
+            alpha,
+            seed,
+        )?;
+        Ok(Method::Lora { set, label: "SVD-LoRA".into() })
+    }
+}

@@ -1,0 +1,397 @@
+//! A training/eval session: device-resident state + frozen inputs + the
+//! step/eval executables for one (preset, method, head) triple.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::adapters::{LoraAdapterSet, QrAdapterSet};
+use crate::data::{Batch, Batcher, HeadKind, Split, TaskData};
+use crate::metrics::{argmax, EvalResult};
+use crate::model;
+use crate::runtime::{DType, Executable, Preset, Role, Runtime, StateLayout};
+use crate::tensor::Tensor;
+
+/// Fine-tuning method descriptor (adapter state included).
+pub enum Method {
+    FullFt,
+    QrLora(QrAdapterSet),
+    Lora { set: LoraAdapterSet, label: String },
+}
+
+impl Method {
+    pub fn artifact_name(&self) -> &'static str {
+        match self {
+            Method::FullFt => "ft",
+            Method::QrLora(_) => "qrlora",
+            Method::Lora { .. } => "lora",
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Method::FullFt => "FT".to_string(),
+            Method::QrLora(_) => "QR-LoRA".to_string(),
+            Method::Lora { label, .. } => label.clone(),
+        }
+    }
+}
+
+/// Training hyperparameters + budget.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup_steps: usize,
+    pub train_examples: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            lr: 1e-3,
+            warmup_steps: 20,
+            train_examples: 10_000,
+            log_every: 25,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Linear warmup then constant.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if step < self.warmup_steps {
+            (self.lr * (step + 1) as f64 / self.warmup_steps as f64) as f32
+        } else {
+            self.lr as f32
+        }
+    }
+}
+
+/// Evaluation output: aggregated metrics + raw predictions.
+pub struct EvalOutput {
+    pub result: EvalResult,
+    pub preds_cls: Vec<usize>,
+    pub preds_reg: Vec<f64>,
+}
+
+/// One live training session.
+pub struct Session<'a> {
+    rt: &'a Runtime,
+    preset: Preset,
+    exe_train: Rc<Executable>,
+    exe_metrics: Rc<Executable>,
+    exe_eval: Rc<Executable>,
+    layout: StateLayout,
+    state_buf: xla::PjRtBuffer,
+    /// Frozen inputs in artifact order (train program).
+    frozen: Vec<(String, xla::PjRtBuffer)>,
+    head_kind: HeadKind,
+    method_label: String,
+    trainable: usize,
+    t: usize,
+}
+
+impl<'a> Session<'a> {
+    /// Assemble a fine-tune session: state init (+ adapter/backbone
+    /// placement), frozen uploads, executable loading.
+    pub fn finetune(
+        rt: &'a Runtime,
+        preset: &Preset,
+        method: &Method,
+        head_kind: HeadKind,
+        backbone: &BTreeMap<String, Tensor>,
+        head: Option<&BTreeMap<String, Tensor>>,
+        seed: u64,
+    ) -> anyhow::Result<Session<'a>> {
+        let suffix = match head_kind {
+            HeadKind::Cls => "cls",
+            HeadKind::Reg => "reg",
+        };
+        let mname = method.artifact_name();
+        let key_train = format!("{}/train_step_{}_{}", preset.name, mname, suffix);
+        let key_metrics = format!("{}/metrics_{}_{}", preset.name, mname, suffix);
+        let key_eval = format!("{}/eval_fwd_{}_{}", preset.name, mname, suffix);
+        let exe_train = rt.load(&key_train)?;
+        let exe_metrics = rt.load(&key_metrics)?;
+        let exe_eval = rt.load(&key_eval)?;
+        let layout = exe_train.spec.layout()?.clone();
+
+        // --- state vector -------------------------------------------------
+        let mut state = model::init_state(&layout, seed);
+        match method {
+            Method::FullFt => {
+                // Backbone (+ optionally head) are trainable: copy them in.
+                for (name, t) in backbone {
+                    if layout.param(name).is_ok() {
+                        model::write_param(&mut state, &layout, name, t)?;
+                    }
+                }
+            }
+            Method::Lora { set, .. } => {
+                for (name, t) in set.state_writes() {
+                    model::write_param(&mut state, &layout, &name, &t)?;
+                }
+            }
+            Method::QrLora(_) => {} // λ starts at zero (init default)
+        }
+        if let Some(head_params) = head {
+            for (name, t) in head_params {
+                if layout.param(name).is_ok() {
+                    model::write_param(&mut state, &layout, name, t)?;
+                }
+            }
+        }
+        let state_buf = rt.upload_f32(&state, &[layout.total])?;
+
+        // --- frozen inputs -------------------------------------------------
+        let mut frozen_values: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+        match method {
+            Method::FullFt => {}
+            Method::QrLora(set) => {
+                for (name, v) in set.frozen_inputs() {
+                    frozen_values.insert(name, v);
+                }
+                for (name, t) in backbone {
+                    frozen_values.insert(name.clone(), t.data.clone());
+                }
+            }
+            Method::Lora { set, .. } => {
+                for (name, v) in set.frozen_inputs() {
+                    frozen_values.insert(name, v);
+                }
+                for (name, t) in backbone {
+                    frozen_values.insert(name.clone(), t.data.clone());
+                }
+            }
+        }
+        let mut frozen = Vec::new();
+        for t in exe_train.spec.inputs_with_role(Role::Frozen).map(|(_, t)| t.clone()) {
+            let v = frozen_values.remove(&t.name).ok_or_else(|| {
+                anyhow::anyhow!("{}: no value for frozen input {:?}", key_train, t.name)
+            })?;
+            anyhow::ensure!(
+                v.len() == t.numel(),
+                "{}: frozen {:?} has {} elems, want {}",
+                key_train,
+                t.name,
+                v.len(),
+                t.numel()
+            );
+            frozen.push((t.name.clone(), rt.upload_f32(&v, &t.shape)?));
+        }
+
+        let trainable = match method {
+            Method::FullFt => layout.n_params,
+            Method::QrLora(set) => set.trainable_params(),
+            Method::Lora { set, .. } => set.trainable_params(),
+        };
+
+        Ok(Session {
+            rt,
+            preset: preset.clone(),
+            exe_train,
+            exe_metrics,
+            exe_eval,
+            layout,
+            state_buf,
+            frozen,
+            head_kind,
+            method_label: method.label(),
+            trainable,
+            t: 0,
+        })
+    }
+
+    pub fn method_label(&self) -> &str {
+        &self.method_label
+    }
+
+    /// Adapter (or full) trainable parameter count, paper convention
+    /// (task head excluded for adapter methods).
+    pub fn trainable_params(&self) -> usize {
+        self.trainable
+    }
+
+    pub fn steps_taken(&self) -> usize {
+        self.t
+    }
+
+    pub fn layout(&self) -> &StateLayout {
+        &self.layout
+    }
+
+    /// Upload the batch tensors for the train program, in artifact order.
+    fn batch_buffers(
+        &self,
+        spec: &crate::runtime::ArtifactSpec,
+        batch: &Batch,
+        n_classes: usize,
+    ) -> anyhow::Result<Vec<(String, xla::PjRtBuffer)>> {
+        let k = if self.head_kind == HeadKind::Cls {
+            self.preset.n_classes
+        } else {
+            1
+        };
+        let mut out = Vec::new();
+        for (_, t) in spec.inputs_with_role(Role::Batch) {
+            let buf = match t.name.as_str() {
+                "batch/input_ids" => self.rt.upload_i32(&batch.input_ids, &t.shape)?,
+                "batch/type_ids" => self.rt.upload_i32(&batch.type_ids, &t.shape)?,
+                "batch/attn_mask" => self.rt.upload_f32(&batch.attn_mask, &t.shape)?,
+                "batch/labels" => match t.dtype {
+                    DType::I32 => self.rt.upload_i32(&batch.labels_i32, &t.shape)?,
+                    DType::F32 => self.rt.upload_f32(&batch.labels_f32, &t.shape)?,
+                },
+                "batch/class_mask" => {
+                    self.rt.upload_f32(&Batcher::class_mask(n_classes, k), &t.shape)?
+                }
+                "batch/example_w" => self.rt.upload_f32(&batch.example_w, &t.shape)?,
+                other => anyhow::bail!("unexpected batch input {other:?}"),
+            };
+            out.push((t.name.clone(), buf));
+        }
+        Ok(out)
+    }
+
+    /// One training step (single PJRT call; state stays on device).
+    pub fn step(&mut self, batch: &Batch, n_classes: usize, lr: f32) -> anyhow::Result<()> {
+        self.t += 1;
+        let spec = self.exe_train.spec.clone();
+        let batch_bufs = self.batch_buffers(&spec, batch, n_classes)?;
+        let lr_buf = self.rt.upload_scalar(lr)?;
+        let t_buf = self.rt.upload_scalar(self.t as f32)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(spec.inputs.len());
+        for t in &spec.inputs {
+            match t.role {
+                Role::State => args.push(&self.state_buf),
+                Role::Frozen => {
+                    args.push(
+                        &self
+                            .frozen
+                            .iter()
+                            .find(|(n, _)| n == &t.name)
+                            .ok_or_else(|| anyhow::anyhow!("missing frozen {:?}", t.name))?
+                            .1,
+                    );
+                }
+                Role::Batch => {
+                    args.push(
+                        &batch_bufs
+                            .iter()
+                            .find(|(n, _)| n == &t.name)
+                            .ok_or_else(|| anyhow::anyhow!("missing batch {:?}", t.name))?
+                            .1,
+                    );
+                }
+                Role::Scalar => {
+                    args.push(if t.name == "lr" { &lr_buf } else { &t_buf });
+                }
+                other => anyhow::bail!("unexpected input role {other:?}"),
+            }
+        }
+        let mut outs = self.exe_train.run(&args)?;
+        self.state_buf = outs.swap_remove(0);
+        Ok(())
+    }
+
+    /// Loss recorded by the most recent step.
+    pub fn last_loss(&self) -> anyhow::Result<f32> {
+        let head = self.rt.read_metrics(&self.exe_metrics, &self.state_buf)?;
+        let f = self.layout.metric("loss")?;
+        Ok(head[f.offset])
+    }
+
+    /// Logits recorded by the most recent step (B×K row-major).
+    pub fn last_logits(&self) -> anyhow::Result<Vec<f32>> {
+        let head = self.rt.read_metrics(&self.exe_metrics, &self.state_buf)?;
+        let f = self.layout.metric("logits")?;
+        Ok(head[f.offset..f.offset + f.numel()].to_vec())
+    }
+
+    /// Forward pass on an eval batch → logits (host).
+    pub fn forward(&self, batch: &Batch, n_classes: usize) -> anyhow::Result<Vec<f32>> {
+        let spec = self.exe_eval.spec.clone();
+        let batch_bufs = self.batch_buffers(&spec, batch, n_classes)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(spec.inputs.len());
+        for t in &spec.inputs {
+            match t.role {
+                Role::State => args.push(&self.state_buf),
+                Role::Frozen => {
+                    args.push(&self.frozen.iter().find(|(n, _)| n == &t.name).unwrap().1)
+                }
+                Role::Batch => {
+                    args.push(&batch_bufs.iter().find(|(n, _)| n == &t.name).unwrap().1)
+                }
+                other => anyhow::bail!("unexpected eval input role {other:?}"),
+            }
+        }
+        let outs = self.exe_eval.run(&args)?;
+        self.rt.download_f32(&outs[0])
+    }
+
+    /// Evaluate a dataset split with the task's metrics.
+    pub fn evaluate(
+        &self,
+        batcher: &Batcher,
+        task: &TaskData,
+        split: Split,
+    ) -> anyhow::Result<EvalOutput> {
+        let data = task.split(split);
+        anyhow::ensure!(!data.is_empty(), "empty split {split:?} for {}", task.spec.name);
+        let k = if self.head_kind == HeadKind::Cls {
+            self.preset.n_classes
+        } else {
+            1
+        };
+        let mut preds_cls = Vec::new();
+        let mut preds_reg = Vec::new();
+        let mut labels_cls = Vec::new();
+        let mut labels_reg = Vec::new();
+
+        let refs: Vec<&crate::data::Example> = data.iter().collect();
+        for chunk in refs.chunks(batcher.batch) {
+            let batch = batcher.assemble(chunk);
+            let logits = self.forward(&batch, task.spec.n_classes)?;
+            for (i, ex) in chunk.iter().enumerate() {
+                let row = &logits[i * k..(i + 1) * k];
+                match ex.label {
+                    crate::data::Label::Class(c) => {
+                        preds_cls.push(argmax(row));
+                        labels_cls.push(c);
+                    }
+                    crate::data::Label::Score(s) => {
+                        preds_reg.push(row[0] as f64);
+                        labels_reg.push(s as f64);
+                    }
+                }
+            }
+        }
+        let result = if self.head_kind == HeadKind::Cls {
+            EvalResult::classification(&preds_cls, &labels_cls)
+        } else {
+            EvalResult::regression(&preds_reg, &labels_reg)
+        };
+        Ok(EvalOutput { result, preds_cls, preds_reg })
+    }
+
+    /// Download the trainable parameter region as named tensors.
+    pub fn download_params(&self) -> anyhow::Result<BTreeMap<String, Tensor>> {
+        let state = self.rt.download_f32(&self.state_buf)?;
+        Ok(model::extract_all(&state, &self.layout))
+    }
+
+    /// Download the raw state vector (checkpointing).
+    pub fn download_state(&self) -> anyhow::Result<Vec<f32>> {
+        self.rt.download_f32(&self.state_buf)
+    }
+
+    /// Restore a previously saved state vector.
+    pub fn upload_state(&mut self, state: &[f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(state.len() == self.layout.total, "state length mismatch");
+        self.state_buf = self.rt.upload_f32(state, &[self.layout.total])?;
+        Ok(())
+    }
+}

@@ -1,0 +1,188 @@
+//! Hand-rolled CLI argument parser (std-only; the vendored crate set has no
+//! clap). Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, repeated flags, and positional arguments, with generated help.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, Vec<String>>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `known_switches` lists flags that take no value.
+    pub fn parse(raw: &[String], known_switches: &[&str]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if known_switches.contains(&body) {
+                    args.switches.push(body.to_string());
+                } else {
+                    i += 1;
+                    let v = raw
+                        .get(i)
+                        .ok_or_else(|| anyhow::anyhow!("flag --{body} expects a value"))?;
+                    args.flags.entry(body.to_string()).or_default().push(v.clone());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Typed getters with defaults.
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated list flag, e.g. `--taus 0.5,0.7,0.8`.
+    pub fn list_f64(&self, key: &str, default: &[f64]) -> anyhow::Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad number {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn list_str(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|p| p.trim().to_string()).collect(),
+        }
+    }
+}
+
+/// A subcommand descriptor for help output.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+}
+
+/// Render a help screen for a command set.
+pub fn render_help(bin: &str, about: &str, commands: &[Command]) -> String {
+    let mut s = format!("{bin} — {about}\n\nUSAGE:\n  {bin} <command> [flags]\n\nCOMMANDS:\n");
+    let width = commands.iter().map(|c| c.name.len()).max().unwrap_or(0);
+    for c in commands {
+        s.push_str(&format!("  {:width$}  {}\n", c.name, c.about, width = width));
+    }
+    s.push_str(&format!("\nRun `{bin} <command> --help` for command flags.\n"));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(&raw(&["train", "--task", "mnli", "--steps=100", "-v"]), &[]).unwrap();
+        assert_eq!(a.positional(), &["train".to_string(), "-v".to_string()]);
+        assert_eq!(a.get("task"), Some("mnli"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn switches() {
+        let a = Args::parse(&raw(&["--verbose", "--task", "sst2"]), &["verbose"]).unwrap();
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("task"), Some("sst2"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&raw(&["--task"]), &[]).is_err());
+    }
+
+    #[test]
+    fn repeated_flags() {
+        let a = Args::parse(&raw(&["--x", "1", "--x", "2"]), &[]).unwrap();
+        assert_eq!(a.get_all("x"), vec!["1", "2"]);
+        assert_eq!(a.get("x"), Some("2"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&raw(&["--taus", "0.5,0.7,0.8"]), &[]).unwrap();
+        assert_eq!(a.list_f64("taus", &[]).unwrap(), vec![0.5, 0.7, 0.8]);
+        assert_eq!(a.list_f64("missing", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(&raw(&[]), &[]).unwrap();
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("lr", 0.1).unwrap(), 0.1);
+        assert_eq!(a.str_or("preset", "tiny"), "tiny");
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = Args::parse(&raw(&["--steps", "abc"]), &[]).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Leveled logging + wall-clock timing utilities (std-only).
+//!
+//! The level is process-global and set once by the CLI (`--log debug`).
+//! Logs go to stderr so stdout stays clean for machine-readable output
+//! (experiment tables, JSONL metrics).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn set_level_str(s: &str) -> anyhow::Result<()> {
+    let level = match s {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        _ => anyhow::bail!("unknown log level {s:?} (error|warn|info|debug)"),
+    };
+    set_level(level);
+    Ok(())
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, module: &str, msg: std::fmt::Arguments) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnln {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debugln {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! errorln {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Simple scope timer: `let _t = Timer::new("pretrain");` logs on drop,
+/// or use `elapsed_ms()` for explicit measurement.
+pub struct Timer {
+    label: String,
+    start: Instant,
+    log_on_drop: bool,
+}
+
+impl Timer {
+    pub fn new(label: impl Into<String>) -> Timer {
+        Timer {
+            label: label.into(),
+            start: Instant::now(),
+            log_on_drop: true,
+        }
+    }
+
+    pub fn quiet(label: impl Into<String>) -> Timer {
+        Timer {
+            label: label.into(),
+            start: Instant::now(),
+            log_on_drop: false,
+        }
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        if self.log_on_drop {
+            log(
+                Level::Debug,
+                "timer",
+                format_args!("{} took {:.1} ms", self.label, self.elapsed_ms()),
+            );
+        }
+    }
+}
+
+/// Online mean/min/max/stddev accumulator for latency stats.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Stats {
+        Stats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_filtering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn level_from_str() {
+        assert!(set_level_str("debug").is_ok());
+        assert!(set_level_str("nope").is_err());
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = Stats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.n, 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn timer_measures() {
+        let t = Timer::quiet("x");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared substrates: JSON, TOML-lite config, CLI parsing, RNG, logging.
+//! All std-only — the offline vendor set contains no serde/clap/rand.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,357 @@
+//! TOML-subset parser for experiment / model configuration files.
+//!
+//! Supported: top-level key/value pairs, `[table]` and `[table.sub]` headers,
+//! `[[array-of-tables]]`, strings, integers, floats, booleans, and homogeneous
+//! inline arrays. Comments (`#`) and blank lines are skipped. This covers the
+//! full config surface of the framework; unsupported TOML (dates, multiline
+//! strings, inline tables) errors loudly rather than mis-parsing.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Toml {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Toml>),
+    Table(BTreeMap<String, Toml>),
+    /// `[[name]]` array-of-tables.
+    TableArr(Vec<BTreeMap<String, Toml>>),
+}
+
+impl Toml {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Toml::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Toml::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Toml::Float(f) => Some(*f),
+            Toml::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Toml::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Toml]> {
+        match self {
+            Toml::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Toml>> {
+        match self {
+            Toml::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+    /// Dotted-path lookup through nested tables: `get_path("model.d_model")`.
+    pub fn get_path(&self, path: &str) -> Option<&Toml> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse a TOML document into a root table.
+pub fn parse(text: &str) -> anyhow::Result<Toml> {
+    let mut root: BTreeMap<String, Toml> = BTreeMap::new();
+    // Path of the currently-open table header.
+    let mut current: Vec<String> = Vec::new();
+    let mut current_is_arr = false;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| anyhow::anyhow!("toml line {}: {} ({:?})", lineno + 1, msg, raw);
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|l| l.strip_suffix("]]")) {
+            let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty table-array name"));
+            }
+            push_table_arr(&mut root, &path).map_err(|e| err(&e.to_string()))?;
+            current = path;
+            current_is_arr = true;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+            let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty table name"));
+            }
+            ensure_table(&mut root, &path).map_err(|e| err(&e.to_string()))?;
+            current = path;
+            current_is_arr = false;
+        } else if let Some(eq) = find_eq(line) {
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let v = parse_value(val).map_err(|e| err(&e.to_string()))?;
+            let table = open_table(&mut root, &current, current_is_arr)
+                .map_err(|e| err(&e.to_string()))?;
+            if table.insert(key.to_string(), v).is_some() {
+                return Err(err("duplicate key"));
+            }
+        } else {
+            return Err(err("expected key = value or [table]"));
+        }
+    }
+    Ok(Toml::Table(root))
+}
+
+/// Strip a trailing comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Find the first unquoted '='.
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Toml>,
+    path: &[String],
+) -> anyhow::Result<&'a mut BTreeMap<String, Toml>> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Toml::Table(BTreeMap::new()));
+        match entry {
+            Toml::Table(t) => cur = t,
+            Toml::TableArr(v) => {
+                cur = v.last_mut().ok_or_else(|| anyhow::anyhow!("empty table array"))?
+            }
+            _ => anyhow::bail!("'{part}' is not a table"),
+        }
+    }
+    Ok(cur)
+}
+
+fn push_table_arr(root: &mut BTreeMap<String, Toml>, path: &[String]) -> anyhow::Result<()> {
+    let (last, prefix) = path.split_last().unwrap();
+    let parent = ensure_table(root, prefix)?;
+    match parent
+        .entry(last.clone())
+        .or_insert_with(|| Toml::TableArr(Vec::new()))
+    {
+        Toml::TableArr(v) => {
+            v.push(BTreeMap::new());
+            Ok(())
+        }
+        _ => anyhow::bail!("'{last}' is not an array of tables"),
+    }
+}
+
+fn open_table<'a>(
+    root: &'a mut BTreeMap<String, Toml>,
+    path: &[String],
+    is_arr: bool,
+) -> anyhow::Result<&'a mut BTreeMap<String, Toml>> {
+    if path.is_empty() {
+        return Ok(root);
+    }
+    if is_arr {
+        let (last, prefix) = path.split_last().unwrap();
+        let parent = ensure_table(root, prefix)?;
+        match parent.get_mut(last) {
+            Some(Toml::TableArr(v)) => v
+                .last_mut()
+                .ok_or_else(|| anyhow::anyhow!("empty table array")),
+            _ => anyhow::bail!("'{last}' is not an array of tables"),
+        }
+    } else {
+        ensure_table(root, path)
+    }
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Toml> {
+    let s = s.trim();
+    if s.is_empty() {
+        anyhow::bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        // Basic escapes only.
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => anyhow::bail!("bad escape \\{other:?}"),
+                }
+            } else if c == '"' {
+                anyhow::bail!("unescaped quote inside string");
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Toml::Str(out));
+    }
+    if s == "true" {
+        return Ok(Toml::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Toml::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Toml::Arr(items));
+    }
+    // Number: int first, then float.
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Toml::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Toml::Float(f));
+    }
+    anyhow::bail!("cannot parse value {s:?}")
+}
+
+/// Split on top-level commas (no nesting beyond one array level needed, but
+/// handle nested arrays anyway).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_keys() {
+        let t = parse("a = 1\nb = \"x\"\nc = true\nd = 2.5\n").unwrap();
+        assert_eq!(t.get_path("a").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get_path("b").unwrap().as_str(), Some("x"));
+        assert_eq!(t.get_path("c").unwrap().as_bool(), Some(true));
+        assert_eq!(t.get_path("d").unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn tables_and_nesting() {
+        let src = "[model]\nd = 128\n[model.opt]\nlr = 1e-3\n[data]\nname = \"mnli\"\n";
+        let t = parse(src).unwrap();
+        assert_eq!(t.get_path("model.d").unwrap().as_i64(), Some(128));
+        assert_eq!(t.get_path("model.opt.lr").unwrap().as_f64(), Some(1e-3));
+        assert_eq!(t.get_path("data.name").unwrap().as_str(), Some("mnli"));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse("taus = [0.5, 0.7, 0.8]\nnames = [\"a\", \"b\"]\nnested = [[1,2],[3]]\n")
+            .unwrap();
+        assert_eq!(t.get_path("taus").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            t.get_path("names").unwrap().as_arr().unwrap()[1].as_str(),
+            Some("b")
+        );
+        assert_eq!(t.get_path("nested").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn array_of_tables() {
+        let src = "[[run]]\nname = \"a\"\n[[run]]\nname = \"b\"\n";
+        let t = parse(src).unwrap();
+        match t.get_path("run").unwrap() {
+            Toml::TableArr(v) => {
+                assert_eq!(v.len(), 2);
+                assert_eq!(v[1]["name"].as_str(), Some("b"));
+            }
+            _ => panic!("expected table array"),
+        }
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let t = parse("# header\n\na = 1 # trailing\nb = \"with # inside\"\n").unwrap();
+        assert_eq!(t.get_path("a").unwrap().as_i64(), Some(1));
+        assert_eq!(t.get_path("b").unwrap().as_str(), Some("with # inside"));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse("a =").is_err());
+        assert!(parse("= 1").is_err());
+        assert!(parse("[unclosed\na=1").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("a = [1, 2").is_err());
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let t = parse("n = 92_160\n").unwrap();
+        assert_eq!(t.get_path("n").unwrap().as_i64(), Some(92160));
+    }
+}

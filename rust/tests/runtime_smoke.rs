@@ -1,0 +1,293 @@
+//! Integration: manifest-driven artifact loading + PJRT execution, checked
+//! against the host-side tensor math. Requires `make artifacts`.
+
+use qrlora::runtime::{DType, HostTensor, Role, Runtime};
+use qrlora::tensor::Tensor;
+use qrlora::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn kernel_base_matches_host_matmul() {
+    let rt = runtime();
+    let exe = rt.load("tiny/kernel_base").unwrap();
+    let spec = &exe.spec;
+    let (m, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let n = spec.inputs[1].shape[1];
+
+    let mut rng = Rng::new(42);
+    let x = Tensor::randn(&[m, k], &mut rng, 1.0);
+    let w = Tensor::randn(&[k, n], &mut rng, 0.5);
+
+    let xb = rt.upload_f32(&x.data, &[m, k]).unwrap();
+    let wb = rt.upload_f32(&w.data, &[k, n]).unwrap();
+    let outs = exe.run(&[&xb, &wb]).unwrap();
+    assert_eq!(outs.len(), 1);
+    let got = rt.download_f32(&outs[0]).unwrap();
+    let want = x.matmul(&w);
+    let got = Tensor::from_vec(&[m, n], got);
+    assert!(
+        got.max_abs_diff(&want) < 1e-3,
+        "device/host mismatch: {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn kernel_adapter_matches_host_fused() {
+    let rt = runtime();
+    let exe = rt.load("tiny/kernel_adapter").unwrap();
+    let spec = &exe.spec;
+    let (m, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let n = spec.inputs[1].shape[1];
+    let r = spec.inputs[2].shape[1];
+
+    let mut rng = Rng::new(43);
+    let x = Tensor::randn(&[m, k], &mut rng, 1.0);
+    let w = Tensor::randn(&[k, n], &mut rng, 0.5);
+    let q = Tensor::randn(&[k, r], &mut rng, 0.5);
+    let rr = Tensor::randn(&[r, n], &mut rng, 0.5);
+    let lam: Vec<f32> = (0..r).map(|_| rng.normal() * 0.1).collect();
+
+    // Host reference: x@w + ((x@q)*lam)@rr
+    let xq = x.matmul(&q);
+    let mut scaled = xq.clone();
+    for i in 0..m {
+        for j in 0..r {
+            scaled.set(i, j, scaled.at(i, j) * lam[j]);
+        }
+    }
+    let mut want = x.matmul(&w);
+    want.add_assign(&scaled.matmul(&rr));
+
+    let args = [
+        rt.upload_f32(&x.data, &[m, k]).unwrap(),
+        rt.upload_f32(&w.data, &[k, n]).unwrap(),
+        rt.upload_f32(&q.data, &[k, r]).unwrap(),
+        rt.upload_f32(&rr.data, &[r, n]).unwrap(),
+        rt.upload_f32(&lam, &[r]).unwrap(),
+    ];
+    let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
+    let outs = exe.run(&refs).unwrap();
+    let got = Tensor::from_vec(&[m, n], rt.download_f32(&outs[0]).unwrap());
+    assert!(
+        got.max_abs_diff(&want) < 1e-2,
+        "device/host mismatch: {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+/// Build zero-ish host inputs for every non-state input of a step artifact.
+fn default_inputs(
+    rt: &Runtime,
+    spec: &qrlora::runtime::ArtifactSpec,
+    rng: &mut Rng,
+) -> Vec<(String, xla::PjRtBuffer)> {
+    let mut out = Vec::new();
+    for t in &spec.inputs {
+        if t.role == Role::State {
+            continue;
+        }
+        let buf = match t.dtype {
+            DType::I32 => {
+                let hi: i32 = if t.name.contains("input_ids") {
+                    64
+                } else {
+                    2
+                };
+                let v: Vec<i32> = (0..t.numel()).map(|_| rng.below(hi as usize) as i32).collect();
+                rt.upload_i32(&v, &t.shape).unwrap()
+            }
+            DType::F32 => {
+                let v: Vec<f32> = if t.name == "lr" {
+                    vec![1e-3]
+                } else if t.name == "t" {
+                    vec![1.0]
+                } else if t.name.ends_with("/mask")
+                    || t.name.contains("attn_mask")
+                    || t.name.contains("class_mask")
+                    || t.name.contains("example_w")
+                {
+                    vec![1.0; t.numel()]
+                } else {
+                    (0..t.numel()).map(|_| rng.normal() * 0.05).collect()
+                };
+                rt.upload_f32(&v, &t.shape).unwrap()
+            }
+        };
+        out.push((t.name.clone(), buf));
+    }
+    out
+}
+
+#[test]
+fn train_step_qrlora_runs_and_loss_improves() {
+    let rt = runtime();
+    let exe = rt.load("tiny/train_step_qrlora_cls").unwrap();
+    let spec = exe.spec.clone();
+    let layout = spec.layout().unwrap();
+
+    let mut rng = Rng::new(7);
+    // init state: small random params, zero moments+metrics.
+    let mut state = vec![0f32; layout.total];
+    for f in &layout.params {
+        for i in 0..f.numel() {
+            state[f.offset + i] = rng.normal() * 0.05;
+        }
+    }
+    let mut state_buf = rt.upload_f32(&state, &[layout.total]).unwrap();
+    let rest = default_inputs(&rt, &spec, &mut rng);
+    let metrics_exe = rt.load("tiny/metrics_qrlora_cls").unwrap();
+
+    let mut losses = Vec::new();
+    for step in 1..=8 {
+        let t_buf = rt.upload_scalar(step as f32).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        for t in &spec.inputs {
+            if t.role == Role::State {
+                args.push(&state_buf);
+            } else if t.name == "t" {
+                args.push(&t_buf);
+            } else {
+                args.push(&rest.iter().find(|(n, _)| n == &t.name).unwrap().1);
+            }
+        }
+        let mut outs = exe.run(&args).unwrap();
+        state_buf = outs.swap_remove(0);
+        let loss_field = layout.metric("loss").unwrap();
+        assert_eq!(loss_field.offset, 0, "loss must lead the metrics head");
+        let head = rt.read_metrics(&metrics_exe, &state_buf).unwrap();
+        assert!(head[0].is_finite(), "step {step}: loss {}", head[0]);
+        losses.push(head[0]);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not improve: {losses:?}"
+    );
+}
+
+#[test]
+fn metrics_slice_matches_full_download() {
+    // Pin the offset semantics of copy_raw_to_host_sync (bytes) against a
+    // full to_literal_sync download.
+    let rt = runtime();
+    let exe = rt.load("tiny/train_step_qrlora_cls").unwrap();
+    let spec = exe.spec.clone();
+    let layout = spec.layout().unwrap();
+
+    let mut rng = Rng::new(8);
+    let mut state = vec![0f32; layout.total];
+    for f in &layout.params {
+        for i in 0..f.numel() {
+            state[f.offset + i] = rng.normal() * 0.05;
+        }
+    }
+    let state_buf = rt.upload_f32(&state, &[layout.total]).unwrap();
+    let rest = default_inputs(&rt, &spec, &mut rng);
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+    for t in &spec.inputs {
+        if t.role == Role::State {
+            args.push(&state_buf);
+        } else {
+            args.push(&rest.iter().find(|(n, _)| n == &t.name).unwrap().1);
+        }
+    }
+    let outs = exe.run(&args).unwrap();
+    let full = rt.download_f32(&outs[0]).unwrap();
+    let len = layout.metrics_len;
+    let metrics_exe = rt.load("tiny/metrics_qrlora_cls").unwrap();
+    let slice = rt.read_metrics(&metrics_exe, &outs[0]).unwrap();
+    assert_eq!(slice.len(), len);
+    for (i, (a, b)) in slice.iter().zip(&full[..len]).enumerate() {
+        assert_eq!(a, b, "metrics head mismatch at {i}");
+    }
+}
+
+#[test]
+fn buffer_store_binds_and_absorbs() {
+    let rt = runtime();
+    let exe = rt.load("tiny/kernel_base").unwrap();
+    let spec = exe.spec.clone();
+
+    let mut store = qrlora::runtime::BufferStore::new();
+    let mut rng = Rng::new(44);
+    for t in &spec.inputs {
+        let v: Vec<f32> = (0..t.numel()).map(|_| rng.normal()).collect();
+        store.upload(&rt, t, &HostTensor::F32(v)).unwrap();
+    }
+    let args = store.bind(&spec).unwrap();
+    let outs = exe.run(&args).unwrap();
+    let metrics = store.absorb_outputs(&spec, outs);
+    assert_eq!(metrics.len(), 1); // 'y' is role=metric
+    assert_eq!(metrics[0].0.name, "y");
+}
+
+#[test]
+fn missing_input_is_reported_by_name() {
+    let rt = runtime();
+    let exe = rt.load("tiny/kernel_base").unwrap();
+    let store = qrlora::runtime::BufferStore::new();
+    let err = match store.bind(&exe.spec) {
+        Ok(_) => panic!("bind succeeded with empty store"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains('x'), "{err}");
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let rt = runtime();
+    for key in [
+        "tiny/pretrain_step",
+        "tiny/train_step_ft_cls",
+        "tiny/train_step_lora_cls",
+        "tiny/train_step_qrlora_cls",
+        "tiny/train_step_qrlora_reg",
+        "tiny/eval_fwd_qrlora_cls",
+        "small/train_step_qrlora_cls",
+    ] {
+        let a = rt.manifest.artifact(key).unwrap();
+        assert!(
+            artifacts_dir().join(&a.file).exists(),
+            "{key}: file missing"
+        );
+        assert!(!a.inputs.is_empty());
+        assert!(!a.outputs.is_empty());
+        if key.contains("step") {
+            let layout = a.layout().unwrap();
+            assert_eq!(layout.total, layout.metrics_len + 3 * layout.n_params);
+            assert_eq!(a.inputs[0].role, Role::State);
+            assert_eq!(a.inputs[0].shape, vec![layout.total]);
+        }
+    }
+}
+
+#[test]
+fn eval_accepts_train_state_layout() {
+    // The eval program's state input must have the same total length as the
+    // train program's — that's what lets the live training buffer be
+    // evaluated without repacking.
+    let rt = runtime();
+    for method in ["ft", "lora", "qrlora"] {
+        let tr = rt
+            .manifest
+            .artifact(&format!("tiny/train_step_{method}_cls"))
+            .unwrap();
+        let ev = rt
+            .manifest
+            .artifact(&format!("tiny/eval_fwd_{method}_cls"))
+            .unwrap();
+        assert_eq!(
+            tr.layout().unwrap().total,
+            ev.layout().unwrap().total,
+            "{method}: train/eval state layout drift"
+        );
+    }
+}

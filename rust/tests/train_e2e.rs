@@ -1,0 +1,207 @@
+//! End-to-end integration on the tiny preset: pretrain → warmup → adapter
+//! fine-tune → eval, across all three methods. Requires `make artifacts`.
+
+use std::path::Path;
+
+use qrlora::adapters::{Proj, Scope};
+use qrlora::data::{task, Lexicon, TaskData};
+use qrlora::linalg::RankRule;
+use qrlora::runtime::Runtime;
+use qrlora::training::{self, FinetuneJob, Method, Methods, TrainConfig};
+
+fn runtime() -> Runtime {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::new(&dir).expect("run `make artifacts` first")
+}
+
+fn tiny_cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        steps,
+        lr: 2e-3,
+        warmup_steps: 5,
+        train_examples: 512,
+        log_every: 10,
+    }
+}
+
+#[test]
+fn pretrain_reduces_mlm_loss() {
+    let rt = runtime();
+    let lex = Lexicon::new(512);
+    let (backbone, losses) = training::pretrain(&rt, "tiny", &lex, 30, 2e-3, 42).unwrap();
+    assert!(backbone.contains_key("emb/tok"));
+    assert!(backbone.contains_key("layer1/attn/wo"));
+    let first = losses.first().unwrap().1;
+    let last = losses.last().unwrap().1;
+    assert!(
+        last < first,
+        "mlm loss did not fall: {first} -> {last}"
+    );
+}
+
+#[test]
+fn full_pipeline_qrlora_beats_chance() {
+    let rt = runtime();
+    let lex = Lexicon::new(512);
+    let spec = task("sst2").unwrap();
+    let mut data = TaskData::generate(spec, &lex, 7);
+    data.train.truncate(512);
+    data.dev.truncate(256);
+
+    // 1. pretrain backbone
+    let (backbone, _) = training::pretrain(&rt, "tiny", &lex, 300, 1e-3, 1).unwrap();
+
+    // 2. warm-up full fine-tune (the paper warm-up FTs before adapters)
+    let mut wcfg = tiny_cfg(300);
+    wcfg.lr = 1e-3;
+    let (warm_bb, warm_head) =
+        training::warmup(&rt, "tiny", &data, &backbone, &wcfg, 2).unwrap();
+
+    // 3. QR-LoRA on the frozen warmed backbone
+    let preset = rt.manifest.preset("tiny").unwrap().clone();
+    let method = Methods::qr_lora(
+        &warm_bb,
+        &preset,
+        Scope::all_layers(&[Proj::Q, Proj::V]),
+        0.5,
+        RankRule::DiagRatio,
+    )
+    .unwrap();
+    if let Method::QrLora(ref set) = method {
+        assert!(set.trainable_params() > 0);
+        assert!(set.trainable_params() < 8 * 32 + 1); // ≤ slots × r_max
+    }
+    let job = FinetuneJob {
+        rt: &rt,
+        preset: "tiny",
+        task: &data,
+        lexicon: &lex,
+        backbone: &warm_bb,
+        head: Some(&warm_head),
+        config: tiny_cfg(150),
+        seed: 3,
+    };
+    let result = training::run_finetune(&job, &method).unwrap();
+    assert!(result.final_loss.is_finite());
+    assert!(
+        result.dev.accuracy > 0.62,
+        "qr-lora sst2 accuracy {:.3} not above chance",
+        result.dev.accuracy
+    );
+}
+
+#[test]
+fn all_methods_run_on_mnli_with_mismatched_eval() {
+    let rt = runtime();
+    let lex = Lexicon::new(512);
+    let spec = task("mnli").unwrap();
+    let mut data = TaskData::generate(spec, &lex, 11);
+    data.train.truncate(256);
+    data.dev.truncate(128);
+    data.dev_mm.truncate(128);
+
+    let (backbone, _) = training::pretrain(&rt, "tiny", &lex, 20, 2e-3, 4).unwrap();
+    let preset = rt.manifest.preset("tiny").unwrap().clone();
+
+    let methods = vec![
+        Method::FullFt,
+        Methods::lora(&backbone, &preset, 2.0, 5).unwrap(),
+        Methods::svd_lora(&backbone, &preset, 1, 2.0, 6).unwrap(),
+        Methods::qr_lora(
+            &backbone,
+            &preset,
+            Scope::last_layers(1, &[Proj::O]),
+            0.5,
+            RankRule::DiagRatio,
+        )
+        .unwrap(),
+    ];
+    let mut param_counts = Vec::new();
+    for method in &methods {
+        let job = FinetuneJob {
+            rt: &rt,
+            preset: "tiny",
+            task: &data,
+            lexicon: &lex,
+            backbone: &backbone,
+            head: None,
+            config: tiny_cfg(25),
+            seed: 8,
+        };
+        let result = training::run_finetune(&job, method).unwrap();
+        assert!(result.final_loss.is_finite(), "{}", result.method_label);
+        assert!(result.dev_mm.is_some(), "{}: no mismatched eval", result.method_label);
+        param_counts.push((result.method_label.clone(), result.trainable_params));
+    }
+    // Parameter ordering: QR-LoRA << LoRA/SVD-LoRA << FT (paper's headline).
+    let get = |label: &str| {
+        param_counts
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, c)| *c)
+            .unwrap()
+    };
+    assert!(get("QR-LoRA") < get("LoRA") / 2, "{param_counts:?}");
+    assert_eq!(get("LoRA"), get("SVD-LoRA"));
+    assert!(get("LoRA") < get("FT") / 10, "{param_counts:?}");
+}
+
+#[test]
+fn regression_task_trains_and_correlates() {
+    let rt = runtime();
+    let lex = Lexicon::new(512);
+    let spec = task("stsb").unwrap();
+    let mut data = TaskData::generate(spec, &lex, 13);
+    data.train.truncate(512);
+    data.dev.truncate(200);
+
+    let (backbone, _) = training::pretrain(&rt, "tiny", &lex, 200, 1e-3, 9).unwrap();
+    // Warm-up first (paper protocol), then adapter training.
+    let mut wcfg = tiny_cfg(250);
+    wcfg.lr = 1e-3;
+    let (warm_bb, warm_head) =
+        training::warmup(&rt, "tiny", &data, &backbone, &wcfg, 12).unwrap();
+    let preset = rt.manifest.preset("tiny").unwrap().clone();
+    let method = Methods::qr_lora(
+        &warm_bb,
+        &preset,
+        Scope::all_layers(&[Proj::Q, Proj::V]),
+        0.5,
+        RankRule::DiagRatio,
+    )
+    .unwrap();
+    let job = FinetuneJob {
+        rt: &rt,
+        preset: "tiny",
+        task: &data,
+        lexicon: &lex,
+        backbone: &warm_bb,
+        head: Some(&warm_head),
+        config: tiny_cfg(100),
+        seed: 10,
+    };
+    let result = training::run_finetune(&job, &method).unwrap();
+    assert!(result.final_loss.is_finite());
+    assert!(
+        result.dev.pearson > 0.2,
+        "stsb pearson {:.3} shows no learning",
+        result.dev.pearson
+    );
+}
+
+#[test]
+fn checkpoint_roundtrip_through_session() {
+    use qrlora::model::checkpoint;
+    let rt = runtime();
+    let lex = Lexicon::new(512);
+    let (backbone, _) = training::pretrain(&rt, "tiny", &lex, 5, 1e-3, 20).unwrap();
+    let dir = std::env::temp_dir().join("qrlora_e2e_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bb.qck");
+    checkpoint::save_params(&path, &backbone).unwrap();
+    let loaded = checkpoint::load_params(&path).unwrap();
+    assert_eq!(loaded.len(), backbone.len());
+    for (k, v) in &backbone {
+        assert_eq!(&loaded[k], v, "{k}");
+    }
+}
