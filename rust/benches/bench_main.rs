@@ -2,11 +2,18 @@
 //! self-contained timing harness with warmup, repetitions, and mean/σ
 //! reporting). Covers the performance-relevant paths of each layer:
 //!
+//! * P0  host matmul kernels (`Tensor::matmul` / `matmul_t` / `t_matmul`)
 //! * P1  pivoted-QR basis extraction (L3 host linalg) vs matrix size
 //! * P2  adapter merge (W + Q diag(λ) R)
-//! * P3  device kernel: base matmul vs fused adapter matmul (L1 overhead)
-//! * P4  train-step latency per method (end-to-end device step)
+//! * P3  backend kernel: base matmul vs fused adapter matmul
+//! * P4  train-step latency per method (end-to-end backend step)
 //! * P5  eval-forward latency + adapter hot-swap cost (serving path)
+//!
+//! Runs on whatever backend `QRLORA_BACKEND` selects (host by default, so
+//! the bench is hermetic), and writes one snapshot of every entry to
+//! `BENCH_<backend>.json`; the cross-commit trajectory lives in committed
+//! snapshots / the CI artifact, not in the file itself (each run rewrites
+//! it).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -14,40 +21,101 @@ use std::time::Instant;
 use qrlora::adapters::{factorize, Proj, Scope};
 use qrlora::data::{task, Batcher, Lexicon, TaskData};
 use qrlora::linalg::RankRule;
-use qrlora::runtime::{DType, Runtime};
+use qrlora::runtime::{create_backend, Backend, BackendChoice, Buffer, DType};
 use qrlora::tensor::Tensor;
 use qrlora::training::{Method, Methods, Session};
+use qrlora::util::json::Json;
 use qrlora::util::log::Stats;
 use qrlora::util::rng::Rng;
 
-fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
-    for _ in 0..warmup {
-        f();
+/// Collects (name, stats) rows and writes the BENCH json at the end.
+struct Recorder {
+    entries: Vec<(String, Stats, usize)>,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder { entries: Vec::new() }
     }
-    let mut stats = Stats::new();
-    for _ in 0..iters {
-        let t = Instant::now();
-        f();
-        stats.push(t.elapsed().as_secs_f64() * 1e3);
+
+    fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, mut f: F) {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut stats = Stats::new();
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            stats.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        println!(
+            "{name:<48} {:>9.3} ms  ±{:>7.3}  (n={iters}, min {:.3}, max {:.3})",
+            stats.mean(),
+            stats.std(),
+            stats.min,
+            stats.max
+        );
+        self.entries.push((name.to_string(), stats, iters));
     }
-    println!(
-        "{name:<48} {:>9.3} ms  ±{:>7.3}  (n={iters}, min {:.3}, max {:.3})",
-        stats.mean(),
-        stats.std(),
-        stats.min,
-        stats.max
-    );
+
+    fn write(&self, backend: &str) -> anyhow::Result<()> {
+        let rows: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(name, s, n)| {
+                Json::obj(vec![
+                    ("name", Json::str(name.clone())),
+                    ("mean_ms", Json::num(s.mean())),
+                    ("std_ms", Json::num(s.std())),
+                    ("min_ms", Json::num(s.min)),
+                    ("max_ms", Json::num(s.max)),
+                    ("iters", Json::num(*n as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("backend", Json::str(backend)),
+            ("entries", Json::Arr(rows)),
+        ]);
+        let path = format!("BENCH_{backend}.json");
+        std::fs::write(&path, doc.pretty())?;
+        println!("\nwrote {path} ({} entries)", self.entries.len());
+        Ok(())
+    }
 }
 
 fn main() -> anyhow::Result<()> {
     println!("qrlora bench harness — all times per call\n");
+    let mut rec = Recorder::new();
+
+    // ---- P0: host matmul kernels --------------------------------------
+    println!("# P0 host matmul (transposed-B blocked kernel)");
+    let mut rng = Rng::new(0);
+    for n in [64usize, 128, 256] {
+        let a = Tensor::randn(&[n, n], &mut rng, 1.0);
+        let b = Tensor::randn(&[n, n], &mut rng, 1.0);
+        rec.bench(&format!("matmul {n}x{n}x{n}"), 2, 10, || {
+            std::hint::black_box(a.matmul(&b).data[0]);
+        });
+    }
+    {
+        let a = Tensor::randn(&[256, 128], &mut rng, 1.0);
+        let b = Tensor::randn(&[256, 128], &mut rng, 1.0);
+        rec.bench("matmul_t 256x128 @ t(256x128)", 2, 10, || {
+            std::hint::black_box(a.matmul_t(&b).data[0]);
+        });
+        let c = Tensor::randn(&[256, 512], &mut rng, 1.0);
+        rec.bench("t_matmul t(256x128) @ 256x512", 2, 10, || {
+            std::hint::black_box(a.t_matmul(&c).data[0]);
+        });
+    }
 
     // ---- P1: pivoted QR scaling --------------------------------------
-    println!("# P1 pivoted-QR factorization (host)");
+    println!("\n# P1 pivoted-QR factorization (host)");
     let mut rng = Rng::new(1);
     for n in [64usize, 128, 256] {
         let w = Tensor::randn(&[n, n], &mut rng, 1.0);
-        bench(&format!("pivoted_qr {n}x{n}"), 1, 5, || {
+        rec.bench(&format!("pivoted_qr {n}x{n}"), 1, 5, || {
             let f = qrlora::linalg::pivoted_qr(&w);
             std::hint::black_box(f.diag());
         });
@@ -59,7 +127,7 @@ fn main() -> anyhow::Result<()> {
         let w = Tensor::randn(&[n, n], &mut rng, 1.0);
         let f = factorize(&w, 0.5, RankRule::DiagRatio, n / 2);
         let lam = vec![0.1f32; n / 2];
-        bench(&format!("merge {n}x{n} r={}", f.used), 1, 10, || {
+        rec.bench(&format!("merge {n}x{n} r={}", f.used), 1, 10, || {
             let mut qs = f.q.clone();
             for i in 0..qs.rows() {
                 for j in 0..qs.cols() {
@@ -72,16 +140,23 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    // ---- device-side benches -------------------------------------------
-    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
-    let preset_name = std::env::var("QRLORA_BENCH_PRESET").unwrap_or_else(|_| "small".into());
-    let preset = rt.manifest.preset(&preset_name)?.clone();
+    // ---- backend-side benches ------------------------------------------
+    let dir = std::env::var("QRLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = create_backend(BackendChoice::from_env()?, std::path::Path::new(&dir))?;
+    let rt: &dyn Backend = rt.as_ref();
+    // The host backend interprets every preset; PJRT benches default to the
+    // artifact set's experiment preset.
+    let default_preset = if rt.name() == "host" { "tiny" } else { "small" };
+    let preset_name =
+        std::env::var("QRLORA_BENCH_PRESET").unwrap_or_else(|_| default_preset.into());
+    let preset = rt.manifest().preset(&preset_name)?.clone();
+    println!("\nbackend: {} (preset {preset_name})", rt.name());
 
-    // P3: kernel microbench through PJRT.
-    println!("\n# P3 device kernel: base vs fused adapter matmul ({preset_name})");
+    // P3: kernel microbench through the backend.
+    println!("\n# P3 kernel: base vs fused adapter matmul ({preset_name})");
     for key in ["kernel_base", "kernel_adapter"] {
         let exe = rt.load(&format!("{preset_name}/{key}"))?;
-        let args: Vec<xla::PjRtBuffer> = exe
+        let args: Vec<Buffer> = exe
             .spec
             .inputs
             .iter()
@@ -90,9 +165,9 @@ fn main() -> anyhow::Result<()> {
                 DType::I32 => rt.upload_i32(&vec![0; t.numel()], &t.shape).unwrap(),
             })
             .collect();
-        let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
-        bench(&format!("{key} (fwd)"), 3, 20, || {
-            let outs = exe.run(&refs).unwrap();
+        let refs: Vec<&Buffer> = args.iter().collect();
+        rec.bench(&format!("{key} (fwd)"), 3, 20, || {
+            let outs = rt.execute(&exe, &refs).unwrap();
             std::hint::black_box(outs.len());
         });
     }
@@ -133,7 +208,7 @@ fn main() -> anyhow::Result<()> {
     ];
     for (name, method) in &methods {
         let mut session = Session::finetune(
-            &rt,
+            rt,
             &preset,
             method,
             qrlora::data::HeadKind::Cls,
@@ -141,10 +216,10 @@ fn main() -> anyhow::Result<()> {
             None,
             9,
         )?;
-        bench(&format!("train_step {name}"), 3, 15, || {
+        rec.bench(&format!("train_step {name}"), 3, 15, || {
             session.step(&batch, 2, 1e-3).unwrap();
         });
-        bench(&format!("metrics read {name}"), 2, 10, || {
+        rec.bench(&format!("metrics read {name}"), 2, 10, || {
             std::hint::black_box(session.last_loss().unwrap());
         });
     }
@@ -153,7 +228,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n# P5 serving path ({preset_name})");
     let method = &methods.iter().find(|(n, _)| *n == "QR-LoRA").unwrap().1;
     let mut session = Session::finetune(
-        &rt,
+        rt,
         &preset,
         method,
         qrlora::data::HeadKind::Cls,
@@ -161,11 +236,11 @@ fn main() -> anyhow::Result<()> {
         None,
         10,
     )?;
-    bench("eval_fwd QR-LoRA", 3, 15, || {
+    rec.bench("eval_fwd QR-LoRA", 3, 15, || {
         std::hint::black_box(session.forward(&batch, 2).unwrap());
     });
     let state = session.download_state()?;
-    bench("adapter hot-swap (upload state)", 2, 15, || {
+    rec.bench("adapter hot-swap (upload state)", 2, 15, || {
         session.upload_state(&state).unwrap();
     });
 
@@ -178,5 +253,6 @@ fn main() -> anyhow::Result<()> {
         (ft_params * 4) / (session.layout().total * 4).max(1)
     );
 
+    rec.write(rt.name())?;
     Ok(())
 }

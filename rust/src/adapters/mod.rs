@@ -395,6 +395,66 @@ mod tests {
     }
 
     #[test]
+    fn scope_layer_boundaries() {
+        // last_k = 0: `layer + 0 >= n_layers` never holds → nothing active.
+        let none = Scope::last_layers(0, &[Proj::Q, Proj::K, Proj::V, Proj::O]);
+        for layer in 0..4 {
+            for proj in QR_SLOTS {
+                assert!(!none.active(layer, 4, proj), "layer {layer} unexpectedly active");
+            }
+        }
+        // k > n_layers: every layer is within the "last k".
+        let all = Scope::last_layers(99, &[Proj::Q]);
+        for layer in 0..4 {
+            assert!(all.active(layer, 4, Proj::Q));
+        }
+        // k == n_layers is equivalent to all layers.
+        let exact = Scope::last_layers(4, &[Proj::V]);
+        for layer in 0..4 {
+            assert!(exact.active(layer, 4, Proj::V));
+        }
+        // boundary layer: with k=1 only the final layer is active.
+        let last1 = Scope::last_layers(1, &[Proj::O]);
+        assert!(!last1.active(2, 4, Proj::O));
+        assert!(last1.active(3, 4, Proj::O));
+    }
+
+    #[test]
+    fn scope_empty_set_yields_empty_adapter() {
+        let p = preset();
+        let bb = backbone(&p, 40);
+        let set = QrAdapterSet::build(
+            &bb,
+            &p,
+            Scope::last_layers(0, &[Proj::Q]),
+            0.5,
+            RankRule::DiagRatio,
+        )
+        .unwrap();
+        assert_eq!(set.factors.len(), 0);
+        assert_eq!(set.trainable_params(), 0);
+        // frozen inputs still cover every slot (all zeros)
+        let inputs = set.frozen_inputs();
+        assert_eq!(inputs.len(), p.n_layers * 4 * 3);
+        assert!(inputs.iter().all(|(_, v)| v.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn proj_parse_accepts_aliases_and_rejects_junk() {
+        assert_eq!(Proj::parse("q").unwrap(), Proj::Q);
+        assert_eq!(Proj::parse("wq").unwrap(), Proj::Q);
+        assert_eq!(Proj::parse("k").unwrap(), Proj::K);
+        assert_eq!(Proj::parse("wv").unwrap(), Proj::V);
+        assert_eq!(Proj::parse("o").unwrap(), Proj::O);
+        for bad in ["", "w", "wx", "Q ", "query", "wqv"] {
+            let err = Proj::parse(bad);
+            assert!(err.is_err(), "{bad:?} unexpectedly parsed");
+            let msg = format!("{}", err.err().unwrap());
+            assert!(msg.contains("unknown projection"), "{msg}");
+        }
+    }
+
+    #[test]
     fn factorize_reconstructs_with_full_mask() {
         let mut rng = Rng::new(5);
         let w = Tensor::randn(&[12, 12], &mut rng, 1.0);

@@ -8,14 +8,14 @@ use std::path::PathBuf;
 use super::ExpConfig;
 use crate::data::{task, Lexicon, TaskData};
 use crate::model::checkpoint;
-use crate::runtime::{Preset, Runtime};
+use crate::runtime::{create_backend, Backend, BackendChoice, Preset};
 use crate::tensor::Tensor;
 use crate::training::{self, TrainConfig};
 
 type Params = BTreeMap<String, Tensor>;
 
 pub struct Pipeline {
-    pub rt: &'static Runtime,
+    pub rt: &'static dyn Backend,
     pub preset: Preset,
     pub lexicon: Lexicon,
     cfg: ExpConfig,
@@ -25,29 +25,35 @@ pub struct Pipeline {
     data: BTreeMap<String, TaskData>,
 }
 
-/// The PJRT client is created once per thread and leaked — sessions borrow
-/// it for the process lifetime. (Runtime holds Rc caches, so it is
-/// deliberately thread-local; experiment driving is single-threaded.)
-fn global_runtime() -> anyhow::Result<&'static Runtime> {
+/// The backend is created once per thread and leaked — sessions borrow it
+/// for the process lifetime. (Backends hold `Rc` executable caches, so they
+/// are deliberately thread-local; experiment driving is single-threaded.)
+///
+/// Selection: `QRLORA_BACKEND` ∈ {auto, host, pjrt} (default auto: PJRT
+/// when compiled with the `pjrt` feature and `$QRLORA_ARTIFACTS/manifest.json`
+/// exists, else the hermetic host backend).
+fn global_backend() -> anyhow::Result<&'static dyn Backend> {
     thread_local! {
-        static RT: std::cell::OnceCell<&'static Runtime> = const { std::cell::OnceCell::new() };
+        static RT: std::cell::OnceCell<&'static dyn Backend> = const { std::cell::OnceCell::new() };
     }
     RT.with(|cell| {
         if let Some(rt) = cell.get() {
             return Ok(*rt);
         }
         let dir = std::env::var("QRLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        let rt: &'static Runtime =
-            Box::leak(Box::new(Runtime::new(std::path::Path::new(&dir))?));
-        let _ = cell.set(rt);
-        Ok(rt)
+        let choice = BackendChoice::from_env()?;
+        let bk = create_backend(choice, std::path::Path::new(&dir))?;
+        crate::debugln!("using {} backend", bk.name());
+        let bk: &'static dyn Backend = Box::leak(bk);
+        let _ = cell.set(bk);
+        Ok(bk)
     })
 }
 
 impl Pipeline {
     pub fn new(cfg: &ExpConfig) -> anyhow::Result<Pipeline> {
-        let rt = global_runtime()?;
-        let preset = rt.manifest.preset(&cfg.preset)?.clone();
+        let rt = global_backend()?;
+        let preset = rt.manifest().preset(&cfg.preset)?.clone();
         let lexicon = Lexicon::new(preset.vocab);
         Ok(Pipeline {
             rt,
@@ -77,8 +83,11 @@ impl Pipeline {
             return Ok(bb.clone());
         }
         let path = self.runs_dir.join(format!(
-            "backbone_{}_s{}_p{}.qck",
-            self.cfg.preset, self.cfg.seed, self.cfg.pretrain_steps
+            "backbone_{}_{}_s{}_p{}.qck",
+            self.rt.name(),
+            self.cfg.preset,
+            self.cfg.seed,
+            self.cfg.pretrain_steps
         ));
         let bb = if path.exists() {
             crate::info!("loading cached backbone {path:?}");
@@ -115,8 +124,12 @@ impl Pipeline {
             return Ok(w.clone());
         }
         let bb_path = self.runs_dir.join(format!(
-            "warm_{}_{}_s{}_w{}.qck",
-            self.cfg.preset, name, self.cfg.seed, self.cfg.warmup_steps
+            "warm_{}_{}_{}_s{}_w{}.qck",
+            self.rt.name(),
+            self.cfg.preset,
+            name,
+            self.cfg.seed,
+            self.cfg.warmup_steps
         ));
         let head_path = bb_path.with_extension("head.qck");
         let result = if bb_path.exists() && head_path.exists() {

@@ -8,8 +8,21 @@
 //! - Layer 1: Pallas kernels for the adapter-fused projections
 //!   (`python/compile/kernels/`), lowered into the same HLO.
 //!
-//! Python never runs on the training/serving path: the rust binary loads
-//! `artifacts/*.hlo.txt` through PJRT (`runtime`) and drives everything.
+//! Python never runs on the training/serving path: everything drives
+//! through the pluggable [`runtime::Backend`] trait.
+//!
+//! # Execution backends
+//!
+//! | backend | availability | manifest | math |
+//! |---------|--------------|----------|------|
+//! | `host`  | always       | built-in (`runtime::spec`) | pure Rust (`model::host`) |
+//! | `pjrt`  | cargo feature `pjrt` + `make artifacts` | `artifacts/manifest.json` | AOT HLO via PJRT |
+//!
+//! Select with `QRLORA_BACKEND` / `--backend` (`auto` prefers PJRT when
+//! available, else host). The host backend makes the full pipeline — and
+//! `cargo test -q` — run hermetically from a clean checkout; the PJRT path
+//! additionally requires the real `xla` bindings in place of the vendored
+//! API stub (`rust/vendor/xla-stub`).
 
 pub mod adapters;
 pub mod data;

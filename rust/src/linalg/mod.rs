@@ -115,4 +115,41 @@ mod tests {
         assert_eq!(select_rank(&[0.0, 0.0], 0.9, RankRule::DiagRatio), 1);
         assert_eq!(select_rank(&[0.0, 0.0], 0.9, RankRule::EnergyCumulative), 1);
     }
+
+    #[test]
+    fn diag_ratio_extremes() {
+        let diag: Vec<f32> = (1..=10).rev().map(|x| x as f32).collect(); // 10..1
+        // τ = 0: every direction with |R_ii| > 0 is retained.
+        assert_eq!(select_rank(&diag, 0.0, RankRule::DiagRatio), 10);
+        // τ = 1: strict inequality |R_ii| > |R₀₀| retains none → clamped to 1.
+        assert_eq!(select_rank(&diag, 1.0, RankRule::DiagRatio), 1);
+        // τ = 0 with a zero tail only keeps the nonzero prefix.
+        let with_tail = [4.0f32, 2.0, 0.0, 0.0];
+        assert_eq!(select_rank(&with_tail, 0.0, RankRule::DiagRatio), 2);
+    }
+
+    #[test]
+    fn energy_extremes() {
+        let diag: Vec<f32> = vec![2.0; 8]; // equal energies
+        // τ = 0: first direction already reaches the (trivial) target.
+        assert_eq!(select_rank(&diag, 0.0, RankRule::EnergyCumulative), 1);
+        // τ = 1: all directions needed to reach full energy.
+        assert_eq!(select_rank(&diag, 1.0, RankRule::EnergyCumulative), 8);
+        // zero tail: full energy reached before the tail.
+        let with_tail = [3.0f32, 4.0, 0.0, 0.0];
+        assert_eq!(select_rank(&with_tail, 1.0, RankRule::EnergyCumulative), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "tau must be in [0,1]")]
+    fn tau_out_of_range_panics() {
+        select_rank(&[1.0], 1.5, RankRule::DiagRatio);
+    }
+
+    #[test]
+    fn single_direction_always_retained() {
+        assert_eq!(select_rank(&[5.0], 0.0, RankRule::DiagRatio), 1);
+        assert_eq!(select_rank(&[5.0], 1.0, RankRule::DiagRatio), 1);
+        assert_eq!(select_rank(&[5.0], 1.0, RankRule::EnergyCumulative), 1);
+    }
 }

@@ -1,14 +1,20 @@
 //! qrlora — QR-LoRA coordinator CLI.
 //!
-//! The leader binary: loads AOT artifacts, drives pretraining / warm-up /
-//! adapter fine-tuning, regenerates the paper's tables and figure, inspects
-//! rank selection, and runs the multi-adapter serving demo. Python never
-//! runs here — only `make artifacts` (build time) uses it.
+//! The leader binary: drives pretraining / warm-up / adapter fine-tuning,
+//! regenerates the paper's tables and figure, inspects rank selection, and
+//! runs the multi-adapter serving demo. Python never runs here — only
+//! `make artifacts` (build time) uses it.
+//!
+//! Execution backend: `--backend host|pjrt|auto` (or `QRLORA_BACKEND`).
+//! The default `auto` uses PJRT artifacts when the binary was built with
+//! `--features pjrt` and `$QRLORA_ARTIFACTS/manifest.json` exists, and the
+//! hermetic pure-Rust host backend otherwise.
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::ALL_TASKS;
 use qrlora::experiments::{self, ExpConfig, Pipeline};
 use qrlora::linalg::{select_rank, RankRule};
+use qrlora::runtime::Backend;
 use qrlora::training::{self, FinetuneJob, Method, Methods};
 use qrlora::util::cli::{render_help, Args, Command};
 use qrlora::{errorln, info};
@@ -40,6 +46,15 @@ fn main() {
         let _ = qrlora::util::log::set_level_str(level);
     } else if args.has("verbose") {
         qrlora::util::log::set_level(qrlora::util::log::Level::Debug);
+    }
+    if let Some(backend) = args.get("backend") {
+        // Validate eagerly, then hand selection to the (thread-local)
+        // backend factory via the environment.
+        if let Err(e) = qrlora::runtime::BackendChoice::parse(backend) {
+            errorln!("{e:#}");
+            std::process::exit(2);
+        }
+        std::env::set_var("QRLORA_BACKEND", backend);
     }
 
     let result = match cmd.as_str() {
@@ -78,16 +93,18 @@ fn exp_config(args: &Args) -> anyhow::Result<ExpConfig> {
 
 fn cmd_info(_args: &Args) -> anyhow::Result<()> {
     let dir = std::env::var("QRLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-    let rt = qrlora::runtime::Runtime::new(std::path::Path::new(&dir))?;
+    let choice = qrlora::runtime::BackendChoice::from_env()?;
+    let rt = qrlora::runtime::create_backend(choice, std::path::Path::new(&dir))?;
+    println!("backend: {}", rt.name());
     println!("presets:");
-    for (name, p) in &rt.manifest.presets {
+    for (name, p) in &rt.manifest().presets {
         println!(
             "  {name}: d={} layers={} heads={} ffn={} vocab={} seq={} batch={} r_max={}",
             p.d_model, p.n_layers, p.n_heads, p.d_ff, p.vocab, p.max_seq, p.batch, p.r_max
         );
     }
-    println!("artifacts ({}):", rt.manifest.artifacts.len());
-    for (key, a) in &rt.manifest.artifacts {
+    println!("artifacts ({}):", rt.manifest().artifacts.len());
+    for (key, a) in &rt.manifest().artifacts {
         println!(
             "  {key}: {} inputs, {} outputs{}",
             a.inputs.len(),

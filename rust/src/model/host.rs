@@ -1,0 +1,1236 @@
+//! Pure-Rust reference model: forward / backward / Adam for the encoder the
+//! AOT graphs implement, operating on `tensor::Tensor`.
+//!
+//! This is the numeric core of `runtime::HostBackend`. It mirrors
+//! `python/compile/model.py` (and the fused-projection reference in
+//! `python/compile/kernels/ref.py`) operation for operation:
+//!
+//! * embeddings (token + position + type) → LayerNorm
+//! * pre-LN residual blocks: multi-head attention with the QR-fused adapter
+//!   projection `x·W₀ + (x·Q_r)·diag(λ·mask)·R̃_r` (or the LoRA form
+//!   `x·W₀ + (x·A)·diag(α/r)·B`), then a GELU FFN
+//! * pooled-CLS classification/regression heads and the weight-tied MLM head
+//! * in-graph Adam with global-norm gradient clipping over the flat
+//!   state-vector protocol `[ metrics | params | adam_m | adam_v ]`
+//!
+//! The backward pass is hand-derived; its gradients were validated against
+//! `jax.grad` of `model.py` for every method × head (and the packed Adam
+//! state update) to ~1e-7 relative error before being ported here.
+
+use std::collections::BTreeMap;
+
+use crate::data::HeadKind;
+use crate::runtime::{Preset, StateLayout};
+use crate::tensor::Tensor;
+
+pub const NEG_INF: f32 = -1e9;
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.999;
+const ADAM_EPS: f32 = 1e-8;
+const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+
+/// Which adapter structure the graph carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    Ft,
+    Lora,
+    QrLora,
+}
+
+impl MethodKind {
+    pub fn parse(s: &str) -> anyhow::Result<MethodKind> {
+        Ok(match s {
+            "ft" => MethodKind::Ft,
+            "lora" => MethodKind::Lora,
+            "qrlora" => MethodKind::QrLora,
+            _ => anyhow::bail!("unknown method {s:?}"),
+        })
+    }
+}
+
+/// Borrowed task batch (flat row-major host tensors).
+pub struct TaskBatchRef<'a> {
+    pub input_ids: &'a [i32],
+    pub type_ids: &'a [i32],
+    pub attn_mask: &'a [f32],
+    /// Classification labels (cls head).
+    pub labels_i32: &'a [i32],
+    /// Regression targets (reg head).
+    pub labels_f32: &'a [f32],
+    pub class_mask: &'a [f32],
+    pub example_w: &'a [f32],
+}
+
+/// Borrowed MLM batch.
+pub struct MlmBatchRef<'a> {
+    pub input_ids: &'a [i32],
+    pub type_ids: &'a [i32],
+    pub attn_mask: &'a [f32],
+    /// -100 = not predicted.
+    pub mlm_labels: &'a [i32],
+}
+
+/// Trainable + frozen parameters looked up by graph name.
+struct ParamView<'a> {
+    train: &'a BTreeMap<String, Tensor>,
+    frozen: &'a BTreeMap<String, Tensor>,
+}
+
+impl ParamView<'_> {
+    fn get(&self, name: &str) -> &Tensor {
+        self.train
+            .get(name)
+            .or_else(|| self.frozen.get(name))
+            .unwrap_or_else(|| panic!("host model: missing parameter {name:?}"))
+    }
+
+    fn vec(&self, name: &str) -> &[f32] {
+        &self.get(name).data
+    }
+}
+
+/// Gradient accumulator keyed by parameter name.
+#[derive(Default)]
+struct Grads {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl Grads {
+    fn add(&mut self, name: &str, t: Tensor) {
+        match self.map.get_mut(name) {
+            Some(g) => g.add_assign(&t),
+            None => {
+                self.map.insert(name.to_string(), t);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitive ops (with caches for the backward pass).
+// ---------------------------------------------------------------------------
+
+struct LnCache {
+    xhat: Tensor,
+    rstd: Vec<f32>,
+}
+
+fn ln_fwd(x: &Tensor, g: &[f32], b: &[f32]) -> (Tensor, LnCache) {
+    let (rows, d) = (x.rows(), x.cols());
+    let mut y = Tensor::zeros(&[rows, d]);
+    let mut xhat = Tensor::zeros(&[rows, d]);
+    let mut rstd = vec![0f32; rows];
+    for i in 0..rows {
+        let xi = x.row(i);
+        let mu = xi.iter().sum::<f32>() / d as f32;
+        let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + 1e-5).sqrt();
+        rstd[i] = rs;
+        for j in 0..d {
+            let h = (xi[j] - mu) * rs;
+            xhat.data[i * d + j] = h;
+            y.data[i * d + j] = h * g[j] + b[j];
+        }
+    }
+    (y, LnCache { xhat, rstd })
+}
+
+fn ln_bwd(dy: &Tensor, g: &[f32], c: &LnCache) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (rows, d) = (dy.rows(), dy.cols());
+    let mut dx = Tensor::zeros(&[rows, d]);
+    let mut dg = vec![0f32; d];
+    let mut db = vec![0f32; d];
+    for i in 0..rows {
+        let dyr = dy.row(i);
+        let xh = c.xhat.row(i);
+        let mut m1 = 0f32;
+        let mut m2 = 0f32;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            m1 += dxh;
+            m2 += dxh * xh[j];
+            dg[j] += dyr[j] * xh[j];
+            db[j] += dyr[j];
+        }
+        m1 /= d as f32;
+        m2 /= d as f32;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dx.data[i * d + j] = c.rstd[i] * (dxh - m1 - xh[j] * m2);
+        }
+    }
+    (dx, dg, db)
+}
+
+/// tanh-approximate GELU (JAX's default). Returns (y, tanh cache).
+fn gelu_fwd(x: &Tensor) -> (Tensor, Tensor) {
+    let mut y = x.clone();
+    let mut t = x.clone();
+    for i in 0..x.data.len() {
+        let v = x.data[i];
+        let inner = SQRT_2_OVER_PI * (v + 0.044715 * v * v * v);
+        let th = inner.tanh();
+        t.data[i] = th;
+        y.data[i] = 0.5 * v * (1.0 + th);
+    }
+    (y, t)
+}
+
+fn gelu_bwd(dy: &Tensor, x_pre: &Tensor, t: &Tensor) -> Tensor {
+    let mut dx = dy.clone();
+    for i in 0..dy.data.len() {
+        let v = x_pre.data[i];
+        let th = t.data[i];
+        let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * v * v);
+        dx.data[i] = dy.data[i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * du);
+    }
+    dx
+}
+
+/// out[i, j] = t[i, j] * coeff[j]
+fn scale_cols(t: &Tensor, coeff: &[f32]) -> Tensor {
+    let (rows, cols) = (t.rows(), t.cols());
+    let mut out = t.clone();
+    for i in 0..rows {
+        for j in 0..cols {
+            out.data[i * cols + j] *= coeff[j];
+        }
+    }
+    out
+}
+
+fn col_sum(t: &Tensor) -> Vec<f32> {
+    let (rows, cols) = (t.rows(), t.cols());
+    let mut out = vec![0f32; cols];
+    for i in 0..rows {
+        let r = t.row(i);
+        for j in 0..cols {
+            out[j] += r[j];
+        }
+    }
+    out
+}
+
+fn add_bias_rows(t: &mut Tensor, bias: &[f32]) {
+    let (rows, cols) = (t.rows(), t.cols());
+    for i in 0..rows {
+        let r = &mut t.data[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            r[j] += bias[j];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adapted projection.
+// ---------------------------------------------------------------------------
+
+struct ProjCache {
+    /// x·Q (QR-LoRA) or x·A (LoRA) when the slot is adapted.
+    xq: Option<Tensor>,
+}
+
+fn adapted(method: MethodKind, pj: &str) -> bool {
+    match method {
+        MethodKind::Ft => false,
+        MethodKind::QrLora => true, // all of wq/wk/wv/wo carry slots
+        MethodKind::Lora => pj == "wq" || pj == "wv",
+    }
+}
+
+/// Forward: y = x·W₀ (+ adapter delta) + bias.
+fn proj_fwd(
+    pv: &ParamView,
+    method: MethodKind,
+    layer: usize,
+    pj: &str,
+    x: &Tensor,
+) -> (Tensor, ProjCache) {
+    let w0 = pv.get(&format!("layer{layer}/attn/{pj}"));
+    let bias = pv.vec(&format!("layer{layer}/attn/b{}", &pj[1..2]));
+    let mut y = x.matmul(w0);
+    let mut cache = ProjCache { xq: None };
+    if adapted(method, pj) {
+        match method {
+            MethodKind::QrLora => {
+                let base = format!("qr/layer{layer}/{pj}");
+                let q = pv.get(&format!("{base}/Q"));
+                let r = pv.get(&format!("{base}/R"));
+                let lam = pv.vec(&format!("{base}/lam"));
+                let mask = pv.vec(&format!("{base}/mask"));
+                let coeff: Vec<f32> = lam.iter().zip(mask).map(|(l, m)| l * m).collect();
+                let xq = x.matmul(q);
+                y.add_assign(&scale_cols(&xq, &coeff).matmul(r));
+                cache.xq = Some(xq);
+            }
+            MethodKind::Lora => {
+                let base = format!("lora/layer{layer}/{pj}");
+                let a = pv.get(&format!("{base}/A"));
+                let b = pv.get(&format!("{base}/B"));
+                let scale = pv.vec(&format!("{base}/scale"));
+                let xa = x.matmul(a);
+                y.add_assign(&scale_cols(&xa, scale).matmul(b));
+                cache.xq = Some(xa);
+            }
+            MethodKind::Ft => unreachable!(),
+        }
+    }
+    add_bias_rows(&mut y, bias);
+    (y, cache)
+}
+
+/// Backward: accumulates adapter (and, when `train_backbone`, W₀/bias)
+/// gradients; returns dx.
+#[allow(clippy::too_many_arguments)]
+fn proj_bwd(
+    pv: &ParamView,
+    grads: &mut Grads,
+    method: MethodKind,
+    layer: usize,
+    pj: &str,
+    x: &Tensor,
+    dy: &Tensor,
+    cache: &ProjCache,
+    train_backbone: bool,
+) -> Tensor {
+    let wname = format!("layer{layer}/attn/{pj}");
+    let w0 = pv.get(&wname);
+    let mut dx = dy.matmul_t(w0); // dy · W₀ᵀ
+    if train_backbone {
+        grads.add(&wname, x.t_matmul(dy)); // xᵀ · dy
+        let bname = format!("layer{layer}/attn/b{}", &pj[1..2]);
+        let db = col_sum(dy);
+        grads.add(&bname, Tensor::from_vec(&[db.len()], db));
+    }
+    if adapted(method, pj) {
+        let xq = cache.xq.as_ref().expect("adapter cache");
+        match method {
+            MethodKind::QrLora => {
+                let base = format!("qr/layer{layer}/{pj}");
+                let q = pv.get(&format!("{base}/Q"));
+                let r = pv.get(&format!("{base}/R"));
+                let lam = pv.vec(&format!("{base}/lam"));
+                let mask = pv.vec(&format!("{base}/mask"));
+                let dyr = dy.matmul_t(r); // dy · R̃ᵀ → (rows, r_max)
+                // dλ_i = mask_i · Σ_rows (x·Q)[·,i] (dy·R̃ᵀ)[·,i]
+                let rmax = lam.len();
+                let mut dlam = vec![0f32; rmax];
+                for row in 0..xq.rows() {
+                    let a = xq.row(row);
+                    let b = dyr.row(row);
+                    for i in 0..rmax {
+                        dlam[i] += a[i] * b[i];
+                    }
+                }
+                for i in 0..rmax {
+                    dlam[i] *= mask[i];
+                }
+                grads.add(&format!("{base}/lam"), Tensor::from_vec(&[rmax], dlam));
+                let coeff: Vec<f32> = lam.iter().zip(mask).map(|(l, m)| l * m).collect();
+                dx.add_assign(&scale_cols(&dyr, &coeff).matmul_t(q));
+            }
+            MethodKind::Lora => {
+                let base = format!("lora/layer{layer}/{pj}");
+                let a = pv.get(&format!("{base}/A"));
+                let b = pv.get(&format!("{base}/B"));
+                let scale = pv.vec(&format!("{base}/scale"));
+                let dyb = dy.matmul_t(b); // dy · Bᵀ → (rows, r)
+                let dyb_s = scale_cols(&dyb, scale);
+                grads.add(&format!("{base}/A"), x.t_matmul(&dyb_s));
+                grads.add(&format!("{base}/B"), scale_cols(xq, scale).t_matmul(dy));
+                dx.add_assign(&dyb_s.matmul_t(a));
+            }
+            MethodKind::Ft => unreachable!(),
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Encoder.
+// ---------------------------------------------------------------------------
+
+struct LayerCache {
+    ln1: LnCache,
+    x_ln1: Tensor,
+    pq: ProjCache,
+    pk: ProjCache,
+    pv_: ProjCache,
+    po: ProjCache,
+    q: Tensor,
+    k: Tensor,
+    v: Tensor,
+    /// Softmax probabilities, rows = (b·nh + h)·S + i, cols = S.
+    probs: Tensor,
+    ctx: Tensor,
+    ln2: LnCache,
+    x_ln2: Tensor,
+    f1_pre: Tensor,
+    gelu_t: Tensor,
+    f1: Tensor,
+}
+
+struct EncCache {
+    emb_ln: LnCache,
+    layers: Vec<LayerCache>,
+}
+
+/// Multi-head attention forward on flat (B·S, d) projections.
+fn attention_fwd(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    amask_add: &[f32], // (B·S,) additive mask per key position
+    b: usize,
+    s: usize,
+    nh: usize,
+) -> (Tensor, Tensor) {
+    let d = q.cols();
+    let dh = d / nh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut probs = Tensor::zeros(&[b * nh * s, s]);
+    let mut ctx = Tensor::zeros(&[b * s, d]);
+    for bb in 0..b {
+        for h in 0..nh {
+            for i in 0..s {
+                let prow = (bb * nh + h) * s + i;
+                let qrow = &q.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
+                // scores + additive mask
+                let mut maxv = f32::NEG_INFINITY;
+                for j in 0..s {
+                    let krow = &k.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                    let mut sc = 0f32;
+                    for e in 0..dh {
+                        sc += qrow[e] * krow[e];
+                    }
+                    let val = sc * scale + amask_add[bb * s + j];
+                    probs.data[prow * s + j] = val;
+                    maxv = maxv.max(val);
+                }
+                // softmax row
+                let mut denom = 0f32;
+                for j in 0..s {
+                    let e = (probs.data[prow * s + j] - maxv).exp();
+                    probs.data[prow * s + j] = e;
+                    denom += e;
+                }
+                for j in 0..s {
+                    probs.data[prow * s + j] /= denom;
+                }
+                // ctx
+                let crow = &mut ctx.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
+                for j in 0..s {
+                    let p = probs.data[prow * s + j];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                    for e in 0..dh {
+                        crow[e] += p * vrow[e];
+                    }
+                }
+            }
+        }
+    }
+    (probs, ctx)
+}
+
+/// Backward of [`attention_fwd`] → (dq, dk, dv).
+fn attention_bwd(
+    dctx: &Tensor,
+    probs: &Tensor,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    b: usize,
+    s: usize,
+    nh: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let d = q.cols();
+    let dh = d / nh;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = Tensor::zeros(&[b * s, d]);
+    let mut dk = Tensor::zeros(&[b * s, d]);
+    let mut dv = Tensor::zeros(&[b * s, d]);
+    let mut dprobs = vec![0f32; s];
+    for bb in 0..b {
+        for h in 0..nh {
+            for i in 0..s {
+                let prow = (bb * nh + h) * s + i;
+                let dcrow = &dctx.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
+                // dprobs_j = dctx · v_j ; dv_j += p_j dctx
+                for (j, dp) in dprobs.iter_mut().enumerate().take(s) {
+                    let vrow = &v.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                    let mut acc = 0f32;
+                    for e in 0..dh {
+                        acc += dcrow[e] * vrow[e];
+                    }
+                    *dp = acc;
+                    let p = probs.data[prow * s + j];
+                    if p != 0.0 {
+                        let dvrow = &mut dv.data
+                            [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                        for e in 0..dh {
+                            dvrow[e] += p * dcrow[e];
+                        }
+                    }
+                }
+                // softmax backward: ds = p ⊙ (dp − Σ dp·p), then ·scale
+                let mut inner = 0f32;
+                for j in 0..s {
+                    inner += dprobs[j] * probs.data[prow * s + j];
+                }
+                for j in 0..s {
+                    let ds = probs.data[prow * s + j] * (dprobs[j] - inner) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let krow = &k.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                    let qrow = &q.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
+                    let dqrow =
+                        &mut dq.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
+                    for e in 0..dh {
+                        dqrow[e] += ds * krow[e];
+                    }
+                    let dkrow =
+                        &mut dk.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                    for e in 0..dh {
+                        dkrow[e] += ds * qrow[e];
+                    }
+                }
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+fn encode_fwd(
+    pv: &ParamView,
+    p: &Preset,
+    method: MethodKind,
+    ids: &[i32],
+    type_ids: &[i32],
+    attn_mask: &[f32],
+) -> (Tensor, EncCache) {
+    let (b, s, d, nh) = (p.batch, p.max_seq, p.d_model, p.n_heads);
+    let tok = pv.get("emb/tok");
+    let pos = pv.get("emb/pos");
+    let typ = pv.get("emb/type");
+    let mut h = Tensor::zeros(&[b * s, d]);
+    for bb in 0..b {
+        for ss in 0..s {
+            let row = bb * s + ss;
+            let t = ids[row] as usize;
+            let ty = type_ids[row] as usize;
+            let out = &mut h.data[row * d..(row + 1) * d];
+            let tr = &tok.data[t * d..(t + 1) * d];
+            let pr = &pos.data[ss * d..(ss + 1) * d];
+            let yr = &typ.data[ty * d..(ty + 1) * d];
+            for e in 0..d {
+                out[e] = tr[e] + pr[e] + yr[e];
+            }
+        }
+    }
+    let (mut h, emb_ln) = {
+        let (y, c) = ln_fwd(&h, pv.vec("emb/ln_g"), pv.vec("emb/ln_b"));
+        (y, c)
+    };
+
+    let amask_add: Vec<f32> = attn_mask.iter().map(|&m| (1.0 - m) * NEG_INF).collect();
+
+    let mut layers = Vec::with_capacity(p.n_layers);
+    for l in 0..p.n_layers {
+        let (x_ln1, ln1) = ln_fwd(
+            &h,
+            pv.vec(&format!("layer{l}/ln1_g")),
+            pv.vec(&format!("layer{l}/ln1_b")),
+        );
+        let (q, pq) = proj_fwd(pv, method, l, "wq", &x_ln1);
+        let (k, pk) = proj_fwd(pv, method, l, "wk", &x_ln1);
+        let (v, pv_c) = proj_fwd(pv, method, l, "wv", &x_ln1);
+        let (probs, ctx) = attention_fwd(&q, &k, &v, &amask_add, b, s, nh);
+        let (o, po) = proj_fwd(pv, method, l, "wo", &ctx);
+        h.add_assign(&o);
+
+        let (x_ln2, ln2) = ln_fwd(
+            &h,
+            pv.vec(&format!("layer{l}/ln2_g")),
+            pv.vec(&format!("layer{l}/ln2_b")),
+        );
+        let mut f1_pre = x_ln2.matmul(pv.get(&format!("layer{l}/ffn/w1")));
+        add_bias_rows(&mut f1_pre, pv.vec(&format!("layer{l}/ffn/b1")));
+        let (f1, gelu_t) = gelu_fwd(&f1_pre);
+        let mut f2 = f1.matmul(pv.get(&format!("layer{l}/ffn/w2")));
+        add_bias_rows(&mut f2, pv.vec(&format!("layer{l}/ffn/b2")));
+        h.add_assign(&f2);
+
+        layers.push(LayerCache {
+            ln1,
+            x_ln1,
+            pq,
+            pk,
+            pv_: pv_c,
+            po,
+            q,
+            k,
+            v,
+            probs,
+            ctx,
+            ln2,
+            x_ln2,
+            f1_pre,
+            gelu_t,
+            f1,
+        });
+    }
+    (h, EncCache { emb_ln, layers })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn encode_bwd(
+    pv: &ParamView,
+    grads: &mut Grads,
+    p: &Preset,
+    method: MethodKind,
+    mut dh: Tensor,
+    cache: &EncCache,
+    ids: &[i32],
+    type_ids: &[i32],
+    train_backbone: bool,
+) {
+    let (b, s, d, nh) = (p.batch, p.max_seq, p.d_model, p.n_heads);
+    for l in (0..p.n_layers).rev() {
+        let c = &cache.layers[l];
+        // FFN branch (residual: dh reaches both f2 and h_mid).
+        let df2 = &dh;
+        let w2 = pv.get(&format!("layer{l}/ffn/w2"));
+        let df1 = df2.matmul_t(w2);
+        if train_backbone {
+            grads.add(&format!("layer{l}/ffn/w2"), c.f1.t_matmul(df2));
+            let db2 = col_sum(df2);
+            grads.add(&format!("layer{l}/ffn/b2"), Tensor::from_vec(&[db2.len()], db2));
+        }
+        let df1_pre = gelu_bwd(&df1, &c.f1_pre, &c.gelu_t);
+        let w1 = pv.get(&format!("layer{l}/ffn/w1"));
+        let dx2 = df1_pre.matmul_t(w1);
+        if train_backbone {
+            grads.add(&format!("layer{l}/ffn/w1"), c.x_ln2.t_matmul(&df1_pre));
+            let db1 = col_sum(&df1_pre);
+            grads.add(&format!("layer{l}/ffn/b1"), Tensor::from_vec(&[db1.len()], db1));
+        }
+        let (dmid, dg2, db2) = ln_bwd(&dx2, pv.vec(&format!("layer{l}/ln2_g")), &c.ln2);
+        if train_backbone {
+            grads.add(&format!("layer{l}/ln2_g"), Tensor::from_vec(&[dg2.len()], dg2));
+            grads.add(&format!("layer{l}/ln2_b"), Tensor::from_vec(&[db2.len()], db2));
+        }
+        dh.add_assign(&dmid);
+
+        // Attention branch (residual at h_mid: dh reaches o and h_in).
+        let dctx = proj_bwd(pv, grads, method, l, "wo", &c.ctx, &dh, &c.po, train_backbone);
+        let (dq, dk, dv) = attention_bwd(&dctx, &c.probs, &c.q, &c.k, &c.v, b, s, nh);
+        let mut dx1 = proj_bwd(pv, grads, method, l, "wq", &c.x_ln1, &dq, &c.pq, train_backbone);
+        let dxk = proj_bwd(pv, grads, method, l, "wk", &c.x_ln1, &dk, &c.pk, train_backbone);
+        dx1.add_assign(&dxk);
+        let dxv = proj_bwd(pv, grads, method, l, "wv", &c.x_ln1, &dv, &c.pv_, train_backbone);
+        dx1.add_assign(&dxv);
+        let (dhin, dg1, db1) = ln_bwd(&dx1, pv.vec(&format!("layer{l}/ln1_g")), &c.ln1);
+        if train_backbone {
+            grads.add(&format!("layer{l}/ln1_g"), Tensor::from_vec(&[dg1.len()], dg1));
+            grads.add(&format!("layer{l}/ln1_b"), Tensor::from_vec(&[db1.len()], db1));
+        }
+        dh.add_assign(&dhin);
+    }
+
+    let (demb, dg, db) = ln_bwd(&dh, pv.vec("emb/ln_g"), &cache.emb_ln);
+    if train_backbone {
+        grads.add("emb/ln_g", Tensor::from_vec(&[dg.len()], dg));
+        grads.add("emb/ln_b", Tensor::from_vec(&[db.len()], db));
+        let tok = pv.get("emb/tok");
+        let pos = pv.get("emb/pos");
+        let typ = pv.get("emb/type");
+        let mut dtok = Tensor::zeros(&tok.shape);
+        let mut dpos = Tensor::zeros(&pos.shape);
+        let mut dtyp = Tensor::zeros(&typ.shape);
+        for bb in 0..b {
+            for ss in 0..s {
+                let row = bb * s + ss;
+                let src = &demb.data[row * d..(row + 1) * d];
+                let t = ids[row] as usize;
+                let ty = type_ids[row] as usize;
+                for e in 0..d {
+                    dtok.data[t * d + e] += src[e];
+                    dpos.data[ss * d + e] += src[e];
+                    dtyp.data[ty * d + e] += src[e];
+                }
+            }
+        }
+        grads.add("emb/tok", dtok);
+        grads.add("emb/pos", dpos);
+        grads.add("emb/type", dtyp);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Heads + losses.
+// ---------------------------------------------------------------------------
+
+/// Row-wise softmax in place.
+fn softmax_rows(t: &mut Tensor) {
+    let (rows, cols) = (t.rows(), t.cols());
+    for i in 0..rows {
+        let r = &mut t.data[i * cols..(i + 1) * cols];
+        let mut m = f32::NEG_INFINITY;
+        for &v in r.iter() {
+            m = m.max(v);
+        }
+        let mut denom = 0f32;
+        for v in r.iter_mut() {
+            *v = (*v - m).exp();
+            denom += *v;
+        }
+        for v in r.iter_mut() {
+            *v /= denom;
+        }
+    }
+}
+
+/// Task-head forward: (masked logits, pooled, cls, pre-tanh).
+fn head_fwd(
+    pv: &ParamView,
+    head: HeadKind,
+    h: &Tensor, // (B·S, d)
+    b: usize,
+    s: usize,
+    class_mask: &[f32],
+) -> (Tensor, Tensor, Tensor) {
+    let d = h.cols();
+    let mut cls = Tensor::zeros(&[b, d]);
+    for bb in 0..b {
+        cls.row_mut(bb).copy_from_slice(&h.data[bb * s * d..(bb * s + 1) * d]);
+    }
+    let mut pre = cls.matmul(pv.get("head/wp"));
+    add_bias_rows(&mut pre, pv.vec("head/bp"));
+    let mut pooled = pre.clone();
+    for v in pooled.data.iter_mut() {
+        *v = v.tanh();
+    }
+    let mut logits = pooled.matmul(pv.get("head/wc"));
+    add_bias_rows(&mut logits, pv.vec("head/bc"));
+    if head == HeadKind::Cls {
+        let k = logits.cols();
+        for bb in 0..b {
+            for j in 0..k {
+                logits.data[bb * k + j] += (1.0 - class_mask[j]) * NEG_INF;
+            }
+        }
+    }
+    (logits, pooled, cls)
+}
+
+/// Loss + dlogits for the task heads.
+fn task_loss_bwd(
+    head: HeadKind,
+    logits: &Tensor,
+    batch: &TaskBatchRef,
+) -> (f32, Tensor) {
+    let (b, k) = (logits.rows(), logits.cols());
+    let w = batch.example_w;
+    let wsum = w.iter().sum::<f32>().max(1e-6);
+    match head {
+        HeadKind::Cls => {
+            let mut probs = logits.clone();
+            softmax_rows(&mut probs);
+            let mut loss = 0f32;
+            let mut dlogits = probs.clone();
+            for bb in 0..b {
+                let label = batch.labels_i32[bb] as usize;
+                let p = probs.data[bb * k + label].max(1e-30);
+                loss += -(p.ln()) * w[bb];
+                dlogits.data[bb * k + label] -= 1.0;
+                let scale = w[bb] / wsum;
+                for j in 0..k {
+                    dlogits.data[bb * k + j] *= scale;
+                }
+            }
+            (loss / wsum, dlogits)
+        }
+        HeadKind::Reg => {
+            let mut loss = 0f32;
+            let mut dlogits = Tensor::zeros(&[b, k]);
+            for bb in 0..b {
+                let diff = logits.data[bb * k] - batch.labels_f32[bb];
+                loss += diff * diff * w[bb];
+                dlogits.data[bb * k] = 2.0 * diff * w[bb] / wsum;
+            }
+            (loss / wsum, dlogits)
+        }
+    }
+}
+
+/// Head backward → dh (B·S, d); accumulates head grads.
+#[allow(clippy::too_many_arguments)]
+fn head_bwd(
+    pv: &ParamView,
+    grads: &mut Grads,
+    dlogits: &Tensor,
+    pooled: &Tensor,
+    cls: &Tensor,
+    b: usize,
+    s: usize,
+    d: usize,
+) -> Tensor {
+    grads.add("head/wc", pooled.t_matmul(dlogits));
+    let dbc = col_sum(dlogits);
+    grads.add("head/bc", Tensor::from_vec(&[dbc.len()], dbc));
+    let wc = pv.get("head/wc");
+    let dpooled = dlogits.matmul_t(wc);
+    let mut dpre = dpooled.clone();
+    for (i, v) in dpre.data.iter_mut().enumerate() {
+        let t = pooled.data[i];
+        *v *= 1.0 - t * t;
+    }
+    grads.add("head/wp", cls.t_matmul(&dpre));
+    let dbp = col_sum(&dpre);
+    grads.add("head/bp", Tensor::from_vec(&[dbp.len()], dbp));
+    let wp = pv.get("head/wp");
+    let dcls = dpre.matmul_t(wp);
+    let mut dh = Tensor::zeros(&[b * s, d]);
+    for bb in 0..b {
+        dh.data[bb * s * d..(bb * s + 1) * d].copy_from_slice(dcls.row(bb));
+    }
+    dh
+}
+
+// ---------------------------------------------------------------------------
+// Flat-state plumbing: unpack, clip, Adam, repack.
+// ---------------------------------------------------------------------------
+
+/// Read the trainable leaves of a flat state vector as named tensors.
+fn unpack_train(state: &[f32], layout: &StateLayout) -> BTreeMap<String, Tensor> {
+    layout
+        .params
+        .iter()
+        .map(|f| {
+            (
+                f.name.clone(),
+                Tensor::from_vec(&f.shape, state[f.offset..f.offset + f.numel()].to_vec()),
+            )
+        })
+        .collect()
+}
+
+/// Global-norm clip + Adam over the flat protocol; returns the new state
+/// with the metrics head set to `metrics`.
+fn clip_and_adam(
+    layout: &StateLayout,
+    state: &[f32],
+    grads: &Grads,
+    lr: f32,
+    t: f32,
+    metrics: &[(&str, Vec<f32>)],
+) -> Vec<f32> {
+    let n = layout.n_params;
+    let mut sq = 0f64;
+    for f in &layout.params {
+        if let Some(g) = grads.map.get(&f.name) {
+            for &v in &g.data {
+                sq += (v as f64) * (v as f64);
+            }
+        }
+    }
+    let norm = (sq + 1e-12).sqrt();
+    let scale = (1.0f64.min(1.0 / norm)) as f32;
+
+    let b1t = 1.0 - ADAM_B1.powf(t);
+    let b2t = 1.0 - ADAM_B2.powf(t);
+
+    let mut new_state = vec![0f32; layout.total];
+    for (name, vals) in metrics {
+        if let Ok(f) = layout.metric(name) {
+            new_state[f.offset..f.offset + vals.len().min(f.numel())]
+                .copy_from_slice(&vals[..vals.len().min(f.numel())]);
+        }
+    }
+    let zero = Vec::new();
+    for f in &layout.params {
+        let g = grads.map.get(&f.name).map(|gt| &gt.data).unwrap_or(&zero);
+        for i in 0..f.numel() {
+            let p_off = f.offset + i;
+            let m_off = p_off + n;
+            let v_off = p_off + 2 * n;
+            let gi = g.get(i).copied().unwrap_or(0.0) * scale;
+            let m_new = ADAM_B1 * state[m_off] + (1.0 - ADAM_B1) * gi;
+            let v_new = ADAM_B2 * state[v_off] + (1.0 - ADAM_B2) * gi * gi;
+            let mhat = m_new / b1t;
+            let vhat = v_new / b2t;
+            new_state[p_off] = state[p_off] - lr * mhat / (vhat.sqrt() + ADAM_EPS);
+            new_state[m_off] = m_new;
+            new_state[v_off] = v_new;
+        }
+    }
+    new_state
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points (one per artifact kind).
+// ---------------------------------------------------------------------------
+
+/// One fine-tune training step over the flat state protocol. Returns the
+/// next state vector (params + moments updated, metrics head refreshed).
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(
+    p: &Preset,
+    method: MethodKind,
+    head: HeadKind,
+    layout: &StateLayout,
+    state: &[f32],
+    frozen: &BTreeMap<String, Tensor>,
+    batch: &TaskBatchRef,
+    lr: f32,
+    t: f32,
+) -> Vec<f32> {
+    let train = unpack_train(state, layout);
+    let pv = ParamView { train: &train, frozen };
+    let train_backbone = method == MethodKind::Ft;
+
+    let (h, cache) = encode_fwd(&pv, p, method, batch.input_ids, batch.type_ids, batch.attn_mask);
+    let (logits, pooled, cls) = head_fwd(&pv, head, &h, p.batch, p.max_seq, batch.class_mask);
+    let (loss, dlogits) = task_loss_bwd(head, &logits, batch);
+
+    let mut grads = Grads::default();
+    let dh = head_bwd(&pv, &mut grads, &dlogits, &pooled, &cls, p.batch, p.max_seq, p.d_model);
+    encode_bwd(
+        &pv,
+        &mut grads,
+        p,
+        method,
+        dh,
+        &cache,
+        batch.input_ids,
+        batch.type_ids,
+        train_backbone,
+    );
+
+    clip_and_adam(
+        layout,
+        state,
+        &grads,
+        lr,
+        t,
+        &[("loss", vec![loss]), ("logits", logits.data.clone())],
+    )
+}
+
+/// Forward-only pass over the training state layout → logits (B·K).
+pub fn eval_forward(
+    p: &Preset,
+    method: MethodKind,
+    head: HeadKind,
+    layout: &StateLayout,
+    state: &[f32],
+    frozen: &BTreeMap<String, Tensor>,
+    batch: &TaskBatchRef,
+) -> Vec<f32> {
+    let train = unpack_train(state, layout);
+    let pv = ParamView { train: &train, frozen };
+    let (h, _) = encode_fwd(&pv, p, method, batch.input_ids, batch.type_ids, batch.attn_mask);
+    let (logits, _, _) = head_fwd(&pv, head, &h, p.batch, p.max_seq, batch.class_mask);
+    logits.data
+}
+
+/// One MLM pretraining step (whole backbone trains, weight-tied LM head).
+pub fn pretrain_step(
+    p: &Preset,
+    layout: &StateLayout,
+    state: &[f32],
+    batch: &MlmBatchRef,
+    lr: f32,
+    t: f32,
+) -> Vec<f32> {
+    let train = unpack_train(state, layout);
+    let empty = BTreeMap::new();
+    let pv = ParamView { train: &train, frozen: &empty };
+    let (b, s, v) = (p.batch, p.max_seq, p.vocab);
+
+    let (h, cache) =
+        encode_fwd(&pv, p, MethodKind::Ft, batch.input_ids, batch.type_ids, batch.attn_mask);
+    let tok = pv.get("emb/tok");
+    let mut logits = h.matmul_t(tok); // (B·S, V)
+    add_bias_rows(&mut logits, pv.vec("mlm/bias"));
+
+    let mut probs = logits;
+    softmax_rows(&mut probs);
+    let mut loss = 0f32;
+    let mut denom = 0f32;
+    for row in 0..b * s {
+        if batch.mlm_labels[row] >= 0 {
+            denom += 1.0;
+        }
+    }
+    let denom = denom.max(1.0);
+    let mut dlogits = probs; // reuse allocation
+    for row in 0..b * s {
+        let label = batch.mlm_labels[row];
+        let valid = label >= 0;
+        let safe = label.max(0) as usize;
+        if valid {
+            let pr = dlogits.data[row * v + safe].max(1e-30);
+            loss += -pr.ln();
+        }
+        let scale = if valid { 1.0 / denom } else { 0.0 };
+        dlogits.data[row * v + safe] -= 1.0;
+        for j in 0..v {
+            dlogits.data[row * v + j] *= scale;
+        }
+    }
+    let loss = loss / denom;
+
+    let mut grads = Grads::default();
+    let dbias = col_sum(&dlogits);
+    grads.add("mlm/bias", Tensor::from_vec(&[dbias.len()], dbias));
+    grads.add("emb/tok", dlogits.t_matmul(&h)); // (V, d)
+    let dh = dlogits.matmul(tok); // (B·S, d)
+    encode_bwd(
+        &pv,
+        &mut grads,
+        p,
+        MethodKind::Ft,
+        dh,
+        &cache,
+        batch.input_ids,
+        batch.type_ids,
+        true,
+    );
+
+    clip_and_adam(layout, state, &grads, lr, t, &[("loss", vec![loss])])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::rng::Rng;
+
+    fn layout_for(key: &str) -> (Preset, StateLayout) {
+        let m = Manifest::builtin();
+        let a = m.artifact(key).unwrap();
+        (m.preset(&a.preset).unwrap().clone(), a.layout().unwrap().clone())
+    }
+
+    fn rand_state(layout: &StateLayout, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut state = vec![0f32; layout.total];
+        for f in &layout.params {
+            for i in 0..f.numel() {
+                state[f.offset + i] = rng.normal() * 0.05;
+            }
+        }
+        state
+    }
+
+    /// Finite-difference check of dλ through the full task loss — the one
+    /// gradient path unique to QR-LoRA.
+    #[test]
+    fn lambda_grad_matches_finite_difference() {
+        let (p, layout) = layout_for("tiny/train_step_qrlora_cls");
+        let mut rng = Rng::new(5);
+        let state = rand_state(&layout, 6);
+
+        // frozen backbone + factors
+        let m = Manifest::builtin();
+        let a = m.artifact("tiny/train_step_qrlora_cls").unwrap();
+        let mut frozen = BTreeMap::new();
+        for (_, t) in a.inputs_with_role(crate::runtime::Role::Frozen) {
+            let data: Vec<f32> = if t.name.ends_with("/mask") {
+                vec![1.0; t.numel()]
+            } else {
+                (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
+            };
+            frozen.insert(t.name.clone(), Tensor::from_vec(&t.shape, data));
+        }
+
+        let bs = p.batch * p.max_seq;
+        let ids: Vec<i32> = (0..bs).map(|i| ((i * 7) % p.vocab) as i32).collect();
+        let type_ids = vec![0i32; bs];
+        let attn_mask = vec![1.0f32; bs];
+        let labels: Vec<i32> = (0..p.batch).map(|i| (i % 2) as i32).collect();
+        let class_mask = vec![1.0f32; p.n_classes];
+        let example_w = vec![1.0f32; p.batch];
+        let batch = TaskBatchRef {
+            input_ids: &ids,
+            type_ids: &type_ids,
+            attn_mask: &attn_mask,
+            labels_i32: &labels,
+            labels_f32: &[],
+            class_mask: &class_mask,
+            example_w: &example_w,
+        };
+
+        // analytic gradient via the internals
+        let train = unpack_train(&state, &layout);
+        let pv = ParamView { train: &train, frozen: &frozen };
+        let (h, cache) = encode_fwd(&pv, &p, MethodKind::QrLora, &ids, &type_ids, &attn_mask);
+        let (logits, pooled, cls) = head_fwd(&pv, HeadKind::Cls, &h, p.batch, p.max_seq, &class_mask);
+        let (loss0, dlogits) = task_loss_bwd(HeadKind::Cls, &logits, &batch);
+        let mut grads = Grads::default();
+        let dh = head_bwd(&pv, &mut grads, &dlogits, &pooled, &cls, p.batch, p.max_seq, p.d_model);
+        encode_bwd(&pv, &mut grads, &p, MethodKind::QrLora, dh, &cache, &ids, &type_ids, false);
+
+        let lam_name = "qr/layer1/wo/lam";
+        let lam_field = layout.param(lam_name).unwrap().clone();
+        let analytic = grads.map.get(lam_name).unwrap().data.clone();
+
+        // finite difference on two entries
+        for idx in [0usize, 3] {
+            let eps = 1e-2f32;
+            let mut splus = state.clone();
+            splus[lam_field.offset + idx] += eps;
+            let mut sminus = state.clone();
+            sminus[lam_field.offset + idx] -= eps;
+            let loss_at = |st: &[f32]| -> f32 {
+                let train = unpack_train(st, &layout);
+                let pv = ParamView { train: &train, frozen: &frozen };
+                let (h, _) = encode_fwd(&pv, &p, MethodKind::QrLora, &ids, &type_ids, &attn_mask);
+                let (logits, _, _) = head_fwd(&pv, HeadKind::Cls, &h, p.batch, p.max_seq, &class_mask);
+                task_loss_bwd(HeadKind::Cls, &logits, &batch).0
+            };
+            let fd = (loss_at(&splus) - loss_at(&sminus)) / (2.0 * eps);
+            let got = analytic[idx];
+            assert!(
+                (fd - got).abs() < 2e-2 * fd.abs().max(got.abs()).max(0.1),
+                "dλ[{idx}]: fd {fd} vs analytic {got} (loss {loss0})"
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_reduces_loss_over_iterations() {
+        let (p, layout) = layout_for("tiny/train_step_ft_cls");
+        let mut state = rand_state(&layout, 11);
+        let frozen = BTreeMap::new();
+        let bs = p.batch * p.max_seq;
+        let ids: Vec<i32> = (0..bs).map(|i| ((i * 13 + 5) % p.vocab) as i32).collect();
+        let type_ids = vec![0i32; bs];
+        let attn_mask = vec![1.0f32; bs];
+        let labels: Vec<i32> = (0..p.batch).map(|i| ((i * 13) % 2) as i32).collect();
+        let class_mask = vec![1.0, 1.0, 0.0];
+        let example_w = vec![1.0f32; p.batch];
+        let batch = TaskBatchRef {
+            input_ids: &ids,
+            type_ids: &type_ids,
+            attn_mask: &attn_mask,
+            labels_i32: &labels,
+            labels_f32: &[],
+            class_mask: &class_mask,
+            example_w: &example_w,
+        };
+        let mut losses = Vec::new();
+        for t in 1..=10 {
+            let tf = t as f32;
+            state = train_step(
+                &p,
+                MethodKind::Ft,
+                HeadKind::Cls,
+                &layout,
+                &state,
+                &frozen,
+                &batch,
+                5e-3,
+                tf,
+            );
+            losses.push(state[0]);
+        }
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        assert!(losses[9] < losses[0], "loss did not fall: {losses:?}");
+    }
+
+    #[test]
+    fn eval_matches_train_metrics_logits() {
+        // eval_forward on the post-step state must equal the logits the step
+        // recorded (same batch, same params).
+        let (p, layout) = layout_for("tiny/train_step_qrlora_cls");
+        let mut rng = Rng::new(21);
+        let state = rand_state(&layout, 22);
+        let m = Manifest::builtin();
+        let a = m.artifact("tiny/train_step_qrlora_cls").unwrap();
+        let mut frozen = BTreeMap::new();
+        for (_, t) in a.inputs_with_role(crate::runtime::Role::Frozen) {
+            let data: Vec<f32> = if t.name.ends_with("/mask") {
+                vec![1.0; t.numel()]
+            } else {
+                (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
+            };
+            frozen.insert(t.name.clone(), Tensor::from_vec(&t.shape, data));
+        }
+        let bs = p.batch * p.max_seq;
+        let ids: Vec<i32> = (0..bs).map(|i| ((i * 3 + 1) % p.vocab) as i32).collect();
+        let type_ids = vec![0i32; bs];
+        let attn_mask = vec![1.0f32; bs];
+        let labels = vec![0i32; p.batch];
+        let class_mask = vec![1.0f32; p.n_classes];
+        let example_w = vec![1.0f32; p.batch];
+        let batch = TaskBatchRef {
+            input_ids: &ids,
+            type_ids: &type_ids,
+            attn_mask: &attn_mask,
+            labels_i32: &labels,
+            labels_f32: &[],
+            class_mask: &class_mask,
+            example_w: &example_w,
+        };
+        let next = train_step(
+            &p,
+            MethodKind::QrLora,
+            HeadKind::Cls,
+            &layout,
+            &state,
+            &frozen,
+            &batch,
+            1e-3,
+            1.0,
+        );
+        let recorded = {
+            let f = layout.metric("logits").unwrap();
+            next[f.offset..f.offset + f.numel()].to_vec()
+        };
+        let evald =
+            eval_forward(&p, MethodKind::QrLora, HeadKind::Cls, &layout, &next, &frozen, &batch);
+        // recorded logits came from the *pre-update* params; re-running on the
+        // post-update state must differ (params moved) but stay finite & close.
+        assert_eq!(recorded.len(), evald.len());
+        assert!(evald.iter().all(|v| v.is_finite()));
+        // and evaluating the pre-step state reproduces the recorded metrics
+        let evald0 =
+            eval_forward(&p, MethodKind::QrLora, HeadKind::Cls, &layout, &state, &frozen, &batch);
+        for (a, b) in evald0.iter().zip(&recorded) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pretrain_step_runs_and_loss_finite() {
+        let (p, layout) = layout_for("tiny/pretrain_step");
+        let mut state = crate::model::init_state(&layout, 3);
+        let bs = p.batch * p.max_seq;
+        let ids: Vec<i32> = (0..bs).map(|i| ((i * 17 + 3) % p.vocab) as i32).collect();
+        let type_ids = vec![0i32; bs];
+        let attn_mask = vec![1.0f32; bs];
+        let mut labels = vec![-100i32; bs];
+        for i in (0..bs).step_by(7) {
+            labels[i] = ((i * 31) % p.vocab) as i32;
+        }
+        let batch = MlmBatchRef {
+            input_ids: &ids,
+            type_ids: &type_ids,
+            attn_mask: &attn_mask,
+            mlm_labels: &labels,
+        };
+        let mut losses = Vec::new();
+        for t in 1..=6 {
+            state = pretrain_step(&p, &layout, &state, &batch, 2e-3, t as f32);
+            losses.push(state[0]);
+        }
+        assert!(losses.iter().all(|l| l.is_finite() && *l > 0.0), "{losses:?}");
+        assert!(losses[5] < losses[0], "mlm loss did not fall: {losses:?}");
+    }
+}

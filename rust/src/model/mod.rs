@@ -1,11 +1,14 @@
 //! Host-side model state management: initialization of the flat state
 //! vector, named parameter access, and backbone checkpointing.
 //!
-//! The actual math lives in the AOT graphs; this module only knows the
-//! *layout* (from the manifest) and the initialization rules, which mirror
-//! `python/compile/model.py::init_backbone`.
+//! On the PJRT backend the actual math lives in the AOT graphs; this module
+//! only knows the *layout* (from the manifest) and the initialization
+//! rules, which mirror `python/compile/model.py::init_backbone`. The
+//! [`host`] submodule additionally implements the full reference
+//! forward/backward/Adam step in pure Rust for `runtime::HostBackend`.
 
 pub mod checkpoint;
+pub mod host;
 
 use std::collections::BTreeMap;
 

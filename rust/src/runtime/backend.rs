@@ -1,0 +1,232 @@
+//! Pluggable execution backends.
+//!
+//! Every training/eval/serving path drives artifacts through the
+//! [`Backend`] trait: upload host tensors, execute a step program, download
+//! metrics. Two implementations exist:
+//!
+//! * [`super::HostBackend`] — pure-Rust interpreter of the built-in
+//!   manifest (`runtime::spec`), always available. State "buffers" are
+//!   plain host vectors; the step math lives in `model::host`.
+//! * `PjrtBackend` (cargo feature `pjrt`) — the original PJRT path: loads
+//!   `artifacts/*.hlo.txt`, compiles through the XLA CPU client, keeps the
+//!   state buffer device-resident across steps.
+//!
+//! Selection: `create_backend` honors an explicit [`BackendChoice`]
+//! (CLI `--backend` / `QRLORA_BACKEND`); `Auto` picks PJRT when the feature
+//! is compiled **and** an artifacts manifest exists, else falls back to the
+//! host backend, so a clean checkout runs hermetically.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// Host-side tensor value (upload source / download target).
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => anyhow::bail!("expected f32 tensor"),
+        }
+    }
+}
+
+/// A backend-owned buffer: host data for [`super::HostBackend`], a device
+/// handle for the PJRT backend.
+pub enum Buffer {
+    Host { value: HostTensor, shape: Vec<usize> },
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtBuffer),
+}
+
+impl Buffer {
+    pub fn host_f32(data: Vec<f32>, shape: &[usize]) -> Buffer {
+        Buffer::Host { value: HostTensor::F32(data), shape: shape.to_vec() }
+    }
+
+    pub fn host_i32(data: Vec<i32>, shape: &[usize]) -> Buffer {
+        Buffer::Host { value: HostTensor::I32(data), shape: shape.to_vec() }
+    }
+
+    /// Borrow as f32 host data (errors on dtype mismatch / device buffers).
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            Buffer::Host { value: HostTensor::F32(v), .. } => Ok(v),
+            Buffer::Host { .. } => anyhow::bail!("buffer is i32, expected f32"),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => anyhow::bail!("cannot borrow device buffer as host f32"),
+        }
+    }
+
+    /// Borrow as i32 host data (errors on dtype mismatch / device buffers).
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            Buffer::Host { value: HostTensor::I32(v), .. } => Ok(v),
+            Buffer::Host { .. } => anyhow::bail!("buffer is f32, expected i32"),
+            #[cfg(feature = "pjrt")]
+            Buffer::Pjrt(_) => anyhow::bail!("cannot borrow device buffer as host i32"),
+        }
+    }
+}
+
+/// A loaded executable: manifest spec + backend-specific implementation.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    pub(crate) imp: ExecutableImpl,
+}
+
+pub(crate) enum ExecutableImpl {
+    Host(super::host::HostProgram),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::PjRtLoadedExecutable),
+}
+
+/// The execution-backend contract: load/upload/execute/download over the
+/// shared `Manifest`/`ArtifactSpec` protocol.
+pub trait Backend {
+    /// Stable identifier ("host" / "pjrt") for logs and BENCH files.
+    fn name(&self) -> &'static str;
+
+    /// The manifest this backend executes against.
+    fn manifest(&self) -> &Manifest;
+
+    /// Load (and cache) an executable by manifest key.
+    fn load(&self, key: &str) -> anyhow::Result<Rc<Executable>>;
+
+    /// Run an executable on backend buffers; returns one buffer per
+    /// manifest output, in order.
+    fn execute(&self, exe: &Executable, args: &[&Buffer]) -> anyhow::Result<Vec<Buffer>>;
+
+    fn upload_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<Buffer>;
+
+    fn upload_i32(&self, data: &[i32], shape: &[usize]) -> anyhow::Result<Buffer>;
+
+    fn download_f32(&self, buf: &Buffer) -> anyhow::Result<Vec<f32>>;
+
+    fn upload_scalar(&self, v: f32) -> anyhow::Result<Buffer> {
+        self.upload_f32(&[v], &[])
+    }
+
+    /// Read the metrics head of a state buffer by running the paired
+    /// `metrics_*` slice program and downloading only the small head.
+    fn read_metrics(&self, metrics_exe: &Executable, state: &Buffer) -> anyhow::Result<Vec<f32>> {
+        let outs = self.execute(metrics_exe, &[state])?;
+        self.download_f32(&outs[0])
+    }
+}
+
+/// Which backend the user asked for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// PJRT when compiled and artifacts exist, else host.
+    Auto,
+    Host,
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> anyhow::Result<BackendChoice> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => BackendChoice::Auto,
+            "host" => BackendChoice::Host,
+            "pjrt" => BackendChoice::Pjrt,
+            other => anyhow::bail!("unknown backend {other:?} (auto|host|pjrt)"),
+        })
+    }
+
+    /// Read `QRLORA_BACKEND` (default `auto`).
+    pub fn from_env() -> anyhow::Result<BackendChoice> {
+        match std::env::var("QRLORA_BACKEND") {
+            Ok(v) if !v.is_empty() => BackendChoice::parse(&v),
+            _ => Ok(BackendChoice::Auto),
+        }
+    }
+}
+
+/// Instantiate a backend. `artifacts_dir` is only consulted by the PJRT
+/// path (and by `Auto` to decide whether PJRT is viable).
+pub fn create_backend(
+    choice: BackendChoice,
+    artifacts_dir: &Path,
+) -> anyhow::Result<Box<dyn Backend>> {
+    match choice {
+        BackendChoice::Host => Ok(Box::new(super::HostBackend::new())),
+        BackendChoice::Pjrt => {
+            #[cfg(feature = "pjrt")]
+            {
+                Ok(Box::new(super::PjrtBackend::new(artifacts_dir)?))
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifacts_dir;
+                anyhow::bail!(
+                    "backend \"pjrt\" requested but this binary was built without the \
+                     `pjrt` cargo feature; rebuild with `--features pjrt` or use \
+                     QRLORA_BACKEND=host"
+                )
+            }
+        }
+        BackendChoice::Auto => {
+            #[cfg(feature = "pjrt")]
+            if artifacts_dir.join("manifest.json").exists() {
+                match super::PjrtBackend::new(artifacts_dir) {
+                    Ok(bk) => return Ok(Box::new(bk)),
+                    Err(e) => {
+                        crate::warnln!(
+                            "pjrt backend unavailable ({e:#}); falling back to host backend"
+                        );
+                    }
+                }
+            }
+            let _ = artifacts_dir;
+            Ok(Box::new(super::HostBackend::new()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parse() {
+        assert_eq!(BackendChoice::parse("host").unwrap(), BackendChoice::Host);
+        assert_eq!(BackendChoice::parse("PJRT").unwrap(), BackendChoice::Pjrt);
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert!(BackendChoice::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn auto_without_artifacts_is_host() {
+        let bk = create_backend(BackendChoice::Auto, Path::new("/nonexistent/artifacts")).unwrap();
+        assert_eq!(bk.name(), "host");
+        assert!(bk.manifest().preset("tiny").is_ok());
+    }
+
+    #[test]
+    fn host_buffer_accessors() {
+        let b = Buffer::host_f32(vec![1.0, 2.0], &[2]);
+        assert_eq!(b.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(b.as_i32().is_err());
+        let i = Buffer::host_i32(vec![3, 4], &[2]);
+        assert_eq!(i.as_i32().unwrap(), &[3, 4]);
+        assert!(i.as_f32().is_err());
+    }
+}

@@ -1,0 +1,355 @@
+//! `HostBackend`: executes the built-in manifest's programs in pure Rust.
+//!
+//! Each artifact key resolves to a [`HostProgram`] — a small interpreter
+//! over the same input/output contract the AOT graphs expose. The heavy
+//! math (forward/backward/Adam) lives in `model::host`; this module only
+//! unpacks buffers by manifest name, dispatches on artifact kind, and packs
+//! the results back into [`Buffer`]s.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use crate::data::HeadKind;
+use crate::model::host as hostmodel;
+use crate::model::host::MethodKind;
+use crate::tensor::Tensor;
+
+use super::backend::{Backend, Buffer, Executable, ExecutableImpl};
+use super::manifest::{ArtifactSpec, DType, Manifest, Preset, Role};
+
+/// What a host-interpreted artifact computes.
+#[derive(Clone, Debug)]
+enum ProgKind {
+    PretrainStep,
+    /// State → metrics head (pretrain_metrics and metrics_{m}_{h} alike).
+    Metrics,
+    TrainStep { method: MethodKind, head: HeadKind },
+    EvalFwd { method: MethodKind, head: HeadKind },
+    KernelBase,
+    KernelAdapter,
+}
+
+/// A compiled-for-host artifact: parsed kind + preset constants.
+pub struct HostProgram {
+    kind: ProgKind,
+    preset: Preset,
+}
+
+fn parse_head(s: &str) -> anyhow::Result<HeadKind> {
+    Ok(match s {
+        "cls" => HeadKind::Cls,
+        "reg" => HeadKind::Reg,
+        _ => anyhow::bail!("unknown head {s:?}"),
+    })
+}
+
+fn parse_method_head(rest: &str) -> anyhow::Result<(MethodKind, HeadKind)> {
+    let (m, h) = rest
+        .rsplit_once('_')
+        .ok_or_else(|| anyhow::anyhow!("bad method/head suffix {rest:?}"))?;
+    Ok((MethodKind::parse(m)?, parse_head(h)?))
+}
+
+/// Name-indexed view of an execute call's arguments.
+type ArgMap<'a> = BTreeMap<&'a str, &'a Buffer>;
+
+fn get_buf<'a>(by_name: &ArgMap<'a>, spec_key: &str, name: &str) -> anyhow::Result<&'a Buffer> {
+    by_name
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("{spec_key}: missing input {name:?}"))
+}
+
+fn get_f32<'a>(by_name: &ArgMap<'a>, spec_key: &str, name: &str) -> anyhow::Result<&'a [f32]> {
+    get_buf(by_name, spec_key, name)?.as_f32()
+}
+
+fn get_i32<'a>(by_name: &ArgMap<'a>, spec_key: &str, name: &str) -> anyhow::Result<&'a [i32]> {
+    get_buf(by_name, spec_key, name)?.as_i32()
+}
+
+fn get_tensor(spec: &ArtifactSpec, by_name: &ArgMap, name: &str) -> anyhow::Result<Tensor> {
+    let t = spec
+        .inputs
+        .iter()
+        .find(|t| t.name == name)
+        .ok_or_else(|| anyhow::anyhow!("{}: no spec entry {name:?}", spec.key))?;
+    Ok(Tensor::from_vec(&t.shape, get_f32(by_name, &spec.key, name)?.to_vec()))
+}
+
+impl HostProgram {
+    /// Interpret an artifact spec (the host analogue of PJRT compilation).
+    pub fn compile(spec: &ArtifactSpec, manifest: &Manifest) -> anyhow::Result<HostProgram> {
+        let preset = manifest.preset(&spec.preset)?.clone();
+        let kind = match spec.kind.as_str() {
+            "pretrain_step" => ProgKind::PretrainStep,
+            "pretrain_metrics" => ProgKind::Metrics,
+            "kernel_base" => ProgKind::KernelBase,
+            "kernel_adapter" => ProgKind::KernelAdapter,
+            k if k.starts_with("metrics_") => ProgKind::Metrics,
+            k if k.starts_with("train_step_") => {
+                let (m, h) = parse_method_head(&k["train_step_".len()..])?;
+                ProgKind::TrainStep { method: m, head: h }
+            }
+            k if k.starts_with("eval_fwd_") => {
+                let (m, h) = parse_method_head(&k["eval_fwd_".len()..])?;
+                ProgKind::EvalFwd { method: m, head: h }
+            }
+            other => anyhow::bail!("{}: no host implementation for kind {other:?}", spec.key),
+        };
+        Ok(HostProgram { kind, preset })
+    }
+
+    /// Execute against host buffers; returns outputs in manifest order.
+    pub fn execute(&self, spec: &ArtifactSpec, args: &[&Buffer]) -> anyhow::Result<Vec<Buffer>> {
+        anyhow::ensure!(
+            args.len() == spec.inputs.len(),
+            "{}: got {} args, expected {}",
+            spec.key,
+            args.len(),
+            spec.inputs.len()
+        );
+        // Validate shapes/dtypes and index by name.
+        let mut by_name: BTreeMap<&str, &Buffer> = BTreeMap::new();
+        for (t, buf) in spec.inputs.iter().zip(args) {
+            if let Buffer::Host { value, shape } = buf {
+                anyhow::ensure!(
+                    value.len() == t.numel(),
+                    "{}: input {:?} has {} elements, spec wants {}",
+                    spec.key,
+                    t.name,
+                    value.len(),
+                    t.numel()
+                );
+                anyhow::ensure!(
+                    shape == &t.shape,
+                    "{}: input {:?} has shape {:?}, spec wants {:?}",
+                    spec.key,
+                    t.name,
+                    shape,
+                    t.shape
+                );
+                match (t.dtype, value) {
+                    (DType::F32, super::backend::HostTensor::F32(_)) => {}
+                    (DType::I32, super::backend::HostTensor::I32(_)) => {}
+                    _ => anyhow::bail!("{}: input {:?} dtype mismatch", spec.key, t.name),
+                }
+            } else {
+                anyhow::bail!("{}: host backend received a non-host buffer", spec.key);
+            }
+            by_name.insert(t.name.as_str(), *buf);
+        }
+        let f32s = |name: &str| get_f32(&by_name, &spec.key, name);
+        let i32s = |name: &str| get_i32(&by_name, &spec.key, name);
+        let tensor_of = |name: &str| get_tensor(spec, &by_name, name);
+
+        match &self.kind {
+            ProgKind::Metrics => {
+                let state = f32s("state")?;
+                let mlen = spec.outputs[0].numel();
+                Ok(vec![Buffer::host_f32(state[..mlen].to_vec(), &spec.outputs[0].shape)])
+            }
+            ProgKind::KernelBase => {
+                let x = tensor_of("x")?;
+                let w0 = tensor_of("w0")?;
+                let y = x.matmul(&w0);
+                Ok(vec![Buffer::host_f32(y.data, &spec.outputs[0].shape)])
+            }
+            ProgKind::KernelAdapter => {
+                // y = x·w0 + ((x·Q) ⊙ λ)·R — mirrors kernels/ref.py.
+                let x = tensor_of("x")?;
+                let w0 = tensor_of("w0")?;
+                let q = tensor_of("Q")?;
+                let r = tensor_of("R")?;
+                let lam = f32s("lam")?;
+                let mut y = x.matmul(&w0);
+                let mut xq = x.matmul(&q);
+                let (rows, cols) = (xq.rows(), xq.cols());
+                for i in 0..rows {
+                    for j in 0..cols {
+                        xq.data[i * cols + j] *= lam[j];
+                    }
+                }
+                y.add_assign(&xq.matmul(&r));
+                Ok(vec![Buffer::host_f32(y.data, &spec.outputs[0].shape)])
+            }
+            ProgKind::PretrainStep => {
+                let layout = spec.layout()?;
+                let state = f32s("state")?;
+                let batch = hostmodel::MlmBatchRef {
+                    input_ids: i32s("batch/input_ids")?,
+                    type_ids: i32s("batch/type_ids")?,
+                    attn_mask: f32s("batch/attn_mask")?,
+                    mlm_labels: i32s("batch/mlm_labels")?,
+                };
+                let lr = f32s("lr")?[0];
+                let t = f32s("t")?[0];
+                let next = hostmodel::pretrain_step(&self.preset, layout, state, &batch, lr, t);
+                Ok(vec![Buffer::host_f32(next, &[layout.total])])
+            }
+            ProgKind::TrainStep { method, head } | ProgKind::EvalFwd { method, head } => {
+                let layout = spec.layout()?;
+                let state = f32s("state")?;
+                // Frozen inputs are materialized as Tensors each call. For
+                // the tiny/small presets this copy is <5% of the step math;
+                // a persistent per-session cache is a ROADMAP item.
+                let mut frozen = BTreeMap::new();
+                for (_, t) in spec.inputs_with_role(Role::Frozen) {
+                    frozen.insert(
+                        t.name.clone(),
+                        Tensor::from_vec(&t.shape, f32s(&t.name)?.to_vec()),
+                    );
+                }
+                let (labels_i32, labels_f32): (&[i32], &[f32]) = match head {
+                    HeadKind::Cls => (i32s("batch/labels")?, &[]),
+                    HeadKind::Reg => (&[], f32s("batch/labels")?),
+                };
+                let batch = hostmodel::TaskBatchRef {
+                    input_ids: i32s("batch/input_ids")?,
+                    type_ids: i32s("batch/type_ids")?,
+                    attn_mask: f32s("batch/attn_mask")?,
+                    labels_i32,
+                    labels_f32,
+                    class_mask: f32s("batch/class_mask")?,
+                    example_w: f32s("batch/example_w")?,
+                };
+                if matches!(self.kind, ProgKind::TrainStep { .. }) {
+                    let lr = f32s("lr")?[0];
+                    let t = f32s("t")?[0];
+                    let next = hostmodel::train_step(
+                        &self.preset,
+                        *method,
+                        *head,
+                        layout,
+                        state,
+                        &frozen,
+                        &batch,
+                        lr,
+                        t,
+                    );
+                    Ok(vec![Buffer::host_f32(next, &[layout.total])])
+                } else {
+                    let logits = hostmodel::eval_forward(
+                        &self.preset,
+                        *method,
+                        *head,
+                        layout,
+                        state,
+                        &frozen,
+                        &batch,
+                    );
+                    Ok(vec![Buffer::host_f32(logits, &spec.outputs[0].shape)])
+                }
+            }
+        }
+    }
+}
+
+/// Pure-Rust execution backend over the built-in manifest.
+pub struct HostBackend {
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl HostBackend {
+    pub fn new() -> HostBackend {
+        HostBackend {
+            manifest: Manifest::builtin(),
+            cache: RefCell::new(HashMap::new()),
+        }
+    }
+}
+
+impl Default for HostBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for HostBackend {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, key: &str) -> anyhow::Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(key)?.clone();
+        let prog = HostProgram::compile(&spec, &self.manifest)?;
+        let e = Rc::new(Executable { spec, imp: ExecutableImpl::Host(prog) });
+        self.cache.borrow_mut().insert(key.to_string(), e.clone());
+        Ok(e)
+    }
+
+    fn execute(&self, exe: &Executable, args: &[&Buffer]) -> anyhow::Result<Vec<Buffer>> {
+        match &exe.imp {
+            ExecutableImpl::Host(prog) => prog.execute(&exe.spec, args),
+            #[cfg(feature = "pjrt")]
+            ExecutableImpl::Pjrt(_) => {
+                anyhow::bail!("{}: PJRT executable handed to host backend", exe.spec.key)
+            }
+        }
+    }
+
+    fn upload_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<Buffer> {
+        Ok(Buffer::host_f32(data.to_vec(), shape))
+    }
+
+    fn upload_i32(&self, data: &[i32], shape: &[usize]) -> anyhow::Result<Buffer> {
+        Ok(Buffer::host_i32(data.to_vec(), shape))
+    }
+
+    fn download_f32(&self, buf: &Buffer) -> anyhow::Result<Vec<f32>> {
+        Ok(buf.as_f32()?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kernel_base_matches_tensor_matmul() {
+        let bk = HostBackend::new();
+        let exe = bk.load("tiny/kernel_base").unwrap();
+        let (m, k) = (exe.spec.inputs[0].shape[0], exe.spec.inputs[0].shape[1]);
+        let n = exe.spec.inputs[1].shape[1];
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let w = Tensor::randn(&[k, n], &mut rng, 0.5);
+        let xb = bk.upload_f32(&x.data, &[m, k]).unwrap();
+        let wb = bk.upload_f32(&w.data, &[k, n]).unwrap();
+        let outs = bk.execute(&exe, &[&xb, &wb]).unwrap();
+        let got = Tensor::from_vec(&[m, n], bk.download_f32(&outs[0]).unwrap());
+        assert!(got.max_abs_diff(&x.matmul(&w)) < 1e-4);
+    }
+
+    #[test]
+    fn arity_and_dtype_checked() {
+        let bk = HostBackend::new();
+        let exe = bk.load("tiny/kernel_base").unwrap();
+        let x = bk.upload_f32(&[0.0], &[1]).unwrap();
+        assert!(bk.execute(&exe, &[&x]).is_err()); // wrong arity
+        let spec = &exe.spec;
+        let bad = bk
+            .upload_i32(&vec![0; spec.inputs[0].numel()], &spec.inputs[0].shape)
+            .unwrap();
+        let w = bk
+            .upload_f32(&vec![0.0; spec.inputs[1].numel()], &spec.inputs[1].shape)
+            .unwrap();
+        assert!(bk.execute(&exe, &[&bad, &w]).is_err()); // dtype mismatch
+    }
+
+    #[test]
+    fn unknown_key_errors() {
+        let bk = HostBackend::new();
+        assert!(bk.load("tiny/nope").is_err());
+    }
+}

@@ -264,6 +264,13 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The built-in manifest (host backend): identical presets, artifact
+    /// keys, shapes, and state layouts to what `aot.py` writes, synthesized
+    /// in pure Rust by `runtime::spec`.
+    pub fn builtin() -> Manifest {
+        super::spec::builtin_manifest()
+    }
+
     pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

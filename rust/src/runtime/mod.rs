@@ -1,145 +1,35 @@
-//! PJRT runtime: loads AOT artifacts (`artifacts/*.hlo.txt`) and executes
-//! them on the CPU PJRT client. Python never runs here — this is the whole
-//! request/training path.
+//! Execution runtime: the manifest contract plus pluggable backends.
 //!
-//! Buffer lifecycle (see `manifest::Role`): training state (params + Adam
-//! moments) lives on the device across steps via `execute_b`; only batches
-//! and scalars are uploaded per step and only metrics are copied back.
+//! The step protocol is backend-agnostic: every program takes and returns
+//! ONE flat f32 state vector `[ metrics | params | adam_m | adam_v ]`
+//! (see `python/compile/model.py`), so the output buffer of a step is the
+//! next step's input and training state never leaves the backend between
+//! steps. Two backends implement it:
+//!
+//! * [`HostBackend`] — pure Rust, always available, runs the built-in
+//!   manifest (`spec::builtin_manifest`) with the reference model in
+//!   `model::host`. This is what `cargo test` exercises hermetically.
+//! * `PjrtBackend` — the AOT/PJRT path (cargo feature `pjrt`), loading
+//!   `artifacts/*.hlo.txt` produced by `make artifacts`.
+//!
+//! Select with `--backend`/`QRLORA_BACKEND` (`auto` prefers PJRT when
+//! compiled and artifacts exist, else host) via [`create_backend`].
 
+mod backend;
+mod host;
 mod manifest;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+pub mod spec;
 mod store;
 
+pub use backend::{
+    create_backend, Backend, BackendChoice, Buffer, Executable, HostTensor,
+};
+pub use host::HostBackend;
 pub use manifest::{
     ArtifactSpec, DType, Manifest, Preset, Role, StateField, StateLayout, TensorSpec,
 };
-pub use store::{BufferStore, HostTensor};
-
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
-
-/// A loaded + compiled artifact.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Execute on device-resident buffers. Returns one buffer per manifest
-    /// output (the lowering uses `return_tuple=True`; PJRT untuples).
-    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
-        anyhow::ensure!(
-            args.len() == self.spec.inputs.len(),
-            "{}: got {} args, expected {}",
-            self.spec.key,
-            args.len(),
-            self.spec.inputs.len()
-        );
-        let mut out = self.exe.execute_b(args)?;
-        anyhow::ensure!(!out.is_empty(), "{}: empty replica output", self.spec.key);
-        let bufs = out.swap_remove(0);
-        self.check_arity(bufs)
-    }
-
-    /// Execute host literals (slow path — tests and one-shot calls).
-    pub fn run_literals(&self, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
-        let mut out = self.exe.execute::<xla::Literal>(args)?;
-        anyhow::ensure!(!out.is_empty(), "{}: empty replica output", self.spec.key);
-        let bufs = out.swap_remove(0);
-        let bufs = self.check_arity(bufs)?;
-        bufs.iter().map(|b| Ok(b.to_literal_sync()?)).collect()
-    }
-
-    /// Normalize PJRT output to one buffer per manifest output. Depending on
-    /// the plugin, a tuple result arrives either already flattened (one
-    /// buffer per leaf) or as a single tuple buffer.
-    fn check_arity(&self, bufs: Vec<xla::PjRtBuffer>) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
-        let want = self.spec.outputs.len();
-        if bufs.len() == want {
-            return Ok(bufs);
-        }
-        anyhow::bail!(
-            "{}: PJRT returned {} buffers for {} manifest outputs (tuple not flattened?)",
-            self.spec.key,
-            bufs.len(),
-            want
-        )
-    }
-}
-
-/// Runtime: PJRT client + manifest + compiled-executable cache.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
-}
-
-impl Runtime {
-    /// Create a CPU runtime rooted at the artifacts directory.
-    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir: artifacts_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-        })
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn load(&self, key: &str) -> anyhow::Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(key) {
-            return Ok(e.clone());
-        }
-        let spec = self.manifest.artifact(key)?.clone();
-        let path = self.dir.join(&spec.file);
-        let timer = crate::util::log::Timer::quiet(format!("compile {key}"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        crate::debugln!("compiled {} in {:.0} ms", key, timer.elapsed_ms());
-        let e = Rc::new(Executable { spec, exe });
-        self.cache.borrow_mut().insert(key.to_string(), e.clone());
-        Ok(e)
-    }
-
-    /// Upload an f32 host tensor.
-    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
-    }
-
-    /// Upload an i32 host tensor.
-    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
-    }
-
-    /// Upload an f32 scalar.
-    pub fn upload_scalar(&self, v: f32) -> anyhow::Result<xla::PjRtBuffer> {
-        self.upload_f32(&[v], &[])
-    }
-
-    /// Download a buffer to host as f32 (errors on dtype mismatch).
-    pub fn download_f32(&self, buf: &xla::PjRtBuffer) -> anyhow::Result<Vec<f32>> {
-        let lit = buf.to_literal_sync()?;
-        Ok(lit.to_vec::<f32>()?)
-    }
-
-    /// Read the metrics head of a state buffer by running the paired
-    /// `metrics_*` slice program (the CPU PJRT plugin implements no ranged
-    /// host copy, so slicing happens on-device and only the small head is
-    /// downloaded).
-    pub fn read_metrics(
-        &self,
-        metrics_exe: &Executable,
-        state: &xla::PjRtBuffer,
-    ) -> anyhow::Result<Vec<f32>> {
-        let outs = metrics_exe.run(&[state])?;
-        self.download_f32(&outs[0])
-    }
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use store::BufferStore;

@@ -1,0 +1,124 @@
+//! `PjrtBackend` (cargo feature `pjrt`): loads AOT artifacts
+//! (`artifacts/*.hlo.txt`) and executes them on the CPU PJRT client.
+//!
+//! Buffer lifecycle (see `manifest::Role`): training state (params + Adam
+//! moments) lives on the device across steps; only batches and scalars are
+//! uploaded per step and only metrics are copied back. The workspace ships
+//! an API stub for the `xla` crate (`rust/vendor/xla-stub`) so this file
+//! type-checks offline; swap the path dependency for the real bindings to
+//! execute actual artifacts.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use super::backend::{Backend, Buffer, Executable, ExecutableImpl};
+use super::manifest::Manifest;
+
+/// PJRT execution backend: client + manifest + compiled-executable cache.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT backend rooted at the artifacts directory.
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    fn device_buf<'a>(buf: &'a Buffer, what: &str) -> anyhow::Result<&'a xla::PjRtBuffer> {
+        match buf {
+            Buffer::Pjrt(b) => Ok(b),
+            Buffer::Host { .. } => {
+                anyhow::bail!("{what}: host buffer handed to the pjrt backend")
+            }
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn load(&self, key: &str) -> anyhow::Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(key)?.clone();
+        let path = self.dir.join(&spec.file);
+        let timer = crate::util::log::Timer::quiet(format!("compile {key}"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        crate::debugln!("compiled {} in {:.0} ms", key, timer.elapsed_ms());
+        let e = Rc::new(Executable { spec, imp: ExecutableImpl::Pjrt(exe) });
+        self.cache.borrow_mut().insert(key.to_string(), e.clone());
+        Ok(e)
+    }
+
+    fn execute(&self, exe: &Executable, args: &[&Buffer]) -> anyhow::Result<Vec<Buffer>> {
+        let pjrt_exe = match &exe.imp {
+            ExecutableImpl::Pjrt(e) => e,
+            ExecutableImpl::Host(_) => {
+                anyhow::bail!("{}: host executable handed to pjrt backend", exe.spec.key)
+            }
+        };
+        anyhow::ensure!(
+            args.len() == exe.spec.inputs.len(),
+            "{}: got {} args, expected {}",
+            exe.spec.key,
+            args.len(),
+            exe.spec.inputs.len()
+        );
+        let device_args: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .map(|&b| Self::device_buf(b, &exe.spec.key))
+            .collect::<anyhow::Result<_>>()?;
+        let mut out = pjrt_exe.execute_b(&device_args)?;
+        anyhow::ensure!(!out.is_empty(), "{}: empty replica output", exe.spec.key);
+        let bufs = out.swap_remove(0);
+        // Depending on the plugin, a tuple result arrives either already
+        // flattened (one buffer per leaf) or as a single tuple buffer.
+        let want = exe.spec.outputs.len();
+        anyhow::ensure!(
+            bufs.len() == want,
+            "{}: PJRT returned {} buffers for {} manifest outputs (tuple not flattened?)",
+            exe.spec.key,
+            bufs.len(),
+            want
+        );
+        Ok(bufs.into_iter().map(Buffer::Pjrt).collect())
+    }
+
+    fn upload_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<Buffer> {
+        Ok(Buffer::Pjrt(self.client.buffer_from_host_buffer(data, shape, None)?))
+    }
+
+    fn upload_i32(&self, data: &[i32], shape: &[usize]) -> anyhow::Result<Buffer> {
+        Ok(Buffer::Pjrt(self.client.buffer_from_host_buffer(data, shape, None)?))
+    }
+
+    fn download_f32(&self, buf: &Buffer) -> anyhow::Result<Vec<f32>> {
+        let lit = Self::device_buf(buf, "download_f32")?.to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+}

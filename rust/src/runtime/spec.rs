@@ -1,0 +1,467 @@
+//! Built-in artifact specs: the pure-Rust mirror of
+//! `python/compile/presets.py` + the spec builders in
+//! `python/compile/model.py`.
+//!
+//! The PJRT path learns shapes from `artifacts/manifest.json`, written by
+//! `aot.py` from these same builders. The host backend has no artifacts
+//! directory, so [`builtin_manifest`] regenerates the identical contract —
+//! preset constants, input/output tensor lists, and the flat state-vector
+//! layout `[ metrics | params | adam_m | adam_v ]` — entirely in Rust. The
+//! two sides can only drift if this file and `model.py` disagree, which the
+//! feature-gated parity tests in `rust/tests/runtime_smoke.rs` guard.
+
+use std::collections::BTreeMap;
+
+use super::manifest::{ArtifactSpec, DType, Manifest, Preset, Role, StateField, StateLayout, TensorSpec};
+
+/// Methods and heads every preset lowers step programs for.
+pub const METHODS: [&str; 3] = ["ft", "lora", "qrlora"];
+pub const HEADS: [&str; 2] = ["cls", "reg"];
+
+/// Preset constants (mirrors `presets.py::PRESETS`).
+pub fn builtin_presets() -> BTreeMap<String, Preset> {
+    let mk = |name: &str,
+              d_model,
+              n_layers,
+              n_heads,
+              d_ff,
+              vocab,
+              max_seq,
+              batch,
+              r_max,
+              r_lora,
+              n_classes| Preset {
+        name: name.to_string(),
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        vocab,
+        max_seq,
+        batch,
+        r_max,
+        r_lora,
+        n_classes,
+    };
+    let mut m = BTreeMap::new();
+    m.insert("tiny".to_string(), mk("tiny", 64, 2, 2, 256, 512, 32, 8, 32, 2, 3));
+    m.insert("small".to_string(), mk("small", 128, 4, 4, 512, 4096, 64, 32, 64, 2, 3));
+    m.insert("mid".to_string(), mk("mid", 256, 6, 8, 1024, 8192, 64, 16, 128, 2, 3));
+    m
+}
+
+/// (name, shape) pair — the unit of the spec lists.
+type NamedShape = (String, Vec<usize>);
+
+/// Ordered backbone parameter list (mirrors `model.py::backbone_specs`).
+pub fn backbone_specs(p: &Preset) -> Vec<NamedShape> {
+    let (d, f, v, s) = (p.d_model, p.d_ff, p.vocab, p.max_seq);
+    let mut specs: Vec<NamedShape> = vec![
+        ("emb/tok".into(), vec![v, d]),
+        ("emb/pos".into(), vec![s, d]),
+        ("emb/type".into(), vec![2, d]),
+        ("emb/ln_g".into(), vec![d]),
+        ("emb/ln_b".into(), vec![d]),
+    ];
+    for i in 0..p.n_layers {
+        for proj in ["wq", "wk", "wv", "wo"] {
+            specs.push((format!("layer{i}/attn/{proj}"), vec![d, d]));
+        }
+        for bias in ["bq", "bk", "bv", "bo"] {
+            specs.push((format!("layer{i}/attn/{bias}"), vec![d]));
+        }
+        specs.push((format!("layer{i}/ln1_g"), vec![d]));
+        specs.push((format!("layer{i}/ln1_b"), vec![d]));
+        specs.push((format!("layer{i}/ffn/w1"), vec![d, f]));
+        specs.push((format!("layer{i}/ffn/b1"), vec![f]));
+        specs.push((format!("layer{i}/ffn/w2"), vec![f, d]));
+        specs.push((format!("layer{i}/ffn/b2"), vec![d]));
+        specs.push((format!("layer{i}/ln2_g"), vec![d]));
+        specs.push((format!("layer{i}/ln2_b"), vec![d]));
+    }
+    specs.push(("mlm/bias".into(), vec![v]));
+    specs
+}
+
+/// Task-head parameters (mirrors `model.py::head_specs`).
+pub fn head_specs(p: &Preset, head: &str) -> Vec<NamedShape> {
+    let d = p.d_model;
+    let k = if head == "cls" { p.n_classes } else { 1 };
+    vec![
+        ("head/wp".into(), vec![d, d]),
+        ("head/bp".into(), vec![d]),
+        ("head/wc".into(), vec![d, k]),
+        ("head/bc".into(), vec![k]),
+    ]
+}
+
+/// (trainable λ, frozen Q/R/mask) specs for QR-LoRA.
+pub fn qr_adapter_specs(p: &Preset) -> (Vec<NamedShape>, Vec<NamedShape>) {
+    let (d, r) = (p.d_model, p.r_max);
+    let mut train = Vec::new();
+    let mut frozen = Vec::new();
+    for i in 0..p.n_layers {
+        for proj in ["wq", "wk", "wv", "wo"] {
+            let base = format!("qr/layer{i}/{proj}");
+            train.push((format!("{base}/lam"), vec![r]));
+            frozen.push((format!("{base}/Q"), vec![d, r]));
+            frozen.push((format!("{base}/R"), vec![r, d]));
+            frozen.push((format!("{base}/mask"), vec![r]));
+        }
+    }
+    (train, frozen)
+}
+
+/// (trainable A/B, frozen scale) specs for LoRA / SVD-LoRA.
+pub fn lora_adapter_specs(p: &Preset) -> (Vec<NamedShape>, Vec<NamedShape>) {
+    let (d, r) = (p.d_model, p.r_lora);
+    let mut train = Vec::new();
+    let mut frozen = Vec::new();
+    for i in 0..p.n_layers {
+        for proj in ["wq", "wv"] {
+            let base = format!("lora/layer{i}/{proj}");
+            train.push((format!("{base}/A"), vec![d, r]));
+            train.push((format!("{base}/B"), vec![r, d]));
+            frozen.push((format!("{base}/scale"), vec![r]));
+        }
+    }
+    (train, frozen)
+}
+
+/// (trainable, frozen) parameter split for a finetune graph.
+pub fn split_specs(p: &Preset, method: &str, head: &str) -> (Vec<NamedShape>, Vec<NamedShape>) {
+    let bb = backbone_specs(p);
+    let hd = head_specs(p, head);
+    match method {
+        "ft" => {
+            let mut t = bb;
+            t.extend(hd);
+            (t, Vec::new())
+        }
+        "lora" => {
+            let (mut at, af) = lora_adapter_specs(p);
+            at.extend(hd);
+            let mut f = bb;
+            f.extend(af);
+            (at, f)
+        }
+        "qrlora" => {
+            let (mut at, af) = qr_adapter_specs(p);
+            at.extend(hd);
+            let mut f = bb;
+            f.extend(af);
+            (at, f)
+        }
+        other => panic!("unknown method {other:?}"),
+    }
+}
+
+/// Per-step batch tensors for task training/eval.
+pub fn batch_specs(p: &Preset, head: &str) -> Vec<(String, Vec<usize>, DType)> {
+    let (b, s) = (p.batch, p.max_seq);
+    let k = if head == "cls" { p.n_classes } else { 1 };
+    let label_dtype = if head == "cls" { DType::I32 } else { DType::F32 };
+    vec![
+        ("batch/input_ids".into(), vec![b, s], DType::I32),
+        ("batch/type_ids".into(), vec![b, s], DType::I32),
+        ("batch/attn_mask".into(), vec![b, s], DType::F32),
+        ("batch/labels".into(), vec![b], label_dtype),
+        ("batch/class_mask".into(), vec![k], DType::F32),
+        ("batch/example_w".into(), vec![b], DType::F32),
+    ]
+}
+
+/// Per-step batch tensors for MLM pretraining.
+pub fn mlm_batch_specs(p: &Preset) -> Vec<(String, Vec<usize>, DType)> {
+    let (b, s) = (p.batch, p.max_seq);
+    vec![
+        ("batch/input_ids".into(), vec![b, s], DType::I32),
+        ("batch/type_ids".into(), vec![b, s], DType::I32),
+        ("batch/attn_mask".into(), vec![b, s], DType::F32),
+        ("batch/mlm_labels".into(), vec![b, s], DType::I32),
+    ]
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Flat state-vector layout (mirrors `model.py::state_layout`):
+/// `[ metrics | params (P) | adam_m (P) | adam_v (P) ]`.
+pub fn state_layout(t_specs: &[NamedShape], metric_specs: &[NamedShape]) -> StateLayout {
+    let mut metrics = Vec::new();
+    let mut off = 0usize;
+    for (n, s) in metric_specs {
+        metrics.push(StateField { name: n.clone(), shape: s.clone(), offset: off });
+        off += numel(s);
+    }
+    let metrics_len = off;
+    let mut params = Vec::new();
+    for (n, s) in t_specs {
+        params.push(StateField { name: n.clone(), shape: s.clone(), offset: off });
+        off += numel(s);
+    }
+    let n_params = off - metrics_len;
+    StateLayout {
+        n_params,
+        metrics_len,
+        total: metrics_len + 3 * n_params,
+        params,
+        metrics,
+    }
+}
+
+fn tensor(name: &str, shape: &[usize], dtype: DType, role: Role) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype,
+        role,
+    }
+}
+
+fn scalar(name: &str) -> TensorSpec {
+    tensor(name, &[], DType::F32, Role::Scalar)
+}
+
+/// Inputs for a train/eval step: state, frozen, batch (+ scalars for train).
+fn step_inputs(
+    layout: &StateLayout,
+    f_specs: &[NamedShape],
+    b_specs: &[(String, Vec<usize>, DType)],
+    with_scalars: bool,
+) -> Vec<TensorSpec> {
+    let mut inputs = vec![tensor("state", &[layout.total], DType::F32, Role::State)];
+    for (n, s) in f_specs {
+        inputs.push(tensor(n, s, DType::F32, Role::Frozen));
+    }
+    for (n, s, d) in b_specs {
+        inputs.push(tensor(n, s, *d, Role::Batch));
+    }
+    if with_scalars {
+        inputs.push(scalar("lr"));
+        inputs.push(scalar("t"));
+    }
+    inputs
+}
+
+fn artifact(
+    preset: &str,
+    kind: &str,
+    inputs: Vec<TensorSpec>,
+    outputs: Vec<TensorSpec>,
+    layout: Option<StateLayout>,
+) -> (String, ArtifactSpec) {
+    let key = format!("{preset}/{kind}");
+    (
+        key.clone(),
+        ArtifactSpec {
+            key,
+            // Host programs are synthesized, not loaded from disk.
+            file: String::new(),
+            preset: preset.to_string(),
+            kind: kind.to_string(),
+            inputs,
+            outputs,
+            state_layout: layout,
+        },
+    )
+}
+
+/// The full built-in manifest: every artifact `aot.py` would lower, for
+/// every built-in preset, with identical keys, shapes, roles, and layouts.
+pub fn builtin_manifest() -> Manifest {
+    let presets = builtin_presets();
+    let mut artifacts = BTreeMap::new();
+
+    for p in presets.values() {
+        let name = p.name.as_str();
+        let metrics_out = |layout: &StateLayout| {
+            vec![tensor("metrics", &[layout.metrics_len], DType::F32, Role::Metric)]
+        };
+        let state_in = |layout: &StateLayout| {
+            vec![tensor("state", &[layout.total], DType::F32, Role::State)]
+        };
+        let state_out = |layout: &StateLayout| {
+            vec![tensor("state", &[layout.total], DType::F32, Role::State)]
+        };
+
+        // --- pretrain ---------------------------------------------------
+        let bb = backbone_specs(p);
+        let pre_layout = state_layout(&bb, &[("loss".into(), vec![])]);
+        let (k, a) = artifact(
+            name,
+            "pretrain_step",
+            step_inputs(&pre_layout, &[], &mlm_batch_specs(p), true),
+            state_out(&pre_layout),
+            Some(pre_layout.clone()),
+        );
+        artifacts.insert(k, a);
+        let (k, a) = artifact(
+            name,
+            "pretrain_metrics",
+            state_in(&pre_layout),
+            metrics_out(&pre_layout),
+            Some(pre_layout.clone()),
+        );
+        artifacts.insert(k, a);
+
+        // --- finetune steps ----------------------------------------------
+        for method in METHODS {
+            for head in HEADS {
+                let (t_specs, f_specs) = split_specs(p, method, head);
+                let kk = if head == "cls" { p.n_classes } else { 1 };
+                let metric_specs: Vec<NamedShape> =
+                    vec![("loss".into(), vec![]), ("logits".into(), vec![p.batch, kk])];
+                let layout = state_layout(&t_specs, &metric_specs);
+                let b_specs = batch_specs(p, head);
+
+                let (key, a) = artifact(
+                    name,
+                    &format!("train_step_{method}_{head}"),
+                    step_inputs(&layout, &f_specs, &b_specs, true),
+                    state_out(&layout),
+                    Some(layout.clone()),
+                );
+                artifacts.insert(key, a);
+
+                let (key, a) = artifact(
+                    name,
+                    &format!("metrics_{method}_{head}"),
+                    state_in(&layout),
+                    metrics_out(&layout),
+                    Some(layout.clone()),
+                );
+                artifacts.insert(key, a);
+
+                let (key, a) = artifact(
+                    name,
+                    &format!("eval_fwd_{method}_{head}"),
+                    step_inputs(&layout, &f_specs, &b_specs, false),
+                    vec![tensor("logits", &[p.batch, kk], DType::F32, Role::Metric)],
+                    Some(layout),
+                );
+                artifacts.insert(key, a);
+            }
+        }
+
+        // --- kernel micro-artifacts --------------------------------------
+        let mm = p.batch * p.max_seq;
+        let (d, r) = (p.d_model, p.r_max);
+        let (key, a) = artifact(
+            name,
+            "kernel_base",
+            vec![
+                tensor("x", &[mm, d], DType::F32, Role::Batch),
+                tensor("w0", &[d, d], DType::F32, Role::Frozen),
+            ],
+            vec![tensor("y", &[mm, d], DType::F32, Role::Metric)],
+            None,
+        );
+        artifacts.insert(key, a);
+        let (key, a) = artifact(
+            name,
+            "kernel_adapter",
+            vec![
+                tensor("x", &[mm, d], DType::F32, Role::Batch),
+                tensor("w0", &[d, d], DType::F32, Role::Frozen),
+                tensor("Q", &[d, r], DType::F32, Role::Frozen),
+                tensor("R", &[r, d], DType::F32, Role::Frozen),
+                tensor("lam", &[r], DType::F32, Role::Train),
+            ],
+            vec![tensor("y", &[mm, d], DType::F32, Role::Metric)],
+            None,
+        );
+        artifacts.insert(key, a);
+    }
+
+    Manifest { presets, artifacts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_has_expected_keys() {
+        let m = builtin_manifest();
+        for key in [
+            "tiny/pretrain_step",
+            "tiny/pretrain_metrics",
+            "tiny/train_step_ft_cls",
+            "tiny/train_step_lora_cls",
+            "tiny/train_step_qrlora_cls",
+            "tiny/train_step_qrlora_reg",
+            "tiny/metrics_qrlora_cls",
+            "tiny/eval_fwd_qrlora_cls",
+            "tiny/kernel_base",
+            "tiny/kernel_adapter",
+            "small/train_step_qrlora_cls",
+            "mid/pretrain_step",
+        ] {
+            assert!(m.artifacts.contains_key(key), "missing {key}");
+        }
+        assert_eq!(m.presets["tiny"].d_model, 64);
+        assert_eq!(m.presets["small"].n_layers, 4);
+    }
+
+    #[test]
+    fn layout_invariants() {
+        let m = builtin_manifest();
+        for (key, a) in &m.artifacts {
+            if let Some(l) = &a.state_layout {
+                assert_eq!(l.total, l.metrics_len + 3 * l.n_params, "{key}");
+                // param offsets are contiguous from metrics_len
+                let mut off = l.metrics_len;
+                for f in &l.params {
+                    assert_eq!(f.offset, off, "{key}: {}", f.name);
+                    off += f.numel();
+                }
+                assert_eq!(off - l.metrics_len, l.n_params, "{key}");
+            }
+        }
+    }
+
+    #[test]
+    fn train_and_eval_share_layout() {
+        let m = builtin_manifest();
+        for method in METHODS {
+            let tr = m.artifacts[&format!("tiny/train_step_{method}_cls")]
+                .state_layout
+                .as_ref()
+                .unwrap();
+            let ev = m.artifacts[&format!("tiny/eval_fwd_{method}_cls")]
+                .state_layout
+                .as_ref()
+                .unwrap();
+            assert_eq!(tr.total, ev.total, "{method}");
+        }
+    }
+
+    #[test]
+    fn qrlora_trainables_are_lambdas_and_head() {
+        let m = builtin_manifest();
+        let l = m.artifacts["tiny/train_step_qrlora_cls"].state_layout.as_ref().unwrap();
+        // 2 layers × 4 projections λ(r_max=32) + head (64·64 + 64 + 64·3 + 3)
+        assert_eq!(l.n_params, 2 * 4 * 32 + 64 * 64 + 64 + 64 * 3 + 3);
+        assert!(l.params.iter().all(|f| f.name.contains("/lam") || f.name.starts_with("head/")));
+    }
+
+    #[test]
+    fn frozen_inputs_cover_backbone_and_factors() {
+        let m = builtin_manifest();
+        let a = &m.artifacts["tiny/train_step_qrlora_cls"];
+        let frozen: Vec<&str> = a
+            .inputs_with_role(Role::Frozen)
+            .map(|(_, t)| t.name.as_str())
+            .collect();
+        assert!(frozen.contains(&"emb/tok"));
+        assert!(frozen.contains(&"layer1/attn/wo"));
+        assert!(frozen.contains(&"qr/layer0/wq/Q"));
+        assert!(frozen.contains(&"qr/layer1/wo/mask"));
+        // batch + scalars present, in aot order (state first, scalars last)
+        assert_eq!(a.inputs[0].role, Role::State);
+        assert_eq!(a.inputs[a.inputs.len() - 2].name, "lr");
+        assert_eq!(a.inputs[a.inputs.len() - 1].name, "t");
+    }
+}

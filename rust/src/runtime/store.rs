@@ -1,75 +1,42 @@
-//! Named device-buffer store + host tensor carrier.
+//! Named buffer store.
 //!
-//! A `BufferStore` holds the device-resident state of one training/eval
+//! A `BufferStore` holds the backend-resident state of one training/eval
 //! session keyed by manifest tensor names. The training loop binds an
 //! artifact's input list against the store, runs the step, then writes the
-//! `train`/`opt_m`/`opt_v` outputs back under the same names — params never
-//! leave the device between steps.
+//! `state`/`train`/`frozen` outputs back under the same names — params
+//! never leave the backend between steps.
 
 use std::collections::HashMap;
 
-use super::{ArtifactSpec, DType, Role, Runtime, TensorSpec};
+use super::backend::{Backend, Buffer, HostTensor};
+use super::manifest::{ArtifactSpec, DType, Role, TensorSpec};
 
-/// Host-side tensor value (upload source / download target).
-#[derive(Clone, Debug)]
-pub enum HostTensor {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl HostTensor {
-    pub fn len(&self) -> usize {
-        match self {
-            HostTensor::F32(v) => v.len(),
-            HostTensor::I32(v) => v.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
-        match self {
-            HostTensor::F32(v) => Ok(v),
-            _ => anyhow::bail!("expected f32 tensor"),
-        }
-    }
-}
-
-/// Named device buffers.
+/// Named backend buffers.
+#[derive(Default)]
 pub struct BufferStore {
-    bufs: HashMap<String, xla::PjRtBuffer>,
-}
-
-impl Default for BufferStore {
-    fn default() -> Self {
-        Self::new()
-    }
+    bufs: HashMap<String, Buffer>,
 }
 
 impl BufferStore {
     pub fn new() -> BufferStore {
-        BufferStore {
-            bufs: HashMap::new(),
-        }
+        BufferStore { bufs: HashMap::new() }
     }
 
     pub fn contains(&self, name: &str) -> bool {
         self.bufs.contains_key(name)
     }
 
-    pub fn get(&self, name: &str) -> anyhow::Result<&xla::PjRtBuffer> {
+    pub fn get(&self, name: &str) -> anyhow::Result<&Buffer> {
         self.bufs
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("buffer {name:?} not in store"))
     }
 
-    pub fn insert(&mut self, name: impl Into<String>, buf: xla::PjRtBuffer) {
+    pub fn insert(&mut self, name: impl Into<String>, buf: Buffer) {
         self.bufs.insert(name.into(), buf);
     }
 
-    pub fn remove(&mut self, name: &str) -> Option<xla::PjRtBuffer> {
+    pub fn remove(&mut self, name: &str) -> Option<Buffer> {
         self.bufs.remove(name)
     }
 
@@ -88,7 +55,7 @@ impl BufferStore {
     /// Upload a host tensor under `name`, checking shape/dtype against spec.
     pub fn upload(
         &mut self,
-        rt: &Runtime,
+        bk: &dyn Backend,
         spec: &TensorSpec,
         value: &HostTensor,
     ) -> anyhow::Result<()> {
@@ -101,8 +68,8 @@ impl BufferStore {
             spec.numel()
         );
         let buf = match (value, spec.dtype) {
-            (HostTensor::F32(v), DType::F32) => rt.upload_f32(v, &spec.shape)?,
-            (HostTensor::I32(v), DType::I32) => rt.upload_i32(v, &spec.shape)?,
+            (HostTensor::F32(v), DType::F32) => bk.upload_f32(v, &spec.shape)?,
+            (HostTensor::I32(v), DType::I32) => bk.upload_i32(v, &spec.shape)?,
             _ => anyhow::bail!("{}: dtype mismatch", spec.name),
         };
         self.bufs.insert(spec.name.clone(), buf);
@@ -111,7 +78,7 @@ impl BufferStore {
 
     /// Assemble the ordered argument list for an artifact from the store.
     /// Every input name must be present.
-    pub fn bind<'a>(&'a self, spec: &ArtifactSpec) -> anyhow::Result<Vec<&'a xla::PjRtBuffer>> {
+    pub fn bind<'a>(&'a self, spec: &ArtifactSpec) -> anyhow::Result<Vec<&'a Buffer>> {
         spec.inputs
             .iter()
             .map(|t| {
@@ -122,14 +89,14 @@ impl BufferStore {
             .collect()
     }
 
-    /// Write step outputs back into the store: `state`/`frozen` roles are
-    /// stored under their names (the state output becomes the next step's
-    /// state input); metric outputs are returned for host download.
+    /// Write step outputs back into the store: `state`/`train`/`frozen`
+    /// roles are stored under their names (the state output becomes the
+    /// next step's state input); metric outputs are returned for download.
     pub fn absorb_outputs(
         &mut self,
         spec: &ArtifactSpec,
-        outs: Vec<xla::PjRtBuffer>,
-    ) -> Vec<(TensorSpec, xla::PjRtBuffer)> {
+        outs: Vec<Buffer>,
+    ) -> Vec<(TensorSpec, Buffer)> {
         let mut metrics = Vec::new();
         for (t, buf) in spec.outputs.iter().zip(outs) {
             match t.role {

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 use crate::data::vocab::{CLS, MASK, N_RESERVED, PAD, SEP};
 use crate::data::{gen_example, Lexicon, ALL_TASKS};
 use crate::model;
-use crate::runtime::{Preset, Role, Runtime};
+use crate::runtime::{Backend, Buffer, Preset, Role};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -93,14 +93,14 @@ impl MlmBatcher {
 
 /// Run MLM pretraining and return the backbone parameter map.
 pub fn pretrain(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset_name: &str,
     lex: &Lexicon,
     steps: usize,
     lr: f64,
     seed: u64,
 ) -> anyhow::Result<(BTreeMap<String, Tensor>, Vec<(usize, f32)>)> {
-    let preset = rt.manifest.preset(preset_name)?.clone();
+    let preset = rt.manifest().preset(preset_name)?.clone();
     let exe = rt.load(&format!("{preset_name}/pretrain_step"))?;
     let exe_metrics = rt.load(&format!("{preset_name}/pretrain_metrics"))?;
     let layout = exe.spec.layout()?.clone();
@@ -133,7 +133,7 @@ pub fn pretrain(
         let lr_b = rt.upload_scalar(lr_now)?;
         let t_b = rt.upload_scalar(step as f32)?;
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        let mut args: Vec<&Buffer> = Vec::new();
         for t in &spec.inputs {
             match (t.role, t.name.as_str()) {
                 (Role::State, _) => args.push(&state_buf),
@@ -146,7 +146,8 @@ pub fn pretrain(
                 (role, name) => anyhow::bail!("unexpected pretrain input {name:?} ({role:?})"),
             }
         }
-        let mut outs = exe.run(&args)?;
+        let mut outs = rt.execute(&exe, &args)?;
+        drop(args);
         state_buf = outs.swap_remove(0);
         if step % 20 == 0 || step == steps || step == 1 {
             let head = rt.read_metrics(&exe_metrics, &state_buf)?;

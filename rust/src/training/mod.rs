@@ -1,8 +1,9 @@
-//! Training + evaluation sessions over the AOT step programs.
+//! Training + evaluation sessions over the step programs of any
+//! [`Backend`] (pure-Rust host interpreter or PJRT AOT graphs).
 //!
-//! A `Session` owns the device-resident training state and drives it with
-//! batches: one PJRT `execute_b` per step, state never leaving the device.
-//! Higher-level drivers implement the paper's pipeline:
+//! A `Session` owns the backend-resident training state and drives it with
+//! batches: one `Backend::execute` per step, state never leaving the
+//! backend. Higher-level drivers implement the paper's pipeline:
 //!
 //!   pretrain (MLM) → warm-up FT on the task → freeze → adapter training
 //!
@@ -19,13 +20,13 @@ use std::collections::BTreeMap;
 use crate::adapters::{LoraAdapterSet, QrAdapterSet};
 use crate::data::{metric_kind, Batcher, HeadKind, Lexicon, Split, TaskData};
 use crate::metrics::EvalResult;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Everything needed to fine-tune one (task, method) pair.
 pub struct FinetuneJob<'a> {
-    pub rt: &'a Runtime,
+    pub rt: &'a dyn Backend,
     pub preset: &'a str,
     pub task: &'a TaskData,
     pub lexicon: &'a Lexicon,
@@ -58,7 +59,7 @@ impl RunResult {
 
 /// Run one fine-tuning job with a given method.
 pub fn run_finetune(job: &FinetuneJob, method: &Method) -> anyhow::Result<RunResult> {
-    let preset = job.rt.manifest.preset(job.preset)?.clone();
+    let preset = job.rt.manifest().preset(job.preset)?.clone();
     let head_kind = job.task.spec.head;
     let mut session = Session::finetune(
         job.rt,
@@ -124,14 +125,14 @@ pub fn run_finetune(job: &FinetuneJob, method: &Method) -> anyhow::Result<RunRes
 /// backbone and the trained task head (the paper warm-up fine-tunes for
 /// three epochs before attaching adapters).
 pub fn warmup(
-    rt: &Runtime,
+    rt: &dyn Backend,
     preset_name: &str,
     task: &TaskData,
     backbone: &BTreeMap<String, Tensor>,
     cfg: &TrainConfig,
     seed: u64,
 ) -> anyhow::Result<(BTreeMap<String, Tensor>, BTreeMap<String, Tensor>)> {
-    let preset = rt.manifest.preset(preset_name)?.clone();
+    let preset = rt.manifest().preset(preset_name)?.clone();
     let head_kind = task.spec.head;
     let method = Method::FullFt;
     let mut session =

@@ -1,5 +1,9 @@
-//! A training/eval session: device-resident state + frozen inputs + the
+//! A training/eval session: backend-resident state + frozen inputs + the
 //! step/eval executables for one (preset, method, head) triple.
+//!
+//! Generic over [`Backend`]: on PJRT the state buffer is device-resident
+//! and steps are single `execute` calls; on the host backend the same
+//! protocol runs through the pure-Rust interpreter.
 
 use std::collections::BTreeMap;
 use std::rc::Rc;
@@ -8,7 +12,7 @@ use crate::adapters::{LoraAdapterSet, QrAdapterSet};
 use crate::data::{Batch, Batcher, HeadKind, Split, TaskData};
 use crate::metrics::{argmax, EvalResult};
 use crate::model;
-use crate::runtime::{DType, Executable, Preset, Role, Runtime, StateLayout};
+use crate::runtime::{Backend, Buffer, DType, Executable, Preset, Role, StateLayout};
 use crate::tensor::Tensor;
 
 /// Fine-tuning method descriptor (adapter state included).
@@ -78,15 +82,15 @@ pub struct EvalOutput {
 
 /// One live training session.
 pub struct Session<'a> {
-    rt: &'a Runtime,
+    bk: &'a dyn Backend,
     preset: Preset,
     exe_train: Rc<Executable>,
     exe_metrics: Rc<Executable>,
     exe_eval: Rc<Executable>,
     layout: StateLayout,
-    state_buf: xla::PjRtBuffer,
+    state_buf: Buffer,
     /// Frozen inputs in artifact order (train program).
-    frozen: Vec<(String, xla::PjRtBuffer)>,
+    frozen: Vec<(String, Buffer)>,
     head_kind: HeadKind,
     method_label: String,
     trainable: usize,
@@ -97,7 +101,7 @@ impl<'a> Session<'a> {
     /// Assemble a fine-tune session: state init (+ adapter/backbone
     /// placement), frozen uploads, executable loading.
     pub fn finetune(
-        rt: &'a Runtime,
+        bk: &'a dyn Backend,
         preset: &Preset,
         method: &Method,
         head_kind: HeadKind,
@@ -113,9 +117,9 @@ impl<'a> Session<'a> {
         let key_train = format!("{}/train_step_{}_{}", preset.name, mname, suffix);
         let key_metrics = format!("{}/metrics_{}_{}", preset.name, mname, suffix);
         let key_eval = format!("{}/eval_fwd_{}_{}", preset.name, mname, suffix);
-        let exe_train = rt.load(&key_train)?;
-        let exe_metrics = rt.load(&key_metrics)?;
-        let exe_eval = rt.load(&key_eval)?;
+        let exe_train = bk.load(&key_train)?;
+        let exe_metrics = bk.load(&key_metrics)?;
+        let exe_eval = bk.load(&key_eval)?;
         let layout = exe_train.spec.layout()?.clone();
 
         // --- state vector -------------------------------------------------
@@ -143,7 +147,7 @@ impl<'a> Session<'a> {
                 }
             }
         }
-        let state_buf = rt.upload_f32(&state, &[layout.total])?;
+        let state_buf = bk.upload_f32(&state, &[layout.total])?;
 
         // --- frozen inputs -------------------------------------------------
         let mut frozen_values: BTreeMap<String, Vec<f32>> = BTreeMap::new();
@@ -179,7 +183,7 @@ impl<'a> Session<'a> {
                 v.len(),
                 t.numel()
             );
-            frozen.push((t.name.clone(), rt.upload_f32(&v, &t.shape)?));
+            frozen.push((t.name.clone(), bk.upload_f32(&v, &t.shape)?));
         }
 
         let trainable = match method {
@@ -189,7 +193,7 @@ impl<'a> Session<'a> {
         };
 
         Ok(Session {
-            rt,
+            bk,
             preset: preset.clone(),
             exe_train,
             exe_metrics,
@@ -208,6 +212,11 @@ impl<'a> Session<'a> {
         &self.method_label
     }
 
+    /// The backend this session runs on.
+    pub fn backend(&self) -> &'a dyn Backend {
+        self.bk
+    }
+
     /// Adapter (or full) trainable parameter count, paper convention
     /// (task head excluded for adapter methods).
     pub fn trainable_params(&self) -> usize {
@@ -222,13 +231,13 @@ impl<'a> Session<'a> {
         &self.layout
     }
 
-    /// Upload the batch tensors for the train program, in artifact order.
+    /// Upload the batch tensors for a program, in artifact order.
     fn batch_buffers(
         &self,
         spec: &crate::runtime::ArtifactSpec,
         batch: &Batch,
         n_classes: usize,
-    ) -> anyhow::Result<Vec<(String, xla::PjRtBuffer)>> {
+    ) -> anyhow::Result<Vec<(String, Buffer)>> {
         let k = if self.head_kind == HeadKind::Cls {
             self.preset.n_classes
         } else {
@@ -237,17 +246,17 @@ impl<'a> Session<'a> {
         let mut out = Vec::new();
         for (_, t) in spec.inputs_with_role(Role::Batch) {
             let buf = match t.name.as_str() {
-                "batch/input_ids" => self.rt.upload_i32(&batch.input_ids, &t.shape)?,
-                "batch/type_ids" => self.rt.upload_i32(&batch.type_ids, &t.shape)?,
-                "batch/attn_mask" => self.rt.upload_f32(&batch.attn_mask, &t.shape)?,
+                "batch/input_ids" => self.bk.upload_i32(&batch.input_ids, &t.shape)?,
+                "batch/type_ids" => self.bk.upload_i32(&batch.type_ids, &t.shape)?,
+                "batch/attn_mask" => self.bk.upload_f32(&batch.attn_mask, &t.shape)?,
                 "batch/labels" => match t.dtype {
-                    DType::I32 => self.rt.upload_i32(&batch.labels_i32, &t.shape)?,
-                    DType::F32 => self.rt.upload_f32(&batch.labels_f32, &t.shape)?,
+                    DType::I32 => self.bk.upload_i32(&batch.labels_i32, &t.shape)?,
+                    DType::F32 => self.bk.upload_f32(&batch.labels_f32, &t.shape)?,
                 },
                 "batch/class_mask" => {
-                    self.rt.upload_f32(&Batcher::class_mask(n_classes, k), &t.shape)?
+                    self.bk.upload_f32(&Batcher::class_mask(n_classes, k), &t.shape)?
                 }
-                "batch/example_w" => self.rt.upload_f32(&batch.example_w, &t.shape)?,
+                "batch/example_w" => self.bk.upload_f32(&batch.example_w, &t.shape)?,
                 other => anyhow::bail!("unexpected batch input {other:?}"),
             };
             out.push((t.name.clone(), buf));
@@ -255,15 +264,15 @@ impl<'a> Session<'a> {
         Ok(out)
     }
 
-    /// One training step (single PJRT call; state stays on device).
+    /// One training step (single backend call; state stays resident).
     pub fn step(&mut self, batch: &Batch, n_classes: usize, lr: f32) -> anyhow::Result<()> {
         self.t += 1;
         let spec = self.exe_train.spec.clone();
         let batch_bufs = self.batch_buffers(&spec, batch, n_classes)?;
-        let lr_buf = self.rt.upload_scalar(lr)?;
-        let t_buf = self.rt.upload_scalar(self.t as f32)?;
+        let lr_buf = self.bk.upload_scalar(lr)?;
+        let t_buf = self.bk.upload_scalar(self.t as f32)?;
 
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(spec.inputs.len());
+        let mut args: Vec<&Buffer> = Vec::with_capacity(spec.inputs.len());
         for t in &spec.inputs {
             match t.role {
                 Role::State => args.push(&self.state_buf),
@@ -292,21 +301,22 @@ impl<'a> Session<'a> {
                 other => anyhow::bail!("unexpected input role {other:?}"),
             }
         }
-        let mut outs = self.exe_train.run(&args)?;
+        let mut outs = self.bk.execute(&self.exe_train, &args)?;
+        drop(args);
         self.state_buf = outs.swap_remove(0);
         Ok(())
     }
 
     /// Loss recorded by the most recent step.
     pub fn last_loss(&self) -> anyhow::Result<f32> {
-        let head = self.rt.read_metrics(&self.exe_metrics, &self.state_buf)?;
+        let head = self.bk.read_metrics(&self.exe_metrics, &self.state_buf)?;
         let f = self.layout.metric("loss")?;
         Ok(head[f.offset])
     }
 
     /// Logits recorded by the most recent step (B×K row-major).
     pub fn last_logits(&self) -> anyhow::Result<Vec<f32>> {
-        let head = self.rt.read_metrics(&self.exe_metrics, &self.state_buf)?;
+        let head = self.bk.read_metrics(&self.exe_metrics, &self.state_buf)?;
         let f = self.layout.metric("logits")?;
         Ok(head[f.offset..f.offset + f.numel()].to_vec())
     }
@@ -315,7 +325,7 @@ impl<'a> Session<'a> {
     pub fn forward(&self, batch: &Batch, n_classes: usize) -> anyhow::Result<Vec<f32>> {
         let spec = self.exe_eval.spec.clone();
         let batch_bufs = self.batch_buffers(&spec, batch, n_classes)?;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(spec.inputs.len());
+        let mut args: Vec<&Buffer> = Vec::with_capacity(spec.inputs.len());
         for t in &spec.inputs {
             match t.role {
                 Role::State => args.push(&self.state_buf),
@@ -328,8 +338,9 @@ impl<'a> Session<'a> {
                 other => anyhow::bail!("unexpected eval input role {other:?}"),
             }
         }
-        let outs = self.exe_eval.run(&args)?;
-        self.rt.download_f32(&outs[0])
+        let outs = self.bk.execute(&self.exe_eval, &args)?;
+        drop(args);
+        self.bk.download_f32(&outs[0])
     }
 
     /// Evaluate a dataset split with the task's metrics.
@@ -379,19 +390,19 @@ impl<'a> Session<'a> {
 
     /// Download the trainable parameter region as named tensors.
     pub fn download_params(&self) -> anyhow::Result<BTreeMap<String, Tensor>> {
-        let state = self.rt.download_f32(&self.state_buf)?;
+        let state = self.bk.download_f32(&self.state_buf)?;
         Ok(model::extract_all(&state, &self.layout))
     }
 
     /// Download the raw state vector (checkpointing).
     pub fn download_state(&self) -> anyhow::Result<Vec<f32>> {
-        self.rt.download_f32(&self.state_buf)
+        self.bk.download_f32(&self.state_buf)
     }
 
     /// Restore a previously saved state vector.
     pub fn upload_state(&mut self, state: &[f32]) -> anyhow::Result<()> {
         anyhow::ensure!(state.len() == self.layout.total, "state length mismatch");
-        self.state_buf = self.rt.upload_f32(state, &[self.layout.total])?;
+        self.state_buf = self.bk.upload_f32(state, &[self.layout.total])?;
         Ok(())
     }
 }

@@ -1,0 +1,146 @@
+//! Property tests for `linalg::qr` — the numerical backbone of QR-LoRA.
+//!
+//! Properties pinned here (over random tall/wide/square/rank-deficient/zero
+//! matrices):
+//!  1. Q orthonormality: ‖QᵀQ − I‖∞ small.
+//!  2. Pivoting orders the diagonal: |R₀₀| ≥ |R₁₁| ≥ … (monotone
+//!     non-increasing).
+//!  3. Exact reconstruction: Q·R̃ ≈ A in the original column order.
+//!  4. Truncation quality: the rank-r residual ‖A − Q_r R̃_r‖_F is within a
+//!     modest factor of the SVD rank-r residual (the optimal one) — the
+//!     quasi-optimality that justifies using pivoted QR instead of SVD for
+//!     basis extraction.
+
+use qrlora::linalg::{jacobi_svd, orthonormality_defect, pivoted_qr};
+use qrlora::tensor::Tensor;
+use qrlora::util::rng::Rng;
+
+fn fro_residual(a: &Tensor, approx: &Tensor) -> f64 {
+    let mut diff = a.clone();
+    for (d, ap) in diff.data.iter_mut().zip(&approx.data) {
+        *d -= ap;
+    }
+    diff.fro_norm()
+}
+
+fn case_matrices(rng: &mut Rng) -> Vec<(String, Tensor)> {
+    let mut out = Vec::new();
+    // tall, wide, square
+    for (m, n) in [(24usize, 8usize), (8, 24), (16, 16)] {
+        out.push((format!("dense {m}x{n}"), Tensor::randn(&[m, n], rng, 1.0)));
+    }
+    // rank-deficient: 20×20 of rank 4
+    let u = Tensor::randn(&[20, 4], rng, 1.0);
+    let v = Tensor::randn(&[4, 20], rng, 1.0);
+    out.push(("rank-4 20x20".to_string(), u.matmul(&v)));
+    // graded column scales (pivoting stress)
+    let mut g = Tensor::randn(&[12, 12], rng, 1.0);
+    for j in 0..12 {
+        let s = 10f32.powi(-((j % 6) as i32));
+        for i in 0..12 {
+            g.set(i, j, g.at(i, j) * s);
+        }
+    }
+    out.push(("graded 12x12".to_string(), g));
+    // zero matrix
+    out.push(("zero 6x6".to_string(), Tensor::zeros(&[6, 6])));
+    out
+}
+
+#[test]
+fn q_columns_are_orthonormal() {
+    let mut rng = Rng::new(100);
+    for (name, a) in case_matrices(&mut rng) {
+        let f = pivoted_qr(&a);
+        // Zero (or rank-deficient) columns yield zero Q columns; check the
+        // defect only over the numerically nonzero prefix.
+        let diag = f.diag();
+        let r_nonzero = diag.iter().take_while(|d| d.abs() > 1e-5).count();
+        if r_nonzero == 0 {
+            continue; // zero matrix: nothing to be orthonormal
+        }
+        let q = f.q.slice_cols(0, r_nonzero);
+        let defect = orthonormality_defect(&q);
+        assert!(defect < 1e-3, "{name}: orthonormality defect {defect}");
+    }
+}
+
+#[test]
+fn pivoted_diag_is_monotone_nonincreasing() {
+    let mut rng = Rng::new(101);
+    for (name, a) in case_matrices(&mut rng) {
+        let d = pivoted_qr(&a).diag();
+        for i in 1..d.len() {
+            assert!(
+                d[i].abs() <= d[i - 1].abs() * (1.0 + 1e-3) + 1e-6,
+                "{name}: |diag| not monotone at {i}: {} > {}",
+                d[i].abs(),
+                d[i - 1].abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn reconstruction_is_exact_at_full_rank() {
+    let mut rng = Rng::new(102);
+    for (name, a) in case_matrices(&mut rng) {
+        let f = pivoted_qr(&a);
+        let err = f.reconstruct().max_abs_diff(&a);
+        let scale = a.data.iter().fold(0f32, |acc, v| acc.max(v.abs())).max(1.0);
+        assert!(err < 5e-4 * scale, "{name}: reconstruction error {err}");
+    }
+}
+
+#[test]
+fn truncation_residual_is_quasi_optimal_vs_svd() {
+    // SVD truncation is the Frobenius-optimal rank-r approximation; pivoted
+    // QR must stay within a modest factor of it (strong RRQR theory gives
+    // sqrt(1 + r(n−r)) worst case; random matrices behave far better).
+    let mut rng = Rng::new(103);
+    for trial in 0..3 {
+        let n = 16usize;
+        let a = Tensor::randn(&[n, n], &mut rng, 1.0);
+        let f = pivoted_qr(&a);
+        let svd = jacobi_svd(&a);
+        for r in [2usize, 4, 8, 12] {
+            let (q_r, r_r) = f.truncate(r);
+            let qr_res = fro_residual(&a, &q_r.matmul(&r_r));
+            // optimal residual = sqrt(Σ_{i>r} σ_i²)
+            let svd_res: f64 = svd.s[r..]
+                .iter()
+                .map(|&s| (s as f64) * (s as f64))
+                .sum::<f64>()
+                .sqrt();
+            let factor = (1.0 + (r * (n - r)) as f64).sqrt();
+            assert!(
+                qr_res <= svd_res * factor + 1e-3,
+                "trial {trial} r={r}: QR residual {qr_res:.4} vs SVD {svd_res:.4} \
+                 (allowed factor {factor:.2})"
+            );
+        }
+        // and rank-deficient input: truncating at the true rank is exact
+        let u = Tensor::randn(&[n, 3], &mut rng, 1.0);
+        let v = Tensor::randn(&[3, n], &mut rng, 1.0);
+        let low = u.matmul(&v);
+        let lf = pivoted_qr(&low);
+        let (q3, r3) = lf.truncate(3);
+        let res = fro_residual(&low, &q3.matmul(&r3));
+        assert!(res < 1e-2, "trial {trial}: rank-3 truncation residual {res}");
+    }
+}
+
+#[test]
+fn truncation_residual_monotone_in_rank() {
+    let mut rng = Rng::new(104);
+    let a = Tensor::randn(&[20, 20], &mut rng, 1.0);
+    let f = pivoted_qr(&a);
+    let mut last = f64::INFINITY;
+    for r in 1..=20 {
+        let (q_r, r_r) = f.truncate(r);
+        let res = fro_residual(&a, &q_r.matmul(&r_r));
+        assert!(res <= last + 1e-3, "residual rose at r={r}: {res} > {last}");
+        last = res;
+    }
+    assert!(last < 1e-2, "full-rank residual {last}");
+}

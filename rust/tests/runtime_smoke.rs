@@ -1,22 +1,24 @@
-//! Integration: manifest-driven artifact loading + PJRT execution, checked
-//! against the host-side tensor math. Requires `make artifacts`.
+//! Integration: manifest-driven artifact loading + execution through the
+//! backend abstraction, checked against the host-side tensor math.
+//!
+//! Runs against `HostBackend` by default — hermetic, no `make artifacts`
+//! needed. The `pjrt_parity` module (cargo feature `pjrt`, `#[ignore]` by
+//! default) compares host vs device outputs to ≤1e-3 when real PJRT
+//! artifacts are present.
 
-use qrlora::runtime::{DType, HostTensor, Role, Runtime};
+use qrlora::runtime::{
+    create_backend, Backend, BackendChoice, Buffer, DType, HostBackend, HostTensor, Manifest, Role,
+};
 use qrlora::tensor::Tensor;
 use qrlora::util::rng::Rng;
-use std::path::Path;
 
-fn artifacts_dir() -> &'static Path {
-    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
-}
-
-fn runtime() -> Runtime {
-    Runtime::new(artifacts_dir()).expect("run `make artifacts` first")
+fn backend() -> HostBackend {
+    HostBackend::new()
 }
 
 #[test]
 fn kernel_base_matches_host_matmul() {
-    let rt = runtime();
+    let rt = backend();
     let exe = rt.load("tiny/kernel_base").unwrap();
     let spec = &exe.spec;
     let (m, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
@@ -28,21 +30,21 @@ fn kernel_base_matches_host_matmul() {
 
     let xb = rt.upload_f32(&x.data, &[m, k]).unwrap();
     let wb = rt.upload_f32(&w.data, &[k, n]).unwrap();
-    let outs = exe.run(&[&xb, &wb]).unwrap();
+    let outs = rt.execute(&exe, &[&xb, &wb]).unwrap();
     assert_eq!(outs.len(), 1);
     let got = rt.download_f32(&outs[0]).unwrap();
     let want = x.matmul(&w);
     let got = Tensor::from_vec(&[m, n], got);
     assert!(
         got.max_abs_diff(&want) < 1e-3,
-        "device/host mismatch: {}",
+        "backend/host mismatch: {}",
         got.max_abs_diff(&want)
     );
 }
 
 #[test]
 fn kernel_adapter_matches_host_fused() {
-    let rt = runtime();
+    let rt = backend();
     let exe = rt.load("tiny/kernel_adapter").unwrap();
     let spec = &exe.spec;
     let (m, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
@@ -74,22 +76,22 @@ fn kernel_adapter_matches_host_fused() {
         rt.upload_f32(&rr.data, &[r, n]).unwrap(),
         rt.upload_f32(&lam, &[r]).unwrap(),
     ];
-    let refs: Vec<&xla::PjRtBuffer> = args.iter().collect();
-    let outs = exe.run(&refs).unwrap();
+    let refs: Vec<&Buffer> = args.iter().collect();
+    let outs = rt.execute(&exe, &refs).unwrap();
     let got = Tensor::from_vec(&[m, n], rt.download_f32(&outs[0]).unwrap());
     assert!(
         got.max_abs_diff(&want) < 1e-2,
-        "device/host mismatch: {}",
+        "backend/host mismatch: {}",
         got.max_abs_diff(&want)
     );
 }
 
 /// Build zero-ish host inputs for every non-state input of a step artifact.
 fn default_inputs(
-    rt: &Runtime,
+    rt: &dyn Backend,
     spec: &qrlora::runtime::ArtifactSpec,
     rng: &mut Rng,
-) -> Vec<(String, xla::PjRtBuffer)> {
+) -> Vec<(String, Buffer)> {
     let mut out = Vec::new();
     for t in &spec.inputs {
         if t.role == Role::State {
@@ -97,11 +99,7 @@ fn default_inputs(
         }
         let buf = match t.dtype {
             DType::I32 => {
-                let hi: i32 = if t.name.contains("input_ids") {
-                    64
-                } else {
-                    2
-                };
+                let hi: i32 = if t.name.contains("input_ids") { 64 } else { 2 };
                 let v: Vec<i32> = (0..t.numel()).map(|_| rng.below(hi as usize) as i32).collect();
                 rt.upload_i32(&v, &t.shape).unwrap()
             }
@@ -129,7 +127,7 @@ fn default_inputs(
 
 #[test]
 fn train_step_qrlora_runs_and_loss_improves() {
-    let rt = runtime();
+    let rt = backend();
     let exe = rt.load("tiny/train_step_qrlora_cls").unwrap();
     let spec = exe.spec.clone();
     let layout = spec.layout().unwrap();
@@ -149,7 +147,7 @@ fn train_step_qrlora_runs_and_loss_improves() {
     let mut losses = Vec::new();
     for step in 1..=8 {
         let t_buf = rt.upload_scalar(step as f32).unwrap();
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        let mut args: Vec<&Buffer> = Vec::new();
         for t in &spec.inputs {
             if t.role == Role::State {
                 args.push(&state_buf);
@@ -159,7 +157,8 @@ fn train_step_qrlora_runs_and_loss_improves() {
                 args.push(&rest.iter().find(|(n, _)| n == &t.name).unwrap().1);
             }
         }
-        let mut outs = exe.run(&args).unwrap();
+        let mut outs = rt.execute(&exe, &args).unwrap();
+        drop(args);
         state_buf = outs.swap_remove(0);
         let loss_field = layout.metric("loss").unwrap();
         assert_eq!(loss_field.offset, 0, "loss must lead the metrics head");
@@ -175,9 +174,9 @@ fn train_step_qrlora_runs_and_loss_improves() {
 
 #[test]
 fn metrics_slice_matches_full_download() {
-    // Pin the offset semantics of copy_raw_to_host_sync (bytes) against a
-    // full to_literal_sync download.
-    let rt = runtime();
+    // Pin the metrics-head protocol: the paired metrics program must return
+    // exactly the leading slice of the full state vector.
+    let rt = backend();
     let exe = rt.load("tiny/train_step_qrlora_cls").unwrap();
     let spec = exe.spec.clone();
     let layout = spec.layout().unwrap();
@@ -191,7 +190,7 @@ fn metrics_slice_matches_full_download() {
     }
     let state_buf = rt.upload_f32(&state, &[layout.total]).unwrap();
     let rest = default_inputs(&rt, &spec, &mut rng);
-    let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+    let mut args: Vec<&Buffer> = Vec::new();
     for t in &spec.inputs {
         if t.role == Role::State {
             args.push(&state_buf);
@@ -199,7 +198,8 @@ fn metrics_slice_matches_full_download() {
             args.push(&rest.iter().find(|(n, _)| n == &t.name).unwrap().1);
         }
     }
-    let outs = exe.run(&args).unwrap();
+    let outs = rt.execute(&exe, &args).unwrap();
+    drop(args);
     let full = rt.download_f32(&outs[0]).unwrap();
     let len = layout.metrics_len;
     let metrics_exe = rt.load("tiny/metrics_qrlora_cls").unwrap();
@@ -212,7 +212,7 @@ fn metrics_slice_matches_full_download() {
 
 #[test]
 fn buffer_store_binds_and_absorbs() {
-    let rt = runtime();
+    let rt = backend();
     let exe = rt.load("tiny/kernel_base").unwrap();
     let spec = exe.spec.clone();
 
@@ -223,7 +223,8 @@ fn buffer_store_binds_and_absorbs() {
         store.upload(&rt, t, &HostTensor::F32(v)).unwrap();
     }
     let args = store.bind(&spec).unwrap();
-    let outs = exe.run(&args).unwrap();
+    let outs = rt.execute(&exe, &args).unwrap();
+    drop(args);
     let metrics = store.absorb_outputs(&spec, outs);
     assert_eq!(metrics.len(), 1); // 'y' is role=metric
     assert_eq!(metrics[0].0.name, "y");
@@ -231,7 +232,7 @@ fn buffer_store_binds_and_absorbs() {
 
 #[test]
 fn missing_input_is_reported_by_name() {
-    let rt = runtime();
+    let rt = backend();
     let exe = rt.load("tiny/kernel_base").unwrap();
     let store = qrlora::runtime::BufferStore::new();
     let err = match store.bind(&exe.spec) {
@@ -243,7 +244,8 @@ fn missing_input_is_reported_by_name() {
 
 #[test]
 fn manifest_covers_expected_artifacts() {
-    let rt = runtime();
+    let m = Manifest::builtin();
+    let rt = backend();
     for key in [
         "tiny/pretrain_step",
         "tiny/train_step_ft_cls",
@@ -253,11 +255,7 @@ fn manifest_covers_expected_artifacts() {
         "tiny/eval_fwd_qrlora_cls",
         "small/train_step_qrlora_cls",
     ] {
-        let a = rt.manifest.artifact(key).unwrap();
-        assert!(
-            artifacts_dir().join(&a.file).exists(),
-            "{key}: file missing"
-        );
+        let a = m.artifact(key).unwrap();
         assert!(!a.inputs.is_empty());
         assert!(!a.outputs.is_empty());
         if key.contains("step") {
@@ -266,6 +264,8 @@ fn manifest_covers_expected_artifacts() {
             assert_eq!(a.inputs[0].role, Role::State);
             assert_eq!(a.inputs[0].shape, vec![layout.total]);
         }
+        // ...and the host backend can actually load every one of them.
+        rt.load(key).unwrap();
     }
 }
 
@@ -274,20 +274,151 @@ fn eval_accepts_train_state_layout() {
     // The eval program's state input must have the same total length as the
     // train program's — that's what lets the live training buffer be
     // evaluated without repacking.
-    let rt = runtime();
+    let m = Manifest::builtin();
     for method in ["ft", "lora", "qrlora"] {
-        let tr = rt
-            .manifest
-            .artifact(&format!("tiny/train_step_{method}_cls"))
-            .unwrap();
-        let ev = rt
-            .manifest
-            .artifact(&format!("tiny/eval_fwd_{method}_cls"))
-            .unwrap();
+        let tr = m.artifact(&format!("tiny/train_step_{method}_cls")).unwrap();
+        let ev = m.artifact(&format!("tiny/eval_fwd_{method}_cls")).unwrap();
         assert_eq!(
             tr.layout().unwrap().total,
             ev.layout().unwrap().total,
             "{method}: train/eval state layout drift"
         );
+    }
+}
+
+#[test]
+fn backend_selection_auto_falls_back_to_host() {
+    // A clean checkout has no artifacts directory: auto must yield host.
+    let bk = create_backend(
+        BackendChoice::Auto,
+        std::path::Path::new("definitely-not-an-artifacts-dir"),
+    )
+    .unwrap();
+    assert_eq!(bk.name(), "host");
+    // Explicit host always works.
+    let bk = create_backend(BackendChoice::Host, std::path::Path::new("artifacts")).unwrap();
+    assert_eq!(bk.name(), "host");
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_without_feature_is_a_clear_error() {
+    let err = create_backend(BackendChoice::Pjrt, std::path::Path::new("artifacts"))
+        .err()
+        .expect("pjrt choice must fail without the feature");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pjrt"), "{msg}");
+}
+
+/// Host-vs-device parity: requires a real xla crate + `make artifacts`.
+/// Run with `cargo test --features pjrt -- --ignored`.
+#[cfg(feature = "pjrt")]
+mod pjrt_parity {
+    use super::*;
+    use qrlora::runtime::PjrtBackend;
+    use std::path::Path;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    #[ignore = "requires real PJRT artifacts (make artifacts) and the real xla crate"]
+    fn kernels_match_host_backend() {
+        let dev = PjrtBackend::new(&artifacts_dir()).expect("run `make artifacts` first");
+        let host = HostBackend::new();
+        let mut rng = Rng::new(4242);
+        for key in ["tiny/kernel_base", "tiny/kernel_adapter"] {
+            let dexe = dev.load(key).unwrap();
+            let hexe = host.load(key).unwrap();
+            let values: Vec<Vec<f32>> = dexe
+                .spec
+                .inputs
+                .iter()
+                .map(|t| (0..t.numel()).map(|_| rng.normal() * 0.3).collect())
+                .collect();
+            let dargs: Vec<Buffer> = dexe
+                .spec
+                .inputs
+                .iter()
+                .zip(&values)
+                .map(|(t, v)| dev.upload_f32(v, &t.shape).unwrap())
+                .collect();
+            let hargs: Vec<Buffer> = hexe
+                .spec
+                .inputs
+                .iter()
+                .zip(&values)
+                .map(|(t, v)| host.upload_f32(v, &t.shape).unwrap())
+                .collect();
+            let drefs: Vec<&Buffer> = dargs.iter().collect();
+            let hrefs: Vec<&Buffer> = hargs.iter().collect();
+            let dout = dev.download_f32(&dev.execute(&dexe, &drefs).unwrap()[0]).unwrap();
+            let hout = host.download_f32(&host.execute(&hexe, &hrefs).unwrap()[0]).unwrap();
+            let worst = dout
+                .iter()
+                .zip(&hout)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(worst <= 1e-3, "{key}: host/device divergence {worst}");
+        }
+    }
+
+    #[test]
+    #[ignore = "requires real PJRT artifacts (make artifacts) and the real xla crate"]
+    fn train_step_matches_host_backend() {
+        let dev = PjrtBackend::new(&artifacts_dir()).expect("run `make artifacts` first");
+        let host = HostBackend::new();
+        let key = "tiny/train_step_qrlora_cls";
+        let dexe = dev.load(key).unwrap();
+        let hexe = host.load(key).unwrap();
+        let layout = hexe.spec.layout().unwrap();
+
+        let mut rng = Rng::new(77);
+        let mut state = vec![0f32; layout.total];
+        for f in &layout.params {
+            for i in 0..f.numel() {
+                state[f.offset + i] = rng.normal() * 0.05;
+            }
+        }
+        // identical non-state inputs on both backends
+        let mut host_rng = rng.clone();
+        let dinputs = super::default_inputs(&dev, &dexe.spec, &mut rng);
+        let hinputs = super::default_inputs(&host, &hexe.spec, &mut host_rng);
+        let dstate = dev.upload_f32(&state, &[layout.total]).unwrap();
+        let hstate = host.upload_f32(&state, &[layout.total]).unwrap();
+
+        let dargs: Vec<&Buffer> = dexe
+            .spec
+            .inputs
+            .iter()
+            .map(|t| {
+                if t.role == Role::State {
+                    &dstate
+                } else {
+                    &dinputs.iter().find(|(n, _)| n == &t.name).unwrap().1
+                }
+            })
+            .collect();
+        let hargs: Vec<&Buffer> = hexe
+            .spec
+            .inputs
+            .iter()
+            .map(|t| {
+                if t.role == Role::State {
+                    &hstate
+                } else {
+                    &hinputs.iter().find(|(n, _)| n == &t.name).unwrap().1
+                }
+            })
+            .collect();
+        let dnext = dev.download_f32(&dev.execute(&dexe, &dargs).unwrap()[0]).unwrap();
+        let hnext = host.download_f32(&host.execute(&hexe, &hargs).unwrap()[0]).unwrap();
+        let worst = dnext
+            .iter()
+            .zip(&hnext)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(worst <= 1e-3, "{key}: post-step state divergence {worst}");
     }
 }

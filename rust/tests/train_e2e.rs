@@ -1,17 +1,15 @@
 //! End-to-end integration on the tiny preset: pretrain → warmup → adapter
-//! fine-tune → eval, across all three methods. Requires `make artifacts`.
-
-use std::path::Path;
+//! fine-tune → eval, across all three methods — hermetically on the
+//! pure-Rust `HostBackend` (no `make artifacts` needed).
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::{task, Lexicon, TaskData};
 use qrlora::linalg::RankRule;
-use qrlora::runtime::Runtime;
+use qrlora::runtime::{Backend, HostBackend};
 use qrlora::training::{self, FinetuneJob, Method, Methods, TrainConfig};
 
-fn runtime() -> Runtime {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Runtime::new(&dir).expect("run `make artifacts` first")
+fn backend() -> HostBackend {
+    HostBackend::new()
 }
 
 fn tiny_cfg(steps: usize) -> TrainConfig {
@@ -26,39 +24,35 @@ fn tiny_cfg(steps: usize) -> TrainConfig {
 
 #[test]
 fn pretrain_reduces_mlm_loss() {
-    let rt = runtime();
+    let rt = backend();
     let lex = Lexicon::new(512);
     let (backbone, losses) = training::pretrain(&rt, "tiny", &lex, 30, 2e-3, 42).unwrap();
     assert!(backbone.contains_key("emb/tok"));
     assert!(backbone.contains_key("layer1/attn/wo"));
     let first = losses.first().unwrap().1;
     let last = losses.last().unwrap().1;
-    assert!(
-        last < first,
-        "mlm loss did not fall: {first} -> {last}"
-    );
+    assert!(last < first, "mlm loss did not fall: {first} -> {last}");
 }
 
 #[test]
 fn full_pipeline_qrlora_beats_chance() {
-    let rt = runtime();
+    let rt = backend();
     let lex = Lexicon::new(512);
     let spec = task("sst2").unwrap();
     let mut data = TaskData::generate(spec, &lex, 7);
     data.train.truncate(512);
     data.dev.truncate(256);
 
-    // 1. pretrain backbone
+    // 1. pretrain backbone (reduces MLM loss — asserted in its own test)
     let (backbone, _) = training::pretrain(&rt, "tiny", &lex, 300, 1e-3, 1).unwrap();
 
     // 2. warm-up full fine-tune (the paper warm-up FTs before adapters)
     let mut wcfg = tiny_cfg(300);
     wcfg.lr = 1e-3;
-    let (warm_bb, warm_head) =
-        training::warmup(&rt, "tiny", &data, &backbone, &wcfg, 2).unwrap();
+    let (warm_bb, warm_head) = training::warmup(&rt, "tiny", &data, &backbone, &wcfg, 2).unwrap();
 
     // 3. QR-LoRA on the frozen warmed backbone
-    let preset = rt.manifest.preset("tiny").unwrap().clone();
+    let preset = rt.manifest().preset("tiny").unwrap().clone();
     let method = Methods::qr_lora(
         &warm_bb,
         &preset,
@@ -83,6 +77,8 @@ fn full_pipeline_qrlora_beats_chance() {
     };
     let result = training::run_finetune(&job, &method).unwrap();
     assert!(result.final_loss.is_finite());
+    // Majority class of the truncated dev split never exceeds ~0.55 on this
+    // balanced synthetic task; 0.62 demonstrates real learning.
     assert!(
         result.dev.accuracy > 0.62,
         "qr-lora sst2 accuracy {:.3} not above chance",
@@ -92,7 +88,7 @@ fn full_pipeline_qrlora_beats_chance() {
 
 #[test]
 fn all_methods_run_on_mnli_with_mismatched_eval() {
-    let rt = runtime();
+    let rt = backend();
     let lex = Lexicon::new(512);
     let spec = task("mnli").unwrap();
     let mut data = TaskData::generate(spec, &lex, 11);
@@ -101,7 +97,7 @@ fn all_methods_run_on_mnli_with_mismatched_eval() {
     data.dev_mm.truncate(128);
 
     let (backbone, _) = training::pretrain(&rt, "tiny", &lex, 20, 2e-3, 4).unwrap();
-    let preset = rt.manifest.preset("tiny").unwrap().clone();
+    let preset = rt.manifest().preset("tiny").unwrap().clone();
 
     let methods = vec![
         Method::FullFt,
@@ -148,7 +144,7 @@ fn all_methods_run_on_mnli_with_mismatched_eval() {
 
 #[test]
 fn regression_task_trains_and_correlates() {
-    let rt = runtime();
+    let rt = backend();
     let lex = Lexicon::new(512);
     let spec = task("stsb").unwrap();
     let mut data = TaskData::generate(spec, &lex, 13);
@@ -159,9 +155,8 @@ fn regression_task_trains_and_correlates() {
     // Warm-up first (paper protocol), then adapter training.
     let mut wcfg = tiny_cfg(250);
     wcfg.lr = 1e-3;
-    let (warm_bb, warm_head) =
-        training::warmup(&rt, "tiny", &data, &backbone, &wcfg, 12).unwrap();
-    let preset = rt.manifest.preset("tiny").unwrap().clone();
+    let (warm_bb, warm_head) = training::warmup(&rt, "tiny", &data, &backbone, &wcfg, 12).unwrap();
+    let preset = rt.manifest().preset("tiny").unwrap().clone();
     let method = Methods::qr_lora(
         &warm_bb,
         &preset,
@@ -192,7 +187,7 @@ fn regression_task_trains_and_correlates() {
 #[test]
 fn checkpoint_roundtrip_through_session() {
     use qrlora::model::checkpoint;
-    let rt = runtime();
+    let rt = backend();
     let lex = Lexicon::new(512);
     let (backbone, _) = training::pretrain(&rt, "tiny", &lex, 5, 1e-3, 20).unwrap();
     let dir = std::env::temp_dir().join("qrlora_e2e_ckpt");
@@ -203,5 +198,55 @@ fn checkpoint_roundtrip_through_session() {
     assert_eq!(loaded.len(), backbone.len());
     for (k, v) in &backbone {
         assert_eq!(&loaded[k], v, "{k}");
+    }
+}
+
+#[test]
+fn session_state_roundtrip_and_hot_swap() {
+    // The serving path's core op: download a trained state vector, swap a
+    // different one in, swap back, and get identical logits.
+    use qrlora::data::{Batcher, HeadKind};
+    use qrlora::training::Session;
+
+    let rt = backend();
+    let lex = Lexicon::new(512);
+    let spec = task("sst2").unwrap();
+    let mut data = TaskData::generate(spec, &lex, 31);
+    data.train.truncate(64);
+    let (backbone, _) = training::pretrain(&rt, "tiny", &lex, 5, 1e-3, 30).unwrap();
+    let preset = rt.manifest().preset("tiny").unwrap().clone();
+    let method = Methods::qr_lora(
+        &backbone,
+        &preset,
+        Scope::last_layers(1, &[Proj::Q]),
+        0.5,
+        RankRule::DiagRatio,
+    )
+    .unwrap();
+    let mut session =
+        Session::finetune(&rt, &preset, &method, HeadKind::Cls, &backbone, None, 33).unwrap();
+    let batcher = Batcher::new(&preset, false);
+    let refs: Vec<&qrlora::data::Example> = data.train[..preset.batch].iter().collect();
+    let batch = batcher.assemble(&refs);
+
+    let state_a = session.download_state().unwrap();
+    let logits_a = session.forward(&batch, spec.n_classes).unwrap();
+    // train a few steps → different state/logits
+    for _ in 0..3 {
+        session.step(&batch, spec.n_classes, 5e-2).unwrap();
+    }
+    let logits_b = session.forward(&batch, spec.n_classes).unwrap();
+    assert!(
+        logits_a
+            .iter()
+            .zip(&logits_b)
+            .any(|(a, b)| (a - b).abs() > 1e-6),
+        "training did not change logits"
+    );
+    // swap the original adapter back in → identical logits again
+    session.upload_state(&state_a).unwrap();
+    let logits_c = session.forward(&batch, spec.n_classes).unwrap();
+    for (a, c) in logits_a.iter().zip(&logits_c) {
+        assert_eq!(a, c, "hot-swap did not restore state exactly");
     }
 }

@@ -1,0 +1,119 @@
+//! Stub of the `xla` PJRT binding surface used by `qrlora::runtime`.
+//!
+//! The real crate links the PJRT C API and cannot be vendored here; this
+//! stub carries the exact type/method surface the `pjrt` feature compiles
+//! against, and every entry point returns [`XlaError::Unavailable`] at
+//! runtime. Swap the `xla` path dependency in the workspace `Cargo.toml`
+//! for the real bindings to execute actual HLO artifacts; no source change
+//! in `qrlora` is needed.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (everything here returns
+/// `Unavailable`).
+#[derive(Debug)]
+pub enum XlaError {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            XlaError::Unavailable(what) => write!(
+                f,
+                "{what}: built against the xla stub — swap rust/vendor/xla-stub \
+                 for the real xla crate (see README \"Execution backends\"), \
+                 or run with the host backend (QRLORA_BACKEND=host)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+const ERR: XlaError = XlaError::Unavailable("PJRT unavailable");
+
+/// Host-side literal value.
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(ERR)
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(ERR)
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(ERR)
+    }
+
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(ERR)
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(ERR)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(ERR)
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(ERR)
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(ERR)
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
