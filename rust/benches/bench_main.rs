@@ -2,18 +2,29 @@
 //! self-contained timing harness with warmup, repetitions, and mean/σ
 //! reporting). Covers the performance-relevant paths of each layer:
 //!
-//! * P0  host matmul kernels (`Tensor::matmul` / `matmul_t` / `t_matmul`)
+//! * P0  host matmul kernels (`Tensor::matmul` / `matmul_t` / `t_matmul`),
+//!       each at the default thread count and forced serial (`[t=1]`), plus
+//!       a sparse-rows `t_matmul` entry that exercises the zero-skip branch
 //! * P1  pivoted-QR basis extraction (L3 host linalg) vs matrix size
 //! * P2  adapter merge (W + Q diag(λ) R)
 //! * P3  backend kernel: base matmul vs fused adapter matmul
-//! * P4  train-step latency per method (end-to-end backend step)
+//! * P4  train-step latency per method (end-to-end backend step), default
+//!       threads and `[t=1]`
 //! * P5  eval-forward latency + adapter hot-swap cost (serving path)
 //!
 //! Runs on whatever backend `QRLORA_BACKEND` selects (host by default, so
-//! the bench is hermetic), and writes one snapshot of every entry to
+//! the bench is hermetic) with the pool sized by `QRLORA_THREADS`, and
+//! writes one snapshot of every entry — including its thread count — to
 //! `BENCH_<backend>.json`; the cross-commit trajectory lives in committed
 //! snapshots / the CI artifact, not in the file itself (each run rewrites
 //! it).
+//!
+//! Baseline comparison: `cargo bench --bench bench_main -- --compare
+//! BENCH_host.json [--threshold 20] [--strict]` diffs this run's means
+//! against a previously committed snapshot (matching entries by name +
+//! thread count) and flags regressions above the threshold; `--strict`
+//! exits non-zero when any are found. Inside GitHub Actions the flags are
+//! also emitted as `::warning::` annotations.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -24,13 +35,22 @@ use qrlora::linalg::RankRule;
 use qrlora::runtime::{create_backend, Backend, BackendChoice, Buffer, DType};
 use qrlora::tensor::Tensor;
 use qrlora::training::{Method, Methods, Session};
+use qrlora::util::cli::Args;
 use qrlora::util::json::Json;
 use qrlora::util::log::Stats;
+use qrlora::util::pool;
 use qrlora::util::rng::Rng;
 
-/// Collects (name, stats) rows and writes the BENCH json at the end.
+struct Entry {
+    name: String,
+    threads: usize,
+    stats: Stats,
+    iters: usize,
+}
+
+/// Collects (name, threads, stats) rows and writes the BENCH json at the end.
 struct Recorder {
-    entries: Vec<(String, Stats, usize)>,
+    entries: Vec<Entry>,
 }
 
 impl Recorder {
@@ -38,75 +58,185 @@ impl Recorder {
         Recorder { entries: Vec::new() }
     }
 
-    fn bench<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, mut f: F) {
-        for _ in 0..warmup {
-            f();
-        }
-        let mut stats = Stats::new();
-        for _ in 0..iters {
-            let t = Instant::now();
-            f();
-            stats.push(t.elapsed().as_secs_f64() * 1e3);
-        }
+    /// Time `f` with the pool's partition count forced to `threads`.
+    fn bench<F: FnMut()>(&mut self, name: &str, threads: usize, warmup: usize, iters: usize, mut f: F) {
+        let stats = pool::with_threads(threads, || {
+            for _ in 0..warmup {
+                f();
+            }
+            let mut stats = Stats::new();
+            for _ in 0..iters {
+                let t = Instant::now();
+                f();
+                stats.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            stats
+        });
         println!(
-            "{name:<48} {:>9.3} ms  ±{:>7.3}  (n={iters}, min {:.3}, max {:.3})",
+            "{name:<52} {:>9.3} ms  ±{:>7.3}  (t={threads}, n={iters}, min {:.3}, max {:.3})",
             stats.mean(),
             stats.std(),
             stats.min,
             stats.max
         );
-        self.entries.push((name.to_string(), stats, iters));
+        self.entries.push(Entry { name: name.to_string(), threads, stats, iters });
     }
 
-    fn write(&self, backend: &str) -> anyhow::Result<()> {
+    fn write(&self, backend: &str, threads: usize) -> anyhow::Result<()> {
         let rows: Vec<Json> = self
             .entries
             .iter()
-            .map(|(name, s, n)| {
+            .map(|e| {
                 Json::obj(vec![
-                    ("name", Json::str(name.clone())),
-                    ("mean_ms", Json::num(s.mean())),
-                    ("std_ms", Json::num(s.std())),
-                    ("min_ms", Json::num(s.min)),
-                    ("max_ms", Json::num(s.max)),
-                    ("iters", Json::num(*n as f64)),
+                    ("name", Json::str(e.name.clone())),
+                    ("threads", Json::num(e.threads as f64)),
+                    ("mean_ms", Json::num(e.stats.mean())),
+                    ("std_ms", Json::num(e.stats.std())),
+                    ("min_ms", Json::num(e.stats.min)),
+                    ("max_ms", Json::num(e.stats.max)),
+                    ("iters", Json::num(e.iters as f64)),
                 ])
             })
             .collect();
         let doc = Json::obj(vec![
             ("backend", Json::str(backend)),
+            ("threads", Json::num(threads as f64)),
             ("entries", Json::Arr(rows)),
         ]);
         let path = format!("BENCH_{backend}.json");
         std::fs::write(&path, doc.pretty())?;
-        println!("\nwrote {path} ({} entries)", self.entries.len());
+        println!("\nwrote {path} ({} entries, default threads={threads})", self.entries.len());
         Ok(())
+    }
+
+    /// Diff this run against a committed baseline snapshot. Returns the
+    /// number of regressions above `threshold` percent.
+    fn compare(&self, path: &str, threshold: f64) -> anyhow::Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read baseline {path}: {e}"))?;
+        let doc = Json::parse(&text)?;
+        let empty: Vec<Json> = Vec::new();
+        let base_entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap_or(&empty);
+        if base_entries.is_empty() {
+            println!("\ncompare: baseline {path} has no entries (provisional baseline?) — skipping");
+            return Ok(0);
+        }
+        let mut baseline: BTreeMap<(String, usize), f64> = BTreeMap::new();
+        let mut by_name: BTreeMap<String, f64> = BTreeMap::new();
+        for e in base_entries {
+            let (Some(name), Some(mean)) = (
+                e.get("name").and_then(|v| v.as_str()),
+                e.get("mean_ms").and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            let threads = e.get("threads").and_then(|v| v.as_usize()).unwrap_or(0);
+            baseline.insert((name.to_string(), threads), mean);
+            by_name.insert(name.to_string(), mean);
+        }
+        println!("\n# compare vs {path} (flagging mean regressions > {threshold:.0}%)");
+        let gha = std::env::var("GITHUB_ACTIONS").is_ok();
+        let mut regressions = 0usize;
+        let mut matched = 0usize;
+        for e in &self.entries {
+            // Exact (name, threads) match first, then name-only: entry
+            // names are unique per thread configuration ([t=1] twins carry
+            // distinct names), so name-only keeps default-thread entries
+            // comparable when the baseline machine's core count differs.
+            let old = baseline
+                .get(&(e.name.clone(), e.threads))
+                .or_else(|| by_name.get(&e.name));
+            let Some(&old_mean) = old else { continue };
+            matched += 1;
+            if old_mean <= 0.0 {
+                continue;
+            }
+            let pct = (e.stats.mean() - old_mean) / old_mean * 100.0;
+            let tag = if pct > threshold {
+                regressions += 1;
+                "REGRESSION"
+            } else if pct < -threshold {
+                "improved"
+            } else {
+                "ok"
+            };
+            println!(
+                "  {tag:<10} {:<52} {:>9.3} -> {:>9.3} ms ({pct:+.1}%)",
+                e.name,
+                old_mean,
+                e.stats.mean()
+            );
+            if tag == "REGRESSION" && gha {
+                println!(
+                    "::warning title=bench regression::{} (t={}) mean {:.3} ms vs baseline {:.3} ms ({:+.1}%)",
+                    e.name,
+                    e.threads,
+                    e.stats.mean(),
+                    old_mean,
+                    pct
+                );
+            }
+        }
+        println!(
+            "compare: {matched} matched entries, {regressions} regression(s) > {threshold:.0}%"
+        );
+        Ok(regressions)
     }
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("qrlora bench harness — all times per call\n");
+    // `cargo bench` appends `--bench`; treat it as a switch so it cannot
+    // swallow the next flag's value.
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["strict", "bench"])?;
+
+    let tmax = pool::threads();
+    println!("qrlora bench harness — all times per call (default threads={tmax})\n");
     let mut rec = Recorder::new();
 
     // ---- P0: host matmul kernels --------------------------------------
-    println!("# P0 host matmul (transposed-B blocked kernel)");
+    println!("# P0 host matmul (transposed-B blocked kernel, row-parallel)");
     let mut rng = Rng::new(0);
     for n in [64usize, 128, 256] {
         let a = Tensor::randn(&[n, n], &mut rng, 1.0);
         let b = Tensor::randn(&[n, n], &mut rng, 1.0);
-        rec.bench(&format!("matmul {n}x{n}x{n}"), 2, 10, || {
+        rec.bench(&format!("matmul {n}x{n}x{n}"), tmax, 2, 10, || {
+            std::hint::black_box(a.matmul(&b).data[0]);
+        });
+        rec.bench(&format!("matmul {n}x{n}x{n} [t=1]"), 1, 2, 10, || {
             std::hint::black_box(a.matmul(&b).data[0]);
         });
     }
     {
         let a = Tensor::randn(&[256, 128], &mut rng, 1.0);
         let b = Tensor::randn(&[256, 128], &mut rng, 1.0);
-        rec.bench("matmul_t 256x128 @ t(256x128)", 2, 10, || {
+        rec.bench("matmul_t 256x128 @ t(256x128)", tmax, 2, 10, || {
+            std::hint::black_box(a.matmul_t(&b).data[0]);
+        });
+        rec.bench("matmul_t 256x128 @ t(256x128) [t=1]", 1, 2, 10, || {
             std::hint::black_box(a.matmul_t(&b).data[0]);
         });
         let c = Tensor::randn(&[256, 512], &mut rng, 1.0);
-        rec.bench("t_matmul t(256x128) @ 256x512", 2, 10, || {
+        rec.bench("t_matmul t(256x128) @ 256x512", tmax, 2, 10, || {
             std::hint::black_box(a.t_matmul(&c).data[0]);
+        });
+        rec.bench("t_matmul t(256x128) @ 256x512 [t=1]", 1, 2, 10, || {
+            std::hint::black_box(a.t_matmul(&c).data[0]);
+        });
+        // Zero-skip branch coverage: dense above vs 87.5% zero rows below
+        // (the MLM dlogits contraction shape — masked-out rows are all
+        // zero). The dense pair bounds the branch's overhead; this entry
+        // shows its payoff.
+        let mut sparse = Tensor::randn(&[256, 128], &mut rng, 1.0);
+        for i in 0..256 {
+            if i % 8 != 0 {
+                for v in sparse.row_mut(i) {
+                    *v = 0.0;
+                }
+            }
+        }
+        rec.bench("t_matmul zero-skip 87%-sparse rows [t=1]", 1, 2, 10, || {
+            std::hint::black_box(sparse.t_matmul(&c).data[0]);
         });
     }
 
@@ -115,7 +245,7 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(1);
     for n in [64usize, 128, 256] {
         let w = Tensor::randn(&[n, n], &mut rng, 1.0);
-        rec.bench(&format!("pivoted_qr {n}x{n}"), 1, 5, || {
+        rec.bench(&format!("pivoted_qr {n}x{n}"), tmax, 1, 5, || {
             let f = qrlora::linalg::pivoted_qr(&w);
             std::hint::black_box(f.diag());
         });
@@ -127,7 +257,7 @@ fn main() -> anyhow::Result<()> {
         let w = Tensor::randn(&[n, n], &mut rng, 1.0);
         let f = factorize(&w, 0.5, RankRule::DiagRatio, n / 2);
         let lam = vec![0.1f32; n / 2];
-        rec.bench(&format!("merge {n}x{n} r={}", f.used), 1, 10, || {
+        rec.bench(&format!("merge {n}x{n} r={}", f.used), tmax, 1, 10, || {
             let mut qs = f.q.clone();
             for i in 0..qs.rows() {
                 for j in 0..qs.cols() {
@@ -156,7 +286,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n# P3 kernel: base vs fused adapter matmul ({preset_name})");
     for key in ["kernel_base", "kernel_adapter"] {
         let exe = rt.load(&format!("{preset_name}/{key}"))?;
-        let args: Vec<Buffer> = exe
+        let kargs: Vec<Buffer> = exe
             .spec
             .inputs
             .iter()
@@ -165,14 +295,14 @@ fn main() -> anyhow::Result<()> {
                 DType::I32 => rt.upload_i32(&vec![0; t.numel()], &t.shape).unwrap(),
             })
             .collect();
-        let refs: Vec<&Buffer> = args.iter().collect();
-        rec.bench(&format!("{key} (fwd)"), 3, 20, || {
+        let refs: Vec<&Buffer> = kargs.iter().collect();
+        rec.bench(&format!("{key} (fwd)"), tmax, 3, 20, || {
             let outs = rt.execute(&exe, &refs).unwrap();
             std::hint::black_box(outs.len());
         });
     }
 
-    // P4: train-step latency per method.
+    // P4: train-step latency per method, default threads and serial.
     println!("\n# P4 train step latency per method ({preset_name})");
     let lex = Lexicon::new(preset.vocab);
     let spec = task("sst2")?;
@@ -216,10 +346,13 @@ fn main() -> anyhow::Result<()> {
             None,
             9,
         )?;
-        rec.bench(&format!("train_step {name}"), 3, 15, || {
+        rec.bench(&format!("train_step {name}"), tmax, 3, 15, || {
             session.step(&batch, 2, 1e-3).unwrap();
         });
-        rec.bench(&format!("metrics read {name}"), 2, 10, || {
+        rec.bench(&format!("train_step {name} [t=1]"), 1, 3, 15, || {
+            session.step(&batch, 2, 1e-3).unwrap();
+        });
+        rec.bench(&format!("metrics read {name}"), tmax, 2, 10, || {
             std::hint::black_box(session.last_loss().unwrap());
         });
     }
@@ -236,11 +369,14 @@ fn main() -> anyhow::Result<()> {
         None,
         10,
     )?;
-    rec.bench("eval_fwd QR-LoRA", 3, 15, || {
+    rec.bench("eval_fwd QR-LoRA", tmax, 3, 15, || {
+        std::hint::black_box(session.forward(&batch, 2).unwrap());
+    });
+    rec.bench("eval_fwd QR-LoRA [t=1]", 1, 3, 15, || {
         std::hint::black_box(session.forward(&batch, 2).unwrap());
     });
     let state = session.download_state()?;
-    rec.bench("adapter hot-swap (upload state)", 2, 15, || {
+    rec.bench("adapter hot-swap (upload state)", tmax, 2, 15, || {
         session.upload_state(&state).unwrap();
     });
 
@@ -253,6 +389,16 @@ fn main() -> anyhow::Result<()> {
         (ft_params * 4) / (session.layout().total * 4).max(1)
     );
 
-    rec.write(rt.name())?;
+    // Baseline diff happens before the write below overwrites the snapshot.
+    let mut regressions = 0;
+    if let Some(baseline) = args.get("compare") {
+        let threshold = args.f64_or("threshold", 20.0)?;
+        regressions = rec.compare(baseline, threshold)?;
+    }
+    rec.write(rt.name(), tmax)?;
+    if regressions > 0 && args.has("strict") {
+        eprintln!("bench: {regressions} regression(s) above threshold (--strict)");
+        std::process::exit(1);
+    }
     Ok(())
 }

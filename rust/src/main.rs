@@ -9,6 +9,10 @@
 //! The default `auto` uses PJRT artifacts when the binary was built with
 //! `--features pjrt` and `$QRLORA_ARTIFACTS/manifest.json` exists, and the
 //! hermetic pure-Rust host backend otherwise.
+//!
+//! Host-backend parallelism: `--threads N` (or `QRLORA_THREADS`) sizes the
+//! worker pool; default is the machine's available parallelism. Results
+//! are bit-identical for every thread count.
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::ALL_TASKS;
@@ -56,6 +60,17 @@ fn main() {
         }
         std::env::set_var("QRLORA_BACKEND", backend);
     }
+    if let Some(threads) = args.get("threads") {
+        // Size the host-backend worker pool before first use (overrides
+        // QRLORA_THREADS; default is available_parallelism).
+        match threads.parse::<usize>() {
+            Ok(n) if n >= 1 => qrlora::util::pool::set_threads(n),
+            _ => {
+                errorln!("--threads expects a positive integer, got {threads:?}");
+                std::process::exit(2);
+            }
+        }
+    }
 
     let result = match cmd.as_str() {
         "info" => cmd_info(&args),
@@ -96,6 +111,7 @@ fn cmd_info(_args: &Args) -> anyhow::Result<()> {
     let choice = qrlora::runtime::BackendChoice::from_env()?;
     let rt = qrlora::runtime::create_backend(choice, std::path::Path::new(&dir))?;
     println!("backend: {}", rt.name());
+    println!("host threads: {}", qrlora::util::pool::threads());
     println!("presets:");
     for (name, p) in &rt.manifest().presets {
         println!(

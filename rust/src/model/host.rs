@@ -18,10 +18,17 @@
 //! state update) to ~1e-7 relative error before being ported here.
 
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 use crate::data::HeadKind;
 use crate::runtime::{Preset, StateLayout};
 use crate::tensor::Tensor;
+use crate::util::pool;
+
+/// Frozen (non-trainable) inputs keyed by graph name. `Rc` so the runtime
+/// backend can cache the buffer→`Tensor` conversion across steps and hand
+/// the same tensors to every call without copying the backbone.
+pub type FrozenMap = BTreeMap<String, Rc<Tensor>>;
 
 pub const NEG_INF: f32 = -1e9;
 const ADAM_B1: f32 = 0.9;
@@ -73,15 +80,18 @@ pub struct MlmBatchRef<'a> {
 /// Trainable + frozen parameters looked up by graph name.
 struct ParamView<'a> {
     train: &'a BTreeMap<String, Tensor>,
-    frozen: &'a BTreeMap<String, Tensor>,
+    frozen: &'a FrozenMap,
 }
 
 impl ParamView<'_> {
     fn get(&self, name: &str) -> &Tensor {
-        self.train
-            .get(name)
-            .or_else(|| self.frozen.get(name))
-            .unwrap_or_else(|| panic!("host model: missing parameter {name:?}"))
+        if let Some(t) = self.train.get(name) {
+            return t;
+        }
+        if let Some(t) = self.frozen.get(name) {
+            return t.as_ref();
+        }
+        panic!("host model: missing parameter {name:?}")
     }
 
     fn vec(&self, name: &str) -> &[f32] {
@@ -120,18 +130,35 @@ fn ln_fwd(x: &Tensor, g: &[f32], b: &[f32]) -> (Tensor, LnCache) {
     let mut y = Tensor::zeros(&[rows, d]);
     let mut xhat = Tensor::zeros(&[rows, d]);
     let mut rstd = vec![0f32; rows];
-    for i in 0..rows {
-        let xi = x.row(i);
-        let mu = xi.iter().sum::<f32>() / d as f32;
-        let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-        let rs = 1.0 / (var + 1e-5).sqrt();
-        rstd[i] = rs;
-        for j in 0..d {
-            let h = (xi[j] - mu) * rs;
-            xhat.data[i * d + j] = h;
-            y.data[i * d + j] = h * g[j] + b[j];
-        }
-    }
+    // Rows are independent; parallelize over batch rows (y/xhat/rstd spans
+    // are split on the same row partition, so writes stay disjoint).
+    pool::par_parts3(
+        &mut y.data,
+        d,
+        &mut xhat.data,
+        d,
+        &mut rstd,
+        1,
+        rows,
+        rows.saturating_mul(d) * 4,
+        |r0, yc, xc, rc| {
+            for (ri, rs_out) in rc.iter_mut().enumerate() {
+                let i = r0 + ri;
+                let xi = x.row(i);
+                let mu = xi.iter().sum::<f32>() / d as f32;
+                let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+                let rs = 1.0 / (var + 1e-5).sqrt();
+                *rs_out = rs;
+                let yrow = &mut yc[ri * d..(ri + 1) * d];
+                let xrow = &mut xc[ri * d..(ri + 1) * d];
+                for j in 0..d {
+                    let h = (xi[j] - mu) * rs;
+                    xrow[j] = h;
+                    yrow[j] = h * g[j] + b[j];
+                }
+            }
+        },
+    );
     (y, LnCache { xhat, rstd })
 }
 
@@ -140,50 +167,70 @@ fn ln_bwd(dy: &Tensor, g: &[f32], c: &LnCache) -> (Tensor, Vec<f32>, Vec<f32>) {
     let mut dx = Tensor::zeros(&[rows, d]);
     let mut dg = vec![0f32; d];
     let mut db = vec![0f32; d];
+    // dg/db are row reductions: they stay serial so the float-accumulation
+    // order never depends on the thread count.
     for i in 0..rows {
         let dyr = dy.row(i);
         let xh = c.xhat.row(i);
-        let mut m1 = 0f32;
-        let mut m2 = 0f32;
         for j in 0..d {
-            let dxh = dyr[j] * g[j];
-            m1 += dxh;
-            m2 += dxh * xh[j];
             dg[j] += dyr[j] * xh[j];
             db[j] += dyr[j];
         }
-        m1 /= d as f32;
-        m2 /= d as f32;
-        for j in 0..d {
-            let dxh = dyr[j] * g[j];
-            dx.data[i * d + j] = c.rstd[i] * (dxh - m1 - xh[j] * m2);
-        }
     }
+    // dx rows are independent — parallel (m1/m2 are per-row, recomputed in
+    // the serial j order inside each row).
+    pool::par_rows(&mut dx.data, rows, rows.saturating_mul(d) * 6, |r0, chunk| {
+        for (ri, dxrow) in chunk.chunks_mut(d).enumerate() {
+            let i = r0 + ri;
+            let dyr = dy.row(i);
+            let xh = c.xhat.row(i);
+            let mut m1 = 0f32;
+            let mut m2 = 0f32;
+            for j in 0..d {
+                let dxh = dyr[j] * g[j];
+                m1 += dxh;
+                m2 += dxh * xh[j];
+            }
+            m1 /= d as f32;
+            m2 /= d as f32;
+            for j in 0..d {
+                let dxh = dyr[j] * g[j];
+                dxrow[j] = c.rstd[i] * (dxh - m1 - xh[j] * m2);
+            }
+        }
+    });
     (dx, dg, db)
 }
 
 /// tanh-approximate GELU (JAX's default). Returns (y, tanh cache).
+/// Elementwise, so the pool split can't change any value.
 fn gelu_fwd(x: &Tensor) -> (Tensor, Tensor) {
-    let mut y = x.clone();
-    let mut t = x.clone();
-    for i in 0..x.data.len() {
-        let v = x.data[i];
-        let inner = SQRT_2_OVER_PI * (v + 0.044715 * v * v * v);
-        let th = inner.tanh();
-        t.data[i] = th;
-        y.data[i] = 0.5 * v * (1.0 + th);
-    }
+    let mut y = Tensor::zeros(&x.shape);
+    let mut t = Tensor::zeros(&x.shape);
+    let n = x.data.len();
+    pool::par_parts2(&mut y.data, 1, &mut t.data, 1, n, n * 8, |lo, yc, tc| {
+        for i in 0..yc.len() {
+            let v = x.data[lo + i];
+            let inner = SQRT_2_OVER_PI * (v + 0.044715 * v * v * v);
+            let th = inner.tanh();
+            tc[i] = th;
+            yc[i] = 0.5 * v * (1.0 + th);
+        }
+    });
     (y, t)
 }
 
 fn gelu_bwd(dy: &Tensor, x_pre: &Tensor, t: &Tensor) -> Tensor {
-    let mut dx = dy.clone();
-    for i in 0..dy.data.len() {
-        let v = x_pre.data[i];
-        let th = t.data[i];
-        let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * v * v);
-        dx.data[i] = dy.data[i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * du);
-    }
+    let mut dx = Tensor::zeros(&dy.shape);
+    let n = dy.data.len();
+    pool::par_rows(&mut dx.data, n, n * 8, |lo, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let v = x_pre.data[lo + i];
+            let th = t.data[lo + i];
+            let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * v * v);
+            *o = dy.data[lo + i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * du);
+        }
+    });
     dx
 }
 
@@ -191,14 +238,21 @@ fn gelu_bwd(dy: &Tensor, x_pre: &Tensor, t: &Tensor) -> Tensor {
 fn scale_cols(t: &Tensor, coeff: &[f32]) -> Tensor {
     let (rows, cols) = (t.rows(), t.cols());
     let mut out = t.clone();
-    for i in 0..rows {
-        for j in 0..cols {
-            out.data[i * cols + j] *= coeff[j];
-        }
+    if cols == 0 {
+        return out;
     }
+    pool::par_rows(&mut out.data, rows, rows.saturating_mul(cols), |_, chunk| {
+        for r in chunk.chunks_mut(cols) {
+            for (v, &c) in r.iter_mut().zip(coeff) {
+                *v *= c;
+            }
+        }
+    });
     out
 }
 
+/// Column sums — a row reduction, kept serial for thread-count-independent
+/// float accumulation order (used for bias gradients).
 fn col_sum(t: &Tensor) -> Vec<f32> {
     let (rows, cols) = (t.rows(), t.cols());
     let mut out = vec![0f32; cols];
@@ -213,12 +267,16 @@ fn col_sum(t: &Tensor) -> Vec<f32> {
 
 fn add_bias_rows(t: &mut Tensor, bias: &[f32]) {
     let (rows, cols) = (t.rows(), t.cols());
-    for i in 0..rows {
-        let r = &mut t.data[i * cols..(i + 1) * cols];
-        for j in 0..cols {
-            r[j] += bias[j];
-        }
+    if cols == 0 {
+        return;
     }
+    pool::par_rows(&mut t.data, rows, rows.saturating_mul(cols), |_, chunk| {
+        for r in chunk.chunks_mut(cols) {
+            for (v, &bv) in r.iter_mut().zip(bias) {
+                *v += bv;
+            }
+        }
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -376,6 +434,10 @@ struct EncCache {
 }
 
 /// Multi-head attention forward on flat (B·S, d) projections.
+///
+/// Parallel over batch elements: every (bb, h, i) writes only its own probs
+/// row and ctx segment, and those regions are contiguous per `bb`, so the
+/// pool splits the batch range and each lane works on a disjoint block.
 fn attention_fwd(
     q: &Tensor,
     k: &Tensor,
@@ -390,52 +452,71 @@ fn attention_fwd(
     let scale = 1.0 / (dh as f32).sqrt();
     let mut probs = Tensor::zeros(&[b * nh * s, s]);
     let mut ctx = Tensor::zeros(&[b * s, d]);
-    for bb in 0..b {
-        for h in 0..nh {
-            for i in 0..s {
-                let prow = (bb * nh + h) * s + i;
-                let qrow = &q.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
-                // scores + additive mask
-                let mut maxv = f32::NEG_INFINITY;
-                for j in 0..s {
-                    let krow = &k.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                    let mut sc = 0f32;
-                    for e in 0..dh {
-                        sc += qrow[e] * krow[e];
-                    }
-                    let val = sc * scale + amask_add[bb * s + j];
-                    probs.data[prow * s + j] = val;
-                    maxv = maxv.max(val);
-                }
-                // softmax row
-                let mut denom = 0f32;
-                for j in 0..s {
-                    let e = (probs.data[prow * s + j] - maxv).exp();
-                    probs.data[prow * s + j] = e;
-                    denom += e;
-                }
-                for j in 0..s {
-                    probs.data[prow * s + j] /= denom;
-                }
-                // ctx
-                let crow = &mut ctx.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
-                for j in 0..s {
-                    let p = probs.data[prow * s + j];
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let vrow = &v.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                    for e in 0..dh {
-                        crow[e] += p * vrow[e];
+    let work = b * nh * s * s * (dh + 4);
+    pool::par_parts2(
+        &mut probs.data,
+        nh * s * s,
+        &mut ctx.data,
+        s * d,
+        b,
+        work,
+        |bb0, pchunk, cchunk| {
+            let nb = cchunk.len() / (s * d);
+            for bl in 0..nb {
+                let bb = bb0 + bl;
+                for h in 0..nh {
+                    for i in 0..s {
+                        let prow = (bl * nh + h) * s + i;
+                        let pr = &mut pchunk[prow * s..(prow + 1) * s];
+                        let qrow =
+                            &q.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
+                        // scores + additive mask
+                        let mut maxv = f32::NEG_INFINITY;
+                        for (j, pv) in pr.iter_mut().enumerate() {
+                            let krow = &k.data
+                                [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                            let mut sc = 0f32;
+                            for e in 0..dh {
+                                sc += qrow[e] * krow[e];
+                            }
+                            let val = sc * scale + amask_add[bb * s + j];
+                            *pv = val;
+                            maxv = maxv.max(val);
+                        }
+                        // softmax row
+                        let mut denom = 0f32;
+                        for pv in pr.iter_mut() {
+                            let e = (*pv - maxv).exp();
+                            *pv = e;
+                            denom += e;
+                        }
+                        for pv in pr.iter_mut() {
+                            *pv /= denom;
+                        }
+                        // ctx
+                        let crow =
+                            &mut cchunk[(bl * s + i) * d + h * dh..(bl * s + i) * d + (h + 1) * dh];
+                        for (j, &p) in pr.iter().enumerate() {
+                            if p == 0.0 {
+                                continue;
+                            }
+                            let vrow = &v.data
+                                [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                            for e in 0..dh {
+                                crow[e] += p * vrow[e];
+                            }
+                        }
                     }
                 }
             }
-        }
-    }
+        },
+    );
     (probs, ctx)
 }
 
-/// Backward of [`attention_fwd`] → (dq, dk, dv).
+/// Backward of [`attention_fwd`] → (dq, dk, dv). Parallel over batch
+/// elements: all three gradients only touch rows inside the lane's batch
+/// block, so the pool splits them on the same partition.
 fn attention_bwd(
     dctx: &Tensor,
     probs: &Tensor,
@@ -452,55 +533,74 @@ fn attention_bwd(
     let mut dq = Tensor::zeros(&[b * s, d]);
     let mut dk = Tensor::zeros(&[b * s, d]);
     let mut dv = Tensor::zeros(&[b * s, d]);
-    let mut dprobs = vec![0f32; s];
-    for bb in 0..b {
-        for h in 0..nh {
-            for i in 0..s {
-                let prow = (bb * nh + h) * s + i;
-                let dcrow = &dctx.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
-                // dprobs_j = dctx · v_j ; dv_j += p_j dctx
-                for (j, dp) in dprobs.iter_mut().enumerate().take(s) {
-                    let vrow = &v.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                    let mut acc = 0f32;
-                    for e in 0..dh {
-                        acc += dcrow[e] * vrow[e];
-                    }
-                    *dp = acc;
-                    let p = probs.data[prow * s + j];
-                    if p != 0.0 {
-                        let dvrow = &mut dv.data
-                            [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                        for e in 0..dh {
-                            dvrow[e] += p * dcrow[e];
+    let work = b * nh * s * s * (3 * dh + 4);
+    pool::par_parts3(
+        &mut dq.data,
+        s * d,
+        &mut dk.data,
+        s * d,
+        &mut dv.data,
+        s * d,
+        b,
+        work,
+        |bb0, dqc, dkc, dvc| {
+            let nb = dqc.len() / (s * d);
+            let mut dprobs = vec![0f32; s];
+            for bl in 0..nb {
+                let bb = bb0 + bl;
+                for h in 0..nh {
+                    for i in 0..s {
+                        let prow = (bb * nh + h) * s + i;
+                        let dcrow = &dctx.data
+                            [(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
+                        // dprobs_j = dctx · v_j ; dv_j += p_j dctx
+                        for (j, dp) in dprobs.iter_mut().enumerate().take(s) {
+                            let vrow = &v.data
+                                [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                            let mut acc = 0f32;
+                            for e in 0..dh {
+                                acc += dcrow[e] * vrow[e];
+                            }
+                            *dp = acc;
+                            let p = probs.data[prow * s + j];
+                            if p != 0.0 {
+                                let dvrow = &mut dvc
+                                    [(bl * s + j) * d + h * dh..(bl * s + j) * d + (h + 1) * dh];
+                                for e in 0..dh {
+                                    dvrow[e] += p * dcrow[e];
+                                }
+                            }
+                        }
+                        // softmax backward: ds = p ⊙ (dp − Σ dp·p), then ·scale
+                        let mut inner = 0f32;
+                        for j in 0..s {
+                            inner += dprobs[j] * probs.data[prow * s + j];
+                        }
+                        for j in 0..s {
+                            let ds = probs.data[prow * s + j] * (dprobs[j] - inner) * scale;
+                            if ds == 0.0 {
+                                continue;
+                            }
+                            let krow = &k.data
+                                [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
+                            let qrow = &q.data
+                                [(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
+                            let dqrow = &mut dqc
+                                [(bl * s + i) * d + h * dh..(bl * s + i) * d + (h + 1) * dh];
+                            for e in 0..dh {
+                                dqrow[e] += ds * krow[e];
+                            }
+                            let dkrow = &mut dkc
+                                [(bl * s + j) * d + h * dh..(bl * s + j) * d + (h + 1) * dh];
+                            for e in 0..dh {
+                                dkrow[e] += ds * qrow[e];
+                            }
                         }
                     }
                 }
-                // softmax backward: ds = p ⊙ (dp − Σ dp·p), then ·scale
-                let mut inner = 0f32;
-                for j in 0..s {
-                    inner += dprobs[j] * probs.data[prow * s + j];
-                }
-                for j in 0..s {
-                    let ds = probs.data[prow * s + j] * (dprobs[j] - inner) * scale;
-                    if ds == 0.0 {
-                        continue;
-                    }
-                    let krow = &k.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                    let qrow = &q.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
-                    let dqrow =
-                        &mut dq.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
-                    for e in 0..dh {
-                        dqrow[e] += ds * krow[e];
-                    }
-                    let dkrow =
-                        &mut dk.data[(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                    for e in 0..dh {
-                        dkrow[e] += ds * qrow[e];
-                    }
-                }
             }
-        }
-    }
+        },
+    );
     (dq, dk, dv)
 }
 
@@ -517,12 +617,13 @@ fn encode_fwd(
     let pos = pv.get("emb/pos");
     let typ = pv.get("emb/type");
     let mut h = Tensor::zeros(&[b * s, d]);
-    for bb in 0..b {
-        for ss in 0..s {
-            let row = bb * s + ss;
+    // Embedding gather: each output row depends only on its own ids.
+    pool::par_rows(&mut h.data, b * s, b * s * d, |row0, chunk| {
+        for (ri, out) in chunk.chunks_mut(d).enumerate() {
+            let row = row0 + ri;
+            let ss = row % s;
             let t = ids[row] as usize;
             let ty = type_ids[row] as usize;
-            let out = &mut h.data[row * d..(row + 1) * d];
             let tr = &tok.data[t * d..(t + 1) * d];
             let pr = &pos.data[ss * d..(ss + 1) * d];
             let yr = &typ.data[ty * d..(ty + 1) * d];
@@ -530,7 +631,7 @@ fn encode_fwd(
                 out[e] = tr[e] + pr[e] + yr[e];
             }
         }
-    }
+    });
     let (mut h, emb_ln) = {
         let (y, c) = ln_fwd(&h, pv.vec("emb/ln_g"), pv.vec("emb/ln_b"));
         (y, c)
@@ -674,24 +775,29 @@ fn encode_bwd(
 // Heads + losses.
 // ---------------------------------------------------------------------------
 
-/// Row-wise softmax in place.
+/// Row-wise softmax in place (row-parallel; the MLM path runs this over a
+/// (B·S, V) matrix, the single biggest elementwise op in pretraining).
 fn softmax_rows(t: &mut Tensor) {
     let (rows, cols) = (t.rows(), t.cols());
-    for i in 0..rows {
-        let r = &mut t.data[i * cols..(i + 1) * cols];
-        let mut m = f32::NEG_INFINITY;
-        for &v in r.iter() {
-            m = m.max(v);
-        }
-        let mut denom = 0f32;
-        for v in r.iter_mut() {
-            *v = (*v - m).exp();
-            denom += *v;
-        }
-        for v in r.iter_mut() {
-            *v /= denom;
-        }
+    if cols == 0 {
+        return;
     }
+    pool::par_rows(&mut t.data, rows, rows.saturating_mul(cols) * 4, |_, chunk| {
+        for r in chunk.chunks_mut(cols) {
+            let mut m = f32::NEG_INFINITY;
+            for &v in r.iter() {
+                m = m.max(v);
+            }
+            let mut denom = 0f32;
+            for v in r.iter_mut() {
+                *v = (*v - m).exp();
+                denom += *v;
+            }
+            for v in r.iter_mut() {
+                *v /= denom;
+            }
+        }
+    });
 }
 
 /// Task-head forward: (masked logits, pooled, cls, pre-tanh).
@@ -851,23 +957,43 @@ fn clip_and_adam(
                 .copy_from_slice(&vals[..vals.len().min(f.numel())]);
         }
     }
-    let zero = Vec::new();
+    // The flat protocol tiles the state as [ metrics | params | m | v ]
+    // (asserted layout-wide by the runtime smoke tests), so the update is
+    // one dense elementwise pass. Flatten the named gradients into that
+    // order once, then update params/moments row-parallel — the update is
+    // per-element, so the split can't change any value.
+    let base = layout.total - 3 * n;
+    debug_assert_eq!(
+        layout.params.iter().map(|f| f.numel()).sum::<usize>(),
+        n,
+        "param fields must tile the flat block"
+    );
+    let mut g_flat = vec![0f32; n];
     for f in &layout.params {
-        let g = grads.map.get(&f.name).map(|gt| &gt.data).unwrap_or(&zero);
-        for i in 0..f.numel() {
-            let p_off = f.offset + i;
-            let m_off = p_off + n;
-            let v_off = p_off + 2 * n;
-            let gi = g.get(i).copied().unwrap_or(0.0) * scale;
-            let m_new = ADAM_B1 * state[m_off] + (1.0 - ADAM_B1) * gi;
-            let v_new = ADAM_B2 * state[v_off] + (1.0 - ADAM_B2) * gi * gi;
-            let mhat = m_new / b1t;
-            let vhat = v_new / b2t;
-            new_state[p_off] = state[p_off] - lr * mhat / (vhat.sqrt() + ADAM_EPS);
-            new_state[m_off] = m_new;
-            new_state[v_off] = v_new;
+        if let Some(g) = grads.map.get(&f.name) {
+            let lo = f.offset - base;
+            g_flat[lo..lo + g.data.len()].copy_from_slice(&g.data);
         }
     }
+    let st_p = &state[base..base + n];
+    let st_m = &state[base + n..base + 2 * n];
+    let st_v = &state[base + 2 * n..base + 3 * n];
+    let (head, rest) = new_state.split_at_mut(base + n);
+    let p_seg = &mut head[base..];
+    let (m_seg, v_seg) = rest.split_at_mut(n);
+    pool::par_parts3(p_seg, 1, m_seg, 1, v_seg, 1, n, n * 10, |lo, pc, mc, vc| {
+        for i in 0..pc.len() {
+            let j = lo + i;
+            let gi = g_flat[j] * scale;
+            let m_new = ADAM_B1 * st_m[j] + (1.0 - ADAM_B1) * gi;
+            let v_new = ADAM_B2 * st_v[j] + (1.0 - ADAM_B2) * gi * gi;
+            let mhat = m_new / b1t;
+            let vhat = v_new / b2t;
+            pc[i] = st_p[j] - lr * mhat / (vhat.sqrt() + ADAM_EPS);
+            mc[i] = m_new;
+            vc[i] = v_new;
+        }
+    });
     new_state
 }
 
@@ -884,7 +1010,7 @@ pub fn train_step(
     head: HeadKind,
     layout: &StateLayout,
     state: &[f32],
-    frozen: &BTreeMap<String, Tensor>,
+    frozen: &FrozenMap,
     batch: &TaskBatchRef,
     lr: f32,
     t: f32,
@@ -928,7 +1054,7 @@ pub fn eval_forward(
     head: HeadKind,
     layout: &StateLayout,
     state: &[f32],
-    frozen: &BTreeMap<String, Tensor>,
+    frozen: &FrozenMap,
     batch: &TaskBatchRef,
 ) -> Vec<f32> {
     let train = unpack_train(state, layout);
@@ -960,7 +1086,6 @@ pub fn pretrain_step(
 
     let mut probs = logits;
     softmax_rows(&mut probs);
-    let mut loss = 0f32;
     let mut denom = 0f32;
     for row in 0..b * s {
         if batch.mlm_labels[row] >= 0 {
@@ -968,22 +1093,31 @@ pub fn pretrain_step(
         }
     }
     let denom = denom.max(1.0);
-    let mut dlogits = probs; // reuse allocation
+    // Loss is a reduction over rows — read it serially (O(B·S)) before the
+    // row-parallel pass below overwrites probs in place.
+    let mut loss = 0f32;
     for row in 0..b * s {
         let label = batch.mlm_labels[row];
-        let valid = label >= 0;
-        let safe = label.max(0) as usize;
-        if valid {
-            let pr = dlogits.data[row * v + safe].max(1e-30);
+        if label >= 0 {
+            let pr = probs.data[row * v + label as usize].max(1e-30);
             loss += -pr.ln();
-        }
-        let scale = if valid { 1.0 / denom } else { 0.0 };
-        dlogits.data[row * v + safe] -= 1.0;
-        for j in 0..v {
-            dlogits.data[row * v + j] *= scale;
         }
     }
     let loss = loss / denom;
+    let mut dlogits = probs; // reuse allocation
+    let labels = batch.mlm_labels;
+    pool::par_rows(&mut dlogits.data, b * s, b * s * v, |row0, chunk| {
+        for (ri, r) in chunk.chunks_mut(v).enumerate() {
+            let label = labels[row0 + ri];
+            let valid = label >= 0;
+            let safe = label.max(0) as usize;
+            let scale = if valid { 1.0 / denom } else { 0.0 };
+            r[safe] -= 1.0;
+            for x in r.iter_mut() {
+                *x *= scale;
+            }
+        }
+    });
 
     let mut grads = Grads::default();
     let dbias = col_sum(&dlogits);
@@ -1046,7 +1180,7 @@ mod tests {
             } else {
                 (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
             };
-            frozen.insert(t.name.clone(), Tensor::from_vec(&t.shape, data));
+            frozen.insert(t.name.clone(), std::rc::Rc::new(Tensor::from_vec(&t.shape, data)));
         }
 
         let bs = p.batch * p.max_seq;
@@ -1160,7 +1294,7 @@ mod tests {
             } else {
                 (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
             };
-            frozen.insert(t.name.clone(), Tensor::from_vec(&t.shape, data));
+            frozen.insert(t.name.clone(), std::rc::Rc::new(Tensor::from_vec(&t.shape, data)));
         }
         let bs = p.batch * p.max_seq;
         let ids: Vec<i32> = (0..bs).map(|i| ((i * 3 + 1) % p.vocab) as i32).collect();

@@ -36,6 +36,55 @@ pub struct HostProgram {
     preset: Preset,
 }
 
+/// Frozen-input conversion cache, held by the backend (one per
+/// [`HostBackend`]) so every executable of a session — train step, eval
+/// forward, metrics — shares a single `Rc<Tensor>` copy of each frozen
+/// buffer instead of one per program. Keyed by input name, so the entry
+/// count stays bounded by the number of distinct frozen inputs.
+pub(crate) type FrozenCache = RefCell<HashMap<String, FrozenEntry>>;
+
+pub(crate) struct FrozenEntry {
+    ptr: usize,
+    len: usize,
+    fp: u64,
+    tensor: Rc<Tensor>,
+}
+
+/// Identity fingerprint for cache invalidation. Buffers at or below
+/// `FULL_HASH_LEN` elements (the adapter factors and masks that actually
+/// get hot-swapped) are hashed in full, so any single-element change
+/// invalidates even if an allocator reuses the freed buffer's address.
+/// Larger buffers (the backbone matrices, which are only ever replaced
+/// wholesale) are FNV-1a'd over 256 strided samples plus the last element;
+/// a same-address same-length reallocation colliding on every sampled
+/// value is the remaining — astronomically unlikely for whole-matrix
+/// re-uploads — false-hit case.
+fn fingerprint(data: &[f32]) -> u64 {
+    const FULL_HASH_LEN: usize = 1 << 16;
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |h: &mut u64, x: u64| {
+        *h ^= x;
+        *h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(&mut h, data.len() as u64);
+    if data.len() <= FULL_HASH_LEN {
+        for v in data {
+            mix(&mut h, v.to_bits() as u64);
+        }
+        return h;
+    }
+    let step = (data.len() / 256).max(1);
+    let mut i = 0;
+    while i < data.len() {
+        mix(&mut h, data[i].to_bits() as u64);
+        i += step;
+    }
+    if let Some(last) = data.last() {
+        mix(&mut h, last.to_bits() as u64);
+    }
+    h
+}
+
 fn parse_head(s: &str) -> anyhow::Result<HeadKind> {
     Ok(match s {
         "cls" => HeadKind::Cls,
@@ -102,7 +151,13 @@ impl HostProgram {
     }
 
     /// Execute against host buffers; returns outputs in manifest order.
-    pub fn execute(&self, spec: &ArtifactSpec, args: &[&Buffer]) -> anyhow::Result<Vec<Buffer>> {
+    /// `frozen_cache` is the owning backend's shared frozen-input cache.
+    pub fn execute(
+        &self,
+        spec: &ArtifactSpec,
+        args: &[&Buffer],
+        frozen_cache: &FrozenCache,
+    ) -> anyhow::Result<Vec<Buffer>> {
         anyhow::ensure!(
             args.len() == spec.inputs.len(),
             "{}: got {} args, expected {}",
@@ -191,15 +246,38 @@ impl HostProgram {
             ProgKind::TrainStep { method, head } | ProgKind::EvalFwd { method, head } => {
                 let layout = spec.layout()?;
                 let state = f32s("state")?;
-                // Frozen inputs are materialized as Tensors each call. For
-                // the tiny/small presets this copy is <5% of the step math;
-                // a persistent per-session cache is a ROADMAP item.
-                let mut frozen = BTreeMap::new();
-                for (_, t) in spec.inputs_with_role(Role::Frozen) {
-                    frozen.insert(
-                        t.name.clone(),
-                        Tensor::from_vec(&t.shape, f32s(&t.name)?.to_vec()),
-                    );
+                // Frozen inputs are materialized as Tensors at most once per
+                // distinct buffer: the per-executable cache re-serves the
+                // conversion until the buffer's identity/fingerprint
+                // changes, so steady-state steps stop copying the backbone.
+                let mut frozen: hostmodel::FrozenMap = BTreeMap::new();
+                {
+                    let mut cache = frozen_cache.borrow_mut();
+                    for (_, t) in spec.inputs_with_role(Role::Frozen) {
+                        let data = f32s(&t.name)?;
+                        let ptr = data.as_ptr() as usize;
+                        let fp = fingerprint(data);
+                        let hit = matches!(
+                            cache.get(&t.name),
+                            Some(e) if e.ptr == ptr && e.len == data.len() && e.fp == fp
+                        );
+                        let tensor = if hit {
+                            cache.get(&t.name).unwrap().tensor.clone()
+                        } else {
+                            let tn = Rc::new(Tensor::from_vec(&t.shape, data.to_vec()));
+                            cache.insert(
+                                t.name.clone(),
+                                FrozenEntry {
+                                    ptr,
+                                    len: data.len(),
+                                    fp,
+                                    tensor: tn.clone(),
+                                },
+                            );
+                            tn
+                        };
+                        frozen.insert(t.name.clone(), tensor);
+                    }
                 }
                 let (labels_i32, labels_f32): (&[i32], &[f32]) = match head {
                     HeadKind::Cls => (i32s("batch/labels")?, &[]),
@@ -250,6 +328,9 @@ impl HostProgram {
 pub struct HostBackend {
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Shared frozen-input tensor cache (see [`FrozenCache`]): one copy of
+    /// the backbone per backend, not per loaded executable.
+    frozen_cache: FrozenCache,
 }
 
 impl HostBackend {
@@ -257,6 +338,7 @@ impl HostBackend {
         HostBackend {
             manifest: Manifest::builtin(),
             cache: RefCell::new(HashMap::new()),
+            frozen_cache: RefCell::new(HashMap::new()),
         }
     }
 }
@@ -289,7 +371,7 @@ impl Backend for HostBackend {
 
     fn execute(&self, exe: &Executable, args: &[&Buffer]) -> anyhow::Result<Vec<Buffer>> {
         match &exe.imp {
-            ExecutableImpl::Host(prog) => prog.execute(&exe.spec, args),
+            ExecutableImpl::Host(prog) => prog.execute(&exe.spec, args, &self.frozen_cache),
             #[cfg(feature = "pjrt")]
             ExecutableImpl::Pjrt(_) => {
                 anyhow::bail!("{}: PJRT executable handed to host backend", exe.spec.key)

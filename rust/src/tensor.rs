@@ -9,6 +9,8 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::util::pool;
+
 /// Unrolled dot product with four independent accumulators (keeps the FP
 /// dependency chain short enough for the auto-vectorizer).
 #[inline]
@@ -130,15 +132,23 @@ impl Tensor {
         (0..self.rows()).map(|i| self.at(i, j)).collect()
     }
 
-    /// Matrix transpose (rank-2).
+    /// Matrix transpose (rank-2). Row-parallel over output rows for large
+    /// matrices (every `matmul` transposes its RHS, so this is on the hot
+    /// path); each output row is one strided column gather.
     pub fn t(&self) -> Tensor {
         let (m, n) = (self.rows(), self.cols());
         let mut out = Tensor::zeros(&[n, m]);
-        for i in 0..m {
-            for j in 0..n {
-                out.data[j * m + i] = self.data[i * n + j];
-            }
+        if m == 0 || n == 0 {
+            return out;
         }
+        pool::par_rows(&mut out.data, n, m.saturating_mul(n), |j0, chunk| {
+            for (jj, orow) in chunk.chunks_mut(m).enumerate() {
+                let j = j0 + jj;
+                for (i, o) in orow.iter_mut().enumerate() {
+                    *o = self.data[i * n + j];
+                }
+            }
+        });
         out
     }
 
@@ -157,6 +167,12 @@ impl Tensor {
 
     /// `self (m×k) @ otherᵀ` where `other` is (n×k) — no transpose needed,
     /// both operands stream contiguously.
+    ///
+    /// Row-parallel: output rows are partitioned into one contiguous span
+    /// per pool lane (`util::pool`), each span keeping the serial kernel's
+    /// column blocking. Every output element is still one [`dot`] of the
+    /// same two slices, so results are bit-identical for any thread count;
+    /// shapes below the pool's work cutoff stay on the serial path.
     pub fn matmul_t(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (n, k2) = (other.rows(), other.cols());
@@ -166,24 +182,40 @@ impl Tensor {
             self.shape, other.shape
         );
         let mut out = Tensor::zeros(&[m, n]);
-        // Block over columns of the output so the active rows of `other`
-        // stay cache-resident while we sweep the m rows.
-        const BLOCK_N: usize = 64;
-        for j0 in (0..n).step_by(BLOCK_N) {
-            let j1 = (j0 + BLOCK_N).min(n);
-            for i in 0..m {
-                let arow = self.row(i);
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in j0..j1 {
-                    orow[j] = dot(arow, &other.data[j * k..(j + 1) * k]);
+        if m == 0 || n == 0 {
+            return out;
+        }
+        let work = m.saturating_mul(n).saturating_mul(k.max(1));
+        pool::par_rows(&mut out.data, m, work, |row0, chunk| {
+            // Block over columns of the output so the active rows of
+            // `other` stay cache-resident while we sweep this span's rows.
+            const BLOCK_N: usize = 64;
+            for j0 in (0..n).step_by(BLOCK_N) {
+                let j1 = (j0 + BLOCK_N).min(n);
+                for (ii, orow) in chunk.chunks_mut(n).enumerate() {
+                    let arow = self.row(row0 + ii);
+                    for j in j0..j1 {
+                        orow[j] = dot(arow, &other.data[j * k..(j + 1) * k]);
+                    }
                 }
             }
-        }
+        });
         out
     }
 
     /// `selfᵀ (k×m) @ other (m×n)` — the gradient contraction `xᵀ·dy`,
     /// computed as a sum of row outer products (both reads contiguous).
+    ///
+    /// Row-parallel over *output* rows (columns of `self`): each span
+    /// accumulates over `m` in the serial order, so results are
+    /// bit-identical for any thread count.
+    ///
+    /// The `a == 0.0` skip keeps its place on purpose: its cost is one
+    /// compare amortized over an `n`-wide axpy (<1% on dense inputs — see
+    /// the paired `t_matmul … dense/sparse-rows` entries in
+    /// `benches/bench_main.rs`), while the MLM gradient contraction
+    /// `dlogitsᵀ·h` hits it on every masked-out position (typically ~85% of
+    /// rows are exactly zero), skipping the whole axpy there.
     pub fn t_matmul(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (m2, n) = (other.rows(), other.cols());
@@ -193,19 +225,25 @@ impl Tensor {
             self.shape, other.shape
         );
         let mut out = Tensor::zeros(&[k, n]);
-        for mm in 0..m {
-            let arow = self.row(mm);
-            let brow = other.row(mm);
-            for (i, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
+        if k == 0 || n == 0 {
+            return out;
+        }
+        let work = m.saturating_mul(n).saturating_mul(k.max(1));
+        pool::par_rows(&mut out.data, k, work, |i0, chunk| {
+            for mm in 0..m {
+                let arow = self.row(mm);
+                let brow = other.row(mm);
+                for (ii, orow) in chunk.chunks_mut(n).enumerate() {
+                    let a = arow[i0 + ii];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += a * bv;
+                    }
                 }
             }
-        }
+        });
         out
     }
 
@@ -442,6 +480,9 @@ mod tests {
             assert!((c.at(i, j) as f64 - want).abs() < 1e-3, "({i},{j})");
         }
     }
+
+    // Serial-vs-parallel bit-identity for these kernels is covered by the
+    // broader property tests in rust/tests/pool_determinism.rs.
 
     #[test]
     fn transpose_involution() {

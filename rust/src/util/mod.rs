@@ -4,5 +4,6 @@
 pub mod cli;
 pub mod json;
 pub mod log;
+pub mod pool;
 pub mod rng;
 pub mod toml;

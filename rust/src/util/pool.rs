@@ -1,0 +1,590 @@
+//! Hand-rolled worker pool for deterministic data parallelism (std-only;
+//! the offline vendor set has no rayon/crossbeam).
+//!
+//! Design goals, in order:
+//!
+//! 1. **Determinism.** Every parallel helper partitions work into
+//!    contiguous row spans and each task writes only its own disjoint
+//!    output slice. The per-element computation order inside a span is
+//!    exactly the serial order, so results are **bit-identical for every
+//!    thread count** (including 1). Reductions whose float-accumulation
+//!    order would depend on the partition (column sums, gradient norms)
+//!    deliberately stay serial in the callers.
+//! 2. **Zero per-call thread spawns.** A process-global pool of persistent
+//!    workers is lazily created on first use; scoped tasks borrow the
+//!    caller's stack (crossbeam-style `scope`/`spawn`) and the scope blocks
+//!    until every task has finished, so non-`'static` borrows are sound.
+//! 3. **Tiny shapes stay serial.** Helpers take an approximate `work`
+//!    operation count and fall back to the inline serial path below
+//!    [`PAR_CUTOFF`], so dispatch overhead never shows up on small-kernel
+//!    latency.
+//!
+//! Sizing: `set_threads()` (the CLI's `--threads`), else the
+//! `QRLORA_THREADS` env var, else `std::thread::available_parallelism()`.
+//! [`with_threads`] caps (or raises) the partition count for the current
+//! thread — the bench harness uses it to time threads=1 vs threads=N in one
+//! process. Tasks spawned from inside a pool worker run serially (no nested
+//! fan-out), which makes accidental nesting safe instead of a deadlock.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Below this many inner operations a parallel helper runs serially.
+pub const PAR_CUTOFF: usize = 1 << 15;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// Countdown latch: `scope` waits until every spawned task called `done`.
+struct Latch {
+    count: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new() -> Latch {
+        Latch { count: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn add(&self, k: usize) {
+        *self.count.lock().unwrap() += k;
+    }
+
+    fn done(&self) {
+        let mut g = self.count.lock().unwrap();
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.count.lock().unwrap();
+        while *g > 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Persistent worker pool. `lanes` counts the caller thread too: a pool of
+/// `n` lanes spawns `n − 1` OS threads and the caller always executes one
+/// span itself (see [`join_all`]).
+pub struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    lanes: usize,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_WORKER.with(|f| f.set(true));
+    loop {
+        let job = {
+            let mut g = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = g.jobs.pop_front() {
+                    break j;
+                }
+                if g.shutdown {
+                    return;
+                }
+                g = shared.cv.wait(g).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Pool {
+    pub fn new(lanes: usize) -> Pool {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(lanes - 1);
+        for i in 0..lanes - 1 {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("qrlora-pool-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("pool: failed to spawn worker thread");
+            handles.push(h);
+        }
+        Pool { shared, handles, lanes }
+    }
+
+    /// Total lanes (worker threads + the caller).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn inject(&self, job: Job) {
+        self.shared.queue.lock().unwrap().jobs.push_back(job);
+        self.shared.cv.notify_one();
+    }
+
+    /// Run `f` with a [`Scope`] on which non-`'static` tasks can be
+    /// spawned. Blocks (via a drop guard, so also on unwind) until every
+    /// spawned task completed; panics afterwards if any task panicked.
+    pub fn scope<'env, R>(&'env self, f: impl FnOnce(&Scope<'env>) -> R) -> R {
+        let scope = Scope {
+            pool: self,
+            latch: Arc::new(Latch::new()),
+            panicked: Arc::new(AtomicBool::new(false)),
+            _env: PhantomData,
+        };
+        struct Guard<'a, 'env>(&'a Scope<'env>);
+        impl Drop for Guard<'_, '_> {
+            fn drop(&mut self) {
+                self.0.latch.wait();
+            }
+        }
+        let out;
+        {
+            let guard = Guard(&scope);
+            out = f(&scope);
+            drop(guard);
+        }
+        if scope.panicked.load(Ordering::Relaxed) {
+            panic!("pool: a scoped task panicked");
+        }
+        out
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Spawn handle tied to one [`Pool::scope`] call. `'env` is invariant so
+/// tasks can borrow anything that outlives the scope.
+pub struct Scope<'env> {
+    pool: &'env Pool,
+    latch: Arc<Latch>,
+    panicked: Arc<AtomicBool>,
+    _env: PhantomData<Cell<&'env ()>>,
+}
+
+impl<'env> Scope<'env> {
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        if self.pool.workers() == 0 {
+            // No worker threads: run on the caller so the scope still makes
+            // progress (and panics propagate through the same path).
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            return;
+        }
+        self.latch.add(1);
+        let latch = Arc::clone(&self.latch);
+        let panicked = Arc::clone(&self.panicked);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_err() {
+                panicked.store(true, Ordering::Relaxed);
+            }
+            latch.done();
+        });
+        // SAFETY: `Pool::scope` blocks until the latch reaches zero (the
+        // wait lives in a drop guard, so it runs even when unwinding), so
+        // this closure — and every `'env` borrow inside it — strictly
+        // outlives its execution. The transmute only erases the lifetime;
+        // the fat-pointer layout is identical.
+        let job: Job = unsafe { std::mem::transmute(job) };
+        self.pool.inject(job);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global pool + sizing knobs.
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = Cell::new(false);
+    static LANE_CAP: Cell<usize> = Cell::new(0);
+}
+
+static CONFIG_THREADS: AtomicUsize = AtomicUsize::new(0);
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn default_threads() -> usize {
+    let cfg = CONFIG_THREADS.load(Ordering::Relaxed);
+    if cfg > 0 {
+        return cfg;
+    }
+    if let Ok(v) = std::env::var("QRLORA_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Set the pool size (the CLI's `--threads`). Takes effect only if called
+/// before the first parallel operation creates the global pool.
+pub fn set_threads(n: usize) {
+    CONFIG_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The process-global pool, created on first use.
+pub fn global() -> &'static Pool {
+    POOL.get_or_init(|| Pool::new(default_threads()))
+}
+
+/// Lanes the global pool was sized with.
+pub fn threads() -> usize {
+    global().lanes()
+}
+
+/// Run `f` with the partition count for this thread forced to `threads`.
+/// More spans than worker threads is fine (workers drain a shared queue),
+/// so this works for both capping (`1` = serial path) and oversubscribing
+/// (deterministic 4-way splits on a 2-core box). Restored on unwind.
+pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LANE_CAP.with(|c| c.set(self.0));
+        }
+    }
+    let prev = LANE_CAP.with(|c| {
+        let p = c.get();
+        c.set(threads.max(1));
+        p
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+/// How many spans a task with `work` inner operations should split into.
+/// 1 (the serial path) when the task is small, when the caller is itself a
+/// pool worker, or under `with_threads(1, …)`.
+pub fn lanes_for(work: usize) -> usize {
+    if IN_WORKER.with(|c| c.get()) {
+        return 1;
+    }
+    if work < PAR_CUTOFF {
+        return 1;
+    }
+    let cap = LANE_CAP.with(|c| c.get());
+    if cap > 0 {
+        cap
+    } else {
+        global().lanes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic partition helpers.
+// ---------------------------------------------------------------------------
+
+/// Split `0..n` into at most `parts` contiguous `(start, len)` spans whose
+/// lengths differ by at most one.
+pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(n).max(1);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Split `data` into consecutive chunks of the given element counts.
+pub fn split_sizes<'a, T>(mut data: &'a mut [T], sizes: &[usize]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &sz in sizes {
+        let rest = std::mem::take(&mut data);
+        let (head, tail) = rest.split_at_mut(sz);
+        out.push(head);
+        data = tail;
+    }
+    out
+}
+
+/// Run every job concurrently on the pool; the caller executes the last one
+/// inline so all lanes (workers + caller) do useful work.
+pub fn join_all<F: FnOnce() + Send>(jobs: Vec<F>) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    if n == 1 {
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+    global().scope(|sc| {
+        for (i, job) in jobs.into_iter().enumerate() {
+            if i + 1 == n {
+                job();
+            } else {
+                sc.spawn(job);
+            }
+        }
+    });
+}
+
+/// Row-parallel map over `data` viewed as `rows` rows of `data.len()/rows`
+/// elements. `f(row0, chunk)` receives a block of whole rows starting at
+/// global row `row0` and must fully determine those rows from shared input.
+/// The split never changes per-element evaluation order, so output is
+/// bit-identical for any thread count. `work` ≈ total inner operations
+/// (used for the serial cutoff).
+pub fn par_rows<T, F>(data: &mut [T], rows: usize, work: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let lanes = lanes_for(work);
+    if lanes <= 1 || rows <= 1 {
+        f(0, data);
+        return;
+    }
+    debug_assert_eq!(data.len() % rows, 0, "par_rows: ragged row length");
+    let row_len = data.len() / rows;
+    let parts = partition(rows, lanes);
+    let sizes: Vec<usize> = parts.iter().map(|&(_, len)| len * row_len).collect();
+    let chunks = split_sizes(data, &sizes);
+    let fr = &f;
+    let mut jobs = Vec::with_capacity(parts.len());
+    for (&(row0, _), chunk) in parts.iter().zip(chunks) {
+        jobs.push(move || fr(row0, chunk));
+    }
+    join_all(jobs);
+}
+
+/// Like [`par_rows`] but over two output slices partitioned by the same row
+/// spans; `ra`/`rb` are elements per logical row in each slice.
+pub fn par_parts2<A, B, F>(a: &mut [A], ra: usize, b: &mut [B], rb: usize, rows: usize, work: usize, f: F)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &mut [A], &mut [B]) + Sync,
+{
+    let lanes = lanes_for(work);
+    if lanes <= 1 || rows <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let parts = partition(rows, lanes);
+    let asizes: Vec<usize> = parts.iter().map(|&(_, len)| len * ra).collect();
+    let bsizes: Vec<usize> = parts.iter().map(|&(_, len)| len * rb).collect();
+    let achunks = split_sizes(a, &asizes);
+    let bchunks = split_sizes(b, &bsizes);
+    let fr = &f;
+    let mut jobs = Vec::with_capacity(parts.len());
+    for ((&(row0, _), ac), bc) in parts.iter().zip(achunks).zip(bchunks) {
+        jobs.push(move || fr(row0, ac, bc));
+    }
+    join_all(jobs);
+}
+
+/// Three-output variant of [`par_parts2`] (attention backward, LayerNorm
+/// forward).
+#[allow(clippy::too_many_arguments)]
+pub fn par_parts3<A, B, C, F>(
+    a: &mut [A],
+    ra: usize,
+    b: &mut [B],
+    rb: usize,
+    c: &mut [C],
+    rc: usize,
+    rows: usize,
+    work: usize,
+    f: F,
+) where
+    A: Send,
+    B: Send,
+    C: Send,
+    F: Fn(usize, &mut [A], &mut [B], &mut [C]) + Sync,
+{
+    let lanes = lanes_for(work);
+    if lanes <= 1 || rows <= 1 {
+        f(0, a, b, c);
+        return;
+    }
+    let parts = partition(rows, lanes);
+    let asizes: Vec<usize> = parts.iter().map(|&(_, len)| len * ra).collect();
+    let bsizes: Vec<usize> = parts.iter().map(|&(_, len)| len * rb).collect();
+    let csizes: Vec<usize> = parts.iter().map(|&(_, len)| len * rc).collect();
+    let achunks = split_sizes(a, &asizes);
+    let bchunks = split_sizes(b, &bsizes);
+    let cchunks = split_sizes(c, &csizes);
+    let fr = &f;
+    let mut jobs = Vec::with_capacity(parts.len());
+    for (((&(row0, _), ac), bc), cc) in parts.iter().zip(achunks).zip(bchunks).zip(cchunks) {
+        jobs.push(move || fr(row0, ac, bc, cc));
+    }
+    join_all(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn partition_covers_contiguously() {
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            for p in [1usize, 2, 3, 8] {
+                let parts = partition(n, p);
+                let total: usize = parts.iter().map(|&(_, len)| len).sum();
+                assert_eq!(total, n, "n={n} p={p}");
+                let mut next = 0;
+                for &(s, len) in &parts {
+                    assert_eq!(s, next);
+                    next += len;
+                }
+                assert!(parts.len() <= p.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn split_sizes_tiles() {
+        let mut v: Vec<u32> = (0..10).collect();
+        let chunks = split_sizes(&mut v, &[3, 0, 5, 2]);
+        assert_eq!(chunks.len(), 4);
+        assert_eq!(chunks[0], &[0, 1, 2]);
+        assert_eq!(chunks[1], &[] as &[u32]);
+        assert_eq!(chunks[3], &[8, 9]);
+    }
+
+    #[test]
+    fn scope_runs_all_tasks() {
+        let counter = AtomicUsize::new(0);
+        global().scope(|sc| {
+            for _ in 0..32 {
+                let c = &counter;
+                sc.spawn(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "a scoped task panicked")]
+    fn task_panic_propagates_to_scope() {
+        global().scope(|sc| {
+            sc.spawn(|| panic!("boom"));
+        });
+    }
+
+    #[test]
+    fn par_rows_writes_every_row_once() {
+        let rows = 501;
+        let cols = 16;
+        let mut data = vec![0f32; rows * cols];
+        // work forced above the cutoff so the parallel path runs.
+        par_rows(&mut data, rows, 1 << 20, |row0, chunk| {
+            for (ri, row) in chunk.chunks_mut(cols).enumerate() {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = ((row0 + ri) * cols + j) as f32;
+                }
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    fn par_parts_split_consistently() {
+        let rows = 97;
+        let mut a = vec![0u32; rows * 3];
+        let mut b = vec![0u32; rows];
+        let mut c = vec![0u32; rows * 2];
+        par_parts3(&mut a, 3, &mut b, 1, &mut c, 2, rows, 1 << 20, |r0, ac, bc, cc| {
+            let n = bc.len();
+            assert_eq!(ac.len(), 3 * n);
+            assert_eq!(cc.len(), 2 * n);
+            for i in 0..n {
+                bc[i] = (r0 + i) as u32;
+                ac[3 * i] = (r0 + i) as u32;
+                cc[2 * i + 1] = (r0 + i) as u32;
+            }
+        });
+        for (i, &v) in b.iter().enumerate() {
+            assert_eq!(v, i as u32);
+            assert_eq!(a[3 * i], i as u32);
+            assert_eq!(c[2 * i + 1], i as u32);
+        }
+    }
+
+    #[test]
+    fn with_threads_is_deterministic_and_restores() {
+        let run = |t: usize| {
+            with_threads(t, || {
+                let rows = 64;
+                let cols = 64;
+                let mut data = vec![0f64; rows * cols];
+                par_rows(&mut data, rows, 1 << 20, |row0, chunk| {
+                    for (ri, row) in chunk.chunks_mut(cols).enumerate() {
+                        let mut acc = 0f64;
+                        for (j, v) in row.iter_mut().enumerate() {
+                            acc += ((row0 + ri) * 31 + j) as f64 * 0.125;
+                            *v = acc;
+                        }
+                    }
+                });
+                data
+            })
+        };
+        let serial = run(1);
+        for t in [2usize, 3, 5, 8] {
+            assert_eq!(serial, run(t), "threads={t}");
+        }
+        assert_eq!(LANE_CAP.with(|c| c.get()), 0, "cap must be restored");
+    }
+
+    #[test]
+    fn nested_parallelism_from_workers_is_serial() {
+        // A task running on a pool worker must not fan out again.
+        let seen = Mutex::new(Vec::new());
+        global().scope(|sc| {
+            let seen = &seen;
+            sc.spawn(move || {
+                seen.lock().unwrap().push(lanes_for(usize::MAX));
+            });
+        });
+        let got = seen.into_inner().unwrap();
+        // Inside a worker IN_WORKER forces 1; on a 1-lane pool the task ran
+        // inline on a 1-lane global pool. Either way: no nested fan-out.
+        assert_eq!(got, vec![1]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Property tests for the worker-pool parallelization: every parallel path
+//! (tensor kernels, full train/eval/pretrain steps) must produce
+//! **bit-identical** output for threads=1 vs threads=N. The pool partitions
+//! work into contiguous row spans without changing per-element accumulation
+//! order, so these are exact (`to_bits`) comparisons, not tolerances.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use qrlora::data::HeadKind;
+use qrlora::model::host::{
+    eval_forward, pretrain_step, train_step, FrozenMap, MethodKind, MlmBatchRef, TaskBatchRef,
+};
+use qrlora::runtime::{Manifest, Preset, Role, StateLayout};
+use qrlora::tensor::Tensor;
+use qrlora::util::pool;
+use qrlora::util::rng::Rng;
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: bit mismatch at {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn matmul_kernels_bit_identical_across_thread_counts() {
+    // Tall, wide, square, and ragged shapes; sizes straddle the serial
+    // cutoff so both paths are exercised.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (3, 257, 5),
+        (64, 64, 64),
+        (130, 67, 33),
+        (5, 8, 512),
+        (256, 31, 7),
+        (97, 128, 130),
+    ];
+    for &(m, k, n) in &shapes {
+        let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let bt = Tensor::randn(&[n, k], &mut rng, 1.0); // matmul_t RHS
+        let b = Tensor::randn(&[k, n], &mut rng, 1.0); // matmul RHS
+        let c = Tensor::randn(&[m, n], &mut rng, 1.0); // t_matmul RHS
+        let s_mt = pool::with_threads(1, || a.matmul_t(&bt));
+        let s_mm = pool::with_threads(1, || a.matmul(&b));
+        let s_tm = pool::with_threads(1, || a.t_matmul(&c));
+        for t in [2usize, 4, 7] {
+            let p_mt = pool::with_threads(t, || a.matmul_t(&bt));
+            let p_mm = pool::with_threads(t, || a.matmul(&b));
+            let p_tm = pool::with_threads(t, || a.t_matmul(&c));
+            assert_bits_eq(&s_mt.data, &p_mt.data, &format!("matmul_t {m}x{k}x{n} t={t}"));
+            assert_bits_eq(&s_mm.data, &p_mm.data, &format!("matmul {m}x{k}x{n} t={t}"));
+            assert_bits_eq(&s_tm.data, &p_tm.data, &format!("t_matmul {m}x{k}x{n} t={t}"));
+        }
+    }
+}
+
+#[test]
+fn t_matmul_zero_skip_rows_bit_identical() {
+    // The zero-skip branch must not interact with the row partition: zero
+    // rows land inside and across span boundaries.
+    let mut rng = Rng::new(4242);
+    let mut a = Tensor::randn(&[96, 64], &mut rng, 1.0);
+    for i in 0..96 {
+        if i % 3 != 0 {
+            for v in a.row_mut(i) {
+                *v = 0.0;
+            }
+        }
+    }
+    let c = Tensor::randn(&[96, 80], &mut rng, 1.0);
+    let serial = pool::with_threads(1, || a.t_matmul(&c));
+    for t in [2usize, 4] {
+        let par = pool::with_threads(t, || a.t_matmul(&c));
+        assert_bits_eq(&serial.data, &par.data, &format!("sparse t_matmul t={t}"));
+    }
+}
+
+fn setup(key: &str) -> (Preset, StateLayout, Vec<f32>, FrozenMap) {
+    let m = Manifest::builtin();
+    let a = m.artifact(key).unwrap();
+    let p = m.preset(&a.preset).unwrap().clone();
+    let layout = a.layout().unwrap().clone();
+    let mut rng = Rng::new(31);
+    let mut state = vec![0f32; layout.total];
+    for f in &layout.params {
+        for i in 0..f.numel() {
+            state[f.offset + i] = rng.normal() * 0.05;
+        }
+    }
+    let mut frozen: FrozenMap = BTreeMap::new();
+    for (_, t) in a.inputs_with_role(Role::Frozen) {
+        let data: Vec<f32> = if t.name.ends_with("/mask") {
+            vec![1.0; t.numel()]
+        } else {
+            (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
+        };
+        frozen.insert(t.name.clone(), Rc::new(Tensor::from_vec(&t.shape, data)));
+    }
+    (p, layout, state, frozen)
+}
+
+#[test]
+fn train_and_eval_steps_bit_identical_across_thread_counts() {
+    for (key, method) in [
+        ("tiny/train_step_qrlora_cls", MethodKind::QrLora),
+        ("tiny/train_step_lora_cls", MethodKind::Lora),
+    ] {
+        let (p, layout, state, frozen) = setup(key);
+        let bs = p.batch * p.max_seq;
+        let ids: Vec<i32> = (0..bs).map(|i| ((i * 7 + 2) % p.vocab) as i32).collect();
+        let type_ids = vec![0i32; bs];
+        let attn_mask: Vec<f32> =
+            (0..bs).map(|i| if i % p.max_seq < p.max_seq - 3 { 1.0 } else { 0.0 }).collect();
+        let labels: Vec<i32> = (0..p.batch).map(|i| (i % 2) as i32).collect();
+        let class_mask = vec![1.0f32; p.n_classes];
+        let example_w = vec![1.0f32; p.batch];
+        let batch = TaskBatchRef {
+            input_ids: &ids,
+            type_ids: &type_ids,
+            attn_mask: &attn_mask,
+            labels_i32: &labels,
+            labels_f32: &[],
+            class_mask: &class_mask,
+            example_w: &example_w,
+        };
+        let serial = pool::with_threads(1, || {
+            train_step(&p, method, HeadKind::Cls, &layout, &state, &frozen, &batch, 1e-3, 1.0)
+        });
+        let serial_eval = pool::with_threads(1, || {
+            eval_forward(&p, method, HeadKind::Cls, &layout, &state, &frozen, &batch)
+        });
+        for t in [2usize, 4] {
+            let par = pool::with_threads(t, || {
+                train_step(&p, method, HeadKind::Cls, &layout, &state, &frozen, &batch, 1e-3, 1.0)
+            });
+            assert_bits_eq(&serial, &par, &format!("{key} train_step t={t}"));
+            let par_eval = pool::with_threads(t, || {
+                eval_forward(&p, method, HeadKind::Cls, &layout, &state, &frozen, &batch)
+            });
+            assert_bits_eq(&serial_eval, &par_eval, &format!("{key} eval_fwd t={t}"));
+        }
+    }
+}
+
+#[test]
+fn pretrain_step_bit_identical_across_thread_counts() {
+    let (p, layout, state, _) = setup("tiny/pretrain_step");
+    let bs = p.batch * p.max_seq;
+    let ids: Vec<i32> = (0..bs).map(|i| ((i * 17 + 3) % p.vocab) as i32).collect();
+    let type_ids = vec![0i32; bs];
+    let attn_mask = vec![1.0f32; bs];
+    let mut labels = vec![-100i32; bs];
+    for i in (0..bs).step_by(7) {
+        labels[i] = ((i * 31) % p.vocab) as i32;
+    }
+    let batch = MlmBatchRef {
+        input_ids: &ids,
+        type_ids: &type_ids,
+        attn_mask: &attn_mask,
+        mlm_labels: &labels,
+    };
+    let serial = pool::with_threads(1, || pretrain_step(&p, &layout, &state, &batch, 2e-3, 1.0));
+    for t in [2usize, 4] {
+        let par = pool::with_threads(t, || pretrain_step(&p, &layout, &state, &batch, 2e-3, 1.0));
+        assert_bits_eq(&serial, &par, &format!("pretrain_step t={t}"));
+    }
+}
