@@ -1,11 +1,15 @@
 //! Multi-task adapter serving demo: one shared frozen backbone, per-task
-//! QR-LoRA adapters hot-swapped by a batching router.
+//! QR-LoRA adapters kept resident in an `AdapterBank`, mixed-task batches
+//! served in single backbone passes (with the swap-per-request baseline
+//! replayed for comparison).
 //!
 //! ```text
-//! cargo run --release --example adapter_server -- --requests 200
+//! cargo run --release --example adapter_server -- --requests 200 \
+//!     --max-batch 8 --resident-adapters 8
 //! ```
 
 use qrlora::experiments::ExpConfig;
+use qrlora::server::ServeConfig;
 use qrlora::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
@@ -18,5 +22,6 @@ fn main() -> anyhow::Result<()> {
         steps: args.usize_or("steps", 150)?,
         ..ExpConfig::default()
     };
-    qrlora::server::demo(&cfg, args.usize_or("requests", 200)?)
+    let sc = ServeConfig::from_args(&args)?;
+    qrlora::server::demo(&cfg, &sc)
 }

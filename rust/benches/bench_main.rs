@@ -380,6 +380,81 @@ fn main() -> anyhow::Result<()> {
         session.upload_state(&state).unwrap();
     });
 
+    // Multi-adapter serving: both entries process `preset.batch` requests
+    // cycling through 3 resident adapters, so their means are directly
+    // comparable per request. `serve_swap` runs one padded single-request
+    // batch per request with a state swap on every task change (the legacy
+    // router); `serve_mixed_batch` serves all rows in ONE mixed batch
+    // through the resident bank — the acceptance gate for batched serving
+    // is serve_mixed_batch ≥2x faster than serve_swap.
+    let n_adapters = 3usize;
+    let adapter_states: Vec<Vec<f32>> = {
+        let layout = session.layout().clone();
+        let base_state = session.download_state()?;
+        (0..n_adapters)
+            .map(|aidx| {
+                let mut st = base_state.clone();
+                let mut arng = Rng::new(100 + aidx as u64);
+                for f in &layout.params {
+                    for i in 0..f.numel() {
+                        st[f.offset + i] += arng.normal() * 0.01;
+                    }
+                }
+                st
+            })
+            .collect()
+    };
+    let serve_classes = 2usize;
+    let singles: Vec<qrlora::data::Batch> = (0..preset.batch)
+        .map(|i| batcher.assemble(&[&data.train[i]]))
+        .collect();
+    rec.bench("serve_swap", tmax, 1, 10, || {
+        for (i, b) in singles.iter().enumerate() {
+            session.upload_state(&adapter_states[i % n_adapters]).unwrap();
+            std::hint::black_box(session.forward(b, serve_classes).unwrap());
+        }
+    });
+    // Middle baseline: the pre-bank router's behavior — group same-task
+    // requests into one full batch, swap state once per group. Separates
+    // the win from batching per se (serve_swap → here) from the win of
+    // mixed batches + residency (here → serve_mixed_batch).
+    let grouped: Vec<qrlora::data::Batch> = (0..n_adapters)
+        .map(|a| {
+            let refs: Vec<&qrlora::data::Example> = (0..preset.batch)
+                .filter(|i| i % n_adapters == a)
+                .map(|i| &data.train[i])
+                .collect();
+            batcher.assemble(&refs)
+        })
+        .collect();
+    rec.bench("serve_task_grouped", tmax, 1, 10, || {
+        for (a, b) in grouped.iter().enumerate() {
+            session.upload_state(&adapter_states[a]).unwrap();
+            std::hint::black_box(session.forward(b, serve_classes).unwrap());
+        }
+    });
+    let head_k = session.layout().param("head/wc")?.shape[1];
+    let cmask = Batcher::class_mask(serve_classes, head_k);
+    let state_bufs: Vec<Buffer> = adapter_states
+        .iter()
+        .map(|s| rt.upload_f32(s, &[s.len()]).unwrap())
+        .collect();
+    let mask_bufs: Vec<Buffer> = (0..n_adapters)
+        .map(|_| rt.upload_f32(&cmask, &[head_k]).unwrap())
+        .collect();
+    let state_refs: Vec<&Buffer> = state_bufs.iter().collect();
+    let mask_refs: Vec<&Buffer> = mask_bufs.iter().collect();
+    let row_slots: Vec<usize> = (0..preset.batch).map(|i| i % n_adapters).collect();
+    let mixed_refs: Vec<&qrlora::data::Example> = data.train[..preset.batch].iter().collect();
+    let mixed = batcher.assemble(&mixed_refs);
+    rec.bench("serve_mixed_batch", tmax, 1, 10, || {
+        std::hint::black_box(
+            session
+                .forward_multi(&mixed, &state_refs, &mask_refs, &row_slots)
+                .unwrap(),
+        );
+    });
+
     // Footprint summary for the serving claim.
     let qr_state_kib = (session.layout().total * 4) as f64 / 1024.0;
     let ft_params = qrlora::runtime::Preset::approx_backbone_params(&preset);

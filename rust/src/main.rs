@@ -29,7 +29,7 @@ const COMMANDS: &[Command] = &[
     Command { name: "train", about: "fine-tune one task with one method (full pipeline)" },
     Command { name: "ranks", about: "pivoted-QR rank-selection report for a backbone" },
     Command { name: "exp", about: "regenerate a paper table/figure: table1..table4, figure1, all" },
-    Command { name: "serve", about: "multi-adapter serving router demo" },
+    Command { name: "serve", about: "batched multi-adapter serving demo (resident AdapterBank)" },
 ];
 
 fn main() {
@@ -267,6 +267,6 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = exp_config(args)?;
-    let requests = args.usize_or("requests", 200)?;
-    qrlora::server::demo(&cfg, requests)
+    let sc = qrlora::server::ServeConfig::from_args(args)?;
+    qrlora::server::demo(&cfg, &sc)
 }

@@ -912,7 +912,11 @@ fn head_bwd(
 // ---------------------------------------------------------------------------
 
 /// Read the trainable leaves of a flat state vector as named tensors.
-fn unpack_train(state: &[f32], layout: &StateLayout) -> BTreeMap<String, Tensor> {
+///
+/// Public because the runtime's resident-adapter cache memoizes exactly
+/// this unpack per bank slot (see `runtime::host`), so batched serving
+/// stops re-slicing adapter states on every mixed batch.
+pub fn unpack_train(state: &[f32], layout: &StateLayout) -> BTreeMap<String, Tensor> {
     layout
         .params
         .iter()
@@ -1062,6 +1066,281 @@ pub fn eval_forward(
     let (h, _) = encode_fwd(&pv, p, method, batch.input_ids, batch.type_ids, batch.attn_mask);
     let (logits, _, _) = head_fwd(&pv, head, &h, p.batch, p.max_seq, batch.class_mask);
     logits.data
+}
+
+// ---------------------------------------------------------------------------
+// Batched multi-adapter forward (serving fast path).
+// ---------------------------------------------------------------------------
+
+/// Per-adapter trainables + the shared frozen backbone, for the batched
+/// multi-adapter forward ([`eval_forward_multi`]).
+///
+/// Adapter methods (LoRA / QR-LoRA) freeze the whole backbone, so every
+/// shared parameter lives in `frozen` and only the tiny per-task leaves
+/// (λ, LoRA A/B, task head) come from the selected slot. `slots` is
+/// indexed by bank slot id; only slots referenced by the batch's
+/// `row_slots` need to be populated (`None` elsewhere).
+struct MultiView<'a> {
+    slots: &'a [Option<Rc<BTreeMap<String, Tensor>>>],
+    frozen: &'a FrozenMap,
+}
+
+impl MultiView<'_> {
+    /// Shared (frozen) parameter — backbone weights, Q/R factors, masks.
+    fn shared(&self, name: &str) -> &Tensor {
+        self.frozen
+            .get(name)
+            .unwrap_or_else(|| panic!("host model (multi): missing frozen {name:?}"))
+    }
+
+    fn shared_vec(&self, name: &str) -> &[f32] {
+        &self.shared(name).data
+    }
+
+    /// Per-adapter trainable parameter of slot `t` (must be populated).
+    fn slot(&self, t: usize, name: &str) -> &Tensor {
+        self.slots[t]
+            .as_ref()
+            .unwrap_or_else(|| panic!("host model (multi): slot {t} not unpacked"))
+            .get(name)
+            .unwrap_or_else(|| panic!("host model (multi): slot {t} missing {name:?}"))
+    }
+
+    fn slot_vec(&self, t: usize, name: &str) -> &[f32] {
+        &self.slot(t, name).data
+    }
+}
+
+/// Distinct values of `row_slots` in first-appearance order. Shared with
+/// the runtime's grouped `execute_batched` fallback so both paths iterate
+/// adapters in the same deterministic order.
+pub fn distinct_slots(row_slots: &[usize]) -> Vec<usize> {
+    let mut out = Vec::new();
+    for &s in row_slots {
+        if !out.contains(&s) {
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// Forward of one adapted projection with per-row adapter selection:
+/// `y = x·W₀ + Δ_task(row) + bias`. Rows of `x` are grouped `s` per batch
+/// element and `row_slots[b]` names the adapter for element `b`. The
+/// backbone product `x·W₀` happens exactly once for the whole mixed batch.
+fn proj_fwd_multi(
+    mv: &MultiView,
+    method: MethodKind,
+    layer: usize,
+    pj: &str,
+    x: &Tensor,
+    row_slots: &[usize],
+    s: usize,
+) -> Tensor {
+    let w0 = mv.shared(&format!("layer{layer}/attn/{pj}"));
+    let bias = mv.shared_vec(&format!("layer{layer}/attn/b{}", &pj[1..2]));
+    let mut y = x.matmul(w0);
+    if adapted(method, pj) {
+        match method {
+            MethodKind::QrLora => {
+                // x·Q and ·R̃ use the shared frozen factors once; only the
+                // diag(λ·mask) scaling is per row. The coefficient vectors
+                // are built exactly as `proj_fwd` builds its single one, so
+                // each row's values match the swapped-in path bit for bit.
+                let base = format!("qr/layer{layer}/{pj}");
+                let q = mv.shared(&format!("{base}/Q"));
+                let r = mv.shared(&format!("{base}/R"));
+                let mask = mv.shared_vec(&format!("{base}/mask"));
+                // Only slots actually present in this batch need a
+                // coefficient vector (the bank may hold many more).
+                let mut coeffs: Vec<Option<Vec<f32>>> = vec![None; mv.slots.len()];
+                for t in distinct_slots(row_slots) {
+                    coeffs[t] = Some(
+                        mv.slot_vec(t, &format!("{base}/lam"))
+                            .iter()
+                            .zip(mask)
+                            .map(|(l, m)| l * m)
+                            .collect(),
+                    );
+                }
+                let mut xq = x.matmul(q);
+                let cols = xq.cols();
+                for (i, row) in xq.data.chunks_mut(cols).enumerate() {
+                    let coeff = coeffs[row_slots[i / s]].as_ref().expect("slot coeffs");
+                    for (v, &c) in row.iter_mut().zip(coeff) {
+                        *v *= c;
+                    }
+                }
+                y.add_assign(&xq.matmul(r));
+            }
+            MethodKind::Lora => {
+                // A/B are per-adapter matrices, so the low-rank delta runs
+                // once per *distinct* slot (rank r_lora is tiny) and only
+                // that slot's rows are kept.
+                let base = format!("lora/layer{layer}/{pj}");
+                let scale = mv.shared_vec(&format!("{base}/scale"));
+                for t in distinct_slots(row_slots) {
+                    let a = mv.slot(t, &format!("{base}/A"));
+                    let b = mv.slot(t, &format!("{base}/B"));
+                    let delta = scale_cols(&x.matmul(a), scale).matmul(b);
+                    let cols = delta.cols();
+                    for (i, row) in y.data.chunks_mut(cols).enumerate() {
+                        if row_slots[i / s] == t {
+                            for (v, &dv) in row.iter_mut().zip(delta.row(i)) {
+                                *v += dv;
+                            }
+                        }
+                    }
+                }
+            }
+            MethodKind::Ft => unreachable!("multi-adapter serving requires a frozen backbone"),
+        }
+    }
+    add_bias_rows(&mut y, bias);
+    y
+}
+
+/// Encoder forward over a mixed-adapter batch (no backward caches). The
+/// layer structure mirrors [`encode_fwd`] exactly; only the adapted
+/// projections consult `row_slots`.
+fn encode_fwd_multi(
+    mv: &MultiView,
+    p: &Preset,
+    method: MethodKind,
+    row_slots: &[usize],
+    ids: &[i32],
+    type_ids: &[i32],
+    attn_mask: &[f32],
+) -> Tensor {
+    let (b, s, d, nh) = (p.batch, p.max_seq, p.d_model, p.n_heads);
+    let tok = mv.shared("emb/tok");
+    let pos = mv.shared("emb/pos");
+    let typ = mv.shared("emb/type");
+    let mut h = Tensor::zeros(&[b * s, d]);
+    pool::par_rows(&mut h.data, b * s, b * s * d, |row0, chunk| {
+        for (ri, out) in chunk.chunks_mut(d).enumerate() {
+            let row = row0 + ri;
+            let ss = row % s;
+            let t = ids[row] as usize;
+            let ty = type_ids[row] as usize;
+            let tr = &tok.data[t * d..(t + 1) * d];
+            let pr = &pos.data[ss * d..(ss + 1) * d];
+            let yr = &typ.data[ty * d..(ty + 1) * d];
+            for e in 0..d {
+                out[e] = tr[e] + pr[e] + yr[e];
+            }
+        }
+    });
+    let (mut h, _) = ln_fwd(&h, mv.shared_vec("emb/ln_g"), mv.shared_vec("emb/ln_b"));
+
+    let amask_add: Vec<f32> = attn_mask.iter().map(|&m| (1.0 - m) * NEG_INF).collect();
+
+    for l in 0..p.n_layers {
+        let (x_ln1, _) = ln_fwd(
+            &h,
+            mv.shared_vec(&format!("layer{l}/ln1_g")),
+            mv.shared_vec(&format!("layer{l}/ln1_b")),
+        );
+        let q = proj_fwd_multi(mv, method, l, "wq", &x_ln1, row_slots, s);
+        let k = proj_fwd_multi(mv, method, l, "wk", &x_ln1, row_slots, s);
+        let v = proj_fwd_multi(mv, method, l, "wv", &x_ln1, row_slots, s);
+        let (_, ctx) = attention_fwd(&q, &k, &v, &amask_add, b, s, nh);
+        let o = proj_fwd_multi(mv, method, l, "wo", &ctx, row_slots, s);
+        h.add_assign(&o);
+
+        let (x_ln2, _) = ln_fwd(
+            &h,
+            mv.shared_vec(&format!("layer{l}/ln2_g")),
+            mv.shared_vec(&format!("layer{l}/ln2_b")),
+        );
+        let mut f1_pre = x_ln2.matmul(mv.shared(&format!("layer{l}/ffn/w1")));
+        add_bias_rows(&mut f1_pre, mv.shared_vec(&format!("layer{l}/ffn/b1")));
+        let (f1, _) = gelu_fwd(&f1_pre);
+        let mut f2 = f1.matmul(mv.shared(&format!("layer{l}/ffn/w2")));
+        add_bias_rows(&mut f2, mv.shared_vec(&format!("layer{l}/ffn/b2")));
+        h.add_assign(&f2);
+    }
+    h
+}
+
+/// Task heads over a mixed-adapter batch: each adapter's head runs over
+/// the pooled CLS matrix once, and each batch row keeps the logits of its
+/// own adapter, masked by that adapter's class mask.
+fn head_fwd_multi(
+    mv: &MultiView,
+    head: HeadKind,
+    h: &Tensor,
+    b: usize,
+    s: usize,
+    class_masks: &[&[f32]],
+    row_slots: &[usize],
+) -> Tensor {
+    let d = h.cols();
+    let mut cls = Tensor::zeros(&[b, d]);
+    for bb in 0..b {
+        cls.row_mut(bb).copy_from_slice(&h.data[bb * s * d..(bb * s + 1) * d]);
+    }
+    // Head width is layout-wide; read it off any slot the batch uses.
+    let k = mv.slot(row_slots[0], "head/wc").cols();
+    let mut logits = Tensor::zeros(&[b, k]);
+    for t in distinct_slots(row_slots) {
+        let mut pre = cls.matmul(mv.slot(t, "head/wp"));
+        add_bias_rows(&mut pre, mv.slot_vec(t, "head/bp"));
+        let mut pooled = pre;
+        for v in pooled.data.iter_mut() {
+            *v = v.tanh();
+        }
+        let mut lg = pooled.matmul(mv.slot(t, "head/wc"));
+        add_bias_rows(&mut lg, mv.slot_vec(t, "head/bc"));
+        if head == HeadKind::Cls {
+            let cm = class_masks[t];
+            for bb in 0..b {
+                for j in 0..k {
+                    lg.data[bb * k + j] += (1.0 - cm[j]) * NEG_INF;
+                }
+            }
+        }
+        for bb in 0..b {
+            if row_slots[bb] == t {
+                logits.row_mut(bb).copy_from_slice(lg.row(bb));
+            }
+        }
+    }
+    logits
+}
+
+/// Batched multi-adapter forward: one shared frozen-backbone pass over a
+/// mixed-task batch, with per-row adapter deltas and task heads.
+///
+/// `slots[t]` holds adapter `t`'s unpacked trainables (λ or LoRA A/B plus
+/// the task head; only slots named by `row_slots` need to be `Some`),
+/// `class_masks[t]` its padded class mask, and `row_slots[b]` selects the
+/// adapter for batch element `b`. Per-request logits are
+/// **bit-identical** to [`eval_forward`] with the same adapter's state
+/// swapped in, because every op on the forward path is row-local —
+/// enforced by `rust/tests/serve_batched.rs`.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_forward_multi(
+    p: &Preset,
+    method: MethodKind,
+    head: HeadKind,
+    slots: &[Option<Rc<BTreeMap<String, Tensor>>>],
+    class_masks: &[&[f32]],
+    row_slots: &[usize],
+    frozen: &FrozenMap,
+    batch: &TaskBatchRef,
+) -> Vec<f32> {
+    let mv = MultiView { slots, frozen };
+    let h = encode_fwd_multi(
+        &mv,
+        p,
+        method,
+        row_slots,
+        batch.input_ids,
+        batch.type_ids,
+        batch.attn_mask,
+    );
+    head_fwd_multi(&mv, head, &h, p.batch, p.max_seq, class_masks, row_slots).data
 }
 
 /// One MLM pretraining step (whole backbone trains, weight-tied LM head).

@@ -11,15 +11,21 @@
 //!   `artifacts/*.hlo.txt`, compiles through the XLA CPU client, keeps the
 //!   state buffer device-resident across steps.
 //!
-//! Selection: `create_backend` honors an explicit [`BackendChoice`]
+//! Selection: [`create_backend`] honors an explicit [`BackendChoice`]
 //! (CLI `--backend` / `QRLORA_BACKEND`); `Auto` picks PJRT when the feature
 //! is compiled **and** an artifacts manifest exists, else falls back to the
 //! host backend, so a clean checkout runs hermetically.
+//!
+//! Beyond single-adapter steps, the trait carries
+//! [`Backend::execute_batched`]: mixed-adapter batched inference over one
+//! eval-forward program, the primitive behind the serving router's
+//! [`crate::server::AdapterBank`]. Backends without a native fast path get
+//! the grouped fallback ([`execute_batched_grouped`]) for free.
 
 use std::path::Path;
 use std::rc::Rc;
 
-use super::manifest::{ArtifactSpec, Manifest};
+use super::manifest::{ArtifactSpec, Manifest, Role};
 
 /// Host-side tensor value (upload source / download target).
 #[derive(Clone, Debug)]
@@ -29,6 +35,7 @@ pub enum HostTensor {
 }
 
 impl HostTensor {
+    /// Element count, regardless of dtype.
     pub fn len(&self) -> usize {
         match self {
             HostTensor::F32(v) => v.len(),
@@ -36,10 +43,12 @@ impl HostTensor {
         }
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Borrow as f32 data (errors on an i32 tensor).
     pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
         match self {
             HostTensor::F32(v) => Ok(v),
@@ -57,10 +66,12 @@ pub enum Buffer {
 }
 
 impl Buffer {
+    /// Wrap host f32 data as a buffer (host backend).
     pub fn host_f32(data: Vec<f32>, shape: &[usize]) -> Buffer {
         Buffer::Host { value: HostTensor::F32(data), shape: shape.to_vec() }
     }
 
+    /// Wrap host i32 data as a buffer (host backend).
     pub fn host_i32(data: Vec<i32>, shape: &[usize]) -> Buffer {
         Buffer::Host { value: HostTensor::I32(data), shape: shape.to_vec() }
     }
@@ -98,6 +109,116 @@ pub(crate) enum ExecutableImpl {
     Pjrt(xla::PjRtLoadedExecutable),
 }
 
+/// Per-row adapter selection for one mixed-task batch (the argument block
+/// of [`Backend::execute_batched`]).
+///
+/// `states[t]` / `class_masks[t]` are adapter `t`'s backend-resident flat
+/// state vector and padded class-mask vector; `row_slots[b]` names the
+/// adapter serving batch row `b`. The vectors stay resident across calls
+/// (the serving router's `AdapterBank` owns them), so steady-state batched
+/// inference uploads nothing per request.
+pub struct BatchedAdapters<'a> {
+    /// Resident per-adapter state vectors, one per bank slot. Each must
+    /// match the executable's `state` input shape.
+    pub states: &'a [&'a Buffer],
+    /// Per-adapter `batch/class_mask` vectors, index-aligned with `states`.
+    pub class_masks: &'a [&'a Buffer],
+    /// For each batch row, the index into `states` of the adapter that
+    /// serves it. Length must equal the program's batch dimension.
+    pub row_slots: &'a [usize],
+}
+
+impl BatchedAdapters<'_> {
+    /// Structural checks shared by every implementation: non-empty bank,
+    /// aligned mask table, in-range row slots.
+    pub fn validate(&self, spec: &ArtifactSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.states.is_empty(), "{}: adapter bank is empty", spec.key);
+        anyhow::ensure!(
+            self.class_masks.len() == self.states.len(),
+            "{}: {} class masks for {} adapter states",
+            spec.key,
+            self.class_masks.len(),
+            self.states.len()
+        );
+        for &s in self.row_slots {
+            anyhow::ensure!(
+                s < self.states.len(),
+                "{}: row slot {s} out of range ({} resident adapters)",
+                spec.key,
+                self.states.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Grouped fallback for [`Backend::execute_batched`]: one full `execute`
+/// per *distinct* adapter in the batch, substituting that adapter's state
+/// and class mask, then gathering only its rows from the logits output.
+///
+/// Correct on any backend (per-row outputs depend only on the row's own
+/// inputs and the substituted adapter), but pays one backbone pass per
+/// distinct task in the batch — this is what the PJRT backend runs today,
+/// while [`super::HostBackend`] overrides the trait method with a true
+/// single-pass path.
+pub fn execute_batched_grouped<B: Backend + ?Sized>(
+    bk: &B,
+    exe: &Executable,
+    args: &[&Buffer],
+    adapters: &BatchedAdapters<'_>,
+) -> anyhow::Result<Vec<Buffer>> {
+    let spec = &exe.spec;
+    adapters.validate(spec)?;
+    anyhow::ensure!(
+        spec.kind.starts_with("eval_fwd"),
+        "{}: execute_batched supports eval_fwd programs only",
+        spec.key
+    );
+    anyhow::ensure!(
+        spec.outputs.len() == 1,
+        "{}: batched execution expects a single logits output",
+        spec.key
+    );
+    let state_idx = spec
+        .inputs_with_role(Role::State)
+        .map(|(i, _)| i)
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("{}: no state input", spec.key))?;
+    let mask_idx = spec.input_index("batch/class_mask");
+
+    let out_spec = &spec.outputs[0];
+    let rows = adapters.row_slots.len();
+    anyhow::ensure!(
+        out_spec.shape.first() == Some(&rows),
+        "{}: {} row slots for a {:?} output",
+        spec.key,
+        rows,
+        out_spec.shape
+    );
+    let k = out_spec.numel() / rows.max(1);
+
+    // Same deterministic first-appearance adapter order as the host fast
+    // path.
+    let present = crate::model::host::distinct_slots(adapters.row_slots);
+
+    let mut merged = vec![0f32; out_spec.numel()];
+    for &slot in &present {
+        let mut patched: Vec<&Buffer> = args.to_vec();
+        patched[state_idx] = adapters.states[slot];
+        if let Some(mi) = mask_idx {
+            patched[mi] = adapters.class_masks[slot];
+        }
+        let outs = bk.execute(exe, &patched)?;
+        let logits = bk.download_f32(&outs[0])?;
+        for (row, &rs) in adapters.row_slots.iter().enumerate() {
+            if rs == slot {
+                merged[row * k..(row + 1) * k].copy_from_slice(&logits[row * k..(row + 1) * k]);
+            }
+        }
+    }
+    Ok(vec![bk.upload_f32(&merged, &out_spec.shape)?])
+}
+
 /// The execution-backend contract: load/upload/execute/download over the
 /// shared `Manifest`/`ArtifactSpec` protocol.
 pub trait Backend {
@@ -114,12 +235,16 @@ pub trait Backend {
     /// manifest output, in order.
     fn execute(&self, exe: &Executable, args: &[&Buffer]) -> anyhow::Result<Vec<Buffer>>;
 
+    /// Upload host f32 data as a backend buffer of the given shape.
     fn upload_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<Buffer>;
 
+    /// Upload host i32 data as a backend buffer of the given shape.
     fn upload_i32(&self, data: &[i32], shape: &[usize]) -> anyhow::Result<Buffer>;
 
+    /// Copy a backend buffer back to host f32 data.
     fn download_f32(&self, buf: &Buffer) -> anyhow::Result<Vec<f32>>;
 
+    /// Upload one f32 scalar (rank-0 buffer).
     fn upload_scalar(&self, v: f32) -> anyhow::Result<Buffer> {
         self.upload_f32(&[v], &[])
     }
@@ -129,6 +254,30 @@ pub trait Backend {
     fn read_metrics(&self, metrics_exe: &Executable, state: &Buffer) -> anyhow::Result<Vec<f32>> {
         let outs = self.execute(metrics_exe, &[state])?;
         self.download_f32(&outs[0])
+    }
+
+    /// Execute one eval-forward program over a mixed-adapter batch.
+    ///
+    /// `args` is the full argument list in manifest order, with *some*
+    /// adapter's buffers in the `state` / `batch/class_mask` slots as
+    /// placeholders; `adapters` carries the resident per-adapter buffers
+    /// and the per-row slot assignment. Returns the same outputs as
+    /// [`Backend::execute`], each batch row produced by its own adapter —
+    /// bit-identical, per row, to executing with that adapter's state
+    /// swapped in (every op on the forward path is row-local).
+    ///
+    /// The default implementation is [`execute_batched_grouped`]: one
+    /// `execute` per distinct adapter in the batch. [`super::HostBackend`]
+    /// overrides it with a single-pass fast path that evaluates the shared
+    /// frozen backbone once and selects adapter deltas and task heads per
+    /// row.
+    fn execute_batched(
+        &self,
+        exe: &Executable,
+        args: &[&Buffer],
+        adapters: &BatchedAdapters<'_>,
+    ) -> anyhow::Result<Vec<Buffer>> {
+        execute_batched_grouped(self, exe, args, adapters)
     }
 }
 
@@ -218,6 +367,25 @@ mod tests {
         let bk = create_backend(BackendChoice::Auto, Path::new("/nonexistent/artifacts")).unwrap();
         assert_eq!(bk.name(), "host");
         assert!(bk.manifest().preset("tiny").is_ok());
+    }
+
+    #[test]
+    fn batched_adapters_validate() {
+        let b0 = Buffer::host_f32(vec![0.0], &[1]);
+        let m0 = Buffer::host_f32(vec![1.0], &[1]);
+        let m = Manifest::builtin();
+        let spec = m.artifact("tiny/eval_fwd_qrlora_cls").unwrap();
+        let states = [&b0];
+        let masks = [&m0];
+        let ok = BatchedAdapters { states: &states, class_masks: &masks, row_slots: &[0, 0] };
+        assert!(ok.validate(spec).is_ok());
+        let bad_slot = BatchedAdapters { states: &states, class_masks: &masks, row_slots: &[1] };
+        assert!(bad_slot.validate(spec).is_err());
+        let empty: [&Buffer; 0] = [];
+        let none = BatchedAdapters { states: &empty, class_masks: &empty, row_slots: &[] };
+        assert!(none.validate(spec).is_err());
+        let misaligned = BatchedAdapters { states: &states, class_masks: &empty, row_slots: &[0] };
+        assert!(misaligned.validate(spec).is_err());
     }
 
     #[test]

@@ -5,6 +5,17 @@
 //! math (forward/backward/Adam) lives in `model::host`; this module only
 //! unpacks buffers by manifest name, dispatches on artifact kind, and packs
 //! the results back into [`Buffer`]s.
+//!
+//! Two backend-level caches keep the steady state allocation-free:
+//!
+//! * the **frozen-tensor cache** ([`FrozenCache`]) memoizes the
+//!   buffer→`Tensor` conversion of every frozen input (backbone + QR
+//!   factors), shared by all of a session's executables;
+//! * the **resident-adapter cache** ([`AdapterCache`]) memoizes the flat
+//!   state→named-trainables unpack of every adapter the serving bank keeps
+//!   resident, so mixed-batch inference re-slices nothing per call.
+//!
+//! Both invalidate by buffer identity + content fingerprint.
 
 use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
@@ -15,7 +26,9 @@ use crate::model::host as hostmodel;
 use crate::model::host::MethodKind;
 use crate::tensor::Tensor;
 
-use super::backend::{Backend, Buffer, Executable, ExecutableImpl};
+use super::backend::{
+    execute_batched_grouped, Backend, BatchedAdapters, Buffer, Executable, ExecutableImpl,
+};
 use super::manifest::{ArtifactSpec, DType, Manifest, Preset, Role};
 
 /// What a host-interpreted artifact computes.
@@ -50,6 +63,28 @@ pub(crate) struct FrozenEntry {
     tensor: Rc<Tensor>,
 }
 
+/// Resident-adapter unpack cache: flat state vector → named trainable
+/// tensors (`model::host::unpack_train`), keyed by the state buffer's data
+/// pointer. The serving `AdapterBank` keeps its state buffers resident, so
+/// pointers are stable and mixed batches hit this cache for every adapter
+/// after the first call. Invalidation: pointer + length + a **full**
+/// content hash ([`fingerprint_full`] — eviction re-allocates equal-length
+/// vectors, so sampled hashing is not safe here), plus the artifact key so
+/// a buffer can never be unpacked against the wrong state layout.
+pub(crate) type AdapterCache = RefCell<HashMap<usize, AdapterEntry>>;
+
+/// Bound on resident unpack entries; serving banks hold far fewer, so this
+/// only guards against unbounded growth from pathological callers. On
+/// overflow the cache is cleared wholesale (entries rebuild on next use).
+const ADAPTER_CACHE_CAP: usize = 128;
+
+pub(crate) struct AdapterEntry {
+    key: String,
+    len: usize,
+    fp: u64,
+    train: Rc<BTreeMap<String, Tensor>>,
+}
+
 /// Identity fingerprint for cache invalidation. Buffers at or below
 /// `FULL_HASH_LEN` elements (the adapter factors and masks that actually
 /// get hot-swapped) are hashed in full, so any single-element change
@@ -81,6 +116,25 @@ fn fingerprint(data: &[f32]) -> u64 {
     }
     if let Some(last) = data.last() {
         mix(&mut h, last.to_bits() as u64);
+    }
+    h
+}
+
+/// Full-content FNV-1a over every element, no sampling. The adapter cache
+/// uses this instead of [`fingerprint`]: bank eviction frees and
+/// re-allocates equal-length state vectors constantly, so same-pointer
+/// same-length reuse is the *common* case there, not the rare one the
+/// strided sampler was designed for — a sampled collision would silently
+/// serve one task's trainables for another's rows.
+fn fingerprint_full(data: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |h: &mut u64, x: u64| {
+        *h ^= x;
+        *h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(&mut h, data.len() as u64);
+    for v in data {
+        mix(&mut h, v.to_bits() as u64);
     }
     h
 }
@@ -127,6 +181,128 @@ fn get_tensor(spec: &ArtifactSpec, by_name: &ArgMap, name: &str) -> anyhow::Resu
     Ok(Tensor::from_vec(&t.shape, get_f32(by_name, &spec.key, name)?.to_vec()))
 }
 
+/// Validate an execute call's arguments against the spec (arity, element
+/// count, shape, dtype, host residency) and index them by input name.
+fn index_args<'a>(spec: &'a ArtifactSpec, args: &[&'a Buffer]) -> anyhow::Result<ArgMap<'a>> {
+    anyhow::ensure!(
+        args.len() == spec.inputs.len(),
+        "{}: got {} args, expected {}",
+        spec.key,
+        args.len(),
+        spec.inputs.len()
+    );
+    let mut by_name: BTreeMap<&str, &Buffer> = BTreeMap::new();
+    for (t, buf) in spec.inputs.iter().zip(args) {
+        if let Buffer::Host { value, shape } = buf {
+            anyhow::ensure!(
+                value.len() == t.numel(),
+                "{}: input {:?} has {} elements, spec wants {}",
+                spec.key,
+                t.name,
+                value.len(),
+                t.numel()
+            );
+            anyhow::ensure!(
+                shape == &t.shape,
+                "{}: input {:?} has shape {:?}, spec wants {:?}",
+                spec.key,
+                t.name,
+                shape,
+                t.shape
+            );
+            match (t.dtype, value) {
+                (DType::F32, super::backend::HostTensor::F32(_)) => {}
+                (DType::I32, super::backend::HostTensor::I32(_)) => {}
+                _ => anyhow::bail!("{}: input {:?} dtype mismatch", spec.key, t.name),
+            }
+        } else {
+            anyhow::bail!("{}: host backend received a non-host buffer", spec.key);
+        }
+        by_name.insert(t.name.as_str(), *buf);
+    }
+    Ok(by_name)
+}
+
+/// Materialize the frozen inputs as (cached) tensors. Frozen inputs are
+/// converted at most once per distinct buffer: the backend-level cache
+/// re-serves the conversion until the buffer's identity/fingerprint
+/// changes, so steady-state steps stop copying the backbone.
+fn materialize_frozen(
+    spec: &ArtifactSpec,
+    by_name: &ArgMap,
+    frozen_cache: &FrozenCache,
+) -> anyhow::Result<hostmodel::FrozenMap> {
+    let mut frozen: hostmodel::FrozenMap = BTreeMap::new();
+    let mut cache = frozen_cache.borrow_mut();
+    for (_, t) in spec.inputs_with_role(Role::Frozen) {
+        let data = get_f32(by_name, &spec.key, &t.name)?;
+        let ptr = data.as_ptr() as usize;
+        let fp = fingerprint(data);
+        let hit = matches!(
+            cache.get(&t.name),
+            Some(e) if e.ptr == ptr && e.len == data.len() && e.fp == fp
+        );
+        let tensor = if hit {
+            cache.get(&t.name).unwrap().tensor.clone()
+        } else {
+            let tn = Rc::new(Tensor::from_vec(&t.shape, data.to_vec()));
+            cache.insert(
+                t.name.clone(),
+                FrozenEntry { ptr, len: data.len(), fp, tensor: tn.clone() },
+            );
+            tn
+        };
+        frozen.insert(t.name.clone(), tensor);
+    }
+    Ok(frozen)
+}
+
+/// Unpack the adapter states a batch actually uses (the distinct values of
+/// `row_slots`) through the backend's adapter cache; slots the batch does
+/// not touch stay `None`, so per-batch hashing/unpacking is proportional
+/// to the tasks in the batch, not to the bank's residency.
+fn unpack_adapters(
+    spec: &ArtifactSpec,
+    states: &[&Buffer],
+    row_slots: &[usize],
+    cache: &AdapterCache,
+) -> anyhow::Result<Vec<Option<Rc<BTreeMap<String, Tensor>>>>> {
+    let layout = spec.layout()?;
+    let mut cache = cache.borrow_mut();
+    let mut out: Vec<Option<Rc<BTreeMap<String, Tensor>>>> = vec![None; states.len()];
+    for slot in hostmodel::distinct_slots(row_slots) {
+        let data = states[slot].as_f32()?;
+        anyhow::ensure!(
+            data.len() == layout.total,
+            "{}: adapter state has {} elements, layout wants {}",
+            spec.key,
+            data.len(),
+            layout.total
+        );
+        let ptr = data.as_ptr() as usize;
+        let fp = fingerprint_full(data);
+        let hit = matches!(
+            cache.get(&ptr),
+            Some(e) if e.key == spec.key && e.len == data.len() && e.fp == fp
+        );
+        let train = if hit {
+            cache.get(&ptr).unwrap().train.clone()
+        } else {
+            if cache.len() >= ADAPTER_CACHE_CAP {
+                cache.clear();
+            }
+            let tn = Rc::new(hostmodel::unpack_train(data, layout));
+            cache.insert(
+                ptr,
+                AdapterEntry { key: spec.key.clone(), len: data.len(), fp, train: tn.clone() },
+            );
+            tn
+        };
+        out[slot] = Some(train);
+    }
+    Ok(out)
+}
+
 impl HostProgram {
     /// Interpret an artifact spec (the host analogue of PJRT compilation).
     pub fn compile(spec: &ArtifactSpec, manifest: &Manifest) -> anyhow::Result<HostProgram> {
@@ -158,43 +334,7 @@ impl HostProgram {
         args: &[&Buffer],
         frozen_cache: &FrozenCache,
     ) -> anyhow::Result<Vec<Buffer>> {
-        anyhow::ensure!(
-            args.len() == spec.inputs.len(),
-            "{}: got {} args, expected {}",
-            spec.key,
-            args.len(),
-            spec.inputs.len()
-        );
-        // Validate shapes/dtypes and index by name.
-        let mut by_name: BTreeMap<&str, &Buffer> = BTreeMap::new();
-        for (t, buf) in spec.inputs.iter().zip(args) {
-            if let Buffer::Host { value, shape } = buf {
-                anyhow::ensure!(
-                    value.len() == t.numel(),
-                    "{}: input {:?} has {} elements, spec wants {}",
-                    spec.key,
-                    t.name,
-                    value.len(),
-                    t.numel()
-                );
-                anyhow::ensure!(
-                    shape == &t.shape,
-                    "{}: input {:?} has shape {:?}, spec wants {:?}",
-                    spec.key,
-                    t.name,
-                    shape,
-                    t.shape
-                );
-                match (t.dtype, value) {
-                    (DType::F32, super::backend::HostTensor::F32(_)) => {}
-                    (DType::I32, super::backend::HostTensor::I32(_)) => {}
-                    _ => anyhow::bail!("{}: input {:?} dtype mismatch", spec.key, t.name),
-                }
-            } else {
-                anyhow::bail!("{}: host backend received a non-host buffer", spec.key);
-            }
-            by_name.insert(t.name.as_str(), *buf);
-        }
+        let by_name = index_args(spec, args)?;
         let f32s = |name: &str| get_f32(&by_name, &spec.key, name);
         let i32s = |name: &str| get_i32(&by_name, &spec.key, name);
         let tensor_of = |name: &str| get_tensor(spec, &by_name, name);
@@ -246,39 +386,7 @@ impl HostProgram {
             ProgKind::TrainStep { method, head } | ProgKind::EvalFwd { method, head } => {
                 let layout = spec.layout()?;
                 let state = f32s("state")?;
-                // Frozen inputs are materialized as Tensors at most once per
-                // distinct buffer: the per-executable cache re-serves the
-                // conversion until the buffer's identity/fingerprint
-                // changes, so steady-state steps stop copying the backbone.
-                let mut frozen: hostmodel::FrozenMap = BTreeMap::new();
-                {
-                    let mut cache = frozen_cache.borrow_mut();
-                    for (_, t) in spec.inputs_with_role(Role::Frozen) {
-                        let data = f32s(&t.name)?;
-                        let ptr = data.as_ptr() as usize;
-                        let fp = fingerprint(data);
-                        let hit = matches!(
-                            cache.get(&t.name),
-                            Some(e) if e.ptr == ptr && e.len == data.len() && e.fp == fp
-                        );
-                        let tensor = if hit {
-                            cache.get(&t.name).unwrap().tensor.clone()
-                        } else {
-                            let tn = Rc::new(Tensor::from_vec(&t.shape, data.to_vec()));
-                            cache.insert(
-                                t.name.clone(),
-                                FrozenEntry {
-                                    ptr,
-                                    len: data.len(),
-                                    fp,
-                                    tensor: tn.clone(),
-                                },
-                            );
-                            tn
-                        };
-                        frozen.insert(t.name.clone(), tensor);
-                    }
-                }
+                let frozen = materialize_frozen(spec, &by_name, frozen_cache)?;
                 let (labels_i32, labels_f32): (&[i32], &[f32]) = match head {
                     HeadKind::Cls => (i32s("batch/labels")?, &[]),
                     HeadKind::Reg => (&[], f32s("batch/labels")?),
@@ -322,6 +430,86 @@ impl HostProgram {
             }
         }
     }
+
+    /// Single-pass mixed-adapter execution of an eval-forward program (the
+    /// host fast path behind [`Backend::execute_batched`]): the shared
+    /// frozen backbone is evaluated once and each batch row's adapter
+    /// delta, task head, and class mask are selected by `row_slots`.
+    pub(crate) fn execute_multi(
+        &self,
+        spec: &ArtifactSpec,
+        args: &[&Buffer],
+        adapters: &BatchedAdapters<'_>,
+        frozen_cache: &FrozenCache,
+        adapter_cache: &AdapterCache,
+    ) -> anyhow::Result<Vec<Buffer>> {
+        let ProgKind::EvalFwd { method, head } = &self.kind else {
+            anyhow::bail!("{}: batched execution only supports eval_fwd programs", spec.key);
+        };
+        let (method, head) = (*method, *head);
+        anyhow::ensure!(
+            method != MethodKind::Ft,
+            "{}: full fine-tuning shares no frozen backbone to batch over",
+            spec.key
+        );
+        anyhow::ensure!(
+            adapters.row_slots.len() == self.preset.batch,
+            "{}: got {} row slots for batch size {}",
+            spec.key,
+            adapters.row_slots.len(),
+            self.preset.batch
+        );
+        let by_name = index_args(spec, args)?;
+        let frozen = materialize_frozen(spec, &by_name, frozen_cache)?;
+        let slots = unpack_adapters(spec, adapters.states, adapters.row_slots, adapter_cache)?;
+
+        let mask_len = spec
+            .inputs
+            .iter()
+            .find(|t| t.name == "batch/class_mask")
+            .map(|t| t.numel())
+            .ok_or_else(|| anyhow::anyhow!("{}: no batch/class_mask input", spec.key))?;
+        let mut masks: Vec<&[f32]> = Vec::with_capacity(adapters.class_masks.len());
+        for buf in adapters.class_masks {
+            let m = buf.as_f32()?;
+            anyhow::ensure!(
+                m.len() == mask_len,
+                "{}: adapter class mask has {} elements, spec wants {mask_len}",
+                spec.key,
+                m.len()
+            );
+            masks.push(m);
+        }
+
+        let f32s = |name: &str| get_f32(&by_name, &spec.key, name);
+        let i32s = |name: &str| get_i32(&by_name, &spec.key, name);
+        let (labels_i32, labels_f32): (&[i32], &[f32]) = match head {
+            HeadKind::Cls => (i32s("batch/labels")?, &[]),
+            HeadKind::Reg => (&[], f32s("batch/labels")?),
+        };
+        let batch = hostmodel::TaskBatchRef {
+            input_ids: i32s("batch/input_ids")?,
+            type_ids: i32s("batch/type_ids")?,
+            attn_mask: f32s("batch/attn_mask")?,
+            labels_i32,
+            labels_f32,
+            // Placeholder from the arg list; the multi path masks per row
+            // from `masks` instead.
+            class_mask: f32s("batch/class_mask")?,
+            example_w: f32s("batch/example_w")?,
+        };
+        let logits = hostmodel::eval_forward_multi(
+            &self.preset,
+            method,
+            head,
+            &slots,
+            &masks,
+            adapters.row_slots,
+            &frozen,
+            &batch,
+        );
+        Ok(vec![Buffer::host_f32(logits, &spec.outputs[0].shape)])
+    }
 }
 
 /// Pure-Rust execution backend over the built-in manifest.
@@ -331,14 +519,19 @@ pub struct HostBackend {
     /// Shared frozen-input tensor cache (see [`FrozenCache`]): one copy of
     /// the backbone per backend, not per loaded executable.
     frozen_cache: FrozenCache,
+    /// Resident-adapter unpack cache (see [`AdapterCache`]) for the
+    /// batched serving path.
+    adapter_cache: AdapterCache,
 }
 
 impl HostBackend {
+    /// Create a backend over the built-in manifest with empty caches.
     pub fn new() -> HostBackend {
         HostBackend {
             manifest: Manifest::builtin(),
             cache: RefCell::new(HashMap::new()),
             frozen_cache: RefCell::new(HashMap::new()),
+            adapter_cache: RefCell::new(HashMap::new()),
         }
     }
 }
@@ -376,6 +569,35 @@ impl Backend for HostBackend {
             ExecutableImpl::Pjrt(_) => {
                 anyhow::bail!("{}: PJRT executable handed to host backend", exe.spec.key)
             }
+        }
+    }
+
+    fn execute_batched(
+        &self,
+        exe: &Executable,
+        args: &[&Buffer],
+        adapters: &BatchedAdapters<'_>,
+    ) -> anyhow::Result<Vec<Buffer>> {
+        let prog = match &exe.imp {
+            ExecutableImpl::Host(p) => p,
+            #[cfg(feature = "pjrt")]
+            ExecutableImpl::Pjrt(_) => {
+                anyhow::bail!("{}: PJRT executable handed to host backend", exe.spec.key)
+            }
+        };
+        adapters.validate(&exe.spec)?;
+        match &prog.kind {
+            // Single-pass fast path: one shared backbone evaluation,
+            // per-row adapter deltas/heads. Full fine-tuning shares no
+            // backbone, so it degrades to the grouped fallback below.
+            ProgKind::EvalFwd { method, .. } if *method != MethodKind::Ft => prog.execute_multi(
+                &exe.spec,
+                args,
+                adapters,
+                &self.frozen_cache,
+                &self.adapter_cache,
+            ),
+            _ => execute_batched_grouped(self, exe, args, adapters),
         }
     }
 

@@ -24,7 +24,8 @@ pub mod spec;
 mod store;
 
 pub use backend::{
-    create_backend, Backend, BackendChoice, Buffer, Executable, HostTensor,
+    create_backend, execute_batched_grouped, Backend, BackendChoice, BatchedAdapters, Buffer,
+    Executable, HostTensor,
 };
 pub use host::HostBackend;
 pub use manifest::{

@@ -1,12 +1,27 @@
-//! Multi-adapter serving router.
+//! Batched multi-adapter serving.
 //!
-//! QR-LoRA's headline property — hundreds of trainable parameters per task —
-//! makes per-task adapters essentially free to keep resident and to swap:
-//! the backbone is shared (frozen device buffers) and each task contributes
-//! only its λ/head state vector. This module demonstrates that with a
-//! batching router: requests tagged with a task are queued, grouped into
-//! per-task batches, and served by hot-swapping the task's state vector
-//! onto a single shared eval executable.
+//! QR-LoRA's headline property — adaptation is a tiny per-task λ/head
+//! state vector over a shared frozen backbone — makes multi-tenant serving
+//! nearly free. This module exploits it end to end:
+//!
+//! * [`AdapterBank`] keeps N adapters' state vectors **resident** on the
+//!   backend (capacity-bounded, LRU-evicted), uploaded once at admission;
+//! * [`Router`] drains a FIFO admission queue into **mixed-task batches**
+//!   and serves each with a single [`crate::runtime::Backend::execute_batched`]
+//!   call — on the host backend that is one shared backbone pass with
+//!   per-row adapter deltas and task heads, eliminating per-request state
+//!   swaps entirely;
+//! * [`serve_swap`] is the swap-per-request baseline — one request at a
+//!   time, state re-uploaded on task change (`serve_swap` vs
+//!   `serve_task_grouped` vs `serve_mixed_batch` in `BENCH_host.json`) —
+//!   and the shape a backend without a batched fast path tends toward
+//!   (PJRT runs the grouped fallback: one backbone pass per distinct task
+//!   in the batch).
+//!
+//! Per-request results are bit-identical between the two paths — every op
+//! on the forward path is row-local — enforced by
+//! `rust/tests/serve_batched.rs`. See `ARCHITECTURE.md` for the request
+//! lifecycle diagram.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
@@ -16,31 +31,427 @@ use crate::data::{task, Batcher, Example, Split};
 use crate::experiments::{ExpConfig, Pipeline};
 use crate::linalg::RankRule;
 use crate::metrics::argmax;
-use crate::training::{FinetuneJob, Methods, Session, TrainConfig};
-use crate::util::log::Stats;
+use crate::runtime::{Backend, Buffer};
+use crate::training::{Methods, Session, TrainConfig};
+use crate::util::cli::Args;
 use crate::util::rng::Rng;
 
 /// One inference request.
+#[derive(Clone)]
 pub struct Request {
+    /// Caller-assigned id (stable across router paths, used to join
+    /// results).
     pub id: usize,
+    /// Task name; must have a registered adapter.
     pub task: String,
+    /// The example to classify/score.
     pub example: Example,
 }
 
-/// Router statistics.
+/// Router statistics, batched vs swap paths broken out.
 #[derive(Debug, Default)]
 pub struct RouterStats {
+    /// Requests served (both paths).
     pub requests: usize,
+    /// Batches evaluated.
     pub batches: usize,
+    /// Requests served through the batched bank path.
+    pub batched_requests: usize,
+    /// Requests served through the swap-per-request path.
+    pub swap_requests: usize,
+    /// Adapter-state uploads: bank admissions on the batched path, state
+    /// swaps on the legacy path.
     pub swaps: usize,
+    /// Bank slots recycled under capacity pressure (subset of `swaps`).
+    pub evictions: usize,
+    /// Total time spent uploading adapter state, milliseconds.
     pub swap_ms: f64,
+    /// Total inference time, milliseconds.
     pub infer_ms: f64,
+    /// Wall-clock serving time, seconds.
     pub wall_s: f64,
 }
 
-/// The serving demo: trains tiny QR adapters for several tasks, then routes
-/// a mixed request stream through a single shared backbone.
-pub fn demo(cfg: &ExpConfig, n_requests: usize) -> anyhow::Result<()> {
+impl RouterStats {
+    /// Average state-upload cost; `None` when no swap ever happened.
+    pub fn swap_avg_ms(&self) -> Option<f64> {
+        if self.swaps > 0 {
+            Some(self.swap_ms / self.swaps as f64)
+        } else {
+            None
+        }
+    }
+
+    /// `"{count} ({avg} ms avg)"` — prints `n/a` rather than a misleading
+    /// `0.00 ms avg` when no swaps occurred.
+    pub fn swap_summary(&self) -> String {
+        match self.swap_avg_ms() {
+            Some(avg) => format!("{} ({avg:.2} ms avg)", self.swaps),
+            None => format!("{} (n/a)", self.swaps),
+        }
+    }
+
+    /// Requests per second over the recorded wall time.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.requests as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Backend-resident adapter states, keyed by task.
+///
+/// Each slot holds one task's flat state vector and padded class mask,
+/// uploaded once at admission; `execute_batched` reads them in place, so
+/// serving a resident task costs zero uploads. Capacity-bounded with LRU
+/// eviction; eviction respects the `pinned` slots of the batch currently
+/// being assembled so an in-flight batch can never lose an adapter.
+pub struct AdapterBank {
+    capacity: usize,
+    slots: Vec<BankSlot>,
+    clock: u64,
+}
+
+struct BankSlot {
+    task: String,
+    state: Buffer,
+    class_mask: Buffer,
+    last_used: u64,
+}
+
+/// Outcome of [`AdapterBank::admit`].
+pub struct Admission {
+    /// Slot index the task now occupies.
+    pub slot: usize,
+    /// True when the state was uploaded (first admission or refill after
+    /// eviction); false on a resident hit.
+    pub uploaded: bool,
+    /// True when the upload recycled an occupied slot.
+    pub evicted: bool,
+}
+
+impl AdapterBank {
+    /// A bank holding at most `capacity` resident adapters (min 1).
+    pub fn new(capacity: usize) -> AdapterBank {
+        AdapterBank { capacity: capacity.max(1), slots: Vec::new(), clock: 0 }
+    }
+
+    /// Resident adapter count.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no adapter is resident.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Maximum resident adapters.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Slot index of a resident task.
+    pub fn slot_of(&self, task: &str) -> Option<usize> {
+        self.slots.iter().position(|s| s.task == task)
+    }
+
+    /// Ensure `task` is resident and return its slot. Uploads the state on
+    /// a miss, evicting the least-recently-used slot not in `pinned` when
+    /// at capacity. Errors when every slot is pinned (the caller must
+    /// flush its batch first).
+    pub fn admit(
+        &mut self,
+        bk: &dyn Backend,
+        task: &str,
+        state: &[f32],
+        class_mask: &[f32],
+        pinned: &[usize],
+    ) -> anyhow::Result<Admission> {
+        self.clock += 1;
+        if let Some(i) = self.slot_of(task) {
+            self.slots[i].last_used = self.clock;
+            return Ok(Admission { slot: i, uploaded: false, evicted: false });
+        }
+        // Pick the destination before uploading anything, so the
+        // every-slot-pinned error path costs no backend traffic.
+        let victim = if self.slots.len() < self.capacity {
+            None
+        } else {
+            Some(
+                self.slots
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| !pinned.contains(i))
+                    .min_by_key(|(_, s)| s.last_used)
+                    .map(|(i, _)| i)
+                    .ok_or_else(|| anyhow::anyhow!("adapter bank: every slot is pinned"))?,
+            )
+        };
+        let slot = BankSlot {
+            task: task.to_string(),
+            state: bk.upload_f32(state, &[state.len()])?,
+            class_mask: bk.upload_f32(class_mask, &[class_mask.len()])?,
+            last_used: self.clock,
+        };
+        match victim {
+            None => {
+                self.slots.push(slot);
+                Ok(Admission { slot: self.slots.len() - 1, uploaded: true, evicted: false })
+            }
+            Some(lru) => {
+                self.slots[lru] = slot;
+                Ok(Admission { slot: lru, uploaded: true, evicted: true })
+            }
+        }
+    }
+
+    /// Per-slot state buffers, index-aligned with slot ids (for
+    /// `execute_batched`).
+    pub fn states(&self) -> Vec<&Buffer> {
+        self.slots.iter().map(|s| &s.state).collect()
+    }
+
+    /// Per-slot class-mask buffers, index-aligned with slot ids.
+    pub fn class_masks(&self) -> Vec<&Buffer> {
+        self.slots.iter().map(|s| &s.class_mask).collect()
+    }
+}
+
+/// A registered adapter: the task's trained state and class mask, the
+/// source of truth the bank admits from.
+struct LibraryEntry {
+    state: Vec<f32>,
+    class_mask: Vec<f32>,
+}
+
+/// Batched serving router.
+///
+/// Request lifecycle: FIFO admission queue → batch assembly (up to
+/// `max_batch` consecutive requests, admitting each task into the
+/// [`AdapterBank`] as it appears) → one `execute_batched` call → per-row
+/// logits scattered back to requests. A batch is flushed early only when
+/// the next request's task would need to evict a slot the batch already
+/// uses.
+pub struct Router<'s, 'b> {
+    session: &'s Session<'b>,
+    batcher: Batcher,
+    bank: AdapterBank,
+    library: BTreeMap<String, LibraryEntry>,
+    max_batch: usize,
+    head_width: usize,
+    /// Counters for the serving report (batched vs swap breakdown).
+    pub stats: RouterStats,
+}
+
+impl<'s, 'b> Router<'s, 'b> {
+    /// Build a router over a shared session (frozen backbone + eval
+    /// executable). `max_batch` is clamped to the artifact's fixed batch
+    /// size (0 = use it as-is); `resident_adapters` bounds the bank.
+    pub fn new(
+        session: &'s Session<'b>,
+        batcher: Batcher,
+        max_batch: usize,
+        resident_adapters: usize,
+    ) -> anyhow::Result<Router<'s, 'b>> {
+        let head_width = session.layout().param("head/wc")?.shape[1];
+        let max_batch = if max_batch == 0 {
+            batcher.batch
+        } else {
+            max_batch.clamp(1, batcher.batch)
+        };
+        Ok(Router {
+            session,
+            batcher,
+            bank: AdapterBank::new(resident_adapters),
+            library: BTreeMap::new(),
+            max_batch,
+            head_width,
+            stats: RouterStats::default(),
+        })
+    }
+
+    /// Register a task's trained adapter state (layout must match the
+    /// session's).
+    pub fn register(&mut self, task: &str, state: Vec<f32>, n_classes: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            state.len() == self.session.layout().total,
+            "adapter for {task:?} has {} elements, session layout wants {}",
+            state.len(),
+            self.session.layout().total
+        );
+        let class_mask = Batcher::class_mask(n_classes, self.head_width);
+        self.library.insert(task.to_string(), LibraryEntry { state, class_mask });
+        Ok(())
+    }
+
+    /// Resident adapter count (bank occupancy).
+    pub fn resident(&self) -> usize {
+        self.bank.len()
+    }
+
+    /// Serve every queued request through the batched path; returns
+    /// `(request, logits)` pairs in completion order (logits are
+    /// `head_width` floats, padded classes masked to −∞).
+    pub fn serve(
+        &mut self,
+        queue: &mut VecDeque<Request>,
+    ) -> anyhow::Result<Vec<(Request, Vec<f32>)>> {
+        // Reject unknown tasks up front, before any request is popped, so
+        // a bad request can't strand already-dequeued work mid-batch.
+        for r in queue.iter() {
+            anyhow::ensure!(
+                self.library.contains_key(&r.task),
+                "no adapter registered for task {:?} (request {})",
+                r.task,
+                r.id
+            );
+        }
+        let bk = self.session.backend();
+        let k = self.head_width;
+        let t_wall = Instant::now();
+        let mut results = Vec::new();
+        while !queue.is_empty() {
+            // --- batch assembly + bank admission --------------------------
+            let mut reqs: Vec<Request> = Vec::new();
+            let mut row_slots: Vec<usize> = Vec::new();
+            while reqs.len() < self.max_batch {
+                let Some(front) = queue.front() else { break };
+                let tname = front.task.clone();
+                // Guaranteed present by the prescan at serve() entry.
+                let entry = self.library.get(&tname).expect("task validated at serve() entry");
+                let mut pinned: Vec<usize> = row_slots.clone();
+                pinned.sort_unstable();
+                pinned.dedup();
+                if self.bank.slot_of(&tname).is_none()
+                    && self.bank.len() >= self.bank.capacity()
+                    && pinned.len() >= self.bank.capacity()
+                {
+                    // Admitting would evict a slot this batch uses: flush.
+                    break;
+                }
+                let t0 = Instant::now();
+                let adm = self.bank.admit(bk, &tname, &entry.state, &entry.class_mask, &pinned)?;
+                if adm.uploaded {
+                    self.stats.swap_ms += t0.elapsed().as_secs_f64() * 1e3;
+                    self.stats.swaps += 1;
+                    if adm.evicted {
+                        self.stats.evictions += 1;
+                    }
+                }
+                row_slots.push(adm.slot);
+                reqs.push(queue.pop_front().unwrap());
+            }
+            debug_assert!(!reqs.is_empty(), "non-empty queue must yield a batch");
+
+            // --- one mixed pass -------------------------------------------
+            let refs: Vec<&Example> = reqs.iter().map(|r| &r.example).collect();
+            let batch = self.batcher.assemble(&refs);
+            let mut slots_padded = row_slots.clone();
+            slots_padded.resize(self.batcher.batch, row_slots[0]);
+            let states = self.bank.states();
+            let masks = self.bank.class_masks();
+            let t0 = Instant::now();
+            let logits = self.session.forward_multi(&batch, &states, &masks, &slots_padded)?;
+            self.stats.infer_ms += t0.elapsed().as_secs_f64() * 1e3;
+            self.stats.batches += 1;
+            self.stats.requests += reqs.len();
+            self.stats.batched_requests += reqs.len();
+            for (i, r) in reqs.into_iter().enumerate() {
+                results.push((r, logits[i * k..(i + 1) * k].to_vec()));
+            }
+        }
+        self.stats.wall_s += t_wall.elapsed().as_secs_f64();
+        Ok(results)
+    }
+}
+
+/// Reference swap-per-request serving loop: one request at a time, the
+/// whole state vector re-uploaded on every task change.
+///
+/// Note this is deliberately the *weakest* baseline (every request pays a
+/// full fixed-shape batch evaluation): the router this PR replaced
+/// already greedily grouped same-task requests, a middle point measured
+/// separately as the `serve_task_grouped` bench entry. `serve_swap`
+/// remains the bit-identity oracle for the batched path and the shape of
+/// truly unbatched serving; compare all three entries in
+/// `BENCH_host.json`.
+pub fn serve_swap(
+    session: &mut Session,
+    batcher: &Batcher,
+    library: &BTreeMap<String, Vec<f32>>,
+    queue: &mut VecDeque<Request>,
+    stats: &mut RouterStats,
+) -> anyhow::Result<Vec<(Request, Vec<f32>)>> {
+    let k = session.layout().param("head/wc")?.shape[1];
+    let mut current: Option<String> = None;
+    let t_wall = Instant::now();
+    let mut results = Vec::new();
+    while let Some(r) = queue.pop_front() {
+        let spec = task(&r.task)?;
+        if current.as_deref() != Some(r.task.as_str()) {
+            let state = library
+                .get(&r.task)
+                .ok_or_else(|| anyhow::anyhow!("no adapter registered for task {:?}", r.task))?;
+            let t0 = Instant::now();
+            session.upload_state(state)?;
+            stats.swap_ms += t0.elapsed().as_secs_f64() * 1e3;
+            stats.swaps += 1;
+            current = Some(r.task.clone());
+        }
+        let batch = batcher.assemble(&[&r.example]);
+        let t0 = Instant::now();
+        let logits = session.forward(&batch, spec.n_classes)?;
+        stats.infer_ms += t0.elapsed().as_secs_f64() * 1e3;
+        stats.batches += 1;
+        stats.requests += 1;
+        stats.swap_requests += 1;
+        results.push((r, logits[..k].to_vec()));
+    }
+    stats.wall_s += t_wall.elapsed().as_secs_f64();
+    Ok(results)
+}
+
+/// Serving-demo knobs (CLI `--requests` / `--max-batch` /
+/// `--resident-adapters`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Mixed-stream length.
+    pub requests: usize,
+    /// Rows per mixed batch; 0 = the preset's full batch size (the
+    /// artifact shape is fixed, so this is also the upper bound).
+    pub max_batch: usize,
+    /// [`AdapterBank`] capacity.
+    pub resident_adapters: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { requests: 200, max_batch: 0, resident_adapters: 8 }
+    }
+}
+
+impl ServeConfig {
+    /// Read the serve flags over the defaults — the single place the
+    /// `util::cli::SERVE_FLAGS` list is interpreted (used by both the CLI
+    /// `serve` command and the `adapter_server` example).
+    pub fn from_args(args: &Args) -> anyhow::Result<ServeConfig> {
+        let d = ServeConfig::default();
+        Ok(ServeConfig {
+            requests: args.usize_or("requests", d.requests)?,
+            max_batch: args.usize_or("max-batch", d.max_batch)?,
+            resident_adapters: args.usize_or("resident-adapters", d.resident_adapters)?,
+        })
+    }
+}
+
+/// The serving demo: trains tiny QR adapters for several tasks, routes a
+/// mixed request stream through the batched [`Router`], then replays the
+/// same stream through the legacy [`serve_swap`] loop and reports the
+/// speedup and per-request agreement.
+pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
     let tasks = ["sst2", "mrpc", "qnli"];
     let mut pipe = Pipeline::new(cfg)?;
     let preset = pipe.preset.clone();
@@ -48,6 +459,7 @@ pub fn demo(cfg: &ExpConfig, n_requests: usize) -> anyhow::Result<()> {
     // 1. Train one QR-LoRA adapter per task (short budget — demo).
     println!("[serve] preparing {} task adapters…", tasks.len());
     let mut states: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut n_classes: BTreeMap<String, usize> = BTreeMap::new();
     let mut session: Option<Session> = None;
     let (warm_bb, _) = pipe.warmed(tasks[0])?;
     for name in tasks {
@@ -67,17 +479,6 @@ pub fn demo(cfg: &ExpConfig, n_requests: usize) -> anyhow::Result<()> {
             train_examples: 2000,
             log_every: 1000,
         };
-        let job = FinetuneJob {
-            rt: pipe.rt,
-            preset: &cfg.preset,
-            task: &data,
-            lexicon: &pipe.lexicon,
-            backbone: &warm_bb,
-            head: Some(&warm_head),
-            config: tc.clone(),
-            seed: cfg.seed,
-        };
-        // Train via a session we keep (last one becomes the serving session).
         let mut s = Session::finetune(
             pipe.rt, &preset, &method, data.spec.head, &warm_bb, Some(&warm_head), cfg.seed,
         )?;
@@ -85,7 +486,9 @@ pub fn demo(cfg: &ExpConfig, n_requests: usize) -> anyhow::Result<()> {
         let mut rng = Rng::new(cfg.seed ^ 0xD0);
         let mut step = 0;
         'outer: loop {
-            for chunk in batcher.epoch(&data.train[..tc.train_examples.min(data.train.len())], &mut rng) {
+            for chunk in
+                batcher.epoch(&data.train[..tc.train_examples.min(data.train.len())], &mut rng)
+            {
                 if step >= tc.steps {
                     break 'outer;
                 }
@@ -94,8 +497,8 @@ pub fn demo(cfg: &ExpConfig, n_requests: usize) -> anyhow::Result<()> {
                 step += 1;
             }
         }
-        let _ = &job;
         states.insert(name.to_string(), s.download_state()?);
+        n_classes.insert(name.to_string(), data.spec.n_classes);
         println!(
             "[serve]   {name}: adapter ready ({} trainable params, state {:.1} KiB)",
             s.trainable_params(),
@@ -108,75 +511,79 @@ pub fn demo(cfg: &ExpConfig, n_requests: usize) -> anyhow::Result<()> {
     // 2. Build a mixed request stream.
     let mut rng = Rng::new(cfg.seed ^ 0x5EED);
     let mut queue: VecDeque<Request> = VecDeque::new();
-    for id in 0..n_requests {
+    for id in 0..sc.requests {
         let tname = *rng.choice(&tasks);
         let data = pipe.data(tname)?;
         let ex = data.split(Split::Dev)[rng.below(data.dev.len())].clone();
         queue.push_back(Request { id, task: tname.to_string(), example: ex });
     }
-
-    // 3. Route: greedily batch consecutive same-task requests (the batcher
-    //    policy a real deployment would tune), swap adapters only on task
-    //    change.
     let batcher = Batcher::new(&preset, false);
-    let mut stats = RouterStats::default();
-    let mut lat = Stats::new();
-    let mut current_task: Option<String> = None;
-    let t_wall = Instant::now();
+
+    // 3. Batched path: resident bank, mixed batches, no per-request swaps.
+    let (batched_results, batched_stats) = {
+        let mut router = Router::new(&session, batcher.clone(), sc.max_batch, sc.resident_adapters)?;
+        for name in tasks {
+            router.register(name, states[name].clone(), n_classes[name])?;
+        }
+        let mut q = queue.clone();
+        let results = router.serve(&mut q)?;
+        (results, router.stats)
+    };
+
+    // 4. Swap baseline on the identical stream.
+    let mut swap_stats = RouterStats::default();
+    let mut q = queue.clone();
+    let swap_results = serve_swap(&mut session, &batcher, &states, &mut q, &mut swap_stats)?;
+
+    // 5. Per-request agreement + accuracy.
+    let k = session.layout().param("head/wc")?.shape[1];
+    let mut by_id: BTreeMap<usize, &Vec<f32>> = BTreeMap::new();
+    for (r, l) in &swap_results {
+        by_id.insert(r.id, l);
+    }
+    let mut identical = true;
     let mut correct = 0usize;
     let mut total = 0usize;
-
-    while !queue.is_empty() {
-        // Pick the task of the oldest request; drain up to batch size of it.
-        let tname = queue.front().unwrap().task.clone();
-        let mut batch_reqs: Vec<Request> = Vec::new();
-        let mut rest: VecDeque<Request> = VecDeque::new();
-        while let Some(r) = queue.pop_front() {
-            if r.task == tname && batch_reqs.len() < preset.batch {
-                batch_reqs.push(r);
-            } else {
-                rest.push_back(r);
-            }
+    for (r, logits) in &batched_results {
+        if let Some(want) = by_id.get(&r.id) {
+            identical &= logits
+                .iter()
+                .zip(want.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
         }
-        queue = rest;
-
-        if current_task.as_deref() != Some(tname.as_str()) {
-            let t0 = Instant::now();
-            session.upload_state(&states[&tname])?;
-            stats.swap_ms += t0.elapsed().as_secs_f64() * 1e3;
-            stats.swaps += 1;
-            current_task = Some(tname.clone());
-        }
-
-        let spec = task(&tname)?;
-        let refs: Vec<&Example> = batch_reqs.iter().map(|r| &r.example).collect();
-        let b = batcher.assemble(&refs);
-        let t0 = Instant::now();
-        let logits = session.forward(&b, spec.n_classes)?;
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        stats.infer_ms += ms;
-        lat.push(ms);
-        stats.batches += 1;
-        stats.requests += batch_reqs.len();
-
-        let k = preset.n_classes;
-        for (i, r) in batch_reqs.iter().enumerate() {
-            if let crate::data::Label::Class(c) = r.example.label {
-                total += 1;
-                if argmax(&logits[i * k..(i + 1) * k]) == c {
-                    correct += 1;
-                }
+        if let crate::data::Label::Class(c) = r.example.label {
+            total += 1;
+            if argmax(&logits[..k]) == c {
+                correct += 1;
             }
         }
     }
-    stats.wall_s = t_wall.elapsed().as_secs_f64();
 
-    println!("\n[serve] router results");
-    println!("  requests:        {}", stats.requests);
-    println!("  batches:         {}", stats.batches);
-    println!("  adapter swaps:   {} ({:.2} ms avg)", stats.swaps, stats.swap_ms / stats.swaps.max(1) as f64);
-    println!("  batch latency:   {:.1} ms avg (p_min {:.1} / p_max {:.1})", lat.mean(), lat.min, lat.max);
-    println!("  throughput:      {:.1} req/s", stats.requests as f64 / stats.wall_s);
+    let eff_batch = if sc.max_batch == 0 {
+        preset.batch
+    } else {
+        sc.max_batch.clamp(1, preset.batch)
+    };
+    println!("\n[serve] batched router (bank capacity {})", sc.resident_adapters);
+    println!("  requests:        {} ({} batched)", batched_stats.requests, batched_stats.batched_requests);
+    println!("  batches:         {} (≤{eff_batch} rows each)", batched_stats.batches);
+    println!("  bank admissions: {}", batched_stats.swap_summary());
+    println!("  evictions:       {}", batched_stats.evictions);
+    println!(
+        "  batch latency:   {:.1} ms avg",
+        batched_stats.infer_ms / batched_stats.batches.max(1) as f64
+    );
+    println!("  throughput:      {:.1} req/s", batched_stats.throughput());
+    println!("\n[serve] swap-per-request baseline");
+    println!("  adapter swaps:   {}", swap_stats.swap_summary());
+    println!("  throughput:      {:.1} req/s", swap_stats.throughput());
+    let speedup = if swap_stats.throughput() > 0.0 {
+        batched_stats.throughput() / swap_stats.throughput()
+    } else {
+        0.0
+    };
+    println!("\n[serve] batched vs swap: {speedup:.1}x throughput");
+    println!("  bit-identical per request: {}", if identical { "yes" } else { "NO" });
     println!("  online accuracy: {:.1}%", 100.0 * correct as f64 / total.max(1) as f64);
     println!(
         "  adapter residency: {} tasks × {:.1} KiB state  vs  {:.1} MiB per full model copy",
@@ -185,4 +592,63 @@ pub fn demo(cfg: &ExpConfig, n_requests: usize) -> anyhow::Result<()> {
         (crate::runtime::Preset::approx_backbone_params(&preset) * 4) as f64 / (1024.0 * 1024.0),
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::HostBackend;
+
+    #[test]
+    fn swap_summary_prints_na_without_swaps() {
+        let stats = RouterStats::default();
+        assert_eq!(stats.swap_avg_ms(), None);
+        let s = stats.swap_summary();
+        assert!(s.contains("n/a"), "{s}");
+        assert!(!s.contains("0.00 ms avg"), "{s}");
+    }
+
+    #[test]
+    fn swap_summary_prints_average_with_swaps() {
+        let stats = RouterStats { swaps: 4, swap_ms: 10.0, ..RouterStats::default() };
+        assert_eq!(stats.swap_avg_ms(), Some(2.5));
+        let s = stats.swap_summary();
+        assert!(s.contains("4 (2.50 ms avg)"), "{s}");
+    }
+
+    #[test]
+    fn bank_admits_touches_and_evicts_lru() {
+        let bk = HostBackend::new();
+        let mut bank = AdapterBank::new(2);
+        let mask = [1.0f32, 1.0];
+        let a = bank.admit(&bk, "a", &[1.0], &mask, &[]).unwrap();
+        assert!(a.uploaded && !a.evicted);
+        let b = bank.admit(&bk, "b", &[2.0], &mask, &[]).unwrap();
+        assert_eq!((a.slot, b.slot), (0, 1));
+        assert_eq!(bank.len(), 2);
+        // touch "a" so "b" becomes LRU
+        let a2 = bank.admit(&bk, "a", &[1.0], &mask, &[]).unwrap();
+        assert!(!a2.uploaded);
+        let c = bank.admit(&bk, "c", &[3.0], &mask, &[]).unwrap();
+        assert!(c.uploaded && c.evicted);
+        assert_eq!(c.slot, 1, "LRU slot (b) recycled");
+        assert_eq!(bank.slot_of("b"), None);
+        assert_eq!(bank.slot_of("a"), Some(0));
+        assert_eq!(bank.slot_of("c"), Some(1));
+    }
+
+    #[test]
+    fn bank_eviction_respects_pins() {
+        let bk = HostBackend::new();
+        let mut bank = AdapterBank::new(2);
+        let mask = [1.0f32];
+        bank.admit(&bk, "a", &[1.0], &mask, &[]).unwrap();
+        bank.admit(&bk, "b", &[2.0], &mask, &[]).unwrap();
+        // slot 0 ("a") is LRU but pinned: "c" must evict slot 1 instead.
+        let c = bank.admit(&bk, "c", &[3.0], &mask, &[0]).unwrap();
+        assert_eq!(c.slot, 1);
+        assert_eq!(bank.slot_of("a"), Some(0));
+        // with every slot pinned, admission must refuse
+        assert!(bank.admit(&bk, "d", &[4.0], &mask, &[0, 1]).is_err());
+    }
 }

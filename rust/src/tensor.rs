@@ -37,11 +37,14 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// rank-2 views via `rows()`/`cols()`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<usize>,
+    /// Row-major elements (`shape.iter().product()` of them).
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n: usize = shape.iter().product();
         Tensor {
@@ -50,6 +53,7 @@ impl Tensor {
         }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn filled(shape: &[usize], v: f32) -> Tensor {
         let n: usize = shape.iter().product();
         Tensor {
@@ -58,6 +62,7 @@ impl Tensor {
         }
     }
 
+    /// Wrap an owned vector as a tensor (panics on shape/length mismatch).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -90,6 +95,7 @@ impl Tensor {
         }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
@@ -106,11 +112,13 @@ impl Tensor {
         self.shape[1]
     }
 
+    /// Element `(i, j)` of a rank-2 tensor.
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.shape[1] + j]
     }
 
+    /// Set element `(i, j)` of a rank-2 tensor.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
         self.data[i * self.shape[1] + j] = v;
@@ -122,6 +130,7 @@ impl Tensor {
         &self.data[i * c..(i + 1) * c]
     }
 
+    /// Mutable row slice (rank-2).
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         let c = self.shape[1];
         &mut self.data[i * c..(i + 1) * c]
@@ -155,7 +164,7 @@ impl Tensor {
     /// Matrix multiply `self (m×k) @ other (k×n)`.
     ///
     /// Transposes `other` once so every output element is a dot product of
-    /// two contiguous slices — the unrolled [`dot`] kernel then vectorizes,
+    /// two contiguous slices — the unrolled `dot` kernel then vectorizes,
     /// which is 2–4× faster than the previous i-k-j saxpy loop at the hot
     /// shapes (see the `matmul` entries in `benches/bench_main.rs`).
     pub fn matmul(&self, other: &Tensor) -> Tensor {
@@ -170,7 +179,7 @@ impl Tensor {
     ///
     /// Row-parallel: output rows are partitioned into one contiguous span
     /// per pool lane (`util::pool`), each span keeping the serial kernel's
-    /// column blocking. Every output element is still one [`dot`] of the
+    /// column blocking. Every output element is still one `dot` of the
     /// same two slices, so results are bit-identical for any thread count;
     /// shapes below the pool's work cutoff stay on the serial path.
     pub fn matmul_t(&self, other: &Tensor) -> Tensor {

@@ -12,7 +12,7 @@ use crate::adapters::{LoraAdapterSet, QrAdapterSet};
 use crate::data::{Batch, Batcher, HeadKind, Split, TaskData};
 use crate::metrics::{argmax, EvalResult};
 use crate::model;
-use crate::runtime::{Backend, Buffer, DType, Executable, Preset, Role, StateLayout};
+use crate::runtime::{Backend, BatchedAdapters, Buffer, DType, Executable, Preset, Role, StateLayout};
 use crate::tensor::Tensor;
 
 /// Fine-tuning method descriptor (adapter state included).
@@ -339,6 +339,51 @@ impl<'a> Session<'a> {
             }
         }
         let outs = self.bk.execute(&self.exe_eval, &args)?;
+        drop(args);
+        self.bk.download_f32(&outs[0])
+    }
+
+    /// Forward pass on a mixed-task batch: per-row adapter selection out
+    /// of a resident bank, no state swaps.
+    ///
+    /// `states[t]` / `class_masks[t]` are the bank's backend-resident
+    /// buffers and `row_slots[b]` picks the adapter serving batch row `b`.
+    /// The session's own state buffer is not consulted. Per-request logits
+    /// are bit-identical to [`Session::forward`] after `upload_state` of
+    /// the same adapter (property-tested in `rust/tests/serve_batched.rs`).
+    pub fn forward_multi(
+        &self,
+        batch: &Batch,
+        states: &[&Buffer],
+        class_masks: &[&Buffer],
+        row_slots: &[usize],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(!states.is_empty(), "forward_multi: empty adapter bank");
+        let spec = self.exe_eval.spec.clone();
+        // Placeholder class mask (all classes live); execute_batched
+        // substitutes each adapter's own mask.
+        let k = if self.head_kind == HeadKind::Cls {
+            self.preset.n_classes
+        } else {
+            1
+        };
+        let batch_bufs = self.batch_buffers(&spec, batch, k)?;
+        let mut args: Vec<&Buffer> = Vec::with_capacity(spec.inputs.len());
+        for t in &spec.inputs {
+            match t.role {
+                // Placeholder — execute_batched selects per-row states.
+                Role::State => args.push(states[0]),
+                Role::Frozen => {
+                    args.push(&self.frozen.iter().find(|(n, _)| n == &t.name).unwrap().1)
+                }
+                Role::Batch => {
+                    args.push(&batch_bufs.iter().find(|(n, _)| n == &t.name).unwrap().1)
+                }
+                other => anyhow::bail!("unexpected eval input role {other:?}"),
+            }
+        }
+        let adapters = BatchedAdapters { states, class_masks, row_slots };
+        let outs = self.bk.execute_batched(&self.exe_eval, &args, &adapters)?;
         drop(args);
         self.bk.download_f32(&outs[0])
     }

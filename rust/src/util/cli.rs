@@ -113,9 +113,19 @@ impl Args {
     }
 }
 
+/// Flags the `serve` demo accepts beyond the shared experiment flags.
+///
+/// The README's "Serving" section must document every one of these as
+/// `--<flag>`; the `readme_documents_serve_flags` test (also run as a
+/// dedicated CI step) keeps docs and CLI in lockstep. Extend this list
+/// whenever `cmd_serve` in `main.rs` learns a new flag.
+pub const SERVE_FLAGS: &[&str] = &["requests", "max-batch", "resident-adapters"];
+
 /// A subcommand descriptor for help output.
 pub struct Command {
+    /// Subcommand name as typed on the command line.
     pub name: &'static str,
+    /// One-line description for the help screen.
     pub about: &'static str,
 }
 
@@ -184,5 +194,18 @@ mod tests {
     fn bad_typed_value_errors() {
         let a = Args::parse(&raw(&["--steps", "abc"]), &[]).unwrap();
         assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    /// Docs/CLI lockstep: every serve flag must appear as `--<flag>` in the
+    /// README's Serving section (run as a dedicated CI step too).
+    #[test]
+    fn readme_documents_serve_flags() {
+        let readme = include_str!("../../../README.md");
+        for flag in SERVE_FLAGS {
+            assert!(
+                readme.contains(&format!("--{flag}")),
+                "README.md must document serve flag --{flag}"
+            );
+        }
     }
 }

@@ -108,6 +108,7 @@ fn worker_loop(shared: Arc<Shared>) {
 }
 
 impl Pool {
+    /// Spawn a pool with `lanes − 1` worker threads (min 1 lane).
     pub fn new(lanes: usize) -> Pool {
         let lanes = lanes.max(1);
         let shared = Arc::new(Shared {
@@ -189,6 +190,8 @@ pub struct Scope<'env> {
 }
 
 impl<'env> Scope<'env> {
+    /// Queue a task on the pool; the owning [`Pool::scope`] call blocks
+    /// until it (and every sibling) finished.
     pub fn spawn<F>(&self, f: F)
     where
         F: FnOnce() + Send + 'env,

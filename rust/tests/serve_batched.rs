@@ -1,0 +1,293 @@
+//! Bit-identity property tests for batched multi-adapter serving.
+//!
+//! The contract under test: a mixed-task batch served through the resident
+//! `AdapterBank` path (`Session::forward_multi` / `execute_batched`) must
+//! reproduce the sequential swap-per-request path (`upload_state` +
+//! `forward`) **bit for bit**, per request, for both adapter methods and
+//! for multiple pool thread counts. The grouped fallback (what a backend
+//! without a single-pass fast path runs, e.g. PJRT) must agree too.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use qrlora::adapters::{Proj, Scope};
+use qrlora::data::{task, Batcher, Example, HeadKind, Lexicon, TaskData};
+use qrlora::linalg::RankRule;
+use qrlora::runtime::{execute_batched_grouped, Backend, BatchedAdapters, HostBackend};
+use qrlora::server::{serve_swap, Request, Router, RouterStats};
+use qrlora::tensor::Tensor;
+use qrlora::training::{Method, Methods, Session};
+use qrlora::util::pool;
+use qrlora::util::rng::Rng;
+
+/// Random backbone with the ft layout's parameter names/shapes (values are
+/// irrelevant to the identity property).
+fn synthetic_backbone(bk: &dyn Backend) -> BTreeMap<String, Tensor> {
+    let exe = bk.load("tiny/train_step_ft_cls").unwrap();
+    let mut rng = Rng::new(7);
+    let mut backbone = BTreeMap::new();
+    for f in &exe.spec.layout().unwrap().params {
+        if !f.name.starts_with("head/") {
+            backbone.insert(f.name.clone(), Tensor::randn(&f.shape, &mut rng, 0.05));
+        }
+    }
+    backbone
+}
+
+/// `n` distinct adapter states: the session's initial state with the
+/// trainable region deterministically perturbed per slot.
+fn perturbed_states(session: &Session, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let layout = session.layout().clone();
+    let base = session.download_state().unwrap();
+    (0..n)
+        .map(|i| {
+            let mut st = base.clone();
+            let mut rng = Rng::new(seed + i as u64);
+            for f in &layout.params {
+                for j in 0..f.numel() {
+                    st[f.offset + j] += rng.normal() * 0.02;
+                }
+            }
+            st
+        })
+        .collect()
+}
+
+fn build_method(bk: &dyn Backend, name: &str, backbone: &BTreeMap<String, Tensor>) -> Method {
+    let preset = bk.manifest().preset("tiny").unwrap().clone();
+    match name {
+        "qrlora" => Methods::qr_lora(
+            backbone,
+            &preset,
+            Scope::all_layers(&[Proj::Q, Proj::V]),
+            0.5,
+            RankRule::DiagRatio,
+        )
+        .unwrap(),
+        "lora" => Methods::lora(backbone, &preset, 2.0, 1).unwrap(),
+        other => panic!("unknown method {other}"),
+    }
+}
+
+/// Mixed batch through the bank vs per-request swaps, bit-compared at
+/// several thread counts.
+fn check_bit_identity(method_name: &str) {
+    let bk = HostBackend::new();
+    let preset = bk.manifest().preset("tiny").unwrap().clone();
+    let backbone = synthetic_backbone(&bk);
+    let method = build_method(&bk, method_name, &backbone);
+    let mut session =
+        Session::finetune(&bk, &preset, &method, HeadKind::Cls, &backbone, None, 3).unwrap();
+    let states = perturbed_states(&session, 3, 17);
+
+    let lex = Lexicon::new(preset.vocab);
+    let data = TaskData::generate(task("mnli").unwrap(), &lex, 5);
+    let batcher = Batcher::new(&preset, false);
+    let refs: Vec<&Example> = data.train[..preset.batch].iter().collect();
+    let mixed = batcher.assemble(&refs);
+    let row_slots: Vec<usize> = (0..preset.batch).map(|i| [0, 1, 2, 0, 2, 1, 0, 1][i % 8]).collect();
+
+    let n_classes = 3usize;
+    let k = session.layout().param("head/wc").unwrap().shape[1];
+    let cmask = Batcher::class_mask(n_classes, k);
+
+    // Swap-per-request reference (serial pool).
+    let want_rows: Vec<Vec<f32>> = pool::with_threads(1, || {
+        refs.iter()
+            .enumerate()
+            .map(|(i, ex)| {
+                session.upload_state(&states[row_slots[i]]).unwrap();
+                let single = batcher.assemble(&[*ex]);
+                session.forward(&single, n_classes).unwrap()[..k].to_vec()
+            })
+            .collect()
+    });
+
+    // Resident bank, one mixed pass, at ≥2 thread counts.
+    let state_bufs: Vec<_> = states.iter().map(|s| bk.upload_f32(s, &[s.len()]).unwrap()).collect();
+    let mask_bufs: Vec<_> = (0..states.len()).map(|_| bk.upload_f32(&cmask, &[k]).unwrap()).collect();
+    let state_refs: Vec<_> = state_bufs.iter().collect();
+    let mask_refs: Vec<_> = mask_bufs.iter().collect();
+    for threads in [1usize, 3] {
+        let got = pool::with_threads(threads, || {
+            session
+                .forward_multi(&mixed, &state_refs, &mask_refs, &row_slots)
+                .unwrap()
+        });
+        for (i, want) in want_rows.iter().enumerate() {
+            for j in 0..k {
+                assert_eq!(
+                    got[i * k + j].to_bits(),
+                    want[j].to_bits(),
+                    "{method_name} t={threads}: row {i} col {j}: {} vs {}",
+                    got[i * k + j],
+                    want[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_batch_bit_identical_to_swap_qrlora() {
+    check_bit_identity("qrlora");
+}
+
+#[test]
+fn mixed_batch_bit_identical_to_swap_lora() {
+    check_bit_identity("lora");
+}
+
+/// The grouped fallback (PJRT's path) must agree with the host fast path
+/// bit for bit on the same mixed batch.
+#[test]
+fn grouped_fallback_matches_fast_path() {
+    let bk = HostBackend::new();
+    let preset = bk.manifest().preset("tiny").unwrap().clone();
+    let backbone = synthetic_backbone(&bk);
+    let method = build_method(&bk, "qrlora", &backbone);
+    let session =
+        Session::finetune(&bk, &preset, &method, HeadKind::Cls, &backbone, None, 3).unwrap();
+    let states = perturbed_states(&session, 3, 29);
+
+    let lex = Lexicon::new(preset.vocab);
+    let data = TaskData::generate(task("sst2").unwrap(), &lex, 9);
+    let batcher = Batcher::new(&preset, false);
+    let refs: Vec<&Example> = data.train[..preset.batch].iter().collect();
+    let mixed = batcher.assemble(&refs);
+    let row_slots: Vec<usize> = (0..preset.batch).map(|i| i % states.len()).collect();
+
+    let k = session.layout().param("head/wc").unwrap().shape[1];
+    let cmask = Batcher::class_mask(2, k);
+    let state_bufs: Vec<_> = states.iter().map(|s| bk.upload_f32(s, &[s.len()]).unwrap()).collect();
+    let mask_bufs: Vec<_> = (0..states.len()).map(|_| bk.upload_f32(&cmask, &[k]).unwrap()).collect();
+    let state_refs: Vec<_> = state_bufs.iter().collect();
+    let mask_refs: Vec<_> = mask_bufs.iter().collect();
+
+    // Fast path via the session.
+    let fast = session
+        .forward_multi(&mixed, &state_refs, &mask_refs, &row_slots)
+        .unwrap();
+
+    // Grouped fallback straight through the free function: rebuild the
+    // spec-ordered argument list from fresh uploads (the session's own
+    // buffers are private) and hand it the same adapter bank.
+    let exe = bk.load("tiny/eval_fwd_qrlora_cls").unwrap();
+    let adapters = BatchedAdapters {
+        states: &state_refs,
+        class_masks: &mask_refs,
+        row_slots: &row_slots,
+    };
+    let mut owned: Vec<qrlora::runtime::Buffer> = Vec::new();
+    let mut frozen_values: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    if let Method::QrLora(set) = &method {
+        for (name, v) in set.frozen_inputs() {
+            frozen_values.insert(name, v);
+        }
+    }
+    for (name, t) in &backbone {
+        frozen_values.insert(name.clone(), t.data.clone());
+    }
+    for t in &exe.spec.inputs {
+        use qrlora::runtime::{DType, Role};
+        let buf = match t.role {
+            Role::State => bk.upload_f32(&states[0], &[states[0].len()]).unwrap(),
+            Role::Frozen => bk
+                .upload_f32(frozen_values.get(&t.name).unwrap_or_else(|| panic!("missing frozen {}", t.name)), &t.shape)
+                .unwrap(),
+            Role::Batch => match t.name.as_str() {
+                "batch/input_ids" => bk.upload_i32(&mixed.input_ids, &t.shape).unwrap(),
+                "batch/type_ids" => bk.upload_i32(&mixed.type_ids, &t.shape).unwrap(),
+                "batch/attn_mask" => bk.upload_f32(&mixed.attn_mask, &t.shape).unwrap(),
+                "batch/labels" => match t.dtype {
+                    DType::I32 => bk.upload_i32(&mixed.labels_i32, &t.shape).unwrap(),
+                    DType::F32 => bk.upload_f32(&mixed.labels_f32, &t.shape).unwrap(),
+                },
+                "batch/class_mask" => bk.upload_f32(&cmask, &t.shape).unwrap(),
+                "batch/example_w" => bk.upload_f32(&mixed.example_w, &t.shape).unwrap(),
+                other => panic!("unexpected batch input {other}"),
+            },
+            other => panic!("unexpected eval input role {other:?}"),
+        };
+        owned.push(buf);
+    }
+    let args: Vec<&qrlora::runtime::Buffer> = owned.iter().collect();
+    let outs = execute_batched_grouped(&bk, &exe, &args, &adapters).unwrap();
+    let grouped = bk.download_f32(&outs[0]).unwrap();
+
+    assert_eq!(fast.len(), grouped.len());
+    for (i, (a, b)) in fast.iter().zip(&grouped).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "elem {i}: fast {a} vs grouped {b}");
+    }
+}
+
+/// End-to-end router vs swap loop on a mixed stream, with a bank smaller
+/// than the task count so admissions/evictions happen mid-stream; results
+/// must still match the swap path bit for bit and the stats must add up.
+#[test]
+fn router_with_evictions_matches_swap_path() {
+    let bk = HostBackend::new();
+    let preset = bk.manifest().preset("tiny").unwrap().clone();
+    let backbone = synthetic_backbone(&bk);
+    let method = build_method(&bk, "qrlora", &backbone);
+    let mut session =
+        Session::finetune(&bk, &preset, &method, HeadKind::Cls, &backbone, None, 3).unwrap();
+    let tasks = ["sst2", "mrpc", "qnli"];
+    let states = perturbed_states(&session, tasks.len(), 41);
+
+    let lex = Lexicon::new(preset.vocab);
+    let batcher = Batcher::new(&preset, false);
+    let per_task: Vec<TaskData> = tasks
+        .iter()
+        .enumerate()
+        .map(|(ti, name)| TaskData::generate(task(name).unwrap(), &lex, 11 + ti as u64))
+        .collect();
+    let mut rng = Rng::new(77);
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    for id in 0..40 {
+        let ti = rng.below(tasks.len());
+        let ex = per_task[ti].train[rng.below(64)].clone();
+        queue.push_back(Request { id, task: tasks[ti].to_string(), example: ex });
+    }
+
+    // Batched path: bank capacity 2 < 3 tasks forces evictions.
+    let (batched, stats) = {
+        let mut router = Router::new(&session, batcher.clone(), 0, 2).unwrap();
+        for (i, name) in tasks.iter().enumerate() {
+            let n_classes = task(name).unwrap().n_classes;
+            router.register(name, states[i].clone(), n_classes).unwrap();
+        }
+        let mut q = queue.clone();
+        let out = router.serve(&mut q).unwrap();
+        (out, router.stats)
+    };
+    assert_eq!(stats.requests, 40);
+    assert_eq!(stats.batched_requests, 40);
+    assert_eq!(stats.swap_requests, 0);
+    assert!(stats.evictions > 0, "capacity 2 with 3 tasks must evict: {stats:?}");
+    assert!(stats.swaps >= stats.evictions);
+    assert!(stats.batches < 40, "requests must be batched, got {} batches", stats.batches);
+
+    // Swap reference on the identical stream.
+    let mut library: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    for (i, name) in tasks.iter().enumerate() {
+        library.insert(name.to_string(), states[i].clone());
+    }
+    let mut swap_stats = RouterStats::default();
+    let mut q = queue.clone();
+    let swapped = serve_swap(&mut session, &batcher, &library, &mut q, &mut swap_stats).unwrap();
+    assert_eq!(swap_stats.swap_requests, 40);
+    assert!(swap_stats.swaps > 0);
+
+    let mut by_id: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+    for (r, l) in swapped {
+        by_id.insert(r.id, l);
+    }
+    assert_eq!(batched.len(), 40);
+    for (r, logits) in &batched {
+        let want = &by_id[&r.id];
+        assert_eq!(logits.len(), want.len());
+        for (j, (a, b)) in logits.iter().zip(want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "req {} col {j}: {a} vs {b}", r.id);
+        }
+    }
+}
