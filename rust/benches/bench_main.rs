@@ -11,6 +11,9 @@
 //! * P4  train-step latency per method (end-to-end backend step), default
 //!       threads and `[t=1]`
 //! * P5  eval-forward latency + adapter hot-swap cost (serving path)
+//! * P6  int8-quantized frozen backbone: fused `qmatmul` kernels vs their
+//!       f32 twins, quantized eval/serve entries, and the resident-bytes
+//!       reduction stat (host-only; see `qrlora::quant`)
 //!
 //! Runs on whatever backend `QRLORA_BACKEND` selects (host by default, so
 //! the bench is hermetic) with the pool sized by `QRLORA_THREADS`, and
@@ -32,7 +35,8 @@ use std::time::Instant;
 use qrlora::adapters::{factorize, Proj, Scope};
 use qrlora::data::{task, Batcher, Lexicon, TaskData};
 use qrlora::linalg::RankRule;
-use qrlora::runtime::{create_backend, Backend, BackendChoice, Buffer, DType};
+use qrlora::quant::{self, QuantTensor};
+use qrlora::runtime::{create_backend, Backend, BackendChoice, Buffer, DType, HostBackend};
 use qrlora::tensor::Tensor;
 use qrlora::training::{Method, Methods, Session};
 use qrlora::util::cli::Args;
@@ -59,7 +63,14 @@ impl Recorder {
     }
 
     /// Time `f` with the pool's partition count forced to `threads`.
-    fn bench<F: FnMut()>(&mut self, name: &str, threads: usize, warmup: usize, iters: usize, mut f: F) {
+    fn bench<F: FnMut()>(
+        &mut self,
+        name: &str,
+        threads: usize,
+        warmup: usize,
+        iters: usize,
+        mut f: F,
+    ) {
         let stats = pool::with_threads(threads, || {
             for _ in 0..warmup {
                 f();
@@ -118,7 +129,19 @@ impl Recorder {
         let empty: Vec<Json> = Vec::new();
         let base_entries = doc.get("entries").and_then(|e| e.as_arr()).unwrap_or(&empty);
         if base_entries.is_empty() {
-            println!("\ncompare: baseline {path} has no entries (provisional baseline?) — skipping");
+            // An empty baseline silently disarms the whole regression
+            // gate — make that loud (a CI annotation, not just a log
+            // line) instead of no-opping quietly.
+            println!(
+                "\ncompare: baseline {path} has ZERO entries — the regression gate is a no-op"
+            );
+            if std::env::var("GITHUB_ACTIONS").is_ok() {
+                println!(
+                    "::warning title=bench baseline empty::{path} has no entries, so \
+                     `--compare --threshold` checked nothing. Regenerate it with `cargo bench \
+                     --bench bench_main` (or copy the bench-host CI artifact) and commit it."
+                );
+            }
             return Ok(0);
         }
         let mut baseline: BTreeMap<(String, usize), f64> = BTreeMap::new();
@@ -237,6 +260,24 @@ fn main() -> anyhow::Result<()> {
         }
         rec.bench("t_matmul zero-skip 87%-sparse rows [t=1]", 1, 2, 10, || {
             std::hint::black_box(sparse.t_matmul(&c).data[0]);
+        });
+    }
+    // Int8 fused kernels vs the f32 `matmul 256x256x256` pair above: the
+    // forward product (`matmul_qt`, dequant after each dot) and the
+    // backward product (`matmul_q`, scaled int8 row axpys).
+    {
+        let n = 256usize;
+        let a = Tensor::randn(&[n, n], &mut rng, 1.0);
+        let w = Tensor::randn(&[n, n], &mut rng, 1.0);
+        let wq = QuantTensor::quantize(&w.t(), quant::QUANT_GROUP_ROWS);
+        rec.bench("qmatmul int8 256x256x256", tmax, 2, 10, || {
+            std::hint::black_box(quant::matmul_qt(&a, &wq).data[0]);
+        });
+        rec.bench("qmatmul int8 256x256x256 [t=1]", 1, 2, 10, || {
+            std::hint::black_box(quant::matmul_qt(&a, &wq).data[0]);
+        });
+        rec.bench("qmatmul_bwd int8 256x256x256 [t=1]", 1, 2, 10, || {
+            std::hint::black_box(quant::matmul_q(&a, &wq).data[0]);
         });
     }
 
@@ -454,6 +495,51 @@ fn main() -> anyhow::Result<()> {
                 .unwrap(),
         );
     });
+
+    // Quantized-backbone twins (host backend regardless of the selected
+    // one — quantization is host-only): same shapes as `eval_fwd QR-LoRA`
+    // and `serve_mixed_batch`, with the frozen backbone held int8.
+    println!("\n# P6 quantized frozen backbone ({preset_name}, int8)");
+    let rtq = HostBackend::new_quantized();
+    let qsession = Session::finetune(
+        &rtq,
+        &preset,
+        method,
+        qrlora::data::HeadKind::Cls,
+        &backbone,
+        None,
+        10,
+    )?;
+    rec.bench("eval_fwd QR-LoRA [int8]", tmax, 3, 15, || {
+        std::hint::black_box(qsession.forward(&batch, 2).unwrap());
+    });
+    rec.bench("eval_fwd QR-LoRA [int8] [t=1]", 1, 3, 15, || {
+        std::hint::black_box(qsession.forward(&batch, 2).unwrap());
+    });
+    let qstate_bufs: Vec<Buffer> = adapter_states
+        .iter()
+        .map(|s| rtq.upload_f32(s, &[s.len()]).unwrap())
+        .collect();
+    let qmask_bufs: Vec<Buffer> = (0..n_adapters)
+        .map(|_| rtq.upload_f32(&cmask, &[head_k]).unwrap())
+        .collect();
+    let qstate_refs: Vec<&Buffer> = qstate_bufs.iter().collect();
+    let qmask_refs: Vec<&Buffer> = qmask_bufs.iter().collect();
+    rec.bench("serve_mixed_batch [int8]", tmax, 1, 10, || {
+        std::hint::black_box(
+            qsession
+                .forward_multi(&mixed, &qstate_refs, &qmask_refs, &row_slots)
+                .unwrap(),
+        );
+    });
+    if let Some(r) = rtq.frozen_residency() {
+        println!(
+            "\nfrozen backbone weights: {:.1} KiB f32 -> {:.1} KiB int8 resident ({:.2}x reduction)",
+            r.backbone_f32_bytes as f64 / 1024.0,
+            r.backbone_resident_bytes as f64 / 1024.0,
+            r.reduction()
+        );
+    }
 
     // Footprint summary for the serving claim.
     let qr_state_kib = (session.layout().total * 4) as f64 / 1024.0;

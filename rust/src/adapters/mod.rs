@@ -528,8 +528,22 @@ mod tests {
     fn param_count_scales_with_scope() {
         let p = preset();
         let bb = backbone(&p, 10);
-        let narrow = QrAdapterSet::build(&bb, &p, Scope::last_layers(1, &[Proj::Q]), 0.5, RankRule::DiagRatio).unwrap();
-        let wide = QrAdapterSet::build(&bb, &p, Scope::all_layers(&[Proj::Q, Proj::V, Proj::O]), 0.5, RankRule::DiagRatio).unwrap();
+        let narrow = QrAdapterSet::build(
+            &bb,
+            &p,
+            Scope::last_layers(1, &[Proj::Q]),
+            0.5,
+            RankRule::DiagRatio,
+        )
+        .unwrap();
+        let wide = QrAdapterSet::build(
+            &bb,
+            &p,
+            Scope::all_layers(&[Proj::Q, Proj::V, Proj::O]),
+            0.5,
+            RankRule::DiagRatio,
+        )
+        .unwrap();
         assert!(wide.trainable_params() > narrow.trainable_params());
     }
 
@@ -537,7 +551,14 @@ mod tests {
     fn merge_matches_factors() {
         let p = preset();
         let bb = backbone(&p, 11);
-        let set = QrAdapterSet::build(&bb, &p, Scope::last_layers(1, &[Proj::V]), 0.4, RankRule::DiagRatio).unwrap();
+        let set = QrAdapterSet::build(
+            &bb,
+            &p,
+            Scope::last_layers(1, &[Proj::V]),
+            0.4,
+            RankRule::DiagRatio,
+        )
+        .unwrap();
         let key = "layer2/wv".to_string();
         let f = &set.factors[&key];
         let mut lam = vec![0.0f32; p.r_max];

@@ -58,6 +58,7 @@ pub struct TaskSpec {
     pub label_noise: f64,
 }
 
+#[rustfmt::skip] // one row per task reads as a table; keep it that way
 pub static ALL_TASKS: &[TaskSpec] = &[
     TaskSpec { name: "mnli", n_classes: 3, head: HeadKind::Cls, train_size: 50_000, dev_size: 2_000, train_genres: &[0, 1, 2], mm_genres: Some(&[3, 4]), label_noise: 0.22 },
     TaskSpec { name: "sst2", n_classes: 2, head: HeadKind::Cls, train_size: 10_000, dev_size: 2_000, train_genres: &[0, 1, 2], mm_genres: None, label_noise: 0.08 },
@@ -327,7 +328,13 @@ fn gen_stsb(lex: &Lexicon, rng: &mut Rng, genre: usize) -> Example {
 
 /// Generate one example for `task` in `genre` with a chosen label bucket
 /// (round-robin over classes keeps datasets balanced; stsb ignores it).
-pub fn gen_example(spec: &TaskSpec, lex: &Lexicon, rng: &mut Rng, genre: usize, bucket: usize) -> Example {
+pub fn gen_example(
+    spec: &TaskSpec,
+    lex: &Lexicon,
+    rng: &mut Rng,
+    genre: usize,
+    bucket: usize,
+) -> Example {
     assert!(genre < N_GENRES);
     match spec.name {
         "mnli" => gen_mnli(lex, rng, genre, bucket % 3),

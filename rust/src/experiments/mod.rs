@@ -130,7 +130,11 @@ pub fn table_sweep(cfg: &ExpConfig, task_name: &str) -> anyhow::Result<Vec<Row>>
         (format!("τ=0.7, all {nl} layers W_o"), Scope::all_layers(&[Proj::O]), 0.7),
         (format!("τ=0.8, all {nl} layers W_o"), Scope::all_layers(&[Proj::O]), 0.8),
         (format!("τ=0.5, last {last_k} layers W_o"), Scope::last_layers(last_k, &[Proj::O]), 0.5),
-        (format!("τ=0.5, last {last_k} layers W_q,W_v"), Scope::last_layers(last_k, &[Proj::Q, Proj::V]), 0.5),
+        (
+            format!("τ=0.5, last {last_k} layers W_q,W_v"),
+            Scope::last_layers(last_k, &[Proj::Q, Proj::V]),
+            0.5,
+        ),
     ];
 
     let header_vals = |r: &RunResult| -> Vec<(String, f64)> {
@@ -208,8 +212,20 @@ pub fn table3(cfg: &ExpConfig, tasks: &[&str]) -> anyhow::Result<()> {
         for task_name in tasks {
             let (warm_bb, _) = pipe.warmed(task_name)?;
             let method = match *mname {
-                "QR-LoRA1" => Methods::qr_lora(&warm_bb, &preset, Scope::last_layers(last_k, &[Proj::Q, Proj::V]), 0.5, RankRule::DiagRatio)?,
-                "QR-LoRA2" => Methods::qr_lora(&warm_bb, &preset, Scope::last_layers(last_k, &[Proj::Q]), 0.5, RankRule::DiagRatio)?,
+                "QR-LoRA1" => Methods::qr_lora(
+                    &warm_bb,
+                    &preset,
+                    Scope::last_layers(last_k, &[Proj::Q, Proj::V]),
+                    0.5,
+                    RankRule::DiagRatio,
+                )?,
+                "QR-LoRA2" => Methods::qr_lora(
+                    &warm_bb,
+                    &preset,
+                    Scope::last_layers(last_k, &[Proj::Q]),
+                    0.5,
+                    RankRule::DiagRatio,
+                )?,
                 "SVD-LoRA" => Methods::svd_lora(&warm_bb, &preset, 1, 2.0, cfg.seed)?,
                 "LoRA" => Methods::lora(&warm_bb, &preset, 2.0, cfg.seed)?,
                 _ => Method::FullFt,
@@ -242,7 +258,16 @@ pub fn table4(cfg: &ExpConfig, sizes: &[usize]) -> anyhow::Result<()> {
         let (warm_bb, _) = pipe.warmed("mnli")?;
         let methods: Vec<(&str, Method)> = vec![
             ("LoRA", Methods::lora(&warm_bb, &preset, 2.0, cfg.seed)?),
-            ("QR-LoRA", Methods::qr_lora(&warm_bb, &preset, Scope::last_layers(last_k, &[Proj::Q, Proj::V]), 0.5, RankRule::DiagRatio)?),
+            (
+                "QR-LoRA",
+                Methods::qr_lora(
+                    &warm_bb,
+                    &preset,
+                    Scope::last_layers(last_k, &[Proj::Q, Proj::V]),
+                    0.5,
+                    RankRule::DiagRatio,
+                )?,
+            ),
             ("FT", Method::FullFt),
         ];
         for (name, method) in methods {

@@ -13,6 +13,12 @@
 //! Host-backend parallelism: `--threads N` (or `QRLORA_THREADS`) sizes the
 //! worker pool; default is the machine's available parallelism. Results
 //! are bit-identical for every thread count.
+//!
+//! Memory: `--quantize-backbone` (or `QRLORA_QUANT=1`) holds the frozen
+//! backbone weights int8 on the host backend (embeddings + attention/FFN
+//! projections, per-row-group absmax scales); QR factors, λ, LoRA A/B,
+//! task heads, and all gradients stay f32. See the README's perf-knobs
+//! section for the accuracy contract.
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::ALL_TASKS;
@@ -39,7 +45,7 @@ fn main() {
         return;
     }
     let cmd = raw[0].clone();
-    let args = match Args::parse(&raw[1..], &["verbose", "force"]) {
+    let args = match Args::parse(&raw[1..], &["verbose", "force", "quantize-backbone"]) {
         Ok(a) => a,
         Err(e) => {
             errorln!("{e}");
@@ -70,6 +76,33 @@ fn main() {
                 std::process::exit(2);
             }
         }
+    }
+    if args.has("quantize-backbone") {
+        // Hold the frozen backbone int8 on the host backend (~4x smaller
+        // resident weights; QR factors, λ, heads, and gradients stay f32).
+        // Handed to the backend factory via the env, like --backend.
+        //
+        // The flag is a valueless switch, so `--quantize-backbone off`
+        // would silently leave `off` as a stray positional while turning
+        // quantization ON — catch that spelling and demand the `=` form.
+        let stray = args.positional().iter().find(|p| {
+            matches!(
+                p.to_ascii_lowercase().as_str(),
+                "on" | "off" | "0" | "1" | "true" | "false" | "yes" | "no"
+            )
+        });
+        if let Some(v) = stray {
+            errorln!(
+                "--quantize-backbone takes no value; use --quantize-backbone or \
+                 --quantize-backbone=off, not `--quantize-backbone {v}`"
+            );
+            std::process::exit(2);
+        }
+        std::env::set_var("QRLORA_QUANT", "1");
+    } else if let Some(v) = args.get("quantize-backbone") {
+        // `--quantize-backbone=1` / `=off`: forward the value so the env
+        // parser's truthiness applies instead of silently ignoring it.
+        std::env::set_var("QRLORA_QUANT", v);
     }
 
     let result = match cmd.as_str() {
@@ -112,6 +145,10 @@ fn cmd_info(_args: &Args) -> anyhow::Result<()> {
     let rt = qrlora::runtime::create_backend(choice, std::path::Path::new(&dir))?;
     println!("backend: {}", rt.name());
     println!("host threads: {}", qrlora::util::pool::threads());
+    println!(
+        "quantized backbone: {}",
+        if qrlora::quant::quant_backbone_from_env() { "on (int8)" } else { "off (f32)" }
+    );
     println!("presets:");
     for (name, p) in &rt.manifest().presets {
         println!(
@@ -213,7 +250,8 @@ fn cmd_ranks(args: &Args) -> anyhow::Result<()> {
     let bb = pipe.backbone()?;
     let taus = args.list_f64("taus", &[0.3, 0.5, 0.7, 0.8, 0.9])?;
     println!("pivoted-QR rank selection (preset {}, DiagRatio rule):\n", cfg.preset);
-    println!("| matrix | {} |", taus.iter().map(|t| format!("τ={t}")).collect::<Vec<_>>().join(" | "));
+    let header: Vec<String> = taus.iter().map(|t| format!("τ={t}")).collect();
+    println!("| matrix | {} |", header.join(" | "));
     println!("|---|{}", "---:|".repeat(taus.len()));
     for (name, w) in bb.iter().filter(|(n, _)| n.contains("/attn/w")) {
         let f = qrlora::linalg::pivoted_qr(w);

@@ -21,14 +21,141 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::data::HeadKind;
+use crate::quant::{self, QuantTensor};
 use crate::runtime::{Preset, StateLayout};
 use crate::tensor::Tensor;
 use crate::util::pool;
 
-/// Frozen (non-trainable) inputs keyed by graph name. `Rc` so the runtime
-/// backend can cache the buffer→`Tensor` conversion across steps and hand
-/// the same tensors to every call without copying the backbone.
-pub type FrozenMap = BTreeMap<String, Rc<Tensor>>;
+/// One frozen (non-trainable) input: full-precision, or int8-quantized
+/// backbone weight (see `quant`). `Rc` so the runtime backend can cache
+/// the buffer→tensor conversion (and the quantization) across steps and
+/// hand the same representation to every call without copying the
+/// backbone.
+#[derive(Clone)]
+pub enum FrozenValue {
+    /// Full-precision tensor (QR factors, masks, LayerNorm, biases — and
+    /// everything when quantization is off).
+    Dense(Rc<Tensor>),
+    /// Int8 projection weight `W (k×n)`, stored **transposed** (n×k) with
+    /// per-row-group scales; `x·W` and `dy·Wᵀ` run the fused
+    /// `quant::matmul_qt` / `quant::matmul_q` kernels.
+    QuantProj(Rc<QuantTensor>),
+    /// Int8 row-gather table (embeddings), natural orientation.
+    QuantRows(Rc<QuantTensor>),
+}
+
+impl FrozenValue {
+    /// Wrap a full-precision tensor.
+    pub fn dense(t: Tensor) -> FrozenValue {
+        FrozenValue::Dense(Rc::new(t))
+    }
+
+    fn as_dense(&self, name: &str) -> &Tensor {
+        match self {
+            FrozenValue::Dense(t) => t.as_ref(),
+            _ => panic!("host model: frozen {name:?} is quantized but used as dense f32"),
+        }
+    }
+
+    /// View as a projection operand (`ctx` prefixes the panic message).
+    fn as_weight(&self, ctx: &str, name: &str) -> WeightRef<'_> {
+        match self {
+            FrozenValue::Dense(t) => WeightRef::Dense(t),
+            FrozenValue::QuantProj(q) => WeightRef::Quant(q),
+            FrozenValue::QuantRows(_) => {
+                panic!("{ctx}: row-quantized {name:?} used as projection")
+            }
+        }
+    }
+
+    /// View as a gather table (`ctx` prefixes the panic message).
+    fn as_emb(&self, ctx: &str, name: &str) -> EmbRef<'_> {
+        match self {
+            FrozenValue::Dense(t) => EmbRef::Dense(t),
+            FrozenValue::QuantRows(q) => EmbRef::Quant(q),
+            FrozenValue::QuantProj(_) => {
+                panic!("{ctx}: transposed-quantized {name:?} used as gather table")
+            }
+        }
+    }
+}
+
+/// Frozen (non-trainable) inputs keyed by graph name.
+pub type FrozenMap = BTreeMap<String, FrozenValue>;
+
+/// One unpacked adapter: its named trainable tensors, shared via `Rc` by
+/// the runtime's resident-adapter cache.
+pub type AdapterSlot = Rc<BTreeMap<String, Tensor>>;
+
+/// A weight operand that may be dense f32 or an int8 projection stored
+/// transposed. The two products the model needs dispatch here, so every
+/// forward/backward path is quantization-agnostic.
+enum WeightRef<'a> {
+    Dense(&'a Tensor),
+    Quant(&'a QuantTensor),
+}
+
+impl WeightRef<'_> {
+    /// Forward product `x · W`. Named by direction (not `matmul`) on
+    /// purpose: the receiver is the *weight*, the opposite operand order
+    /// of `Tensor::matmul`, and a lookalike name would invite transposed
+    /// products at call sites.
+    fn fwd(&self, x: &Tensor) -> Tensor {
+        match self {
+            WeightRef::Dense(w) => x.matmul(w),
+            WeightRef::Quant(w) => quant::matmul_qt(x, w),
+        }
+    }
+
+    /// Backward product `dy · Wᵀ`.
+    fn bwd(&self, dy: &Tensor) -> Tensor {
+        match self {
+            WeightRef::Dense(w) => dy.matmul_t(w),
+            WeightRef::Quant(w) => quant::matmul_q(dy, w),
+        }
+    }
+}
+
+/// A row-gather table (embeddings) that may be dense or int8 with
+/// per-row-group scales.
+enum EmbRef<'a> {
+    Dense(&'a Tensor),
+    Quant(&'a QuantTensor),
+}
+
+impl EmbRef<'_> {
+    /// `out[e] = row(idx)[e]` — first table of the embedding sum.
+    #[inline]
+    fn write_row(&self, idx: usize, out: &mut [f32]) {
+        match self {
+            EmbRef::Dense(t) => out.copy_from_slice(t.row(idx)),
+            EmbRef::Quant(q) => {
+                let s = q.scale_of_row(idx);
+                for (o, &qv) in out.iter_mut().zip(q.row(idx)) {
+                    *o = s * qv as f32;
+                }
+            }
+        }
+    }
+
+    /// `out[e] += row(idx)[e]` — subsequent tables, in the serial order.
+    #[inline]
+    fn add_row(&self, idx: usize, out: &mut [f32]) {
+        match self {
+            EmbRef::Dense(t) => {
+                for (o, &v) in out.iter_mut().zip(t.row(idx)) {
+                    *o += v;
+                }
+            }
+            EmbRef::Quant(q) => {
+                let s = q.scale_of_row(idx);
+                for (o, &qv) in out.iter_mut().zip(q.row(idx)) {
+                    *o += s * qv as f32;
+                }
+            }
+        }
+    }
+}
 
 pub const NEG_INF: f32 = -1e9;
 const ADAM_B1: f32 = 0.9;
@@ -88,14 +215,37 @@ impl ParamView<'_> {
         if let Some(t) = self.train.get(name) {
             return t;
         }
-        if let Some(t) = self.frozen.get(name) {
-            return t.as_ref();
+        if let Some(v) = self.frozen.get(name) {
+            return v.as_dense(name);
         }
         panic!("host model: missing parameter {name:?}")
     }
 
     fn vec(&self, name: &str) -> &[f32] {
         &self.get(name).data
+    }
+
+    /// A matmul operand that may be dense (trainable or f32 frozen) or an
+    /// int8 projection.
+    fn weight(&self, name: &str) -> WeightRef<'_> {
+        if let Some(t) = self.train.get(name) {
+            return WeightRef::Dense(t);
+        }
+        self.frozen
+            .get(name)
+            .unwrap_or_else(|| panic!("host model: missing parameter {name:?}"))
+            .as_weight("host model", name)
+    }
+
+    /// A gather table that may be dense or row-quantized int8.
+    fn emb(&self, name: &str) -> EmbRef<'_> {
+        if let Some(t) = self.train.get(name) {
+            return EmbRef::Dense(t);
+        }
+        self.frozen
+            .get(name)
+            .unwrap_or_else(|| panic!("host model: missing parameter {name:?}"))
+            .as_emb("host model", name)
     }
 }
 
@@ -304,9 +454,9 @@ fn proj_fwd(
     pj: &str,
     x: &Tensor,
 ) -> (Tensor, ProjCache) {
-    let w0 = pv.get(&format!("layer{layer}/attn/{pj}"));
+    let w0 = pv.weight(&format!("layer{layer}/attn/{pj}"));
     let bias = pv.vec(&format!("layer{layer}/attn/b{}", &pj[1..2]));
-    let mut y = x.matmul(w0);
+    let mut y = w0.fwd(x);
     let mut cache = ProjCache { xq: None };
     if adapted(method, pj) {
         match method {
@@ -352,8 +502,8 @@ fn proj_bwd(
     train_backbone: bool,
 ) -> Tensor {
     let wname = format!("layer{layer}/attn/{pj}");
-    let w0 = pv.get(&wname);
-    let mut dx = dy.matmul_t(w0); // dy · W₀ᵀ
+    let w0 = pv.weight(&wname);
+    let mut dx = w0.bwd(dy); // dy · W₀ᵀ
     if train_backbone {
         grads.add(&wname, x.t_matmul(dy)); // xᵀ · dy
         let bname = format!("layer{layer}/attn/b{}", &pj[1..2]);
@@ -613,23 +763,22 @@ fn encode_fwd(
     attn_mask: &[f32],
 ) -> (Tensor, EncCache) {
     let (b, s, d, nh) = (p.batch, p.max_seq, p.d_model, p.n_heads);
-    let tok = pv.get("emb/tok");
-    let pos = pv.get("emb/pos");
-    let typ = pv.get("emb/type");
+    let tok = pv.emb("emb/tok");
+    let pos = pv.emb("emb/pos");
+    let typ = pv.emb("emb/type");
     let mut h = Tensor::zeros(&[b * s, d]);
-    // Embedding gather: each output row depends only on its own ids.
+    // Embedding gather: each output row depends only on its own ids (the
+    // three adds keep the serial left-to-right order, so the split can't
+    // change any value; quantized tables dequantize per gathered row).
     pool::par_rows(&mut h.data, b * s, b * s * d, |row0, chunk| {
         for (ri, out) in chunk.chunks_mut(d).enumerate() {
             let row = row0 + ri;
             let ss = row % s;
             let t = ids[row] as usize;
             let ty = type_ids[row] as usize;
-            let tr = &tok.data[t * d..(t + 1) * d];
-            let pr = &pos.data[ss * d..(ss + 1) * d];
-            let yr = &typ.data[ty * d..(ty + 1) * d];
-            for e in 0..d {
-                out[e] = tr[e] + pr[e] + yr[e];
-            }
+            tok.write_row(t, out);
+            pos.add_row(ss, out);
+            typ.add_row(ty, out);
         }
     });
     let (mut h, emb_ln) = {
@@ -658,10 +807,10 @@ fn encode_fwd(
             pv.vec(&format!("layer{l}/ln2_g")),
             pv.vec(&format!("layer{l}/ln2_b")),
         );
-        let mut f1_pre = x_ln2.matmul(pv.get(&format!("layer{l}/ffn/w1")));
+        let mut f1_pre = pv.weight(&format!("layer{l}/ffn/w1")).fwd(&x_ln2);
         add_bias_rows(&mut f1_pre, pv.vec(&format!("layer{l}/ffn/b1")));
         let (f1, gelu_t) = gelu_fwd(&f1_pre);
-        let mut f2 = f1.matmul(pv.get(&format!("layer{l}/ffn/w2")));
+        let mut f2 = pv.weight(&format!("layer{l}/ffn/w2")).fwd(&f1);
         add_bias_rows(&mut f2, pv.vec(&format!("layer{l}/ffn/b2")));
         h.add_assign(&f2);
 
@@ -704,16 +853,16 @@ fn encode_bwd(
         let c = &cache.layers[l];
         // FFN branch (residual: dh reaches both f2 and h_mid).
         let df2 = &dh;
-        let w2 = pv.get(&format!("layer{l}/ffn/w2"));
-        let df1 = df2.matmul_t(w2);
+        let w2 = pv.weight(&format!("layer{l}/ffn/w2"));
+        let df1 = w2.bwd(df2);
         if train_backbone {
             grads.add(&format!("layer{l}/ffn/w2"), c.f1.t_matmul(df2));
             let db2 = col_sum(df2);
             grads.add(&format!("layer{l}/ffn/b2"), Tensor::from_vec(&[db2.len()], db2));
         }
         let df1_pre = gelu_bwd(&df1, &c.f1_pre, &c.gelu_t);
-        let w1 = pv.get(&format!("layer{l}/ffn/w1"));
-        let dx2 = df1_pre.matmul_t(w1);
+        let w1 = pv.weight(&format!("layer{l}/ffn/w1"));
+        let dx2 = w1.bwd(&df1_pre);
         if train_backbone {
             grads.add(&format!("layer{l}/ffn/w1"), c.x_ln2.t_matmul(&df1_pre));
             let db1 = col_sum(&df1_pre);
@@ -1081,20 +1230,38 @@ pub fn eval_forward(
 /// indexed by bank slot id; only slots referenced by the batch's
 /// `row_slots` need to be populated (`None` elsewhere).
 struct MultiView<'a> {
-    slots: &'a [Option<Rc<BTreeMap<String, Tensor>>>],
+    slots: &'a [Option<AdapterSlot>],
     frozen: &'a FrozenMap,
 }
 
 impl MultiView<'_> {
-    /// Shared (frozen) parameter — backbone weights, Q/R factors, masks.
+    /// Shared (frozen) f32 parameter — Q/R factors, masks, LayerNorm,
+    /// biases.
     fn shared(&self, name: &str) -> &Tensor {
         self.frozen
             .get(name)
             .unwrap_or_else(|| panic!("host model (multi): missing frozen {name:?}"))
+            .as_dense(name)
     }
 
     fn shared_vec(&self, name: &str) -> &[f32] {
         &self.shared(name).data
+    }
+
+    /// Shared projection weight, dense or int8 (see [`WeightRef`]).
+    fn shared_weight(&self, name: &str) -> WeightRef<'_> {
+        self.frozen
+            .get(name)
+            .unwrap_or_else(|| panic!("host model (multi): missing frozen {name:?}"))
+            .as_weight("host model (multi)", name)
+    }
+
+    /// Shared gather table, dense or int8 (see [`EmbRef`]).
+    fn shared_emb(&self, name: &str) -> EmbRef<'_> {
+        self.frozen
+            .get(name)
+            .unwrap_or_else(|| panic!("host model (multi): missing frozen {name:?}"))
+            .as_emb("host model (multi)", name)
     }
 
     /// Per-adapter trainable parameter of slot `t` (must be populated).
@@ -1137,9 +1304,9 @@ fn proj_fwd_multi(
     row_slots: &[usize],
     s: usize,
 ) -> Tensor {
-    let w0 = mv.shared(&format!("layer{layer}/attn/{pj}"));
+    let w0 = mv.shared_weight(&format!("layer{layer}/attn/{pj}"));
     let bias = mv.shared_vec(&format!("layer{layer}/attn/b{}", &pj[1..2]));
-    let mut y = x.matmul(w0);
+    let mut y = w0.fwd(x);
     if adapted(method, pj) {
         match method {
             MethodKind::QrLora => {
@@ -1213,9 +1380,9 @@ fn encode_fwd_multi(
     attn_mask: &[f32],
 ) -> Tensor {
     let (b, s, d, nh) = (p.batch, p.max_seq, p.d_model, p.n_heads);
-    let tok = mv.shared("emb/tok");
-    let pos = mv.shared("emb/pos");
-    let typ = mv.shared("emb/type");
+    let tok = mv.shared_emb("emb/tok");
+    let pos = mv.shared_emb("emb/pos");
+    let typ = mv.shared_emb("emb/type");
     let mut h = Tensor::zeros(&[b * s, d]);
     pool::par_rows(&mut h.data, b * s, b * s * d, |row0, chunk| {
         for (ri, out) in chunk.chunks_mut(d).enumerate() {
@@ -1223,12 +1390,9 @@ fn encode_fwd_multi(
             let ss = row % s;
             let t = ids[row] as usize;
             let ty = type_ids[row] as usize;
-            let tr = &tok.data[t * d..(t + 1) * d];
-            let pr = &pos.data[ss * d..(ss + 1) * d];
-            let yr = &typ.data[ty * d..(ty + 1) * d];
-            for e in 0..d {
-                out[e] = tr[e] + pr[e] + yr[e];
-            }
+            tok.write_row(t, out);
+            pos.add_row(ss, out);
+            typ.add_row(ty, out);
         }
     });
     let (mut h, _) = ln_fwd(&h, mv.shared_vec("emb/ln_g"), mv.shared_vec("emb/ln_b"));
@@ -1253,10 +1417,10 @@ fn encode_fwd_multi(
             mv.shared_vec(&format!("layer{l}/ln2_g")),
             mv.shared_vec(&format!("layer{l}/ln2_b")),
         );
-        let mut f1_pre = x_ln2.matmul(mv.shared(&format!("layer{l}/ffn/w1")));
+        let mut f1_pre = mv.shared_weight(&format!("layer{l}/ffn/w1")).fwd(&x_ln2);
         add_bias_rows(&mut f1_pre, mv.shared_vec(&format!("layer{l}/ffn/b1")));
         let (f1, _) = gelu_fwd(&f1_pre);
-        let mut f2 = f1.matmul(mv.shared(&format!("layer{l}/ffn/w2")));
+        let mut f2 = mv.shared_weight(&format!("layer{l}/ffn/w2")).fwd(&f1);
         add_bias_rows(&mut f2, mv.shared_vec(&format!("layer{l}/ffn/b2")));
         h.add_assign(&f2);
     }
@@ -1324,7 +1488,7 @@ pub fn eval_forward_multi(
     p: &Preset,
     method: MethodKind,
     head: HeadKind,
-    slots: &[Option<Rc<BTreeMap<String, Tensor>>>],
+    slots: &[Option<AdapterSlot>],
     class_masks: &[&[f32]],
     row_slots: &[usize],
     frozen: &FrozenMap,
@@ -1459,7 +1623,7 @@ mod tests {
             } else {
                 (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
             };
-            frozen.insert(t.name.clone(), std::rc::Rc::new(Tensor::from_vec(&t.shape, data)));
+            frozen.insert(t.name.clone(), FrozenValue::dense(Tensor::from_vec(&t.shape, data)));
         }
 
         let bs = p.batch * p.max_seq;
@@ -1483,7 +1647,8 @@ mod tests {
         let train = unpack_train(&state, &layout);
         let pv = ParamView { train: &train, frozen: &frozen };
         let (h, cache) = encode_fwd(&pv, &p, MethodKind::QrLora, &ids, &type_ids, &attn_mask);
-        let (logits, pooled, cls) = head_fwd(&pv, HeadKind::Cls, &h, p.batch, p.max_seq, &class_mask);
+        let (logits, pooled, cls) =
+            head_fwd(&pv, HeadKind::Cls, &h, p.batch, p.max_seq, &class_mask);
         let (loss0, dlogits) = task_loss_bwd(HeadKind::Cls, &logits, &batch);
         let mut grads = Grads::default();
         let dh = head_bwd(&pv, &mut grads, &dlogits, &pooled, &cls, p.batch, p.max_seq, p.d_model);
@@ -1504,7 +1669,8 @@ mod tests {
                 let train = unpack_train(st, &layout);
                 let pv = ParamView { train: &train, frozen: &frozen };
                 let (h, _) = encode_fwd(&pv, &p, MethodKind::QrLora, &ids, &type_ids, &attn_mask);
-                let (logits, _, _) = head_fwd(&pv, HeadKind::Cls, &h, p.batch, p.max_seq, &class_mask);
+                let (logits, _, _) =
+                    head_fwd(&pv, HeadKind::Cls, &h, p.batch, p.max_seq, &class_mask);
                 task_loss_bwd(HeadKind::Cls, &logits, &batch).0
             };
             let fd = (loss_at(&splus) - loss_at(&sminus)) / (2.0 * eps);
@@ -1573,7 +1739,7 @@ mod tests {
             } else {
                 (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
             };
-            frozen.insert(t.name.clone(), std::rc::Rc::new(Tensor::from_vec(&t.shape, data)));
+            frozen.insert(t.name.clone(), FrozenValue::dense(Tensor::from_vec(&t.shape, data)));
         }
         let bs = p.batch * p.max_seq;
         let ids: Vec<i32> = (0..bs).map(|i| ((i * 3 + 1) % p.vocab) as i32).collect();

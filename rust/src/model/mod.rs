@@ -20,7 +20,8 @@ use crate::util::rng::Rng;
 fn init_leaf(name: &str, shape: &[usize], rng: &mut Rng, out: &mut [f32]) {
     let last = name.rsplit('/').next().unwrap_or(name);
     let is_gain = last.ends_with("_g") || last == "ln_g";
-    let is_bias = last.starts_with('b') && shape.len() == 1 || last.ends_with("_b") || last == "bias";
+    let is_bias =
+        last.starts_with('b') && shape.len() == 1 || last.ends_with("_b") || last == "bias";
     let is_emb = name.starts_with("emb/") && shape.len() == 2;
     let is_lam = last == "lam";
     let is_lora_b = name.starts_with("lora/") && last == "B";

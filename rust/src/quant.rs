@@ -1,0 +1,329 @@
+//! Int8 quantization of the frozen backbone (host serving path).
+//!
+//! QR-LoRA keeps the pretrained backbone strictly read-only — adaptation
+//! lives in the tiny λ coefficient vector over the frozen QR basis — so
+//! the backbone weights are pure read-only operands and can be held in
+//! int8 with no effect on what trains. This module provides:
+//!
+//! * [`QuantTensor`] — symmetric absmax int8 quantization with one f32
+//!   scale per **row group** ([`QUANT_GROUP_ROWS`] rows share a scale), so
+//!   an outlier row can only perturb its own group;
+//! * fused dequant-on-the-fly kernels ([`matmul_qt`], [`matmul_q`]) that
+//!   mirror `Tensor::matmul_t` / the saxpy contraction, row-parallel over
+//!   the worker pool with the same bit-identical-for-any-thread-count
+//!   guarantee (per-output-element evaluation order never depends on the
+//!   partition);
+//! * the [`plan`] that decides which frozen inputs quantize (embedding
+//!   tables and attention/FFN projection matrices) and in which
+//!   orientation. QR factors, λ, masks, LoRA A/B, task heads, LayerNorm
+//!   parameters, biases, and every gradient stay f32.
+//!
+//! # Accuracy contract
+//!
+//! Per-group error is bounded by `absmax(group) / 254` per element
+//! (symmetric absmax, round-to-nearest — enforced by
+//! `rust/tests/quant.rs`). End to end, adapters *train against* the
+//! quantized backbone, so the documented contract is on eval metrics: the
+//! quantized path's eval metric must stay within
+//! [`METRIC_DELTA_BOUND`] of the f32 path for both adapter methods
+//! (enforced by `rust/tests/quant.rs::eval_metric_parity_quant_vs_f32`).
+//!
+//! Enable with `--quantize-backbone` (CLI) or `QRLORA_QUANT=1`; see the
+//! README's perf-knobs section and `ARCHITECTURE.md` ("Quantized frozen
+//! cache").
+
+use crate::tensor::Tensor;
+use crate::util::pool;
+
+/// Rows per shared scale (the "row group"). Four rows per f32 scale keeps
+/// the resident footprint at ≥3.75x below f32 even for narrow matrices
+/// while an outlier row can only perturb three neighbors.
+pub const QUANT_GROUP_ROWS: usize = 4;
+
+/// Documented eval-metric accuracy contract of the quantized backbone:
+/// the absolute delta of any eval metric (accuracy / F1 / Pearson) vs the
+/// f32 path, when the adapter was trained against its own backbone
+/// representation. Enforced by `rust/tests/quant.rs`.
+pub const METRIC_DELTA_BOUND: f64 = 0.1;
+
+/// How a frozen input participates in quantization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantPlan {
+    /// Stays f32 (QR factors, masks, LoRA scales, LayerNorm, biases).
+    Keep,
+    /// Row-gather table (embeddings): quantized in natural orientation so
+    /// a gather dequantizes one contiguous row.
+    Rows,
+    /// Projection matrix `W (k×n)`: quantized **transposed** (n×k) so the
+    /// forward `x·W` dots contiguous rows (per-output-channel scales) and
+    /// the backward `dy·Wᵀ` streams the same rows as axpys.
+    Transposed,
+}
+
+/// Which frozen inputs quantize, and how. Only 2-D backbone weights
+/// qualify; adapter factors and every 1-D parameter stay f32.
+pub fn plan(name: &str, shape: &[usize]) -> QuantPlan {
+    if shape.len() != 2 {
+        return QuantPlan::Keep;
+    }
+    match name {
+        "emb/tok" | "emb/pos" | "emb/type" => QuantPlan::Rows,
+        _ if name.contains("/attn/w") || name.contains("/ffn/w") => QuantPlan::Transposed,
+        _ => QuantPlan::Keep,
+    }
+}
+
+/// `QRLORA_QUANT` env knob (set by the CLI's `--quantize-backbone`).
+/// Case-insensitive: `0`/`false`/`off`/`no`/empty disable, anything else
+/// enables.
+pub fn quant_backbone_from_env() -> bool {
+    match std::env::var("QRLORA_QUANT") {
+        Ok(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "" | "0" | "false" | "off" | "no"
+        ),
+        Err(_) => false,
+    }
+}
+
+/// Row-major int8 matrix with one f32 scale per group of
+/// [`QUANT_GROUP_ROWS`] rows (symmetric absmax: `w ≈ scale · q`,
+/// `q ∈ [-127, 127]`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantTensor {
+    /// Dimension sizes of the stored matrix (rank 2).
+    pub shape: Vec<usize>,
+    /// Row-major int8 values.
+    pub q: Vec<i8>,
+    /// One scale per row group, `ceil(rows / group_rows)` of them.
+    pub scales: Vec<f32>,
+    /// Rows sharing one scale.
+    pub group_rows: usize,
+}
+
+impl QuantTensor {
+    /// Quantize a rank-2 tensor with per-row-group symmetric absmax
+    /// scales. An all-zero group gets scale 1.0 (its values are exactly 0).
+    pub fn quantize(src: &Tensor, group_rows: usize) -> QuantTensor {
+        let (r, c) = (src.rows(), src.cols());
+        let g = group_rows.max(1);
+        let n_groups = r.div_ceil(g);
+        let mut scales = vec![0f32; n_groups];
+        let mut q = vec![0i8; r * c];
+        for (gi, scale_out) in scales.iter_mut().enumerate() {
+            let lo = gi * g * c;
+            let hi = ((gi * g + g) * c).min(r * c);
+            let mut absmax = 0f32;
+            for v in &src.data[lo..hi] {
+                absmax = absmax.max(v.abs());
+            }
+            let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+            *scale_out = scale;
+            let inv = 1.0 / scale;
+            for (dst, &v) in q[lo..hi].iter_mut().zip(&src.data[lo..hi]) {
+                *dst = (v * inv).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantTensor { shape: src.shape.clone(), q, scales, group_rows: g }
+    }
+
+    /// Number of rows of the stored matrix.
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    /// Number of columns of the stored matrix.
+    pub fn cols(&self) -> usize {
+        self.shape[1]
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Int8 row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i8] {
+        let c = self.shape[1];
+        &self.q[i * c..(i + 1) * c]
+    }
+
+    /// Scale of row `i` (its group's scale).
+    #[inline]
+    pub fn scale_of_row(&self, i: usize) -> f32 {
+        self.scales[i / self.group_rows]
+    }
+
+    /// Full-precision reconstruction `scale · q` (tests, debugging).
+    pub fn dequantize(&self) -> Tensor {
+        let (r, c) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&self.shape);
+        for i in 0..r {
+            let s = self.scale_of_row(i);
+            let qr = self.row(i);
+            for (o, &qv) in out.data[i * c..(i + 1) * c].iter_mut().zip(qr) {
+                *o = s * qv as f32;
+            }
+        }
+        out
+    }
+
+    /// Resident footprint in bytes (int8 values + f32 scales).
+    pub fn resident_bytes(&self) -> usize {
+        self.q.len() + self.scales.len() * 4
+    }
+
+    /// What the same matrix costs in f32.
+    pub fn f32_bytes(&self) -> usize {
+        self.q.len() * 4
+    }
+}
+
+/// Unrolled f32×i8 dot product (four independent accumulators, like
+/// `tensor::dot`); the i8→f32 convert happens in-register, the scale is
+/// applied once by the caller after the reduction.
+#[inline]
+fn dot_i8(a: &[f32], b: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = [0f32; 4];
+    for ci in 0..chunks {
+        let i = ci * 4;
+        acc[0] += a[i] * b[i] as f32;
+        acc[1] += a[i + 1] * b[i + 1] as f32;
+        acc[2] += a[i + 2] * b[i + 2] as f32;
+        acc[3] += a[i + 3] * b[i + 3] as f32;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..n {
+        s += a[i] * b[i] as f32;
+    }
+    s
+}
+
+/// Fused `x (m×k) @ Wᵀ-storedᵀ`: `w` holds a weight in transposed int8
+/// form (n×k), so this computes the forward product `x·W → (m×n)` with
+/// `out[i,j] = scale(j) · Σ_e x[i,e]·q[j,e]` — dequantization is one
+/// multiply per output element, after the reduction.
+///
+/// Row-parallel over output rows with the same column blocking as
+/// `Tensor::matmul_t`; every output element is one [`dot_i8`] of the same
+/// two slices regardless of the partition, so results are bit-identical
+/// for any thread count.
+pub fn matmul_qt(x: &Tensor, w: &QuantTensor) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    let (n, k2) = (w.rows(), w.cols());
+    assert_eq!(k, k2, "matmul_qt shape mismatch: {:?} @ t{:?}", x.shape, w.shape);
+    let mut out = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let work = m.saturating_mul(n).saturating_mul(k.max(1));
+    pool::par_rows(&mut out.data, m, work, |row0, chunk| {
+        const BLOCK_N: usize = 64;
+        for j0 in (0..n).step_by(BLOCK_N) {
+            let j1 = (j0 + BLOCK_N).min(n);
+            for (ii, orow) in chunk.chunks_mut(n).enumerate() {
+                let xrow = x.row(row0 + ii);
+                for j in j0..j1 {
+                    orow[j] = w.scale_of_row(j) * dot_i8(xrow, w.row(j));
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Fused `x (m×n) @ W-stored (n×k)`: with `w` holding a weight `W (k×n)`
+/// in transposed int8 form, this is the backward product `dy·Wᵀ → (m×k)`
+/// computed as a sum of scaled int8 row axpys:
+/// `out[i,:] += (x[i,j]·scale(j)) · q[j,:]`.
+///
+/// Row-parallel over output rows; each row accumulates over `j` in the
+/// serial order, so results are bit-identical for any thread count. The
+/// `c == 0.0` skip mirrors `Tensor::t_matmul`'s (gradient rows zeroed by
+/// masking skip the whole axpy).
+pub fn matmul_q(x: &Tensor, w: &QuantTensor) -> Tensor {
+    let (m, n) = (x.rows(), x.cols());
+    let (n2, k) = (w.rows(), w.cols());
+    assert_eq!(n, n2, "matmul_q shape mismatch: {:?} @ {:?}", x.shape, w.shape);
+    let mut out = Tensor::zeros(&[m, k]);
+    if m == 0 || k == 0 {
+        return out;
+    }
+    let work = m.saturating_mul(n).saturating_mul(k.max(1));
+    pool::par_rows(&mut out.data, m, work, |row0, chunk| {
+        for (ii, orow) in chunk.chunks_mut(k).enumerate() {
+            let xrow = x.row(row0 + ii);
+            for j in 0..n {
+                let c = xrow[j] * w.scale_of_row(j);
+                if c == 0.0 {
+                    continue;
+                }
+                for (o, &qv) in orow.iter_mut().zip(w.row(j)) {
+                    *o += c * qv as f32;
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantize_shapes_and_group_count() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[10, 6], &mut rng, 1.0);
+        let q = QuantTensor::quantize(&t, 4);
+        assert_eq!(q.shape, vec![10, 6]);
+        assert_eq!(q.q.len(), 60);
+        assert_eq!(q.scales.len(), 3); // ceil(10/4)
+        assert_eq!(q.resident_bytes(), 60 + 12);
+        assert_eq!(q.f32_bytes(), 240);
+    }
+
+    #[test]
+    fn zero_group_roundtrips_exactly() {
+        let t = Tensor::zeros(&[4, 8]);
+        let q = QuantTensor::quantize(&t, 2);
+        assert!(q.dequantize().max_abs_diff(&t) == 0.0);
+    }
+
+    #[test]
+    fn plan_selects_backbone_weights_only() {
+        assert_eq!(plan("emb/tok", &[512, 64]), QuantPlan::Rows);
+        assert_eq!(plan("emb/pos", &[32, 64]), QuantPlan::Rows);
+        assert_eq!(plan("layer0/attn/wq", &[64, 64]), QuantPlan::Transposed);
+        assert_eq!(plan("layer1/ffn/w2", &[256, 64]), QuantPlan::Transposed);
+        // Adapter factors, masks, and 1-D parameters stay f32.
+        assert_eq!(plan("qr/layer0/wq/Q", &[64, 32]), QuantPlan::Keep);
+        assert_eq!(plan("qr/layer0/wq/R", &[32, 64]), QuantPlan::Keep);
+        assert_eq!(plan("qr/layer0/wq/mask", &[32]), QuantPlan::Keep);
+        assert_eq!(plan("lora/layer0/wq/scale", &[2]), QuantPlan::Keep);
+        assert_eq!(plan("emb/ln_g", &[64]), QuantPlan::Keep);
+        assert_eq!(plan("layer0/attn/bq", &[64]), QuantPlan::Keep);
+    }
+
+    #[test]
+    fn dequant_error_within_absmax_over_254() {
+        let mut rng = Rng::new(2);
+        for g in [1usize, 4] {
+            let t = Tensor::randn(&[12, 16], &mut rng, 2.0);
+            let q = QuantTensor::quantize(&t, g);
+            let back = q.dequantize();
+            for i in 0..t.rows() {
+                let bound = q.scale_of_row(i) * 0.5 + 1e-6;
+                for j in 0..t.cols() {
+                    let err = (t.at(i, j) - back.at(i, j)).abs();
+                    assert!(err <= bound, "g={g} ({i},{j}): err {err} > {bound}");
+                }
+            }
+        }
+    }
+}

@@ -45,7 +45,10 @@ impl HostTensor {
 
     /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        match self {
+            HostTensor::F32(v) => v.is_empty(),
+            HostTensor::I32(v) => v.is_empty(),
+        }
     }
 
     /// Borrow as f32 data (errors on an i32 tensor).
@@ -219,6 +222,31 @@ pub fn execute_batched_grouped<B: Backend + ?Sized>(
     Ok(vec![bk.upload_f32(&merged, &out_spec.shape)?])
 }
 
+/// Resident footprint of a backend's converted frozen inputs, split into
+/// the quantizable backbone weights (embeddings + attention/FFN
+/// projections — see `quant::plan`) and everything else (QR factors,
+/// masks, LayerNorm, biases), which always stays f32.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FrozenResidency {
+    /// What the backbone weights would cost in f32.
+    pub backbone_f32_bytes: usize,
+    /// What they actually cost as resident (int8 values + scales when
+    /// quantized, f32 otherwise).
+    pub backbone_resident_bytes: usize,
+    /// Non-quantizable frozen bytes (always f32).
+    pub other_bytes: usize,
+}
+
+impl FrozenResidency {
+    /// Backbone-weight memory reduction vs f32 (1.0 when unquantized).
+    pub fn reduction(&self) -> f64 {
+        if self.backbone_resident_bytes == 0 {
+            return 1.0;
+        }
+        self.backbone_f32_bytes as f64 / self.backbone_resident_bytes as f64
+    }
+}
+
 /// The execution-backend contract: load/upload/execute/download over the
 /// shared `Manifest`/`ArtifactSpec` protocol.
 pub trait Backend {
@@ -279,6 +307,13 @@ pub trait Backend {
     ) -> anyhow::Result<Vec<Buffer>> {
         execute_batched_grouped(self, exe, args, adapters)
     }
+
+    /// Resident footprint of the backend's converted frozen inputs, when
+    /// the backend tracks one (the host backend's frozen cache does; see
+    /// [`FrozenResidency`]). `None` for backends without such a cache.
+    fn frozen_residency(&self) -> Option<FrozenResidency> {
+        None
+    }
 }
 
 /// Which backend the user asked for.
@@ -310,21 +345,33 @@ impl BackendChoice {
 }
 
 /// Instantiate a backend. `artifacts_dir` is only consulted by the PJRT
-/// path (and by `Auto` to decide whether PJRT is viable).
+/// path (and by `Auto` to decide whether PJRT is viable). The
+/// `QRLORA_QUANT` env knob (CLI `--quantize-backbone`) turns on the
+/// int8-quantized frozen backbone on the host backend; the PJRT path
+/// executes fixed AOT graphs, so the knob is warned about and ignored
+/// there.
 pub fn create_backend(
     choice: BackendChoice,
     artifacts_dir: &Path,
 ) -> anyhow::Result<Box<dyn Backend>> {
+    let quant = crate::quant::quant_backbone_from_env();
+    let host = || Box::new(super::HostBackend::with_quant(quant)) as Box<dyn Backend>;
+    let warn_quant_pjrt = || {
+        if quant {
+            crate::warnln!("--quantize-backbone is host-only; the pjrt backend ignores it");
+        }
+    };
     match choice {
-        BackendChoice::Host => Ok(Box::new(super::HostBackend::new())),
+        BackendChoice::Host => Ok(host()),
         BackendChoice::Pjrt => {
             #[cfg(feature = "pjrt")]
             {
+                warn_quant_pjrt();
                 Ok(Box::new(super::PjrtBackend::new(artifacts_dir)?))
             }
             #[cfg(not(feature = "pjrt"))]
             {
-                let _ = artifacts_dir;
+                let _ = (artifacts_dir, warn_quant_pjrt);
                 anyhow::bail!(
                     "backend \"pjrt\" requested but this binary was built without the \
                      `pjrt` cargo feature; rebuild with `--features pjrt` or use \
@@ -336,7 +383,10 @@ pub fn create_backend(
             #[cfg(feature = "pjrt")]
             if artifacts_dir.join("manifest.json").exists() {
                 match super::PjrtBackend::new(artifacts_dir) {
-                    Ok(bk) => return Ok(Box::new(bk)),
+                    Ok(bk) => {
+                        warn_quant_pjrt();
+                        return Ok(Box::new(bk));
+                    }
                     Err(e) => {
                         crate::warnln!(
                             "pjrt backend unavailable ({e:#}); falling back to host backend"
@@ -344,8 +394,8 @@ pub fn create_backend(
                     }
                 }
             }
-            let _ = artifacts_dir;
-            Ok(Box::new(super::HostBackend::new()))
+            let _ = (artifacts_dir, warn_quant_pjrt);
+            Ok(host())
         }
     }
 }

@@ -10,7 +10,10 @@
 //!
 //! * the **frozen-tensor cache** ([`FrozenCache`]) memoizes the
 //!   buffer→`Tensor` conversion of every frozen input (backbone + QR
-//!   factors), shared by all of a session's executables;
+//!   factors), shared by all of a session's executables — and, on a
+//!   backend created with `--quantize-backbone`, holds the backbone
+//!   weights int8-quantized (see `crate::quant`), so quantization also
+//!   happens once per distinct buffer;
 //! * the **resident-adapter cache** ([`AdapterCache`]) memoizes the flat
 //!   state→named-trainables unpack of every adapter the serving bank keeps
 //!   resident, so mixed-batch inference re-slices nothing per call.
@@ -23,11 +26,13 @@ use std::rc::Rc;
 
 use crate::data::HeadKind;
 use crate::model::host as hostmodel;
-use crate::model::host::MethodKind;
+use crate::model::host::{FrozenValue, MethodKind};
+use crate::quant::{self, QuantPlan, QuantTensor};
 use crate::tensor::Tensor;
 
 use super::backend::{
     execute_batched_grouped, Backend, BatchedAdapters, Buffer, Executable, ExecutableImpl,
+    FrozenResidency,
 };
 use super::manifest::{ArtifactSpec, DType, Manifest, Preset, Role};
 
@@ -51,16 +56,24 @@ pub struct HostProgram {
 
 /// Frozen-input conversion cache, held by the backend (one per
 /// [`HostBackend`]) so every executable of a session — train step, eval
-/// forward, metrics — shares a single `Rc<Tensor>` copy of each frozen
+/// forward, metrics — shares a single converted copy of each frozen
 /// buffer instead of one per program. Keyed by input name, so the entry
 /// count stays bounded by the number of distinct frozen inputs.
+///
+/// When the backend was created with `quantize = true`, backbone weights
+/// (per `quant::plan`) are converted to int8 [`QuantTensor`]s here —
+/// **once per distinct buffer** — and the quantized form is what every
+/// train/eval/serve step reads. Invalidation keys are unchanged (input
+/// name + buffer pointer + length + content fingerprint of the *f32
+/// source*); the quantization mode is fixed per backend, so it never
+/// participates in the key.
 pub(crate) type FrozenCache = RefCell<HashMap<String, FrozenEntry>>;
 
 pub(crate) struct FrozenEntry {
     ptr: usize,
     len: usize,
     fp: u64,
-    tensor: Rc<Tensor>,
+    value: FrozenValue,
 }
 
 /// Resident-adapter unpack cache: flat state vector → named trainable
@@ -82,7 +95,7 @@ pub(crate) struct AdapterEntry {
     key: String,
     len: usize,
     fp: u64,
-    train: Rc<BTreeMap<String, Tensor>>,
+    train: hostmodel::AdapterSlot,
 }
 
 /// Identity fingerprint for cache invalidation. Buffers at or below
@@ -223,14 +236,17 @@ fn index_args<'a>(spec: &'a ArtifactSpec, args: &[&'a Buffer]) -> anyhow::Result
     Ok(by_name)
 }
 
-/// Materialize the frozen inputs as (cached) tensors. Frozen inputs are
-/// converted at most once per distinct buffer: the backend-level cache
-/// re-serves the conversion until the buffer's identity/fingerprint
-/// changes, so steady-state steps stop copying the backbone.
+/// Materialize the frozen inputs as (cached) tensors — int8-quantized for
+/// backbone weights when `quantize` is set. Frozen inputs are converted
+/// (and quantized) at most once per distinct buffer: the backend-level
+/// cache re-serves the conversion until the buffer's identity/fingerprint
+/// changes, so steady-state steps stop copying (and re-quantizing) the
+/// backbone.
 fn materialize_frozen(
     spec: &ArtifactSpec,
     by_name: &ArgMap,
     frozen_cache: &FrozenCache,
+    quantize: bool,
 ) -> anyhow::Result<hostmodel::FrozenMap> {
     let mut frozen: hostmodel::FrozenMap = BTreeMap::new();
     let mut cache = frozen_cache.borrow_mut();
@@ -242,17 +258,27 @@ fn materialize_frozen(
             cache.get(&t.name),
             Some(e) if e.ptr == ptr && e.len == data.len() && e.fp == fp
         );
-        let tensor = if hit {
-            cache.get(&t.name).unwrap().tensor.clone()
+        let value = if hit {
+            cache.get(&t.name).unwrap().value.clone()
         } else {
-            let tn = Rc::new(Tensor::from_vec(&t.shape, data.to_vec()));
-            cache.insert(
-                t.name.clone(),
-                FrozenEntry { ptr, len: data.len(), fp, tensor: tn.clone() },
-            );
-            tn
+            let tensor = Tensor::from_vec(&t.shape, data.to_vec());
+            let plan = if quantize { quant::plan(&t.name, &t.shape) } else { QuantPlan::Keep };
+            let v = match plan {
+                QuantPlan::Keep => FrozenValue::Dense(Rc::new(tensor)),
+                QuantPlan::Rows => FrozenValue::QuantRows(Rc::new(QuantTensor::quantize(
+                    &tensor,
+                    quant::QUANT_GROUP_ROWS,
+                ))),
+                QuantPlan::Transposed => FrozenValue::QuantProj(Rc::new(QuantTensor::quantize(
+                    &tensor.t(),
+                    quant::QUANT_GROUP_ROWS,
+                ))),
+            };
+            let entry = FrozenEntry { ptr, len: data.len(), fp, value: v.clone() };
+            cache.insert(t.name.clone(), entry);
+            v
         };
-        frozen.insert(t.name.clone(), tensor);
+        frozen.insert(t.name.clone(), value);
     }
     Ok(frozen)
 }
@@ -266,10 +292,10 @@ fn unpack_adapters(
     states: &[&Buffer],
     row_slots: &[usize],
     cache: &AdapterCache,
-) -> anyhow::Result<Vec<Option<Rc<BTreeMap<String, Tensor>>>>> {
+) -> anyhow::Result<Vec<Option<hostmodel::AdapterSlot>>> {
     let layout = spec.layout()?;
     let mut cache = cache.borrow_mut();
-    let mut out: Vec<Option<Rc<BTreeMap<String, Tensor>>>> = vec![None; states.len()];
+    let mut out: Vec<Option<hostmodel::AdapterSlot>> = vec![None; states.len()];
     for slot in hostmodel::distinct_slots(row_slots) {
         let data = states[slot].as_f32()?;
         anyhow::ensure!(
@@ -327,12 +353,14 @@ impl HostProgram {
     }
 
     /// Execute against host buffers; returns outputs in manifest order.
-    /// `frozen_cache` is the owning backend's shared frozen-input cache.
+    /// `frozen_cache` is the owning backend's shared frozen-input cache;
+    /// `quantize` its backbone-quantization mode (fixed per backend).
     pub fn execute(
         &self,
         spec: &ArtifactSpec,
         args: &[&Buffer],
         frozen_cache: &FrozenCache,
+        quantize: bool,
     ) -> anyhow::Result<Vec<Buffer>> {
         let by_name = index_args(spec, args)?;
         let f32s = |name: &str| get_f32(&by_name, &spec.key, name);
@@ -386,7 +414,7 @@ impl HostProgram {
             ProgKind::TrainStep { method, head } | ProgKind::EvalFwd { method, head } => {
                 let layout = spec.layout()?;
                 let state = f32s("state")?;
-                let frozen = materialize_frozen(spec, &by_name, frozen_cache)?;
+                let frozen = materialize_frozen(spec, &by_name, frozen_cache, quantize)?;
                 let (labels_i32, labels_f32): (&[i32], &[f32]) = match head {
                     HeadKind::Cls => (i32s("batch/labels")?, &[]),
                     HeadKind::Reg => (&[], f32s("batch/labels")?),
@@ -442,6 +470,7 @@ impl HostProgram {
         adapters: &BatchedAdapters<'_>,
         frozen_cache: &FrozenCache,
         adapter_cache: &AdapterCache,
+        quantize: bool,
     ) -> anyhow::Result<Vec<Buffer>> {
         let ProgKind::EvalFwd { method, head } = &self.kind else {
             anyhow::bail!("{}: batched execution only supports eval_fwd programs", spec.key);
@@ -460,7 +489,7 @@ impl HostProgram {
             self.preset.batch
         );
         let by_name = index_args(spec, args)?;
-        let frozen = materialize_frozen(spec, &by_name, frozen_cache)?;
+        let frozen = materialize_frozen(spec, &by_name, frozen_cache, quantize)?;
         let slots = unpack_adapters(spec, adapters.states, adapters.row_slots, adapter_cache)?;
 
         let mask_len = spec
@@ -522,17 +551,37 @@ pub struct HostBackend {
     /// Resident-adapter unpack cache (see [`AdapterCache`]) for the
     /// batched serving path.
     adapter_cache: AdapterCache,
+    /// Whether the frozen cache holds backbone weights as int8
+    /// [`QuantTensor`]s (`--quantize-backbone` / `QRLORA_QUANT`). Fixed
+    /// for the backend's lifetime, so it is not part of any cache key.
+    quant: bool,
 }
 
 impl HostBackend {
     /// Create a backend over the built-in manifest with empty caches.
     pub fn new() -> HostBackend {
+        HostBackend::with_quant(false)
+    }
+
+    /// Like [`HostBackend::new`] but with the frozen backbone held int8.
+    pub fn new_quantized() -> HostBackend {
+        HostBackend::with_quant(true)
+    }
+
+    /// Create a backend with an explicit backbone-quantization mode.
+    pub fn with_quant(quant: bool) -> HostBackend {
         HostBackend {
             manifest: Manifest::builtin(),
             cache: RefCell::new(HashMap::new()),
             frozen_cache: RefCell::new(HashMap::new()),
             adapter_cache: RefCell::new(HashMap::new()),
+            quant,
         }
+    }
+
+    /// True when the frozen backbone is held int8.
+    pub fn quantized(&self) -> bool {
+        self.quant
     }
 }
 
@@ -564,7 +613,9 @@ impl Backend for HostBackend {
 
     fn execute(&self, exe: &Executable, args: &[&Buffer]) -> anyhow::Result<Vec<Buffer>> {
         match &exe.imp {
-            ExecutableImpl::Host(prog) => prog.execute(&exe.spec, args, &self.frozen_cache),
+            ExecutableImpl::Host(prog) => {
+                prog.execute(&exe.spec, args, &self.frozen_cache, self.quant)
+            }
             #[cfg(feature = "pjrt")]
             ExecutableImpl::Pjrt(_) => {
                 anyhow::bail!("{}: PJRT executable handed to host backend", exe.spec.key)
@@ -596,9 +647,37 @@ impl Backend for HostBackend {
                 adapters,
                 &self.frozen_cache,
                 &self.adapter_cache,
+                self.quant,
             ),
             _ => execute_batched_grouped(self, exe, args, adapters),
         }
+    }
+
+    /// Footprint of the converted frozen inputs currently cached, split
+    /// into backbone weights (quantizable per `quant::plan`) and the f32
+    /// remainder. With quantization on, the backbone portion reports the
+    /// int8-values-plus-scales residency against its f32 equivalent.
+    fn frozen_residency(&self) -> Option<FrozenResidency> {
+        let cache = self.frozen_cache.borrow();
+        let mut r = FrozenResidency::default();
+        for (name, e) in cache.iter() {
+            match &e.value {
+                FrozenValue::Dense(t) => {
+                    let bytes = t.numel() * 4;
+                    if quant::plan(name, &t.shape) == QuantPlan::Keep {
+                        r.other_bytes += bytes;
+                    } else {
+                        r.backbone_f32_bytes += bytes;
+                        r.backbone_resident_bytes += bytes;
+                    }
+                }
+                FrozenValue::QuantProj(q) | FrozenValue::QuantRows(q) => {
+                    r.backbone_f32_bytes += q.f32_bytes();
+                    r.backbone_resident_bytes += q.resident_bytes();
+                }
+            }
+        }
+        Some(r)
     }
 
     fn upload_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<Buffer> {

@@ -321,9 +321,9 @@ impl Manifest {
     }
 
     pub fn artifact(&self, key: &str) -> anyhow::Result<&ArtifactSpec> {
-        self.artifacts
-            .get(key)
-            .ok_or_else(|| anyhow::anyhow!("artifact {key:?} not in manifest (run `make artifacts`)"))
+        self.artifacts.get(key).ok_or_else(|| {
+            anyhow::anyhow!("artifact {key:?} not in manifest (run `make artifacts`)")
+        })
     }
 
     pub fn preset(&self, name: &str) -> anyhow::Result<&Preset> {

@@ -25,7 +25,7 @@ mod store;
 
 pub use backend::{
     create_backend, execute_batched_grouped, Backend, BackendChoice, BatchedAdapters, Buffer,
-    Executable, HostTensor,
+    Executable, FrozenResidency, HostTensor,
 };
 pub use host::HostBackend;
 pub use manifest::{

@@ -12,7 +12,9 @@
 
 use std::collections::BTreeMap;
 
-use super::manifest::{ArtifactSpec, DType, Manifest, Preset, Role, StateField, StateLayout, TensorSpec};
+use super::manifest::{
+    ArtifactSpec, DType, Manifest, Preset, Role, StateField, StateLayout, TensorSpec,
+};
 
 /// Methods and heads every preset lowers step programs for.
 pub const METHODS: [&str; 3] = ["ft", "lora", "qrlora"];

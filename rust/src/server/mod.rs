@@ -275,7 +275,12 @@ impl<'s, 'b> Router<'s, 'b> {
 
     /// Register a task's trained adapter state (layout must match the
     /// session's).
-    pub fn register(&mut self, task: &str, state: Vec<f32>, n_classes: usize) -> anyhow::Result<()> {
+    pub fn register(
+        &mut self,
+        task: &str,
+        state: Vec<f32>,
+        n_classes: usize,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(
             state.len() == self.session.layout().total,
             "adapter for {task:?} has {} elements, session layout wants {}",
@@ -521,7 +526,8 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
 
     // 3. Batched path: resident bank, mixed batches, no per-request swaps.
     let (batched_results, batched_stats) = {
-        let mut router = Router::new(&session, batcher.clone(), sc.max_batch, sc.resident_adapters)?;
+        let mut router =
+            Router::new(&session, batcher.clone(), sc.max_batch, sc.resident_adapters)?;
         for name in tasks {
             router.register(name, states[name].clone(), n_classes[name])?;
         }
@@ -565,7 +571,10 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
         sc.max_batch.clamp(1, preset.batch)
     };
     println!("\n[serve] batched router (bank capacity {})", sc.resident_adapters);
-    println!("  requests:        {} ({} batched)", batched_stats.requests, batched_stats.batched_requests);
+    println!(
+        "  requests:        {} ({} batched)",
+        batched_stats.requests, batched_stats.batched_requests
+    );
     println!("  batches:         {} (≤{eff_batch} rows each)", batched_stats.batches);
     println!("  bank admissions: {}", batched_stats.swap_summary());
     println!("  evictions:       {}", batched_stats.evictions);
@@ -591,6 +600,21 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
         (session.layout().total * 4) as f64 / 1024.0,
         (crate::runtime::Preset::approx_backbone_params(&preset) * 4) as f64 / (1024.0 * 1024.0),
     );
+    // Backbone residency: with --quantize-backbone the shared frozen
+    // weights are held int8 (per-row-group scales), so the one backbone
+    // every resident adapter shares shrinks ~4x.
+    if let Some(r) = session.backend().frozen_residency() {
+        // Only meaningful when quantization actually shrank something; a
+        // plain f32 run would print a misleading "1.00x reduction".
+        if r.backbone_resident_bytes < r.backbone_f32_bytes {
+            println!(
+                "  frozen backbone weights: {:.2} MiB resident ({:.2} MiB f32, {:.2}x reduction)",
+                r.backbone_resident_bytes as f64 / (1024.0 * 1024.0),
+                r.backbone_f32_bytes as f64 / (1024.0 * 1024.0),
+                r.reduction(),
+            );
+        }
+    }
     Ok(())
 }
 

@@ -12,7 +12,9 @@ use crate::adapters::{LoraAdapterSet, QrAdapterSet};
 use crate::data::{Batch, Batcher, HeadKind, Split, TaskData};
 use crate::metrics::{argmax, EvalResult};
 use crate::model;
-use crate::runtime::{Backend, BatchedAdapters, Buffer, DType, Executable, Preset, Role, StateLayout};
+use crate::runtime::{
+    Backend, BatchedAdapters, Buffer, DType, Executable, Preset, Role, StateLayout,
+};
 use crate::tensor::Tensor;
 
 /// Fine-tuning method descriptor (adapter state included).

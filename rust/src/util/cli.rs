@@ -121,6 +121,15 @@ impl Args {
 /// whenever `cmd_serve` in `main.rs` learns a new flag.
 pub const SERVE_FLAGS: &[&str] = &["requests", "max-batch", "resident-adapters"];
 
+/// Global performance/memory knobs every subcommand accepts (parsed in
+/// `main.rs`, handed to the backend factory via the environment).
+///
+/// Same lockstep rule as [`SERVE_FLAGS`]: the README's perf-knobs section
+/// must document each as `--<flag>`, enforced by the
+/// `readme_documents_perf_flags` test and the matching CI step. Extend
+/// this list whenever `main.rs` learns a new global knob.
+pub const PERF_FLAGS: &[&str] = &["backend", "threads", "quantize-backbone"];
+
 /// A subcommand descriptor for help output.
 pub struct Command {
     /// Subcommand name as typed on the command line.
@@ -205,6 +214,19 @@ mod tests {
             assert!(
                 readme.contains(&format!("--{flag}")),
                 "README.md must document serve flag --{flag}"
+            );
+        }
+    }
+
+    /// Same lockstep for the global perf/memory knobs (`--backend`,
+    /// `--threads`, `--quantize-backbone`).
+    #[test]
+    fn readme_documents_perf_flags() {
+        let readme = include_str!("../../../README.md");
+        for flag in PERF_FLAGS {
+            assert!(
+                readme.contains(&format!("--{flag}")),
+                "README.md must document perf flag --{flag}"
             );
         }
     }

@@ -391,8 +391,16 @@ where
 
 /// Like [`par_rows`] but over two output slices partitioned by the same row
 /// spans; `ra`/`rb` are elements per logical row in each slice.
-pub fn par_parts2<A, B, F>(a: &mut [A], ra: usize, b: &mut [B], rb: usize, rows: usize, work: usize, f: F)
-where
+#[allow(clippy::too_many_arguments)]
+pub fn par_parts2<A, B, F>(
+    a: &mut [A],
+    ra: usize,
+    b: &mut [B],
+    rb: usize,
+    rows: usize,
+    work: usize,
+    f: F,
+) where
     A: Send,
     B: Send,
     F: Fn(usize, &mut [A], &mut [B]) + Sync,

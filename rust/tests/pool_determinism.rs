@@ -5,11 +5,11 @@
 //! order, so these are exact (`to_bits`) comparisons, not tolerances.
 
 use std::collections::BTreeMap;
-use std::rc::Rc;
 
 use qrlora::data::HeadKind;
 use qrlora::model::host::{
-    eval_forward, pretrain_step, train_step, FrozenMap, MethodKind, MlmBatchRef, TaskBatchRef,
+    eval_forward, pretrain_step, train_step, FrozenMap, FrozenValue, MethodKind, MlmBatchRef,
+    TaskBatchRef,
 };
 use qrlora::runtime::{Manifest, Preset, Role, StateLayout};
 use qrlora::tensor::Tensor;
@@ -100,7 +100,7 @@ fn setup(key: &str) -> (Preset, StateLayout, Vec<f32>, FrozenMap) {
         } else {
             (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
         };
-        frozen.insert(t.name.clone(), Rc::new(Tensor::from_vec(&t.shape, data)));
+        frozen.insert(t.name.clone(), FrozenValue::dense(Tensor::from_vec(&t.shape, data)));
     }
     (p, layout, state, frozen)
 }

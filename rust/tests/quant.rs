@@ -1,0 +1,249 @@
+//! Int8 frozen-backbone quantization: error bounds, kernel correctness,
+//! thread-count bit-identity, residency, and the documented end-to-end
+//! accuracy contract (`quant::METRIC_DELTA_BOUND`).
+
+use std::collections::BTreeMap;
+
+use qrlora::adapters::{Proj, Scope};
+use qrlora::data::{task, HeadKind, Lexicon, TaskData};
+use qrlora::linalg::RankRule;
+use qrlora::quant::{self, QuantTensor, QUANT_GROUP_ROWS};
+use qrlora::runtime::{Backend, HostBackend};
+use qrlora::tensor::Tensor;
+use qrlora::training::{self, FinetuneJob, Methods, Session, TrainConfig};
+use qrlora::util::pool;
+use qrlora::util::rng::Rng;
+
+/// Random backbone with the ft layout's parameter names/shapes.
+fn synthetic_backbone(bk: &dyn Backend) -> BTreeMap<String, Tensor> {
+    let exe = bk.load("tiny/train_step_ft_cls").unwrap();
+    let mut rng = Rng::new(7);
+    let mut backbone = BTreeMap::new();
+    for f in &exe.spec.layout().unwrap().params {
+        if !f.name.starts_with("head/") {
+            backbone.insert(f.name.clone(), Tensor::randn(&f.shape, &mut rng, 0.05));
+        }
+    }
+    backbone
+}
+
+fn qr_session<'a>(
+    bk: &'a HostBackend,
+    backbone: &BTreeMap<String, Tensor>,
+    seed: u64,
+) -> Session<'a> {
+    let preset = bk.manifest().preset("tiny").unwrap().clone();
+    let method = Methods::qr_lora(
+        backbone,
+        &preset,
+        Scope::all_layers(&[Proj::Q, Proj::V]),
+        0.5,
+        RankRule::DiagRatio,
+    )
+    .unwrap();
+    Session::finetune(bk, &preset, &method, HeadKind::Cls, backbone, None, seed).unwrap()
+}
+
+fn tiny_batch(bk: &dyn Backend) -> qrlora::data::Batch {
+    let preset = bk.manifest().preset("tiny").unwrap().clone();
+    let lex = Lexicon::new(preset.vocab);
+    let data = TaskData::generate(task("sst2").unwrap(), &lex, 13);
+    let batcher = qrlora::data::Batcher::new(&preset, false);
+    let refs: Vec<&qrlora::data::Example> = data.train[..preset.batch].iter().collect();
+    batcher.assemble(&refs)
+}
+
+/// An outlier row must only perturb its own scale group: rows outside the
+/// group keep the tight per-group absmax/254 error bound (a single global
+/// absmax scale would smear a ~1000x outlier into every row's error).
+#[test]
+fn outlier_rows_do_not_poison_other_groups() {
+    let mut rng = Rng::new(3);
+    let mut t = Tensor::randn(&[16, 32], &mut rng, 0.5);
+    for v in t.row_mut(9) {
+        *v *= 1000.0;
+    }
+    let q = QuantTensor::quantize(&t, 4);
+    let back = q.dequantize();
+    for i in 0..16 {
+        let bound = q.scale_of_row(i) * 0.500001 + 1e-7;
+        for j in 0..32 {
+            let err = (t.at(i, j) - back.at(i, j)).abs();
+            assert!(err <= bound, "({i},{j}): err {err} > bound {bound}");
+        }
+        if !(8..12).contains(&i) {
+            // Outside the outlier's group the scale is the row's own
+            // small absmax, so the bound stays tiny.
+            assert!(q.scale_of_row(i) < 0.05, "row {i} scale {} polluted", q.scale_of_row(i));
+        }
+    }
+    assert!(q.scale_of_row(9) > 1.0, "outlier group must carry a large scale");
+}
+
+/// The fused kernels must agree with dequantize-then-matmul (the only
+/// difference is where the scale multiply lands, so tolerance is fp32
+/// rounding, not quantization error).
+#[test]
+fn fused_kernels_match_dequantized_reference() {
+    let mut rng = Rng::new(5);
+    let x = Tensor::randn(&[8, 48], &mut rng, 1.0);
+    let w = Tensor::randn(&[48, 24], &mut rng, 0.8);
+    let wq = QuantTensor::quantize(&w.t(), QUANT_GROUP_ROWS); // stored (24, 48)
+
+    let fwd = quant::matmul_qt(&x, &wq); // x·W via int8
+    let fwd_ref = x.matmul(&wq.dequantize().t());
+    assert_eq!(fwd.shape, vec![8, 24]);
+    assert!(fwd.max_abs_diff(&fwd_ref) < 1e-3, "fwd diff {}", fwd.max_abs_diff(&fwd_ref));
+
+    let dy = Tensor::randn(&[8, 24], &mut rng, 1.0);
+    let bwd = quant::matmul_q(&dy, &wq); // dy·Wᵀ via int8
+    let bwd_ref = dy.matmul(&wq.dequantize());
+    assert_eq!(bwd.shape, vec![8, 48]);
+    assert!(bwd.max_abs_diff(&bwd_ref) < 1e-3, "bwd diff {}", bwd.max_abs_diff(&bwd_ref));
+}
+
+/// Kernel-level thread-count bit-identity (shapes big enough to clear the
+/// pool's serial cutoff).
+#[test]
+fn fused_kernels_bit_identical_across_threads() {
+    let mut rng = Rng::new(8);
+    let x = Tensor::randn(&[64, 128], &mut rng, 1.0);
+    let w = Tensor::randn(&[128, 96], &mut rng, 1.0);
+    let wq = QuantTensor::quantize(&w.t(), QUANT_GROUP_ROWS);
+    let dy = Tensor::randn(&[64, 96], &mut rng, 1.0);
+    let fwd1 = pool::with_threads(1, || quant::matmul_qt(&x, &wq));
+    let bwd1 = pool::with_threads(1, || quant::matmul_q(&dy, &wq));
+    for t in [2usize, 3, 5] {
+        let fwd = pool::with_threads(t, || quant::matmul_qt(&x, &wq));
+        let bwd = pool::with_threads(t, || quant::matmul_q(&dy, &wq));
+        assert_eq!(fwd, fwd1, "matmul_qt t={t}");
+        assert_eq!(bwd, bwd1, "matmul_q t={t}");
+    }
+}
+
+/// Full quantized train/eval steps through the backend must be
+/// bit-identical for any thread count (the serving-path twin lives in
+/// `serve_batched.rs::*_int8_backbone`).
+#[test]
+fn quantized_session_bit_identical_across_threads() {
+    let run = |threads: usize| {
+        pool::with_threads(threads, || {
+            let bk = HostBackend::new_quantized();
+            let backbone = synthetic_backbone(&bk);
+            let mut session = qr_session(&bk, &backbone, 3);
+            let batch = tiny_batch(&bk);
+            session.step(&batch, 2, 1e-3).unwrap();
+            let logits = session.forward(&batch, 2).unwrap();
+            (session.download_state().unwrap(), logits)
+        })
+    };
+    let (state1, logits1) = run(1);
+    let (state3, logits3) = run(3);
+    assert_eq!(state1.len(), state3.len());
+    for (i, (a, b)) in state1.iter().zip(&state3).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "state[{i}]: {a} vs {b}");
+    }
+    for (i, (a, b)) in logits1.iter().zip(&logits3).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logits[{i}]: {a} vs {b}");
+    }
+}
+
+/// The acceptance gate on resident memory: backbone weights (embeddings +
+/// attention/FFN projections) must shrink ≥3.5x vs f32, and the f32
+/// backend must report no reduction.
+#[test]
+fn frozen_backbone_residency_reduced_at_least_3_5x() {
+    let bk = HostBackend::new_quantized();
+    let backbone = synthetic_backbone(&bk);
+    let session = qr_session(&bk, &backbone, 4);
+    let batch = tiny_batch(&bk);
+    session.forward(&batch, 2).unwrap();
+    let r = bk.frozen_residency().unwrap();
+    assert!(r.backbone_f32_bytes > 0, "cache must hold backbone weights");
+    assert!(r.other_bytes > 0, "QR factors/masks must stay f32");
+    assert!(
+        r.reduction() >= 3.5,
+        "resident reduction {:.2}x below 3.5x ({} -> {} bytes)",
+        r.reduction(),
+        r.backbone_f32_bytes,
+        r.backbone_resident_bytes
+    );
+    // Steady state: a second forward re-serves the cache, no growth.
+    session.forward(&batch, 2).unwrap();
+    assert_eq!(bk.frozen_residency().unwrap(), r);
+
+    let bk32 = HostBackend::new();
+    let backbone32 = synthetic_backbone(&bk32);
+    let session32 = qr_session(&bk32, &backbone32, 4);
+    let batch32 = tiny_batch(&bk32);
+    session32.forward(&batch32, 2).unwrap();
+    let r32 = bk32.frozen_residency().unwrap();
+    assert_eq!(r32.backbone_f32_bytes, r32.backbone_resident_bytes);
+    assert!((r32.reduction() - 1.0).abs() < 1e-9);
+}
+
+/// The documented end-to-end accuracy contract: an adapter trained and
+/// evaluated against the int8 backbone must land within
+/// `quant::METRIC_DELTA_BOUND` of the f32 path's eval metric, for both
+/// adapter methods.
+#[test]
+fn eval_metric_parity_quant_vs_f32() {
+    let lex = Lexicon::new(512);
+    let spec = task("sst2").unwrap();
+    let mut data = TaskData::generate(spec, &lex, 7);
+    data.train.truncate(256);
+    data.dev.truncate(128);
+
+    // One pretrained backbone for every run: pretraining is full FT (no
+    // frozen inputs), so it is identical on both backends.
+    let bk32 = HostBackend::new();
+    let (backbone, _) = training::pretrain(&bk32, "tiny", &lex, 60, 1e-3, 1).unwrap();
+    let preset = bk32.manifest().preset("tiny").unwrap().clone();
+
+    let accuracy_on = |bk: &HostBackend, method_name: &str| -> f64 {
+        let method = match method_name {
+            "qrlora" => Methods::qr_lora(
+                &backbone,
+                &preset,
+                Scope::all_layers(&[Proj::Q, Proj::V]),
+                0.5,
+                RankRule::DiagRatio,
+            )
+            .unwrap(),
+            "lora" => Methods::lora(&backbone, &preset, 2.0, 2).unwrap(),
+            other => panic!("unknown method {other}"),
+        };
+        let job = FinetuneJob {
+            rt: bk,
+            preset: "tiny",
+            task: &data,
+            lexicon: &lex,
+            backbone: &backbone,
+            head: None,
+            config: TrainConfig {
+                steps: 60,
+                lr: 2e-3,
+                warmup_steps: 5,
+                train_examples: 256,
+                log_every: 100,
+            },
+            seed: 3,
+        };
+        let result = training::run_finetune(&job, &method).unwrap();
+        assert!(result.final_loss.is_finite(), "{method_name}: non-finite loss");
+        result.dev.accuracy
+    };
+
+    let bk8 = HostBackend::new_quantized();
+    for method_name in ["qrlora", "lora"] {
+        let acc32 = accuracy_on(&bk32, method_name);
+        let acc8 = accuracy_on(&bk8, method_name);
+        let delta = (acc32 - acc8).abs();
+        assert!(
+            delta <= quant::METRIC_DELTA_BOUND,
+            "{method_name}: |f32 {acc32:.3} - int8 {acc8:.3}| = {delta:.3} exceeds the \
+             documented bound {}",
+            quant::METRIC_DELTA_BOUND
+        );
+    }
+}

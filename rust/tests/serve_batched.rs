@@ -69,9 +69,12 @@ fn build_method(bk: &dyn Backend, name: &str, backbone: &BTreeMap<String, Tensor
 }
 
 /// Mixed batch through the bank vs per-request swaps, bit-compared at
-/// several thread counts.
-fn check_bit_identity(method_name: &str) {
-    let bk = HostBackend::new();
+/// several thread counts. `quantize` runs the whole comparison on a
+/// backend holding the frozen backbone int8: the serving bit-identity
+/// contract (and its thread-count independence) must hold on the
+/// quantized path too.
+fn check_bit_identity_quant(method_name: &str, quantize: bool) {
+    let bk = HostBackend::with_quant(quantize);
     let preset = bk.manifest().preset("tiny").unwrap().clone();
     let backbone = synthetic_backbone(&bk);
     let method = build_method(&bk, method_name, &backbone);
@@ -84,7 +87,8 @@ fn check_bit_identity(method_name: &str) {
     let batcher = Batcher::new(&preset, false);
     let refs: Vec<&Example> = data.train[..preset.batch].iter().collect();
     let mixed = batcher.assemble(&refs);
-    let row_slots: Vec<usize> = (0..preset.batch).map(|i| [0, 1, 2, 0, 2, 1, 0, 1][i % 8]).collect();
+    let row_slots: Vec<usize> =
+        (0..preset.batch).map(|i| [0, 1, 2, 0, 2, 1, 0, 1][i % 8]).collect();
 
     let n_classes = 3usize;
     let k = session.layout().param("head/wc").unwrap().shape[1];
@@ -104,7 +108,8 @@ fn check_bit_identity(method_name: &str) {
 
     // Resident bank, one mixed pass, at ≥2 thread counts.
     let state_bufs: Vec<_> = states.iter().map(|s| bk.upload_f32(s, &[s.len()]).unwrap()).collect();
-    let mask_bufs: Vec<_> = (0..states.len()).map(|_| bk.upload_f32(&cmask, &[k]).unwrap()).collect();
+    let mask_bufs: Vec<_> =
+        (0..states.len()).map(|_| bk.upload_f32(&cmask, &[k]).unwrap()).collect();
     let state_refs: Vec<_> = state_bufs.iter().collect();
     let mask_refs: Vec<_> = mask_bufs.iter().collect();
     for threads in [1usize, 3] {
@@ -129,12 +134,22 @@ fn check_bit_identity(method_name: &str) {
 
 #[test]
 fn mixed_batch_bit_identical_to_swap_qrlora() {
-    check_bit_identity("qrlora");
+    check_bit_identity_quant("qrlora", false);
 }
 
 #[test]
 fn mixed_batch_bit_identical_to_swap_lora() {
-    check_bit_identity("lora");
+    check_bit_identity_quant("lora", false);
+}
+
+#[test]
+fn mixed_batch_bit_identical_to_swap_qrlora_int8_backbone() {
+    check_bit_identity_quant("qrlora", true);
+}
+
+#[test]
+fn mixed_batch_bit_identical_to_swap_lora_int8_backbone() {
+    check_bit_identity_quant("lora", true);
 }
 
 /// The grouped fallback (PJRT's path) must agree with the host fast path
@@ -159,7 +174,8 @@ fn grouped_fallback_matches_fast_path() {
     let k = session.layout().param("head/wc").unwrap().shape[1];
     let cmask = Batcher::class_mask(2, k);
     let state_bufs: Vec<_> = states.iter().map(|s| bk.upload_f32(s, &[s.len()]).unwrap()).collect();
-    let mask_bufs: Vec<_> = (0..states.len()).map(|_| bk.upload_f32(&cmask, &[k]).unwrap()).collect();
+    let mask_bufs: Vec<_> =
+        (0..states.len()).map(|_| bk.upload_f32(&cmask, &[k]).unwrap()).collect();
     let state_refs: Vec<_> = state_bufs.iter().collect();
     let mask_refs: Vec<_> = mask_bufs.iter().collect();
 
@@ -191,9 +207,12 @@ fn grouped_fallback_matches_fast_path() {
         use qrlora::runtime::{DType, Role};
         let buf = match t.role {
             Role::State => bk.upload_f32(&states[0], &[states[0].len()]).unwrap(),
-            Role::Frozen => bk
-                .upload_f32(frozen_values.get(&t.name).unwrap_or_else(|| panic!("missing frozen {}", t.name)), &t.shape)
-                .unwrap(),
+            Role::Frozen => {
+                let v = frozen_values
+                    .get(&t.name)
+                    .unwrap_or_else(|| panic!("missing frozen {}", t.name));
+                bk.upload_f32(v, &t.shape).unwrap()
+            }
             Role::Batch => match t.name.as_str() {
                 "batch/input_ids" => bk.upload_i32(&mixed.input_ids, &t.shape).unwrap(),
                 "batch/type_ids" => bk.upload_i32(&mixed.type_ids, &t.shape).unwrap(),
