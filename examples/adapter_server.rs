@@ -14,7 +14,7 @@ use qrlora::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &[])?;
+    let args = Args::parse(&raw, &["no-warm-start"])?;
     let cfg = ExpConfig {
         preset: args.str_or("preset", "tiny").to_string(),
         pretrain_steps: args.usize_or("pretrain-steps", 600)?,

@@ -14,6 +14,9 @@
 //! * P6  int8-quantized frozen backbone: fused `qmatmul` kernels vs their
 //!       f32 twins, quantized eval/serve entries, and the resident-bytes
 //!       reduction stat (host-only; see `qrlora::quant`)
+//! * P7  adapter store: `serve_warm_start` (registry open + record
+//!       load/verify + state restore) vs `serve_cold_start` (train the
+//!       adapter) — the per-adapter startup win of `qrlora::store`
 //!
 //! Runs on whatever backend `QRLORA_BACKEND` selects (host by default, so
 //! the bench is hermetic) with the pool sized by `QRLORA_THREADS`, and
@@ -37,6 +40,7 @@ use qrlora::data::{task, Batcher, Lexicon, TaskData};
 use qrlora::linalg::RankRule;
 use qrlora::quant::{self, QuantTensor};
 use qrlora::runtime::{create_backend, Backend, BackendChoice, Buffer, DType, HostBackend};
+use qrlora::store::{AdapterKey, AdapterRecord, Registry};
 use qrlora::tensor::Tensor;
 use qrlora::training::{Method, Methods, Session};
 use qrlora::util::cli::Args;
@@ -539,6 +543,75 @@ fn main() -> anyhow::Result<()> {
             r.backbone_resident_bytes as f64 / 1024.0,
             r.reduction()
         );
+    }
+
+    // ---- P7: adapter store — warm vs cold serving prep ------------------
+    // `serve_cold_start` is the tier-3 miss path (train the adapter);
+    // `serve_warm_start` is the tier-2 hit path (open the registry, load +
+    // checksum/fingerprint-verify the record, rebuild the state vector,
+    // upload it). Same preset/method/task — the ratio is the startup win
+    // the durable store buys per adapter.
+    println!("\n# P7 adapter store ({preset_name}, warm vs cold start)");
+    let store_dir = std::env::temp_dir().join("qrlora_bench_store");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let cold_steps = 30usize;
+    rec.bench(&format!("serve_cold_start ({cold_steps} adapter steps)"), tmax, 1, 3, || {
+        let mut s = Session::finetune(
+            rt,
+            &preset,
+            method,
+            qrlora::data::HeadKind::Cls,
+            &backbone,
+            None,
+            11,
+        )
+        .unwrap();
+        for _ in 0..cold_steps {
+            s.step(&batch, 2, 1e-3).unwrap();
+        }
+        std::hint::black_box(s.steps_taken());
+    });
+    {
+        let mut s = Session::finetune(
+            rt,
+            &preset,
+            method,
+            qrlora::data::HeadKind::Cls,
+            &backbone,
+            None,
+            11,
+        )?;
+        for _ in 0..cold_steps {
+            s.step(&batch, 2, 1e-3)?;
+        }
+        let backbone_fp = qrlora::store::fingerprint_params(&backbone);
+        let manifest_fp = qrlora::store::fingerprint_layout(s.layout());
+        let key = AdapterKey::new(&preset_name, "qrlora", "sst2", 11);
+        let warm_record =
+            AdapterRecord::from_session(&s, key.clone(), backbone_fp, 2, 0.0, 0.0, false)?;
+        Registry::open(&store_dir)?.publish(&warm_record)?;
+        rec.bench("serve_warm_start (store load)", tmax, 2, 10, || {
+            let reg = Registry::open(&store_dir).unwrap();
+            let loaded = reg.load(&key).unwrap();
+            loaded.check_compat(manifest_fp, backbone_fp, rt.backbone_repr()).unwrap();
+            let state = loaded.state_vector(session.layout()).unwrap();
+            session.upload_state(&state).unwrap();
+            std::hint::black_box(state.len());
+        });
+    }
+    {
+        let cold = rec.entries.iter().find(|e| e.name.starts_with("serve_cold_start"));
+        let warm = rec.entries.iter().find(|e| e.name.starts_with("serve_warm_start"));
+        if let (Some(cold), Some(warm)) = (cold, warm) {
+            if warm.stats.mean() > 0.0 {
+                println!(
+                    "\nwarm-start speedup: {:.0}x ({:.1} ms cold vs {:.2} ms warm per adapter)",
+                    cold.stats.mean() / warm.stats.mean(),
+                    cold.stats.mean(),
+                    warm.stats.mean()
+                );
+            }
+        }
     }
 
     // Footprint summary for the serving claim.

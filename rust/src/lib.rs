@@ -33,6 +33,7 @@ pub mod experiments;
 pub mod quant;
 pub mod runtime;
 pub mod server;
+pub mod store;
 pub mod tensor;
 pub mod training;
 pub mod util;

@@ -19,6 +19,11 @@
 //! projections, per-row-group absmax scales); QR factors, λ, LoRA A/B,
 //! task heads, and all gradients stay f32. See the README's perf-knobs
 //! section for the accuracy contract.
+//!
+//! Durable adapters: `serve` warm-starts from the adapter store
+//! (`--adapter-store DIR`, default `runs/adapters`; `--no-warm-start`
+//! disables it) and publishes freshly trained adapters back;
+//! `adapters list|verify|gc` manages the records.
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::ALL_TASKS;
@@ -35,7 +40,8 @@ const COMMANDS: &[Command] = &[
     Command { name: "train", about: "fine-tune one task with one method (full pipeline)" },
     Command { name: "ranks", about: "pivoted-QR rank-selection report for a backbone" },
     Command { name: "exp", about: "regenerate a paper table/figure: table1..table4, figure1, all" },
-    Command { name: "serve", about: "batched multi-adapter serving demo (resident AdapterBank)" },
+    Command { name: "serve", about: "batched serving demo (warm-starts from the adapter store)" },
+    Command { name: "adapters", about: "adapter store: list | verify | gc (--adapter-store DIR)" },
 ];
 
 fn main() {
@@ -45,7 +51,8 @@ fn main() {
         return;
     }
     let cmd = raw[0].clone();
-    let args = match Args::parse(&raw[1..], &["verbose", "force", "quantize-backbone"]) {
+    let switches = ["verbose", "force", "quantize-backbone", "no-warm-start", "dry-run"];
+    let args = match Args::parse(&raw[1..], &switches) {
         Ok(a) => a,
         Err(e) => {
             errorln!("{e}");
@@ -112,6 +119,7 @@ fn main() {
         "ranks" => cmd_ranks(&args),
         "exp" => cmd_exp(&args),
         "serve" => cmd_serve(&args),
+        "adapters" => cmd_adapters(&args),
         other => {
             errorln!("unknown command {other:?}");
             print!("{}", render_help("qrlora", "QR-LoRA reproduction coordinator", COMMANDS));
@@ -307,4 +315,92 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = exp_config(args)?;
     let sc = qrlora::server::ServeConfig::from_args(args)?;
     qrlora::server::demo(&cfg, &sc)
+}
+
+fn cmd_adapters(args: &Args) -> anyhow::Result<()> {
+    use qrlora::store::{gc, GcPolicy, Registry, DEFAULT_STORE_DIR};
+    let dir = std::path::PathBuf::from(args.str_or("adapter-store", DEFAULT_STORE_DIR));
+    let sub = args.positional().first().map(|s| s.as_str()).unwrap_or("list");
+    let mut reg = Registry::open(&dir)?;
+    match sub {
+        "list" => {
+            println!("adapter store {} — {} record(s)", dir.display(), reg.len());
+            if reg.is_empty() {
+                return Ok(());
+            }
+            println!("| preset | method | task | seed | metric | size | trained | age | file |");
+            println!("|---|---|---|---:|---:|---:|---:|---:|---|");
+            let now = qrlora::store::unix_now();
+            for e in reg.entries() {
+                println!(
+                    "| {} | {} | {} | {} | {:.1} | {:.1} KiB | {:.0} ms | {:.1} h | {} |",
+                    e.key.preset,
+                    e.key.method,
+                    e.key.task,
+                    e.key.seed,
+                    e.eval_metric,
+                    e.bytes as f64 / 1024.0,
+                    e.train_ms,
+                    now.saturating_sub(e.created_unix) as f64 / 3600.0,
+                    e.file
+                );
+            }
+            Ok(())
+        }
+        "verify" => {
+            let results = reg.verify();
+            let mut failed = 0usize;
+            for r in &results {
+                match &r.result {
+                    Ok(()) => println!("OK    {}  ({})", r.key, r.file),
+                    Err(e) => {
+                        failed += 1;
+                        println!("FAIL  {}  ({}): {e:#}", r.key, r.file);
+                    }
+                }
+            }
+            println!("verified {} record(s), {failed} failure(s)", results.len());
+            anyhow::ensure!(failed == 0, "{failed} adapter record(s) failed verification");
+            Ok(())
+        }
+        "gc" => {
+            let max_age_secs = match args.get("max-age-days") {
+                None => None,
+                Some(v) => {
+                    let days: f64 = v.parse().map_err(|_| {
+                        anyhow::anyhow!("--max-age-days expects a number, got {v:?}")
+                    })?;
+                    anyhow::ensure!(days >= 0.0, "--max-age-days must be non-negative");
+                    Some((days * 86_400.0) as u64)
+                }
+            };
+            let max_count = match args.get("max-count") {
+                None => None,
+                Some(v) => Some(v.parse::<usize>().map_err(|_| {
+                    anyhow::anyhow!("--max-count expects an integer, got {v:?}")
+                })?),
+            };
+            let policy = GcPolicy {
+                task: args.get("task").map(str::to_string),
+                max_age_secs,
+                max_count,
+            };
+            let dry = args.has("dry-run");
+            let report = gc::gc(&mut reg, &policy, qrlora::store::unix_now(), dry)?;
+            let verb = if dry { "would remove" } else { "removed" };
+            for key in &report.removed {
+                println!("{verb} {key}");
+            }
+            println!(
+                "{} {}, {} kept, {:.1} KiB freed{}",
+                verb,
+                report.removed.len(),
+                report.kept,
+                report.freed_bytes as f64 / 1024.0,
+                if dry { " (dry run)" } else { "" }
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown adapters subcommand {other:?} (list|verify|gc)"),
+    }
 }

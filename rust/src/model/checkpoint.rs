@@ -1,12 +1,20 @@
-//! Checkpoint I/O: a single-file format holding named f32 tensors
-//! (JSON header + packed little-endian data), plus raw state-vector
-//! save/load. Interops with nothing — it's the coordinator's own durable
-//! format — but tensors can also be exported per-leaf as `.npy`.
+//! Checkpoint I/O: a single-file format holding named f32 tensors, plus
+//! raw state-vector save/load. Interops with nothing — it's the
+//! coordinator's own durable format — but tensors can also be exported
+//! per-leaf as `.npy`.
+//!
+//! The file body is the shared named-tensor codec from
+//! [`crate::store::format`] (`u64`-length-prefixed JSON header + packed
+//! little-endian f32 payload) behind a checkpoint magic — the same codec
+//! the adapter store's record sections use, so there is exactly one
+//! header/payload parser in the tree. Decoding is strict: truncated,
+//! malformed, or trailing bytes are loud errors, never a panic or
+//! silently-misread weights.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::store::format::{decode_tensors, encode_tensors};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
@@ -14,83 +22,31 @@ const MAGIC: &[u8; 8] = b"QRLORA01";
 
 /// Save a named tensor map.
 pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> anyhow::Result<()> {
-    let mut header = Vec::new();
-    let mut offset = 0usize;
-    for (name, t) in params {
-        header.push((name.clone(), t.shape.clone(), offset));
-        offset += t.numel();
-    }
-    let hjson = Json::Arr(
-        header
-            .iter()
-            .map(|(n, s, o)| {
-                Json::obj(vec![
-                    ("name", Json::str(n.clone())),
-                    ("shape", Json::arr_usize(s.iter())),
-                    ("offset", Json::num(*o as f64)),
-                ])
-            })
-            .collect(),
-    )
-    .to_string();
-
+    use std::io::Write;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let mut f = std::fs::File::create(path)?;
+    let body = encode_tensors(params);
+    // Write magic + body separately: concatenating into one Vec would
+    // transiently double the footprint of a full-FT backbone checkpoint.
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("cannot write {path:?}: {e}"))?;
     f.write_all(MAGIC)?;
-    f.write_all(&(hjson.len() as u64).to_le_bytes())?;
-    f.write_all(hjson.as_bytes())?;
-    let mut buf = Vec::with_capacity(offset * 4);
-    for t in params.values() {
-        for v in &t.data {
-            buf.extend_from_slice(&v.to_le_bytes());
-        }
-    }
-    f.write_all(&buf)?;
+    f.write_all(&body)?;
     Ok(())
 }
 
-/// Load a named tensor map.
+/// Load a named tensor map. Fails loudly on anything short of a complete,
+/// well-formed checkpoint (bad magic, truncated header or payload,
+/// trailing bytes, malformed entries).
 pub fn load_params(path: &Path) -> anyhow::Result<BTreeMap<String, Tensor>> {
-    let mut f = std::fs::File::open(path)
+    let bytes = std::fs::read(path)
         .map_err(|e| anyhow::anyhow!("cannot open checkpoint {path:?}: {e}"))?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "{path:?}: not a qrlora checkpoint");
-    let mut lenb = [0u8; 8];
-    f.read_exact(&mut lenb)?;
-    let hlen = u64::from_le_bytes(lenb) as usize;
-    let mut hbuf = vec![0u8; hlen];
-    f.read_exact(&mut hbuf)?;
-    let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
-    let mut body = Vec::new();
-    f.read_to_end(&mut body)?;
-
-    let mut out = BTreeMap::new();
-    for entry in header.as_arr().unwrap_or_default() {
-        let name = entry.req("name")?.as_str().unwrap_or("").to_string();
-        let shape: Vec<usize> = entry
-            .req("shape")?
-            .as_arr()
-            .unwrap_or_default()
-            .iter()
-            .filter_map(|d| d.as_usize())
-            .collect();
-        let offset = entry.req("offset")?.as_usize().unwrap_or(0);
-        let numel: usize = shape.iter().product();
-        let start = offset * 4;
-        anyhow::ensure!(
-            start + numel * 4 <= body.len(),
-            "{path:?}: truncated tensor {name}"
-        );
-        let data: Vec<f32> = body[start..start + numel * 4]
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        out.insert(name, Tensor::from_vec(&shape, data));
-    }
-    Ok(out)
+    anyhow::ensure!(
+        bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC,
+        "{path:?}: not a qrlora checkpoint"
+    );
+    decode_tensors(&format!("checkpoint {}", path.display()), &bytes[MAGIC.len()..])
 }
 
 /// Save a raw state vector with a tiny JSON sidecar for provenance.
@@ -153,5 +109,28 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("x.qck"));
+    }
+
+    #[test]
+    fn truncated_checkpoint_fails_loudly() {
+        // A checkpoint cut at ANY byte boundary must be a clean error —
+        // no panic (e.g. a giant header-length alloc), no silently
+        // short-read tensors.
+        let mut rng = Rng::new(2);
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::randn(&[5, 5], &mut rng, 1.0));
+        params.insert("b".to_string(), Tensor::randn(&[5], &mut rng, 1.0));
+        let p = tmp("trunc.qck");
+        save_params(&p, &params).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        for cut in [5usize, 9, 14, full.len() / 2, full.len() - 1] {
+            std::fs::write(&p, &full[..cut]).unwrap();
+            assert!(load_params(&p).is_err(), "cut at {cut} must not load");
+        }
+        // Trailing garbage is detected too (not silently ignored).
+        let mut long = full.clone();
+        long.extend_from_slice(&[1, 2, 3]);
+        std::fs::write(&p, &long).unwrap();
+        assert!(load_params(&p).is_err(), "trailing bytes must not load");
     }
 }

@@ -315,18 +315,22 @@ fn ln_fwd(x: &Tensor, g: &[f32], b: &[f32]) -> (Tensor, LnCache) {
 fn ln_bwd(dy: &Tensor, g: &[f32], c: &LnCache) -> (Tensor, Vec<f32>, Vec<f32>) {
     let (rows, d) = (dy.rows(), dy.cols());
     let mut dx = Tensor::zeros(&[rows, d]);
-    let mut dg = vec![0f32; d];
-    let mut db = vec![0f32; d];
-    // dg/db are row reductions: they stay serial so the float-accumulation
-    // order never depends on the thread count.
-    for i in 0..rows {
-        let dyr = dy.row(i);
-        let xh = c.xhat.row(i);
-        for j in 0..d {
-            dg[j] += dyr[j] * xh[j];
-            db[j] += dyr[j];
+    // dγ/dβ are row reductions: fixed-chunk partial sums (one packed
+    // [dγ | dβ] accumulator per chunk, a single pass over dy/x̂) keep the
+    // accumulation order a function of the row count alone, so results
+    // are bit-identical for any thread count.
+    let packed = pool::par_reduce_rows(rows, 2 * d, rows.saturating_mul(d) * 4, |r0, n, acc| {
+        let (dg_acc, db_acc) = acc.split_at_mut(d);
+        for i in r0..r0 + n {
+            let dyr = dy.row(i);
+            let xh = c.xhat.row(i);
+            for j in 0..d {
+                dg_acc[j] += dyr[j] * xh[j];
+                db_acc[j] += dyr[j];
+            }
         }
-    }
+    });
+    let (dg, db) = (packed[..d].to_vec(), packed[d..].to_vec());
     // dx rows are independent — parallel (m1/m2 are per-row, recomputed in
     // the serial j order inside each row).
     pool::par_rows(&mut dx.data, rows, rows.saturating_mul(d) * 6, |r0, chunk| {
@@ -401,18 +405,19 @@ fn scale_cols(t: &Tensor, coeff: &[f32]) -> Tensor {
     out
 }
 
-/// Column sums — a row reduction, kept serial for thread-count-independent
-/// float accumulation order (used for bias gradients).
+/// Column sums (bias gradients) — a row reduction, parallelized with
+/// fixed-chunk partial sums (`pool::par_reduce_rows`): the chunk
+/// boundaries depend only on the row count, so the accumulation order —
+/// and every output bit — is independent of the thread count.
 fn col_sum(t: &Tensor) -> Vec<f32> {
     let (rows, cols) = (t.rows(), t.cols());
-    let mut out = vec![0f32; cols];
-    for i in 0..rows {
-        let r = t.row(i);
-        for j in 0..cols {
-            out[j] += r[j];
+    pool::par_reduce_rows(rows, cols, rows.saturating_mul(cols), |row0, n, acc| {
+        for i in row0..row0 + n {
+            for (a, &v) in acc.iter_mut().zip(t.row(i)) {
+                *a += v;
+            }
         }
-    }
-    out
+    })
 }
 
 fn add_bias_rows(t: &mut Tensor, bias: &[f32]) {
@@ -1089,32 +1094,11 @@ fn clip_and_adam(
     metrics: &[(&str, Vec<f32>)],
 ) -> Vec<f32> {
     let n = layout.n_params;
-    let mut sq = 0f64;
-    for f in &layout.params {
-        if let Some(g) = grads.map.get(&f.name) {
-            for &v in &g.data {
-                sq += (v as f64) * (v as f64);
-            }
-        }
-    }
-    let norm = (sq + 1e-12).sqrt();
-    let scale = (1.0f64.min(1.0 / norm)) as f32;
-
-    let b1t = 1.0 - ADAM_B1.powf(t);
-    let b2t = 1.0 - ADAM_B2.powf(t);
-
-    let mut new_state = vec![0f32; layout.total];
-    for (name, vals) in metrics {
-        if let Ok(f) = layout.metric(name) {
-            new_state[f.offset..f.offset + vals.len().min(f.numel())]
-                .copy_from_slice(&vals[..vals.len().min(f.numel())]);
-        }
-    }
     // The flat protocol tiles the state as [ metrics | params | m | v ]
     // (asserted layout-wide by the runtime smoke tests), so the update is
     // one dense elementwise pass. Flatten the named gradients into that
-    // order once, then update params/moments row-parallel — the update is
-    // per-element, so the split can't change any value.
+    // order once — the global-norm reduction and the Adam update both
+    // stream the flat buffer.
     let base = layout.total - 3 * n;
     debug_assert_eq!(
         layout.params.iter().map(|f| f.numel()).sum::<usize>(),
@@ -1128,6 +1112,30 @@ fn clip_and_adam(
             g_flat[lo..lo + g.data.len()].copy_from_slice(&g.data);
         }
     }
+    // Global grad-norm: an all-params reduction, run as fixed-chunk f64
+    // partial sums (`pool::par_reduce_rows`) so the accumulation order is
+    // a function of the element count alone — bit-identical for every
+    // thread count. Params without a gradient contribute exact zeros.
+    let sq = pool::par_reduce_rows::<f64, _>(n, 1, 2 * n, |lo, len, acc| {
+        for &v in &g_flat[lo..lo + len] {
+            acc[0] += (v as f64) * (v as f64);
+        }
+    })[0];
+    let norm = (sq + 1e-12).sqrt();
+    let scale = (1.0f64.min(1.0 / norm)) as f32;
+
+    let b1t = 1.0 - ADAM_B1.powf(t);
+    let b2t = 1.0 - ADAM_B2.powf(t);
+
+    let mut new_state = vec![0f32; layout.total];
+    for (name, vals) in metrics {
+        if let Ok(f) = layout.metric(name) {
+            new_state[f.offset..f.offset + vals.len().min(f.numel())]
+                .copy_from_slice(&vals[..vals.len().min(f.numel())]);
+        }
+    }
+    // Update params/moments row-parallel — per-element, so the split
+    // can't change any value.
     let st_p = &state[base..base + n];
     let st_m = &state[base + n..base + 2 * n];
     let st_v = &state[base + 2 * n..base + 3 * n];

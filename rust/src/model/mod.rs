@@ -70,12 +70,7 @@ pub fn init_state(layout: &StateLayout, seed: u64) -> Vec<f32> {
 }
 
 fn hash_name(name: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in name.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    crate::util::hash::fnv1a_str(name)
 }
 
 /// Read one named parameter out of a state vector.

@@ -314,6 +314,16 @@ pub trait Backend {
     fn frozen_residency(&self) -> Option<FrozenResidency> {
         None
     }
+
+    /// How this backend represents the frozen backbone in memory:
+    /// `"int8"` on a host backend built with `--quantize-backbone`, else
+    /// `"f32"`. Recorded in durable adapter records
+    /// (`store::format::RecordMeta`) so an adapter trained against one
+    /// representation is never warm-started onto the other — that would
+    /// break the store's bit-identity-with-train-on-miss contract.
+    fn backbone_repr(&self) -> &'static str {
+        "f32"
+    }
 }
 
 /// Which backend the user asked for.

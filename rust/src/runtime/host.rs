@@ -680,6 +680,14 @@ impl Backend for HostBackend {
         Some(r)
     }
 
+    fn backbone_repr(&self) -> &'static str {
+        if self.quant {
+            "int8"
+        } else {
+            "f32"
+        }
+    }
+
     fn upload_f32(&self, data: &[f32], shape: &[usize]) -> anyhow::Result<Buffer> {
         Ok(Buffer::host_f32(data.to_vec(), shape))
     }

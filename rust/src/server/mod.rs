@@ -27,11 +27,12 @@ use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 use crate::adapters::{Proj, Scope};
-use crate::data::{task, Batcher, Example, Split};
+use crate::data::{metric_kind, task, Batcher, Example, HeadKind, Split};
 use crate::experiments::{ExpConfig, Pipeline};
 use crate::linalg::RankRule;
 use crate::metrics::argmax;
 use crate::runtime::{Backend, Buffer};
+use crate::store::{self, AdapterRecord, Registry, Source, TieredAdapters};
 use crate::training::{Methods, Session, TrainConfig};
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
@@ -420,7 +421,7 @@ pub fn serve_swap(
 }
 
 /// Serving-demo knobs (CLI `--requests` / `--max-batch` /
-/// `--resident-adapters`).
+/// `--resident-adapters` / `--adapter-store` / `--no-warm-start`).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Mixed-stream length.
@@ -430,11 +431,20 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// [`AdapterBank`] capacity.
     pub resident_adapters: usize,
+    /// Durable adapter-store directory for warm starts (trained adapters
+    /// are published here and loaded back on restart); `None` disables
+    /// the store entirely (`--no-warm-start`).
+    pub adapter_store: Option<std::path::PathBuf>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { requests: 200, max_batch: 0, resident_adapters: 8 }
+        ServeConfig {
+            requests: 200,
+            max_batch: 0,
+            resident_adapters: 8,
+            adapter_store: Some(std::path::PathBuf::from(crate::store::DEFAULT_STORE_DIR)),
+        }
     }
 }
 
@@ -444,76 +454,171 @@ impl ServeConfig {
     /// `serve` command and the `adapter_server` example).
     pub fn from_args(args: &Args) -> anyhow::Result<ServeConfig> {
         let d = ServeConfig::default();
+        let adapter_store = if args.has("no-warm-start") {
+            None
+        } else {
+            Some(std::path::PathBuf::from(
+                args.str_or("adapter-store", crate::store::DEFAULT_STORE_DIR),
+            ))
+        };
         Ok(ServeConfig {
             requests: args.usize_or("requests", d.requests)?,
             max_batch: args.usize_or("max-batch", d.max_batch)?,
             resident_adapters: args.usize_or("resident-adapters", d.resident_adapters)?,
+            adapter_store,
         })
     }
 }
 
-/// The serving demo: trains tiny QR adapters for several tasks, routes a
-/// mixed request stream through the batched [`Router`], then replays the
-/// same stream through the legacy [`serve_swap`] loop and reports the
-/// speedup and per-request agreement.
+/// The serving demo: resolves one QR adapter per task through the tiered
+/// store (RAM → durable registry → train-on-miss, publishing back),
+/// routes a mixed request stream through the batched [`Router`], then
+/// replays the same stream through the legacy [`serve_swap`] loop and
+/// reports the warm-start and batching speedups plus per-request
+/// agreement.
 pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
     let tasks = ["sst2", "mrpc", "qnli"];
     let mut pipe = Pipeline::new(cfg)?;
     let preset = pipe.preset.clone();
 
-    // 1. Train one QR-LoRA adapter per task (short budget — demo).
+    // 1. Shared warmed backbone + QR method (identical for every task —
+    //    only λ/head differ), and the one serving session. The per-task
+    //    adapters come from the tiered store below.
+    let (warm_bb, _) = pipe.warmed(tasks[0])?;
+    let method = Methods::qr_lora(
+        &warm_bb,
+        &preset,
+        Scope::last_layers((preset.n_layers / 3).max(1), &[Proj::Q, Proj::V]),
+        0.5,
+        RankRule::DiagRatio,
+    )?;
+    let mut session =
+        Session::finetune(pipe.rt, &preset, &method, HeadKind::Cls, &warm_bb, None, cfg.seed)?;
+
+    // 2. Tiered adapter resolution: registry hits are fingerprint-checked
+    //    against this session's layout and backbone; misses train and
+    //    publish back.
     println!("[serve] preparing {} task adapters…", tasks.len());
+    let registry = match &sc.adapter_store {
+        Some(dir) => {
+            let reg = Registry::open(dir)?;
+            println!(
+                "[serve] adapter store: {} ({} record(s) on disk)",
+                reg.dir().display(),
+                reg.len()
+            );
+            Some(reg)
+        }
+        None => {
+            println!("[serve] adapter store: disabled (--no-warm-start)");
+            None
+        }
+    };
+    // The "backbone" fingerprint covers everything frozen: the warmed
+    // backbone tensors AND the method-derived factors/masks, so a record
+    // trained under a different τ/scope (same layout, same backbone) is
+    // still rejected.
+    let backbone_fp = store::fingerprint_extend(
+        store::fingerprint_params(&warm_bb),
+        &method.frozen_inputs(),
+    );
+    let mut tiers = TieredAdapters::new(
+        registry,
+        store::fingerprint_layout(session.layout()),
+        backbone_fp,
+        session.backend().backbone_repr(),
+        &cfg.preset,
+        method.artifact_name(),
+        cfg.seed,
+    );
+    let t_prep = Instant::now();
+    let layout = session.layout().clone();
+    tiers.prefetch(&layout, &tasks);
     let mut states: BTreeMap<String, Vec<f32>> = BTreeMap::new();
     let mut n_classes: BTreeMap<String, usize> = BTreeMap::new();
-    let mut session: Option<Session> = None;
-    let (warm_bb, _) = pipe.warmed(tasks[0])?;
+    let mut from_store = 0usize;
+    let mut recorded_train_ms = 0f64;
+    let mut steps_this_run = 0usize;
     for name in tasks {
-        let (_, warm_head) = pipe.warmed(name)?;
-        let method = Methods::qr_lora(
-            &warm_bb,
-            &preset,
-            Scope::last_layers((preset.n_layers / 3).max(1), &[Proj::Q, Proj::V]),
-            0.5,
-            RankRule::DiagRatio,
-        )?;
-        let data = pipe.data(name)?;
-        let tc = TrainConfig {
-            steps: cfg.steps.min(150),
-            lr: cfg.lr_adapter,
-            warmup_steps: 5,
-            train_examples: 2000,
-            log_every: 1000,
-        };
-        let mut s = Session::finetune(
-            pipe.rt, &preset, &method, data.spec.head, &warm_bb, Some(&warm_head), cfg.seed,
-        )?;
-        let batcher = Batcher::new(&preset, false);
-        let mut rng = Rng::new(cfg.seed ^ 0xD0);
-        let mut step = 0;
-        'outer: loop {
-            for chunk in
-                batcher.epoch(&data.train[..tc.train_examples.min(data.train.len())], &mut rng)
-            {
-                if step >= tc.steps {
-                    break 'outer;
+        let resolved = tiers.resolve(&layout, name, |key| {
+            // Train-on-miss (short budget — demo), wall-clock measured so
+            // the record carries the cost a warm start saves.
+            let t0 = Instant::now();
+            let (_, warm_head) = pipe.warmed(name)?;
+            let data = pipe.data(name)?;
+            let tc = TrainConfig {
+                steps: cfg.steps.min(150),
+                lr: cfg.lr_adapter,
+                warmup_steps: 5,
+                train_examples: 2000,
+                log_every: 1000,
+            };
+            let mut s = Session::finetune(
+                pipe.rt, &preset, &method, data.spec.head, &warm_bb, Some(&warm_head), cfg.seed,
+            )?;
+            let batcher = Batcher::new(&preset, false);
+            let mut rng = Rng::new(cfg.seed ^ 0xD0);
+            let mut step = 0;
+            'outer: loop {
+                for chunk in batcher
+                    .epoch(&data.train[..tc.train_examples.min(data.train.len())], &mut rng)
+                {
+                    if step >= tc.steps {
+                        break 'outer;
+                    }
+                    let b = batcher.assemble(&chunk);
+                    s.step(&b, data.spec.n_classes, tc.lr_at(step))?;
+                    step += 1;
                 }
-                let b = batcher.assemble(&chunk);
-                s.step(&b, data.spec.n_classes, tc.lr_at(step))?;
-                step += 1;
             }
+            steps_this_run += step;
+            let metric = s
+                .evaluate(&batcher, &data, Split::Dev)?
+                .result
+                .headline(metric_kind(name));
+            let train_ms = t0.elapsed().as_secs_f64() * 1e3;
+            println!(
+                "[serve]   {name}: adapter trained ({} trainable params, \
+                 dev metric {metric:.1}, {train_ms:.0} ms)",
+                s.trainable_params()
+            );
+            AdapterRecord::from_session(
+                &s,
+                key.clone(),
+                backbone_fp,
+                data.spec.n_classes,
+                metric,
+                train_ms,
+                false,
+            )
+        })?;
+        if resolved.source == Source::Disk {
+            from_store += 1;
+            recorded_train_ms += resolved.train_ms;
+            println!(
+                "[serve]   {name}: adapter loaded from store (dev metric {:.1} on record)",
+                resolved.eval_metric
+            );
         }
-        states.insert(name.to_string(), s.download_state()?);
-        n_classes.insert(name.to_string(), data.spec.n_classes);
-        println!(
-            "[serve]   {name}: adapter ready ({} trainable params, state {:.1} KiB)",
-            s.trainable_params(),
-            (s.layout().total * 4) as f64 / 1024.0
-        );
-        session = Some(s);
+        states.insert(name.to_string(), resolved.state.clone());
+        n_classes.insert(name.to_string(), resolved.n_classes);
     }
-    let mut session = session.unwrap();
+    let prep_ms = t_prep.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "[serve] adapter prep: {from_store}/{} from store, {} trained, \
+         warm-up training steps: {steps_this_run}",
+        tasks.len(),
+        tiers.stats.trained
+    );
+    if from_store == tasks.len() && recorded_train_ms > 0.0 {
+        println!(
+            "[serve]   warm start: {prep_ms:.1} ms (records list {recorded_train_ms:.0} ms \
+             of training) → {:.0}x faster startup",
+            recorded_train_ms / prep_ms.max(1e-3)
+        );
+    }
 
-    // 2. Build a mixed request stream.
+    // 3. Build a mixed request stream.
     let mut rng = Rng::new(cfg.seed ^ 0x5EED);
     let mut queue: VecDeque<Request> = VecDeque::new();
     for id in 0..sc.requests {
@@ -524,7 +629,7 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
     }
     let batcher = Batcher::new(&preset, false);
 
-    // 3. Batched path: resident bank, mixed batches, no per-request swaps.
+    // 4. Batched path: resident bank, mixed batches, no per-request swaps.
     let (batched_results, batched_stats) = {
         let mut router =
             Router::new(&session, batcher.clone(), sc.max_batch, sc.resident_adapters)?;
@@ -536,12 +641,12 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
         (results, router.stats)
     };
 
-    // 4. Swap baseline on the identical stream.
+    // 5. Swap baseline on the identical stream.
     let mut swap_stats = RouterStats::default();
     let mut q = queue.clone();
     let swap_results = serve_swap(&mut session, &batcher, &states, &mut q, &mut swap_stats)?;
 
-    // 5. Per-request agreement + accuracy.
+    // 6. Per-request agreement + accuracy.
     let k = session.layout().param("head/wc")?.shape[1];
     let mut by_id: BTreeMap<usize, &Vec<f32>> = BTreeMap::new();
     for (r, l) in &swap_results {

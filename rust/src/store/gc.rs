@@ -1,0 +1,171 @@
+//! Registry garbage collection: prune adapter records by key, age, or
+//! count.
+//!
+//! Policy semantics (CLI `adapters gc`):
+//!
+//! * `task` — restrict the candidate set to one task's records; with no
+//!   other criterion, prune *all* of them (prune-by-key).
+//! * `max_age_secs` — drop candidates older than this.
+//! * `max_count` — after age pruning, keep only the newest N candidates.
+//!
+//! At least one criterion is required — a bare `gc` refusing to delete
+//! everything is a feature. `dry_run` reports what would go without
+//! touching the index or the files.
+
+use super::format::AdapterKey;
+use super::registry::Registry;
+
+/// What to prune. See the module docs for semantics.
+#[derive(Clone, Debug, Default)]
+pub struct GcPolicy {
+    pub task: Option<String>,
+    pub max_age_secs: Option<u64>,
+    pub max_count: Option<usize>,
+}
+
+impl GcPolicy {
+    /// True when no criterion is set (gc must refuse).
+    pub fn is_empty(&self) -> bool {
+        self.task.is_none() && self.max_age_secs.is_none() && self.max_count.is_none()
+    }
+}
+
+/// What a GC pass removed (or would remove, under `dry_run`).
+#[derive(Debug, Default)]
+pub struct GcReport {
+    pub removed: Vec<AdapterKey>,
+    pub kept: usize,
+    pub freed_bytes: u64,
+}
+
+/// Apply a policy. `now_unix` is passed in (not sampled) so age pruning
+/// is testable.
+pub fn gc(
+    reg: &mut Registry,
+    policy: &GcPolicy,
+    now_unix: u64,
+    dry_run: bool,
+) -> anyhow::Result<GcReport> {
+    anyhow::ensure!(
+        !policy.is_empty(),
+        "refusing to gc with no criteria: pass --task, --max-age-days, or --max-count"
+    );
+    // Candidates within scope, newest first.
+    let mut candidates: Vec<(AdapterKey, u64, u64)> = reg
+        .entries()
+        .iter()
+        .filter(|e| policy.task.as_deref().map(|t| e.key.task == t).unwrap_or(true))
+        .map(|e| (e.key.clone(), e.created_unix, e.bytes))
+        .collect();
+    candidates.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+
+    let mut doomed: Vec<AdapterKey> = Vec::new();
+    let mut survivors: Vec<&(AdapterKey, u64, u64)> = Vec::new();
+    for c in &candidates {
+        let too_old = policy
+            .max_age_secs
+            .map(|max| now_unix.saturating_sub(c.1) > max)
+            .unwrap_or(false);
+        if too_old {
+            doomed.push(c.0.clone());
+        } else {
+            survivors.push(c);
+        }
+    }
+    if let Some(max) = policy.max_count {
+        for c in survivors.iter().skip(max) {
+            doomed.push(c.0.clone());
+        }
+    } else if policy.max_age_secs.is_none() {
+        // Pure key prune: --task with no age/count criterion drops all.
+        doomed.extend(survivors.iter().map(|c| c.0.clone()));
+    }
+
+    if dry_run {
+        let freed_planned: u64 = candidates
+            .iter()
+            .filter(|c| doomed.contains(&c.0))
+            .map(|c| c.2)
+            .sum();
+        let kept = reg.len() - doomed.len();
+        return Ok(GcReport { removed: doomed, kept, freed_bytes: freed_planned });
+    }
+    // `removed` reflects what actually left the store: an undeletable
+    // record file keeps its index entry and is not reported as removed.
+    let (freed_bytes, removed) = reg.remove(&doomed)?;
+    Ok(GcReport { removed, kept: reg.len(), freed_bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::format::{AdapterRecord, RecordMeta};
+    use crate::tensor::Tensor;
+    use std::collections::BTreeMap;
+
+    fn record(task: &str, seed: u64, created_unix: u64) -> AdapterRecord {
+        let mut params = BTreeMap::new();
+        params.insert("head/wc".to_string(), Tensor::zeros(&[2, 2]));
+        AdapterRecord {
+            meta: RecordMeta {
+                key: AdapterKey::new("tiny", "qrlora", task, seed),
+                manifest_fp: 1,
+                backbone_fp: 2,
+                backbone_repr: "f32".to_string(),
+                n_classes: 2,
+                eval_metric: 0.5,
+                steps: 10,
+                train_ms: 1.0,
+                created_unix,
+            },
+            params,
+            adam: None,
+        }
+    }
+
+    fn tmp_registry(name: &str) -> Registry {
+        let dir = std::env::temp_dir().join("qrlora_gc_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        Registry::open(&dir).unwrap()
+    }
+
+    #[test]
+    fn gc_refuses_empty_policy() {
+        let mut reg = tmp_registry("empty_policy");
+        assert!(gc(&mut reg, &GcPolicy::default(), 100, false).is_err());
+    }
+
+    #[test]
+    fn gc_by_age_count_and_task() {
+        let mut reg = tmp_registry("age_count");
+        reg.publish(&record("sst2", 1, 100)).unwrap();
+        reg.publish(&record("sst2", 2, 200)).unwrap();
+        reg.publish(&record("mrpc", 1, 50)).unwrap();
+        reg.publish(&record("qnli", 1, 300)).unwrap();
+
+        // Dry run never mutates.
+        let policy = GcPolicy { max_age_secs: Some(150), ..Default::default() };
+        let dry = gc(&mut reg, &policy, 300, true).unwrap();
+        assert_eq!(dry.removed.len(), 2, "{:?}", dry.removed); // ages 250, 200 > 150
+        assert_eq!(reg.len(), 4);
+
+        // Age prune for real: created 100 (age 200) and 50 (age 250) go.
+        let report = gc(&mut reg, &policy, 300, false).unwrap();
+        assert_eq!(report.removed.len(), 2);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.lookup(&AdapterKey::new("tiny", "qrlora", "mrpc", 1)).is_none());
+
+        // Count prune: keep only the newest 1.
+        let policy = GcPolicy { max_count: Some(1), ..Default::default() };
+        let report = gc(&mut reg, &policy, 300, false).unwrap();
+        assert_eq!(report.kept, 1);
+        assert!(reg.lookup(&AdapterKey::new("tiny", "qrlora", "qnli", 1)).is_some());
+
+        // Task prune with no other criterion drops that task entirely.
+        reg.publish(&record("sst2", 9, 400)).unwrap();
+        let policy = GcPolicy { task: Some("sst2".to_string()), ..Default::default() };
+        let report = gc(&mut reg, &policy, 500, false).unwrap();
+        assert_eq!(report.removed, vec![AdapterKey::new("tiny", "qrlora", "sst2", 9)]);
+        assert_eq!(reg.len(), 1, "qnli record must survive a task-scoped prune");
+    }
+}

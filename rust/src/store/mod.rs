@@ -1,0 +1,64 @@
+//! Durable adapter store: trained adapters as first-class artifacts.
+//!
+//! QR-LoRA's premise is that a task adaptation is tiny — a λ coefficient
+//! vector plus a head over a shared frozen backbone — which makes a
+//! trained adapter worth *keeping*: serialize it once, verify it, ship
+//! it, and hot-load it into any server holding the same backbone. This
+//! subsystem provides exactly that:
+//!
+//! * [`format`] — the versioned, checksummed single-file record
+//!   (`*.qad`): per-section CRC-32, manifest + backbone fingerprints,
+//!   trainable tensors, optional Adam state, achieved eval metric. Its
+//!   named-tensor codec is shared with `model::checkpoint`.
+//! * [`registry`] — the atomic `index.json` over a record directory:
+//!   write-temp-then-rename everywhere, stale-entry recovery and index
+//!   rebuild on open, list/lookup/verify.
+//! * [`tier`] — three-tier resolution for serving: RAM-resident → disk
+//!   (fingerprint-checked against the live backbone/manifest, loads
+//!   dispatched on the worker pool) → train-on-miss, which publishes the
+//!   fresh record back.
+//! * [`gc`] — prune records by key, age, or count.
+//!
+//! The `serve` demo warm starts from the store (`--adapter-store`,
+//! `--no-warm-start`), and the `adapters` CLI command exposes
+//! list/verify/gc. See ARCHITECTURE.md §"Adapter store".
+
+pub mod format;
+pub mod gc;
+pub mod registry;
+pub mod tier;
+
+pub use format::{
+    fingerprint_extend, fingerprint_layout, fingerprint_params, AdamState, AdapterKey,
+    AdapterRecord, RecordMeta,
+};
+pub use gc::{GcPolicy, GcReport};
+pub use registry::{Registry, RegistryEntry, VerifyResult, DEFAULT_STORE_DIR};
+pub use tier::{ResolvedAdapter, Source, TierStats, TieredAdapters};
+
+use std::path::Path;
+
+/// Unix seconds now (0 if the clock is before the epoch).
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Write a file atomically: write a `.tmp<pid>` sibling, then rename
+/// into place. A crash mid-write leaves only the temp file — a
+/// half-written file can never sit under a published name — and
+/// [`Registry::open`] sweeps temp files once they are demonstrably stale.
+/// The pid suffix keeps two processes publishing the same path from
+/// interleaving writes into one temp file.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("cannot write {tmp:?}: {e}"))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot move {tmp:?} into place at {path:?}: {e}"))?;
+    Ok(())
+}

@@ -1,0 +1,393 @@
+//! The adapter registry: an atomic `index.json` over a directory of
+//! adapter record files.
+//!
+//! The index is pure acceleration — every record file is self-describing
+//! (`format::AdapterRecord`), so the registry can always rebuild the
+//! index by scanning the directory. That is exactly what [`Registry::open`]
+//! does when it finds damage:
+//!
+//! * leftover `*.tmp<pid>` files (a crashed [`super::atomic_write`]) are
+//!   deleted once stale — a rename that never happened publishes
+//!   nothing, and fresh temp files are left alone in case they belong to
+//!   a live sibling process mid-publish;
+//! * index entries whose record file vanished are dropped;
+//! * record files the index doesn't know (an index write that crashed
+//!   after the record rename, or a hand-copied record) are adopted by
+//!   reading their metadata;
+//! * an unreadable/corrupt `index.json` triggers a full rebuild from the
+//!   record files.
+//!
+//! All writes — record publish and index update — go through
+//! write-temp-then-rename, so a reader never observes a half-written file
+//! under a published name.
+
+use std::path::{Path, PathBuf};
+
+use super::format::{fp_hex, parse_fp, AdapterKey, AdapterRecord};
+use crate::util::json::Json;
+
+/// Default store location (under the same `runs/` tree as the pipeline's
+/// backbone/warm-up caches).
+pub const DEFAULT_STORE_DIR: &str = "runs/adapters";
+
+/// Record file extension.
+pub const RECORD_EXT: &str = "qad";
+
+/// Temp files younger than this are presumed to belong to a live sibling
+/// process and are left alone by the [`Registry::open`] sweep.
+pub const TMP_SWEEP_AGE_SECS: u64 = 60;
+
+/// One index row: the key plus enough metadata to list/GC/pre-filter
+/// without opening the record file.
+#[derive(Clone, Debug)]
+pub struct RegistryEntry {
+    pub key: AdapterKey,
+    /// Record file name, relative to the registry directory.
+    pub file: String,
+    pub manifest_fp: u64,
+    pub backbone_fp: u64,
+    pub n_classes: usize,
+    pub eval_metric: f64,
+    pub train_ms: f64,
+    pub created_unix: u64,
+    pub bytes: u64,
+}
+
+impl RegistryEntry {
+    fn from_record(rec: &AdapterRecord, file: String, bytes: u64) -> RegistryEntry {
+        RegistryEntry {
+            key: rec.meta.key.clone(),
+            file,
+            manifest_fp: rec.meta.manifest_fp,
+            backbone_fp: rec.meta.backbone_fp,
+            n_classes: rec.meta.n_classes,
+            eval_metric: rec.meta.eval_metric,
+            train_ms: rec.meta.train_ms,
+            created_unix: rec.meta.created_unix,
+            bytes,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.key.preset.clone())),
+            ("method", Json::str(self.key.method.clone())),
+            ("task", Json::str(self.key.task.clone())),
+            ("seed", Json::str(self.key.seed.to_string())),
+            ("file", Json::str(self.file.clone())),
+            ("manifest_fp", Json::str(fp_hex(self.manifest_fp))),
+            ("backbone_fp", Json::str(fp_hex(self.backbone_fp))),
+            ("n_classes", Json::num(self.n_classes as f64)),
+            ("eval_metric", Json::num(self.eval_metric)),
+            ("train_ms", Json::num(self.train_ms)),
+            ("created_unix", Json::num(self.created_unix as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<RegistryEntry> {
+        let s = |k: &str| -> anyhow::Result<&str> {
+            j.req(k)?.as_str().ok_or_else(|| anyhow::anyhow!("index entry: {k} not a string"))
+        };
+        let seed = s("seed")?
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("index entry: bad seed"))?;
+        // Strict: a wrong-typed field triggers the index rebuild path in
+        // `open()` rather than silently defaulting (created_unix = 0
+        // would age-GC a valid record on sight).
+        let num = |k: &str| -> anyhow::Result<f64> {
+            j.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("index entry: bad {k}"))
+        };
+        let uint = |k: &str| -> anyhow::Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow::anyhow!("index entry: bad {k}"))
+        };
+        Ok(RegistryEntry {
+            key: AdapterKey::new(s("preset")?, s("method")?, s("task")?, seed),
+            file: s("file")?.to_string(),
+            manifest_fp: parse_fp(s("manifest_fp")?)?,
+            backbone_fp: parse_fp(s("backbone_fp")?)?,
+            n_classes: uint("n_classes")?,
+            eval_metric: num("eval_metric")?,
+            train_ms: num("train_ms")?,
+            created_unix: uint("created_unix")? as u64,
+            bytes: uint("bytes")? as u64,
+        })
+    }
+}
+
+/// Verification outcome for one registry entry.
+pub struct VerifyResult {
+    pub key: AdapterKey,
+    pub file: String,
+    /// `Ok(())` when the record file decodes, every section checksum
+    /// holds, and its metadata matches the index row.
+    pub result: anyhow::Result<()>,
+}
+
+/// The versioned adapter registry over one directory.
+pub struct Registry {
+    dir: PathBuf,
+    entries: Vec<RegistryEntry>,
+}
+
+impl Registry {
+    /// Open (creating the directory if needed), recovering from any
+    /// crashed-write debris. See the module docs for the recovery rules.
+    pub fn open(dir: &Path) -> anyhow::Result<Registry> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create adapter store {dir:?}: {e}"))?;
+
+        // 1. Sweep crashed-write temp files (`*.tmp<pid>`, see
+        //    `super::atomic_write`) — but only once they are demonstrably
+        //    stale: a fresh temp file may be a *live* sibling process
+        //    mid-publish, and deleting it would make that publish vanish.
+        //    Fresh debris is harmless meanwhile (nothing ever reads temp
+        //    names as records or index).
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let is_tmp = path
+                .extension()
+                .and_then(|e| e.to_str())
+                .map(|e| e.starts_with("tmp"))
+                .unwrap_or(false);
+            if !is_tmp || !path.is_file() {
+                continue;
+            }
+            let stale = std::fs::metadata(&path)
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .map(|age| age.as_secs() >= TMP_SWEEP_AGE_SECS)
+                // Unreadable mtime: assume stale (better a rare lost
+                // in-flight publish than debris that never clears).
+                .unwrap_or(true);
+            if stale {
+                crate::warnln!("adapter store: removing stale crashed-write leftover {path:?}");
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+
+        // 2. Load the index; a corrupt one is rebuilt from the records.
+        let index_path = dir.join("index.json");
+        let mut entries: Vec<RegistryEntry> = Vec::new();
+        let mut dirty = false;
+        if index_path.exists() {
+            match read_index(&index_path) {
+                Ok(read) => entries = read,
+                Err(e) => {
+                    crate::warnln!(
+                        "adapter store: unreadable index {index_path:?} ({e:#}); \
+                         rebuilding from record files"
+                    );
+                    dirty = true;
+                }
+            }
+        }
+
+        // 3. Drop stale entries (record file gone).
+        let before = entries.len();
+        entries.retain(|e| {
+            let ok = dir.join(&e.file).is_file();
+            if !ok {
+                crate::warnln!(
+                    "adapter store: dropping stale index entry {} ({} is missing)",
+                    e.key,
+                    e.file
+                );
+            }
+            ok
+        });
+        dirty |= entries.len() != before;
+
+        // 4. Adopt orphaned record files the index doesn't know.
+        for path in record_dir_files(dir, RECORD_EXT)? {
+            let file = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+            if entries.iter().any(|e| e.file == file) {
+                continue;
+            }
+            match AdapterRecord::load(&path) {
+                Ok(rec) => {
+                    // A key already indexed under another file keeps its
+                    // indexed record (publish names files by key, so this
+                    // only happens with hand-copied files); adopting the
+                    // stray would flip-flop between opens.
+                    if entries.iter().any(|e| e.key == rec.meta.key) {
+                        crate::warnln!(
+                            "adapter store: ignoring duplicate-key record {file} ({})",
+                            rec.meta.key
+                        );
+                        continue;
+                    }
+                    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                    crate::debugln!("adapter store: adopting unindexed record {file}");
+                    entries.push(RegistryEntry::from_record(&rec, file, bytes));
+                    dirty = true;
+                }
+                Err(e) => {
+                    crate::warnln!("adapter store: ignoring unreadable record {file}: {e:#}");
+                }
+            }
+        }
+
+        let reg = Registry { dir: dir.to_path_buf(), entries };
+        if dirty {
+            reg.write_index()?;
+        }
+        Ok(reg)
+    }
+
+    /// The directory this registry lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All entries, publish order.
+    pub fn entries(&self) -> &[RegistryEntry] {
+        &self.entries
+    }
+
+    /// Find the entry for a key.
+    pub fn lookup(&self, key: &AdapterKey) -> Option<&RegistryEntry> {
+        self.entries.iter().find(|e| &e.key == key)
+    }
+
+    /// Absolute path of an entry's record file.
+    pub fn record_path(&self, entry: &RegistryEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Publish a record: atomic record write, then atomic index update.
+    /// An existing record for the same key is replaced. Returns the
+    /// record's path.
+    pub fn publish(&mut self, record: &AdapterRecord) -> anyhow::Result<PathBuf> {
+        let file = format!("{}.{RECORD_EXT}", record.meta.key.id());
+        let path = self.dir.join(&file);
+        record.save(&path)?;
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        self.entries.retain(|e| e.key != record.meta.key);
+        self.entries.push(RegistryEntry::from_record(record, file, bytes));
+        self.write_index()?;
+        Ok(path)
+    }
+
+    /// Load and checksum-verify the record for a key.
+    pub fn load(&self, key: &AdapterKey) -> anyhow::Result<AdapterRecord> {
+        let entry = self
+            .lookup(key)
+            .ok_or_else(|| anyhow::anyhow!("adapter store: no record for {key}"))?;
+        let rec = AdapterRecord::load(&self.record_path(entry))?;
+        anyhow::ensure!(
+            rec.meta.key == entry.key,
+            "adapter store: {} holds a record for {}, index says {}",
+            entry.file,
+            rec.meta.key,
+            entry.key
+        );
+        Ok(rec)
+    }
+
+    /// Re-read and checksum-verify every record against its index row.
+    pub fn verify(&self) -> Vec<VerifyResult> {
+        self.entries
+            .iter()
+            .map(|entry| {
+                let result = AdapterRecord::load(&self.record_path(entry)).and_then(|rec| {
+                    anyhow::ensure!(
+                        rec.meta.key == entry.key,
+                        "record key {} != index key {}",
+                        rec.meta.key,
+                        entry.key
+                    );
+                    anyhow::ensure!(
+                        rec.meta.manifest_fp == entry.manifest_fp
+                            && rec.meta.backbone_fp == entry.backbone_fp,
+                        "record fingerprints drifted from the index row"
+                    );
+                    Ok(())
+                });
+                VerifyResult { key: entry.key.clone(), file: entry.file.clone(), result }
+            })
+            .collect()
+    }
+
+    /// Remove entries (and their record files). Returns the freed bytes
+    /// and the keys actually removed. An entry whose file cannot be
+    /// deleted is **kept in the index** (and excluded from both) — the
+    /// alternative would silently resurrect the record on the next
+    /// `open()`, which re-adopts any on-disk record the index forgot.
+    pub fn remove(&mut self, keys: &[AdapterKey]) -> anyhow::Result<(u64, Vec<AdapterKey>)> {
+        let mut freed = 0u64;
+        let mut removed = Vec::new();
+        for key in keys {
+            if let Some(i) = self.entries.iter().position(|e| &e.key == key) {
+                let path = self.dir.join(&self.entries[i].file);
+                match std::fs::remove_file(&path) {
+                    Ok(()) => {}
+                    // Already gone = removed as far as the caller cares.
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => {
+                        crate::warnln!(
+                            "adapter store: cannot delete {path:?} ({e}); keeping its \
+                             index entry"
+                        );
+                        continue;
+                    }
+                }
+                let entry = self.entries.remove(i);
+                freed += entry.bytes;
+                removed.push(entry.key);
+            }
+        }
+        if !removed.is_empty() {
+            self.write_index()?;
+        }
+        Ok((freed, removed))
+    }
+
+    fn write_index(&self) -> anyhow::Result<()> {
+        let doc = Json::obj(vec![
+            ("version", Json::num(super::format::FORMAT_VERSION as f64)),
+            ("entries", Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())),
+        ]);
+        super::atomic_write(&self.dir.join("index.json"), doc.pretty().as_bytes())
+    }
+}
+
+fn read_index(path: &Path) -> anyhow::Result<Vec<RegistryEntry>> {
+    let text = std::fs::read_to_string(path)?;
+    let doc = Json::parse(&text)?;
+    let version = doc.req("version")?.as_usize().unwrap_or(0);
+    anyhow::ensure!(
+        version as u32 == super::format::FORMAT_VERSION,
+        "index version {version}, this build reads v{}",
+        super::format::FORMAT_VERSION
+    );
+    doc.req("entries")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("index entries must be an array"))?
+        .iter()
+        .map(RegistryEntry::from_json)
+        .collect()
+}
+
+/// Files in `dir` with the given extension (non-recursive, sorted for
+/// deterministic adoption order).
+fn record_dir_files(dir: &Path, ext: &str) -> anyhow::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_file() && path.extension().map(|e| e == ext).unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    out.sort();
+    Ok(out)
+}

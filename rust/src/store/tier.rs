@@ -1,0 +1,295 @@
+//! Tiered adapter resolution: RAM → disk (registry) → train-on-miss.
+//!
+//! [`TieredAdapters`] extends the serving stack's RAM tier (the router's
+//! library + the backend-resident `AdapterBank`) downward with the durable
+//! registry. Resolution order for a task:
+//!
+//! 1. **RAM** — already resolved this process: free.
+//! 2. **Disk** — registry hit. The record's checksums are verified at
+//!    read time and its manifest/backbone fingerprints are checked against
+//!    the *live* session before the state is trusted; any failure is a
+//!    logged rejection that falls through to tier 3 (a corrupt record can
+//!    degrade startup cost, never correctness).
+//! 3. **Train-on-miss** — the caller-supplied trainer runs, and the fresh
+//!    record is published back to the registry so the next process warm
+//!    starts.
+//!
+//! Disk loads are dispatched onto the worker pool:
+//! [`TieredAdapters::prefetch`] reads and decodes all registry hits in
+//! parallel, one pool task per record, so router admission never blocks
+//! on a cold file read — by the time requests are admitted the states
+//! are RAM-resident.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::format::{AdapterKey, AdapterRecord};
+use super::registry::Registry;
+use crate::runtime::StateLayout;
+use crate::util::pool;
+
+/// Where a resolved adapter came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// Resolved earlier in this process.
+    Ram,
+    /// Loaded from a verified registry record.
+    Disk,
+    /// Trained this process (registry miss or rejected record).
+    Trained,
+}
+
+/// A serving-ready adapter: the flat state vector plus what the router
+/// needs to register it.
+#[derive(Clone)]
+pub struct ResolvedAdapter {
+    pub state: Vec<f32>,
+    pub n_classes: usize,
+    pub eval_metric: f64,
+    /// Measured training cost recorded with the adapter (what a warm
+    /// start saves).
+    pub train_ms: f64,
+    pub source: Source,
+}
+
+/// Resolution counters for the serving report.
+#[derive(Debug, Default)]
+pub struct TierStats {
+    pub ram_hits: usize,
+    pub disk_hits: usize,
+    pub trained: usize,
+    /// Registry records rejected (corrupt or fingerprint-mismatched) —
+    /// each fell through to training.
+    pub rejected: usize,
+    /// Wall-clock spent loading + verifying records, milliseconds.
+    pub load_ms: f64,
+    /// Wall-clock spent training misses, milliseconds.
+    pub train_ms: f64,
+}
+
+/// The tiered resolver. Generic over "how to train" (a closure per
+/// [`TieredAdapters::resolve`] call), so the server owns the training
+/// loop and the tiers own durability.
+pub struct TieredAdapters {
+    registry: Option<Registry>,
+    manifest_fp: u64,
+    backbone_fp: u64,
+    backbone_repr: String,
+    preset: String,
+    method: String,
+    seed: u64,
+    ram: BTreeMap<String, ResolvedAdapter>,
+    /// Tasks whose registry record was already rejected this process —
+    /// consulted by [`TieredAdapters::resolve`] so a record that failed
+    /// validation in `prefetch` is not re-read, re-warned about, and
+    /// re-counted before falling through to training.
+    rejected: BTreeSet<String>,
+    pub stats: TierStats,
+}
+
+impl TieredAdapters {
+    /// Build over an optional registry (None = store disabled: every
+    /// resolve trains, nothing persists). The fingerprints pin which
+    /// records are acceptable: `manifest_fp` from the live session layout
+    /// ([`super::format::fingerprint_layout`]), `backbone_fp` from the
+    /// frozen backbone ([`super::format::fingerprint_params`]),
+    /// `backbone_repr` from the live backend
+    /// ([`crate::runtime::Backend::backbone_repr`] — an f32-trained
+    /// record must not warm-start an int8 backend or vice versa).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        registry: Option<Registry>,
+        manifest_fp: u64,
+        backbone_fp: u64,
+        backbone_repr: &str,
+        preset: &str,
+        method: &str,
+        seed: u64,
+    ) -> TieredAdapters {
+        TieredAdapters {
+            registry,
+            manifest_fp,
+            backbone_fp,
+            backbone_repr: backbone_repr.to_string(),
+            preset: preset.to_string(),
+            method: method.to_string(),
+            seed,
+            ram: BTreeMap::new(),
+            rejected: BTreeSet::new(),
+            stats: TierStats::default(),
+        }
+    }
+
+    /// The registry key for a task under this resolver's preset/method/seed.
+    pub fn key(&self, task: &str) -> AdapterKey {
+        AdapterKey::new(&self.preset, &self.method, task, self.seed)
+    }
+
+    pub fn registry(&self) -> Option<&Registry> {
+        self.registry.as_ref()
+    }
+
+    /// True when `task` is already RAM-resident.
+    pub fn resident(&self, task: &str) -> bool {
+        self.ram.contains_key(task)
+    }
+
+    /// Read + decode every registry hit among `tasks` in parallel on the
+    /// worker pool, then verify and promote them to the RAM tier in task
+    /// order. Rejected records are logged and left for train-on-miss.
+    pub fn prefetch(&mut self, layout: &StateLayout, tasks: &[&str]) {
+        let Some(reg) = &self.registry else { return };
+        let pending: Vec<(String, std::path::PathBuf)> = tasks
+            .iter()
+            .filter(|t| !self.ram.contains_key(**t))
+            .filter_map(|t| {
+                reg.lookup(&self.key(t)).map(|e| (t.to_string(), reg.record_path(e)))
+            })
+            .collect();
+        if pending.is_empty() {
+            return;
+        }
+        let t0 = std::time::Instant::now();
+        // One pool task per record file; each writes only its own slot.
+        let mut results: Vec<Option<anyhow::Result<AdapterRecord>>> =
+            (0..pending.len()).map(|_| None).collect();
+        let slots = pool::split_sizes(&mut results, &vec![1; pending.len()]);
+        let mut jobs = Vec::with_capacity(pending.len());
+        for (slot, (_, path)) in slots.into_iter().zip(&pending) {
+            jobs.push(move || slot[0] = Some(AdapterRecord::load(path)));
+        }
+        pool::join_all(jobs);
+        for ((task, _), result) in pending.iter().zip(results) {
+            let loaded = result.expect("prefetch job must fill its slot");
+            match self.validate(layout, loaded) {
+                Ok(resolved) => {
+                    self.stats.disk_hits += 1;
+                    self.ram.insert(task.clone(), resolved);
+                }
+                Err(e) => {
+                    self.stats.rejected += 1;
+                    self.rejected.insert(task.clone());
+                    crate::warnln!(
+                        "adapter store: record for {task:?} rejected ({e:#}); \
+                         will retrain on miss"
+                    );
+                }
+            }
+        }
+        self.stats.load_ms += t0.elapsed().as_secs_f64() * 1e3;
+    }
+
+    /// Fingerprint-check a loaded record and unpack its state vector.
+    fn validate(
+        &self,
+        layout: &StateLayout,
+        loaded: anyhow::Result<AdapterRecord>,
+    ) -> anyhow::Result<ResolvedAdapter> {
+        let rec = loaded?;
+        rec.check_compat(self.manifest_fp, self.backbone_fp, &self.backbone_repr)?;
+        Ok(ResolvedAdapter {
+            state: rec.state_vector(layout)?,
+            n_classes: rec.meta.n_classes,
+            eval_metric: rec.meta.eval_metric,
+            train_ms: rec.meta.train_ms,
+            source: Source::Disk,
+        })
+    }
+
+    /// Resolve one task through the tiers. `train` runs only on a full
+    /// miss (or rejected record) and must return the fresh record, which
+    /// is then published back to the registry (best-effort: a publish
+    /// failure degrades durability, not serving) and promoted to RAM.
+    pub fn resolve(
+        &mut self,
+        layout: &StateLayout,
+        task: &str,
+        train: impl FnOnce(&AdapterKey) -> anyhow::Result<AdapterRecord>,
+    ) -> anyhow::Result<&ResolvedAdapter> {
+        // Tier 1: RAM. (Entries land here tagged with their original
+        // source; only a repeat resolve counts as a RAM hit.)
+        if self.ram.contains_key(task) {
+            self.stats.ram_hits += 1;
+            return Ok(&self.ram[task]);
+        }
+
+        let key = self.key(task);
+
+        // Tier 2: disk (skipped when prefetch already rejected this
+        // task's record — straight to training, no duplicate read/warn).
+        if !self.rejected.contains(task) {
+            if let Some(reg) = &self.registry {
+                if reg.lookup(&key).is_some() {
+                    let t0 = std::time::Instant::now();
+                    let loaded = reg.load(&key);
+                    match self.validate(layout, loaded) {
+                        Ok(resolved) => {
+                            self.stats.load_ms += t0.elapsed().as_secs_f64() * 1e3;
+                            self.stats.disk_hits += 1;
+                            self.ram.insert(task.to_string(), resolved);
+                            return Ok(&self.ram[task]);
+                        }
+                        Err(e) => {
+                            self.stats.rejected += 1;
+                            self.rejected.insert(task.to_string());
+                            crate::warnln!(
+                                "adapter store: record for {task:?} rejected ({e:#}); \
+                                 retraining"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        // Tier 3: train, then publish back.
+        let t0 = std::time::Instant::now();
+        let record = train(&key)?;
+        self.stats.train_ms += t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.trained += 1;
+        anyhow::ensure!(
+            record.meta.key == key,
+            "trainer returned a record for {}, expected {key}",
+            record.meta.key
+        );
+        anyhow::ensure!(
+            record.meta.backbone_repr == self.backbone_repr,
+            "trainer returned a {} record, resolver serves a {} backbone",
+            record.meta.backbone_repr,
+            self.backbone_repr
+        );
+        // Symmetric compat checks: a trainer whose session layout or
+        // frozen inputs differ from the serving session would otherwise
+        // publish records that every later boot quietly rejects — the
+        // store would degrade to retrain-on-every-start with nothing but
+        // warnings.
+        anyhow::ensure!(
+            record.meta.manifest_fp == self.manifest_fp,
+            "trainer session layout (fingerprint {}) differs from the serving session ({})",
+            super::format::fp_hex(record.meta.manifest_fp),
+            super::format::fp_hex(self.manifest_fp)
+        );
+        anyhow::ensure!(
+            record.meta.backbone_fp == self.backbone_fp,
+            "trainer backbone (fingerprint {}) differs from the serving backbone ({})",
+            super::format::fp_hex(record.meta.backbone_fp),
+            super::format::fp_hex(self.backbone_fp)
+        );
+        let resolved = ResolvedAdapter {
+            state: record.state_vector(layout)?,
+            n_classes: record.meta.n_classes,
+            eval_metric: record.meta.eval_metric,
+            train_ms: record.meta.train_ms,
+            source: Source::Trained,
+        };
+        if let Some(reg) = &mut self.registry {
+            match reg.publish(&record) {
+                Ok(path) => crate::debugln!("adapter store: published {path:?}"),
+                Err(e) => {
+                    crate::warnln!("adapter store: cannot publish record for {task:?}: {e:#}")
+                }
+            }
+        }
+        self.ram.insert(task.to_string(), resolved);
+        Ok(&self.ram[task])
+    }
+}

@@ -40,6 +40,20 @@ impl Method {
             Method::Lora { label, .. } => label.clone(),
         }
     }
+
+    /// The method-derived frozen inputs (QR factors/masks for QR-LoRA,
+    /// A/B/scales for LoRA; empty for full FT). These ride beside the
+    /// backbone as frozen session inputs, and the adapter store folds
+    /// them into its backbone fingerprint
+    /// (`store::format::fingerprint_extend`) so a record trained under a
+    /// different τ/scope/α is rejected at warm start.
+    pub fn frozen_inputs(&self) -> Vec<(String, Vec<f32>)> {
+        match self {
+            Method::FullFt => Vec::new(),
+            Method::QrLora(set) => set.frozen_inputs(),
+            Method::Lora { set, .. } => set.frozen_inputs(),
+        }
+    }
 }
 
 /// Training hyperparameters + budget.
@@ -151,25 +165,14 @@ impl<'a> Session<'a> {
         }
         let state_buf = bk.upload_f32(&state, &[layout.total])?;
 
-        // --- frozen inputs -------------------------------------------------
+        // --- frozen inputs (adapter methods: factors/masks + backbone) ----
         let mut frozen_values: BTreeMap<String, Vec<f32>> = BTreeMap::new();
-        match method {
-            Method::FullFt => {}
-            Method::QrLora(set) => {
-                for (name, v) in set.frozen_inputs() {
-                    frozen_values.insert(name, v);
-                }
-                for (name, t) in backbone {
-                    frozen_values.insert(name.clone(), t.data.clone());
-                }
+        if !matches!(method, Method::FullFt) {
+            for (name, v) in method.frozen_inputs() {
+                frozen_values.insert(name, v);
             }
-            Method::Lora { set, .. } => {
-                for (name, v) in set.frozen_inputs() {
-                    frozen_values.insert(name, v);
-                }
-                for (name, t) in backbone {
-                    frozen_values.insert(name.clone(), t.data.clone());
-                }
+            for (name, t) in backbone {
+                frozen_values.insert(name.clone(), t.data.clone());
             }
         }
         let mut frozen = Vec::new();
@@ -444,6 +447,17 @@ impl<'a> Session<'a> {
     /// Download the raw state vector (checkpointing).
     pub fn download_state(&self) -> anyhow::Result<Vec<f32>> {
         self.bk.download_f32(&self.state_buf)
+    }
+
+    /// Download the Adam moment vectors `(m, v)` from the state tail —
+    /// the optional optimizer-state section of a durable adapter record
+    /// (`store::format::AdapterRecord`), letting a later session resume
+    /// fine-tuning instead of only serving.
+    pub fn download_moments(&self) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let state = self.bk.download_f32(&self.state_buf)?;
+        let n = self.layout.n_params;
+        let base = self.layout.total - 3 * n;
+        Ok((state[base + n..base + 2 * n].to_vec(), state[base + 2 * n..base + 3 * n].to_vec()))
     }
 
     /// Restore a previously saved state vector.

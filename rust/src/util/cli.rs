@@ -119,7 +119,20 @@ impl Args {
 /// `--<flag>`; the `readme_documents_serve_flags` test (also run as a
 /// dedicated CI step) keeps docs and CLI in lockstep. Extend this list
 /// whenever `cmd_serve` in `main.rs` learns a new flag.
-pub const SERVE_FLAGS: &[&str] = &["requests", "max-batch", "resident-adapters"];
+pub const SERVE_FLAGS: &[&str] = &[
+    "requests",
+    "max-batch",
+    "resident-adapters",
+    "adapter-store",
+    "no-warm-start",
+];
+
+/// Flags the `adapters` store-management command accepts beyond
+/// `--adapter-store` (which [`SERVE_FLAGS`] already carries).
+///
+/// Same lockstep rule: each must appear as `--<flag>` in the README
+/// (enforced by `readme_documents_store_flags` and the matching CI step).
+pub const STORE_FLAGS: &[&str] = &["task", "max-age-days", "max-count", "dry-run"];
 
 /// Global performance/memory knobs every subcommand accepts (parsed in
 /// `main.rs`, handed to the backend factory via the environment).
@@ -227,6 +240,19 @@ mod tests {
             assert!(
                 readme.contains(&format!("--{flag}")),
                 "README.md must document perf flag --{flag}"
+            );
+        }
+    }
+
+    /// Same lockstep for the adapter-store management flags
+    /// (`adapters gc --max-age-days/--max-count/--dry-run`).
+    #[test]
+    fn readme_documents_store_flags() {
+        let readme = include_str!("../../../README.md");
+        for flag in STORE_FLAGS {
+            assert!(
+                readme.contains(&format!("--{flag}")),
+                "README.md must document store flag --{flag}"
             );
         }
     }

@@ -1,0 +1,38 @@
+//! FNV-1a 64-bit hashing (std-only) — the one byte-wise FNV in the tree,
+//! shared by parameter-init name seeding (`model::init_state`) and the
+//! adapter store's fingerprints (`store::format`).
+//!
+//! (`runtime/host.rs` keeps a separate *word-wise* FNV variant for its
+//! strided buffer fingerprint — different input domain, not a duplicate
+//! of this one.)
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Mix `bytes` into an FNV-1a accumulator.
+pub fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x100000001b3);
+    }
+}
+
+/// One-shot FNV-1a of a string's bytes.
+pub fn fnv1a_str(s: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv1a(&mut h, s.as_bytes());
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Canonical FNV-1a 64 test vectors.
+        assert_eq!(fnv1a_str(""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a_str("a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a_str("foobar"), 0x85944171f73967e8);
+    }
+}

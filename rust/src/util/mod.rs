@@ -2,6 +2,7 @@
 //! All std-only — the offline vendor set contains no serde/clap/rand.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod log;
 pub mod pool;

@@ -7,9 +7,11 @@
 //!    contiguous row spans and each task writes only its own disjoint
 //!    output slice. The per-element computation order inside a span is
 //!    exactly the serial order, so results are **bit-identical for every
-//!    thread count** (including 1). Reductions whose float-accumulation
-//!    order would depend on the partition (column sums, gradient norms)
-//!    deliberately stay serial in the callers.
+//!    thread count** (including 1). Reductions whose accumulation tree
+//!    could depend on the partition (column sums, LayerNorm dγ/dβ, the
+//!    gradient norm) run as **fixed-chunk partial sums**
+//!    ([`par_reduce_rows`]): the chunk boundaries are a function of the
+//!    row count alone, never the thread count.
 //! 2. **Zero per-call thread spawns.** A process-global pool of persistent
 //!    workers is lazily created on first use; scoped tasks borrow the
 //!    caller's stack (crossbeam-style `scope`/`spawn`) and the scope blocks
@@ -462,6 +464,56 @@ pub fn par_parts3<A, B, C, F>(
     join_all(jobs);
 }
 
+// ---------------------------------------------------------------------------
+// Fixed-chunk parallel reductions.
+// ---------------------------------------------------------------------------
+
+/// Rows per partial sum in [`par_reduce_rows`]. A constant — never derived
+/// from the thread count — so the partial-sum boundaries (and therefore the
+/// float-accumulation tree) are a function of the row count alone.
+pub const REDUCE_CHUNK: usize = 64;
+
+/// Thread-count-independent parallel row reduction.
+///
+/// Reduces `rows` logical rows into one `width`-wide accumulator. Rows are
+/// split into fixed chunks of [`REDUCE_CHUNK`]; `f(row0, n, partial)` must
+/// accumulate rows `row0 .. row0 + n` into its zero-initialized
+/// `width`-wide partial in ascending row order. Chunks evaluate on the pool
+/// (each writes only its own partial) and the partials are folded serially
+/// in chunk order, so the accumulation tree is fully determined by `rows`
+/// — results are **bit-identical for every thread count**. With a single
+/// chunk (`rows ≤ REDUCE_CHUNK`) the result equals the plain serial
+/// reduction. `work` ≈ total inner operations (serial cutoff, as in
+/// [`par_rows`]).
+pub fn par_reduce_rows<T, F>(rows: usize, width: usize, work: usize, f: F) -> Vec<T>
+where
+    T: Send + Copy + Default + std::ops::AddAssign,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let mut out = vec![T::default(); width];
+    if rows == 0 || width == 0 {
+        return out;
+    }
+    let n_chunks = rows.div_ceil(REDUCE_CHUNK);
+    if n_chunks == 1 {
+        f(0, rows, &mut out);
+        return out;
+    }
+    let mut partials = vec![T::default(); n_chunks * width];
+    par_rows(&mut partials, n_chunks, work, |c0, chunk| {
+        for (ci, part) in chunk.chunks_mut(width).enumerate() {
+            let row0 = (c0 + ci) * REDUCE_CHUNK;
+            f(row0, REDUCE_CHUNK.min(rows - row0), part);
+        }
+    });
+    for part in partials.chunks(width) {
+        for (o, &p) in out.iter_mut().zip(part) {
+            *o += p;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -581,6 +633,51 @@ mod tests {
             assert_eq!(serial, run(t), "threads={t}");
         }
         assert_eq!(LANE_CAP.with(|c| c.get()), 0, "cap must be restored");
+    }
+
+    #[test]
+    fn par_reduce_rows_covers_every_row_once() {
+        // Integer accumulators make coverage exact: the reduction of
+        // row-index weights must equal the closed form regardless of how
+        // rows and chunks line up.
+        for rows in [0usize, 1, 63, 64, 65, 200, 517] {
+            let got = with_threads(4, || {
+                par_reduce_rows::<u64, _>(rows, 2, 1 << 20, |row0, n, acc| {
+                    for i in row0..row0 + n {
+                        acc[0] += i as u64;
+                        acc[1] += 1;
+                    }
+                })
+            });
+            let want0: u64 = (0..rows as u64).sum();
+            assert_eq!(got, vec![want0, rows as u64], "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn par_reduce_rows_bit_identical_across_thread_counts() {
+        // Float partial sums: the chunk boundaries are fixed, so the
+        // accumulation tree — and every output bit — must not depend on
+        // the lane count. Shapes straddle the chunk size and the cutoff.
+        for rows in [1usize, 63, 64, 65, 130, 517] {
+            let width = 7usize;
+            let reduce = || {
+                par_reduce_rows::<f32, _>(rows, width, 1 << 20, |row0, n, acc| {
+                    for i in row0..row0 + n {
+                        for (j, a) in acc.iter_mut().enumerate() {
+                            *a += ((i * 31 + j) as f32).sin() * 0.37;
+                        }
+                    }
+                })
+            };
+            let serial = with_threads(1, reduce);
+            for t in [2usize, 3, 5, 8] {
+                let par = with_threads(t, reduce);
+                for (j, (a, b)) in serial.iter().zip(&par).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "rows={rows} t={t} col={j}");
+                }
+            }
+        }
     }
 
     #[test]

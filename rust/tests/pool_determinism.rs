@@ -81,6 +81,47 @@ fn t_matmul_zero_skip_rows_bit_identical() {
     }
 }
 
+#[test]
+fn fixed_chunk_row_reductions_bit_identical_across_thread_counts() {
+    // The PR-2 carve-out ("row reductions stay serial") is closed: column
+    // sums, LayerNorm dγ/dβ, and the global gradient norm now run as
+    // fixed-chunk partial sums (`pool::par_reduce_rows`). This mirrors the
+    // col_sum shape (the model-internal reductions are private; the
+    // train/pretrain step tests below cover them end to end) on sizes that
+    // straddle both the chunk size and the serial cutoff.
+    for &(rows, cols) in &[(8usize, 16usize), (64, 32), (65, 7), (300, 48), (1030, 5)] {
+        let mut rng = Rng::new((rows * 31 + cols) as u64);
+        let t = Tensor::randn(&[rows, cols], &mut rng, 1.0);
+        let colsum = || {
+            pool::par_reduce_rows::<f32, _>(rows, cols, 1 << 20, |row0, n, acc| {
+                for i in row0..row0 + n {
+                    for (a, &v) in acc.iter_mut().zip(t.row(i)) {
+                        *a += v;
+                    }
+                }
+            })
+        };
+        let serial = pool::with_threads(1, colsum);
+        for th in [2usize, 4, 7] {
+            let par = pool::with_threads(th, colsum);
+            assert_bits_eq(&serial, &par, &format!("col_sum {rows}x{cols} t={th}"));
+        }
+        // Grad-norm shape: one f64 accumulator over a flat buffer.
+        let sumsq = || {
+            pool::par_reduce_rows::<f64, _>(t.data.len(), 1, 1 << 20, |lo, len, acc| {
+                for &v in &t.data[lo..lo + len] {
+                    acc[0] += (v as f64) * (v as f64);
+                }
+            })[0]
+        };
+        let s = pool::with_threads(1, sumsq);
+        for th in [2usize, 4, 7] {
+            let p = pool::with_threads(th, sumsq);
+            assert_eq!(s.to_bits(), p.to_bits(), "sumsq {rows}x{cols} t={th}: {s} vs {p}");
+        }
+    }
+}
+
 fn setup(key: &str) -> (Preset, StateLayout, Vec<f32>, FrozenMap) {
     let m = Manifest::builtin();
     let a = m.artifact(key).unwrap();

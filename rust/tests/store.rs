@@ -1,0 +1,344 @@
+//! Integration tests for the durable adapter store: record round-trips
+//! (f32 and int8-backbone-trained adapters), corruption detection,
+//! registry crash recovery, and the warm-start bit-identity contract —
+//! logits served from a store-restored state must equal the freshly
+//! trained session's logits bit for bit, for both adapter methods.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use qrlora::adapters::{Proj, Scope};
+use qrlora::data::{task, Batch, Batcher, HeadKind, Lexicon, TaskData};
+use qrlora::linalg::RankRule;
+use qrlora::runtime::{Backend, HostBackend};
+use qrlora::store::{
+    fingerprint_layout, fingerprint_params, AdapterKey, AdapterRecord, GcPolicy, Registry,
+    Source, TieredAdapters,
+};
+use qrlora::tensor::Tensor;
+use qrlora::training::{Method, Methods, Session};
+use qrlora::util::rng::Rng;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("qrlora_store_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn synthetic_backbone(bk: &dyn Backend) -> BTreeMap<String, Tensor> {
+    let exe = bk.load("tiny/train_step_ft_cls").unwrap();
+    let mut rng = Rng::new(7);
+    let mut backbone = BTreeMap::new();
+    for f in &exe.spec.layout().unwrap().params {
+        if !f.name.starts_with("head/") {
+            backbone.insert(f.name.clone(), Tensor::randn(&f.shape, &mut rng, 0.05));
+        }
+    }
+    backbone
+}
+
+fn build_method(bk: &dyn Backend, name: &str, backbone: &BTreeMap<String, Tensor>) -> Method {
+    let preset = bk.manifest().preset("tiny").unwrap().clone();
+    match name {
+        "qrlora" => Methods::qr_lora(
+            backbone,
+            &preset,
+            Scope::all_layers(&[Proj::Q, Proj::V]),
+            0.5,
+            RankRule::DiagRatio,
+        )
+        .unwrap(),
+        "lora" => Methods::lora(backbone, &preset, 2.0, 1).unwrap(),
+        other => panic!("unknown method {other}"),
+    }
+}
+
+/// Train a few real steps so λ/A/B/head and the Adam moments are all
+/// non-trivial, and return the batch used (for forward comparisons).
+fn trained_session<'a>(
+    bk: &'a dyn Backend,
+    method: &Method,
+    backbone: &BTreeMap<String, Tensor>,
+    steps: usize,
+) -> (Session<'a>, Batch) {
+    let preset = bk.manifest().preset("tiny").unwrap().clone();
+    let mut session =
+        Session::finetune(bk, &preset, method, HeadKind::Cls, backbone, None, 3).unwrap();
+    let lex = Lexicon::new(preset.vocab);
+    let data = TaskData::generate(task("sst2").unwrap(), &lex, 5);
+    let batcher = Batcher::new(&preset, false);
+    let refs: Vec<&qrlora::data::Example> = data.train[..preset.batch].iter().collect();
+    let batch = batcher.assemble(&refs);
+    for _ in 0..steps {
+        session.step(&batch, 2, 1e-3).unwrap();
+    }
+    (session, batch)
+}
+
+fn capture(
+    session: &Session,
+    backbone: &BTreeMap<String, Tensor>,
+    method_name: &str,
+    with_adam: bool,
+) -> AdapterRecord {
+    AdapterRecord::from_session(
+        session,
+        AdapterKey::new("tiny", method_name, "sst2", 3),
+        fingerprint_params(backbone),
+        2,
+        87.5,
+        123.0,
+        with_adam,
+    )
+    .unwrap()
+}
+
+#[test]
+fn record_roundtrip_f32_and_int8_backbone() {
+    // The record must round-trip bit-exactly whether the adapter was
+    // trained against the f32 or the int8-quantized frozen backbone —
+    // what's stored (λ/A/B/head + moments) is f32 either way.
+    for quantize in [false, true] {
+        let bk = HostBackend::with_quant(quantize);
+        let backbone = synthetic_backbone(&bk);
+        let method = build_method(&bk, "qrlora", &backbone);
+        let (session, batch) = trained_session(&bk, &method, &backbone, 3);
+        let record = capture(&session, &backbone, "qrlora", true);
+
+        let dir = tmp_dir(&format!("roundtrip_q{quantize}"));
+        let path = dir.join("rec.qad");
+        record.save(&path).unwrap();
+        let loaded = AdapterRecord::load(&path).unwrap();
+
+        assert_eq!(loaded.meta.key, record.meta.key);
+        assert_eq!(loaded.meta.manifest_fp, fingerprint_layout(session.layout()));
+        assert_eq!(loaded.meta.backbone_fp, fingerprint_params(&backbone));
+        assert_eq!(loaded.meta.steps, 3);
+        // The record carries the backbone representation it trained
+        // against and refuses the other one: an f32-trained adapter must
+        // never warm-start an int8 backend (or vice versa).
+        assert_eq!(loaded.meta.backbone_repr, if quantize { "int8" } else { "f32" });
+        let fps = (fingerprint_layout(session.layout()), fingerprint_params(&backbone));
+        assert!(loaded.check_compat(fps.0, fps.1, bk.backbone_repr()).is_ok());
+        let other = if quantize { "f32" } else { "int8" };
+        let err = loaded.check_compat(fps.0, fps.1, other).unwrap_err().to_string();
+        assert!(err.contains("backbone"), "{err}");
+        assert_eq!(loaded.params, record.params, "params must round-trip bit-exactly");
+        let (m, v) = session.download_moments().unwrap();
+        let adam = loaded.adam.as_ref().expect("adam section saved");
+        assert_eq!(adam.m, m);
+        assert_eq!(adam.v, v);
+        assert_eq!(adam.t, 3);
+
+        // A restored state must serve the same logits, bit for bit.
+        let want = session.forward(&batch, 2).unwrap();
+        let preset = bk.manifest().preset("tiny").unwrap().clone();
+        let mut restored =
+            Session::finetune(&bk, &preset, &method, HeadKind::Cls, &backbone, None, 99)
+                .unwrap();
+        restored.upload_state(&loaded.state_vector(session.layout()).unwrap()).unwrap();
+        let got = restored.forward(&batch, 2).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "quant={quantize} logit {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn corrupted_record_is_a_checksum_error_not_garbage_weights() {
+    let bk = HostBackend::new();
+    let backbone = synthetic_backbone(&bk);
+    let method = build_method(&bk, "qrlora", &backbone);
+    let (session, _) = trained_session(&bk, &method, &backbone, 2);
+    let record = capture(&session, &backbone, "qrlora", false);
+
+    let dir = tmp_dir("corrupt");
+    let path = dir.join("rec.qad");
+    record.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Flip one byte deep in the tensors payload.
+    let pos = bytes.len() - 11;
+    bytes[pos] ^= 0x20;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = AdapterRecord::load(&path).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "want a checksum error, got: {err}");
+}
+
+#[test]
+fn registry_atomicity_under_simulated_crashed_write() {
+    let bk = HostBackend::new();
+    let backbone = synthetic_backbone(&bk);
+    let method = build_method(&bk, "qrlora", &backbone);
+    let (session, _) = trained_session(&bk, &method, &backbone, 2);
+    let record = capture(&session, &backbone, "qrlora", false);
+
+    let dir = tmp_dir("crashed_write");
+    let mut reg = Registry::open(&dir).unwrap();
+    reg.publish(&record).unwrap();
+    assert_eq!(reg.len(), 1);
+    drop(reg);
+
+    // Simulate a crash mid-publish of a SECOND record: a partial record
+    // temp file and a partial index temp file, never renamed. Fresh temp
+    // debris is left on disk (it could be a live sibling process
+    // mid-publish; only stale temps are swept) but must be completely
+    // inert: not adopted, not parsed, not corrupting anything.
+    std::fs::write(dir.join("next.tmp4242"), b"half a record........").unwrap();
+    std::fs::write(dir.join("index.tmp4242"), b"{\"version\": 1, \"entr").unwrap();
+    let reg = Registry::open(&dir).unwrap();
+    assert_eq!(reg.len(), 1, "the published record survives, the crash debris is inert");
+    let key = AdapterKey::new("tiny", "qrlora", "sst2", 3);
+    assert!(reg.lookup(&key).is_some());
+    assert!(reg.load(&key).is_ok(), "debris must not affect record loads");
+    drop(reg);
+    let _ = std::fs::remove_file(dir.join("next.tmp4242"));
+    let _ = std::fs::remove_file(dir.join("index.tmp4242"));
+
+    // Corrupt the index itself: open() rebuilds it from the record files.
+    std::fs::write(dir.join("index.json"), b"NOT JSON AT ALL").unwrap();
+    let reg = Registry::open(&dir).unwrap();
+    assert_eq!(reg.len(), 1, "index rebuilt by scanning self-describing records");
+    let loaded = reg.load(&key).unwrap();
+    assert_eq!(loaded.params, record.params);
+
+    // Stale entry recovery: delete the record file behind the index.
+    std::fs::remove_file(reg.record_path(reg.lookup(&key).unwrap())).unwrap();
+    let reg = Registry::open(&dir).unwrap();
+    assert!(reg.is_empty(), "dangling index entries are dropped on open");
+}
+
+#[test]
+fn warm_start_logits_bit_identical_for_qrlora_and_lora() {
+    for method_name in ["qrlora", "lora"] {
+        let bk = HostBackend::new();
+        let backbone = synthetic_backbone(&bk);
+        let method = build_method(&bk, method_name, &backbone);
+        let (session, batch) = trained_session(&bk, &method, &backbone, 4);
+        let want = session.forward(&batch, 2).unwrap();
+
+        // Publish, then resolve through the tiered store exactly like a
+        // restarted server would (prefetch on the pool + resolve).
+        let dir = tmp_dir(&format!("warm_{method_name}"));
+        let record = capture(&session, &backbone, method_name, false);
+        Registry::open(&dir).unwrap().publish(&record).unwrap();
+
+        let mut tiers = TieredAdapters::new(
+            Some(Registry::open(&dir).unwrap()),
+            fingerprint_layout(session.layout()),
+            fingerprint_params(&backbone),
+            bk.backbone_repr(),
+            "tiny",
+            method_name,
+            3,
+        );
+        let layout = session.layout().clone();
+        tiers.prefetch(&layout, &["sst2"]);
+        let resolved = tiers
+            .resolve(&layout, "sst2", |_| panic!("warm start must not train"))
+            .unwrap();
+        assert_eq!(resolved.source, Source::Disk);
+        assert_eq!(resolved.n_classes, 2);
+        let state = resolved.state.clone();
+        assert_eq!(tiers.stats.disk_hits, 1);
+        assert_eq!(tiers.stats.trained, 0);
+
+        let preset = bk.manifest().preset("tiny").unwrap().clone();
+        let mut restored =
+            Session::finetune(&bk, &preset, &method, HeadKind::Cls, &backbone, None, 42)
+                .unwrap();
+        restored.upload_state(&state).unwrap();
+        let got = restored.forward(&batch, 2).unwrap();
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{method_name} warm-start logit {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mismatched_or_corrupt_record_falls_back_to_training() {
+    let bk = HostBackend::new();
+    let backbone = synthetic_backbone(&bk);
+    let method = build_method(&bk, "qrlora", &backbone);
+    let (session, _) = trained_session(&bk, &method, &backbone, 2);
+    let layout = session.layout().clone();
+    let good_fp = fingerprint_params(&backbone);
+
+    // Publish a record that claims a DIFFERENT backbone.
+    let dir = tmp_dir("mismatch");
+    let mut bad = capture(&session, &backbone, "qrlora", false);
+    bad.meta.backbone_fp = good_fp ^ 0xFF;
+    Registry::open(&dir).unwrap().publish(&bad).unwrap();
+
+    let mut tiers = TieredAdapters::new(
+        Some(Registry::open(&dir).unwrap()),
+        fingerprint_layout(&layout),
+        good_fp,
+        bk.backbone_repr(),
+        "tiny",
+        "qrlora",
+        3,
+    );
+    let mut trained = false;
+    let resolved = tiers
+        .resolve(&layout, "sst2", |key| {
+            trained = true;
+            let mut rec = capture(&session, &backbone, "qrlora", false);
+            rec.meta.key = key.clone();
+            Ok(rec)
+        })
+        .unwrap();
+    assert!(trained, "a mismatched record must fall back to the trainer");
+    assert_eq!(resolved.source, Source::Trained);
+    assert_eq!(tiers.stats.rejected, 1);
+
+    // The fallback republished a good record: a fresh resolver warm
+    // starts from it.
+    let mut tiers2 = TieredAdapters::new(
+        Some(Registry::open(&dir).unwrap()),
+        fingerprint_layout(&layout),
+        good_fp,
+        bk.backbone_repr(),
+        "tiny",
+        "qrlora",
+        3,
+    );
+    let r2 = tiers2.resolve(&layout, "sst2", |_| panic!("must warm start now")).unwrap();
+    assert_eq!(r2.source, Source::Disk);
+}
+
+#[test]
+fn gc_prunes_and_store_stays_consistent() {
+    let bk = HostBackend::new();
+    let backbone = synthetic_backbone(&bk);
+    let method = build_method(&bk, "qrlora", &backbone);
+    let (session, _) = trained_session(&bk, &method, &backbone, 1);
+
+    let dir = tmp_dir("gc_consistency");
+    let mut reg = Registry::open(&dir).unwrap();
+    for (task_name, age) in [("sst2", 100u64), ("mrpc", 200), ("qnli", 300)] {
+        let mut rec = capture(&session, &backbone, "qrlora", false);
+        rec.meta.key = AdapterKey::new("tiny", "qrlora", task_name, 3);
+        rec.meta.created_unix = age;
+        reg.publish(&rec).unwrap();
+    }
+    let report = qrlora::store::gc::gc(
+        &mut reg,
+        &GcPolicy { max_count: Some(2), ..Default::default() },
+        1000,
+        false,
+    )
+    .unwrap();
+    assert_eq!(report.removed.len(), 1);
+    assert_eq!(report.removed[0].task, "sst2", "oldest record pruned first");
+    assert!(report.freed_bytes > 0);
+    // Survivors still verify; the pruned file is gone from disk.
+    drop(reg);
+    let reg = Registry::open(&dir).unwrap();
+    assert_eq!(reg.len(), 2);
+    assert!(reg.verify().iter().all(|r| r.result.is_ok()));
+}
