@@ -17,6 +17,9 @@
 //! * P7  adapter store: `serve_warm_start` (registry open + record
 //!       load/verify + state restore) vs `serve_cold_start` (train the
 //!       adapter) — the per-adapter startup win of `qrlora::store`
+//! * P8  serving fleet: aggregate request throughput of `serve --fleet N`
+//!       (real worker processes over one shared adapter store) for
+//!       N = 1, 2, 4, parsed from the supervisor's `FLEET_AGGREGATE` line
 //!
 //! Runs on whatever backend `QRLORA_BACKEND` selects (host by default, so
 //! the bench is hermetic) with the pool sized by `QRLORA_THREADS`, and
@@ -611,6 +614,52 @@ fn main() -> anyhow::Result<()> {
                     warm.stats.mean()
                 );
             }
+        }
+    }
+
+    // ---- P8: serving fleet — aggregate RPS as workers scale -------------
+    // Spawns the real binary (`serve --fleet N`) against one shared temp
+    // store. The 1-worker run trains and publishes the three task
+    // adapters; the 2- and 4-worker runs warm-start from them. Every row
+    // records the aggregate serve wall (training is excluded from
+    // `serve_wall_ms` by construction), so the rows are comparable:
+    // scaling workers should shrink the wall / grow the aggregate RPS
+    // until the box runs out of cores. Host backend only — the fleet
+    // re-execs this machine's binary.
+    if rt.name() == "host" {
+        println!("\n# P8 serving fleet (multi-process, shared adapter store)");
+        let exe = env!("CARGO_BIN_EXE_qrlora");
+        let fleet_store = std::env::temp_dir().join("qrlora_bench_fleet");
+        let _ = std::fs::remove_dir_all(&fleet_store);
+        let fleet_requests = 24usize;
+        for workers in [1usize, 2, 4] {
+            let out = std::process::Command::new(exe)
+                .args(["serve", "--fleet", &workers.to_string()])
+                .args(["--requests", &fleet_requests.to_string()])
+                .args(["--pretrain-steps", "60", "--warmup-steps", "40", "--steps", "40"])
+                .args(["--adapter-store", &fleet_store.display().to_string()])
+                .output()
+                .map_err(|e| anyhow::anyhow!("cannot spawn the fleet bench: {e}"))?;
+            anyhow::ensure!(
+                out.status.success(),
+                "serve --fleet {workers} failed:\n{}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            let line = stdout
+                .lines()
+                .find_map(|l| l.strip_prefix("FLEET_AGGREGATE "))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("serve --fleet {workers} emitted no FLEET_AGGREGATE line")
+                })?;
+            let agg = Json::parse(line)?;
+            let wall_ms = agg.req("serve_wall_ms")?.as_f64().unwrap_or(0.0);
+            let rps = agg.req("rps")?.as_f64().unwrap_or(0.0);
+            let name = format!("serve_fleet {workers}w ({fleet_requests} req)");
+            println!("{name:<52} {wall_ms:>9.3} ms  ({rps:.1} req/s aggregate)");
+            let mut stats = Stats::new();
+            stats.push(wall_ms);
+            rec.entries.push(Entry { name, threads: tmax, stats, iters: 1 });
         }
     }
 

@@ -40,8 +40,11 @@ const COMMANDS: &[Command] = &[
     Command { name: "train", about: "fine-tune one task with one method (full pipeline)" },
     Command { name: "ranks", about: "pivoted-QR rank-selection report for a backbone" },
     Command { name: "exp", about: "regenerate a paper table/figure: table1..table4, figure1, all" },
-    Command { name: "serve", about: "batched serving demo (warm-starts from the adapter store)" },
-    Command { name: "adapters", about: "adapter store: list | verify | gc (--adapter-store DIR)" },
+    Command { name: "serve", about: "batched serving demo (--fleet N spawns a worker fleet)" },
+    Command {
+        name: "adapters",
+        about: "adapter store: list | verify | gc | stress-publish (--adapter-store DIR)",
+    },
 ];
 
 fn main() {
@@ -314,6 +317,30 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = exp_config(args)?;
     let sc = qrlora::server::ServeConfig::from_args(args)?;
+    // Fleet worker mode (spawned by the supervisor, not typed by hand):
+    // `--worker-id I --fleet-tasks a,b` trains the owned tasks, store-
+    // watches for the rest, then serves the full mixed stream.
+    if let Some(v) = args.get("worker-id") {
+        let id: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--worker-id expects an integer, got {v:?}"))?;
+        let owned: Vec<String> = args
+            .str_or("fleet-tasks", "")
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        return qrlora::server::fleet::run_worker(&cfg, &sc, id, &owned);
+    }
+    // Fleet supervisor mode: partition tasks over N worker processes
+    // sharing one adapter store, then aggregate their reports.
+    if let Some(v) = args.get("fleet") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--fleet expects a worker count, got {v:?}"))?;
+        anyhow::ensure!(n >= 1, "--fleet needs at least one worker");
+        return qrlora::server::fleet::run_fleet(&cfg, &sc, n);
+    }
     qrlora::server::demo(&cfg, &sc)
 }
 
@@ -330,7 +357,9 @@ fn cmd_adapters(args: &Args) -> anyhow::Result<()> {
             }
             println!("| preset | method | task | seed | metric | size | trained | age | file |");
             println!("|---|---|---|---:|---:|---:|---:|---:|---|");
-            let now = qrlora::store::unix_now();
+            // Display-only: a pre-epoch clock degrades the age column to
+            // "huge", it must not abort `list`.
+            let now = qrlora::store::unix_now_or_zero();
             for e in reg.entries() {
                 println!(
                     "| {} | {} | {} | {} | {:.1} | {:.1} KiB | {:.0} ms | {:.1} h | {} |",
@@ -386,7 +415,9 @@ fn cmd_adapters(args: &Args) -> anyhow::Result<()> {
                 max_count,
             };
             let dry = args.has("dry-run");
-            let report = gc::gc(&mut reg, &policy, qrlora::store::unix_now(), dry)?;
+            // Age pruning against a pre-epoch clock must abort, not run
+            // with now=0 (which would age-exempt nothing and prune wrong).
+            let report = gc::gc(&mut reg, &policy, qrlora::store::unix_now()?, dry)?;
             let verb = if dry { "would remove" } else { "removed" };
             for key in &report.removed {
                 println!("{verb} {key}");
@@ -401,6 +432,44 @@ fn cmd_adapters(args: &Args) -> anyhow::Result<()> {
             );
             Ok(())
         }
-        other => anyhow::bail!("unknown adapters subcommand {other:?} (list|verify|gc)"),
+        "stress-publish" => {
+            // Hammer `publish_merged` with M synthetic records from this
+            // process (`--writer-id K` keeps keys distinct across
+            // writers). The multi-process stress test spawns several of
+            // these concurrently and asserts no index entry is lost.
+            use qrlora::store::{AdapterKey, AdapterRecord, RecordMeta};
+            use qrlora::tensor::Tensor;
+            let records = args.usize_or("records", 8)?;
+            let writer = args.u64_or("writer-id", 0)?;
+            for j in 0..records {
+                let mut params = std::collections::BTreeMap::new();
+                params.insert("head/wc".to_string(), Tensor::zeros(&[2, 2]));
+                let record = AdapterRecord {
+                    meta: RecordMeta {
+                        key: AdapterKey::new("tiny", "stress", &format!("t{j}"), writer),
+                        manifest_fp: 1,
+                        backbone_fp: 2,
+                        backbone_repr: "f32".to_string(),
+                        n_classes: 2,
+                        eval_metric: 0.0,
+                        steps: 0,
+                        train_ms: 0.0,
+                        created_unix: qrlora::store::unix_now_or_zero(),
+                    },
+                    params,
+                    adam: None,
+                };
+                reg.publish_merged(&record)?;
+            }
+            println!(
+                "stress-publish: writer {writer} published {records} record(s); \
+                 index now holds {}",
+                reg.len()
+            );
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown adapters subcommand {other:?} (list|verify|gc|stress-publish)")
+        }
     }
 }

@@ -1,0 +1,353 @@
+//! Multi-process serving fleet over one shared adapter store.
+//!
+//! `serve --fleet N` is the single-box dress rehearsal for horizontal
+//! scale: N worker *processes* (re-execs of the current binary) share one
+//! `runs/adapters/` store, with the task set partitioned across workers
+//! by a consistent-hash ring. Lifecycle:
+//!
+//! ```text
+//!            supervisor (serve --fleet N)
+//!   pre-warm runs/ caches → partition tasks on the HashRing
+//!        │ spawn               │ spawn                │ spawn
+//!        ▼                     ▼                      ▼
+//!   worker 0              worker 1     …         worker N−1
+//!   train+publish owned   train+publish owned    train+publish owned
+//!        │   └──────── index.lock serializes ───────┘  │
+//!        ▼                                             ▼
+//!   store-watch: poll index generation, hot-load sibling publishes
+//!        ▼                                             ▼
+//!   serve a mixed stream over ALL tasks through the batched Router
+//!        └────────── FLEET_WORKER {json} lines ────────┘
+//!                            ▼
+//!        supervisor aggregates → FLEET_AGGREGATE {json}
+//! ```
+//!
+//! Every worker ends up serving every task — ownership only decides who
+//! *trains* an adapter; the store's locked `publish_merged` guarantees
+//! all concurrent publishes land, and the index `generation` counter
+//! gives workers a cheap poll to notice them. The supervisor pre-warms
+//! the pipeline's backbone/warm-up caches before spawning because those
+//! checkpoint writes are not atomic — N workers racing to create them
+//! could corrupt a cache file all of them read.
+//!
+//! The [`HashRing`] is deliberately a reusable stub for real horizontal
+//! scale: adding a worker only moves the keys the new worker now owns
+//! (`ring_rebalance_moves_keys_only_to_the_new_worker` pins that down).
+
+use std::io::BufRead;
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+use super::{ServeConfig, ServeCore, SERVE_TASKS};
+use crate::experiments::{ExpConfig, Pipeline};
+use crate::util::hash::fnv1a_str;
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// Virtual nodes per worker on the ring. Enough to spread a small task
+/// set evenly; cheap enough that ring construction stays trivial.
+pub const VNODES_PER_WORKER: usize = 64;
+
+/// How long a worker store-watches for sibling-published adapters before
+/// giving up (covers the siblings' worst-case training time).
+const ADOPT_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// A consistent-hash ring over worker ids: each worker contributes
+/// [`VNODES_PER_WORKER`] points (FNV-1a of `"w{worker}/v{vnode}"`), and a
+/// task routes to the first point clockwise of its own hash. Existing
+/// workers' points never move when a worker joins, so growing the fleet
+/// only reassigns the keys the new worker takes over.
+pub struct HashRing {
+    /// Sorted `(point, worker)` pairs.
+    ring: Vec<(u64, usize)>,
+    workers: usize,
+}
+
+impl HashRing {
+    pub fn new(workers: usize) -> HashRing {
+        let workers = workers.max(1);
+        let mut ring = Vec::with_capacity(workers * VNODES_PER_WORKER);
+        for w in 0..workers {
+            for v in 0..VNODES_PER_WORKER {
+                ring.push((fnv1a_str(&format!("w{w}/v{v}")), w));
+            }
+        }
+        // Ties (astronomically unlikely under FNV-1a over distinct
+        // labels) resolve to the lower worker id via the pair ordering.
+        ring.sort_unstable();
+        HashRing { ring, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The worker owning `task`: successor lookup with wraparound.
+    pub fn route(&self, task: &str) -> usize {
+        let h = fnv1a_str(task);
+        let i = self.ring.partition_point(|(p, _)| *p < h);
+        self.ring[i % self.ring.len()].1
+    }
+
+    /// Partition `tasks` into per-worker owned sets (a worker may own
+    /// none — it then serves purely from sibling publishes).
+    pub fn partition(&self, tasks: &[&str]) -> Vec<Vec<String>> {
+        let mut owned = vec![Vec::new(); self.workers];
+        for t in tasks {
+            owned[self.route(t)].push(t.to_string());
+        }
+        owned
+    }
+}
+
+/// One worker's parsed `FLEET_WORKER` report.
+struct WorkerReport {
+    worker: usize,
+    requests: usize,
+    serve_wall_ms: f64,
+    rps: f64,
+    warmup_steps: usize,
+}
+
+impl WorkerReport {
+    fn parse(worker: usize, json: &str) -> anyhow::Result<WorkerReport> {
+        let doc = Json::parse(json)?;
+        let num = |k: &str| -> anyhow::Result<f64> {
+            doc.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("FLEET_WORKER: bad {k}"))
+        };
+        Ok(WorkerReport {
+            worker,
+            requests: num("requests")? as usize,
+            serve_wall_ms: num("serve_wall_ms")?,
+            rps: num("rps")?,
+            warmup_steps: num("warmup_steps")? as usize,
+        })
+    }
+}
+
+/// Supervisor: pre-warm the shared `runs/` caches, partition
+/// [`SERVE_TASKS`] over the ring, spawn `workers` re-execs of the current
+/// binary, relay their output `[w{i}]`-prefixed, and aggregate their
+/// reports into a `FLEET_AGGREGATE` line (what the `serve_fleet` bench
+/// and the CI fleet smoke parse).
+pub fn run_fleet(cfg: &ExpConfig, sc: &ServeConfig, workers: usize) -> anyhow::Result<()> {
+    let workers = workers.max(1);
+    let tasks = SERVE_TASKS;
+
+    // The backbone/warm-up checkpoint writes under runs/ are not atomic;
+    // materialize them once here so workers only ever read them.
+    println!(
+        "[fleet] pre-warming shared caches (backbone + {} task warm-up(s))…",
+        tasks.len()
+    );
+    {
+        let mut pipe = Pipeline::new(cfg)?;
+        for t in tasks {
+            pipe.warmed(t)?;
+        }
+    }
+
+    let ring = HashRing::new(workers);
+    let owned = ring.partition(tasks);
+    for (w, ts) in owned.iter().enumerate() {
+        println!("[fleet] worker {w} owns {ts:?}");
+    }
+
+    let exe = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("cannot locate the current binary: {e}"))?;
+    let threads_per = (pool::threads() / workers).max(1);
+    let base = sc.requests / workers;
+    let extra = sc.requests % workers;
+
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, String)>();
+    let mut children = Vec::new();
+    for (w, ts) in owned.iter().enumerate() {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("serve")
+            .args(["--worker-id", &w.to_string()])
+            .args(["--fleet-tasks", &ts.join(",")])
+            .args(["--preset", &cfg.preset])
+            .args(["--pretrain-steps", &cfg.pretrain_steps.to_string()])
+            .args(["--warmup-steps", &cfg.warmup_steps.to_string()])
+            .args(["--steps", &cfg.steps.to_string()])
+            .args(["--train-examples", &cfg.train_examples.to_string()])
+            .args(["--seed", &cfg.seed.to_string()])
+            .args(["--lr-ft", &cfg.lr_ft.to_string()])
+            .args(["--lr", &cfg.lr_adapter.to_string()])
+            .args(["--requests", &(base + usize::from(w < extra)).to_string()])
+            .args(["--max-batch", &sc.max_batch.to_string()])
+            .args(["--resident-adapters", &sc.resident_adapters.to_string()])
+            // Split the host pool across workers instead of oversubscribing
+            // the box N-fold.
+            .env("QRLORA_THREADS", threads_per.to_string())
+            .stdout(Stdio::piped());
+        match &sc.adapter_store {
+            Some(dir) => {
+                cmd.args(["--adapter-store", &dir.display().to_string()]);
+            }
+            None => {
+                cmd.arg("--no-warm-start");
+            }
+        }
+        let mut child = cmd
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("cannot spawn fleet worker {w}: {e}"))?;
+        let stdout = child.stdout.take().expect("stdout was piped");
+        let tx = tx.clone();
+        let relay = std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if let Some(json) = line.strip_prefix("FLEET_WORKER ") {
+                    let _ = tx.send((w, json.to_string()));
+                }
+                println!("[w{w}] {line}");
+            }
+        });
+        children.push((w, child, relay));
+    }
+    drop(tx);
+
+    for (w, mut child, relay) in children {
+        let status = child.wait()?;
+        let _ = relay.join();
+        anyhow::ensure!(status.success(), "fleet worker {w} exited with {status}");
+    }
+    let mut reports: Vec<WorkerReport> = rx
+        .iter()
+        .map(|(w, json)| WorkerReport::parse(w, &json))
+        .collect::<anyhow::Result<_>>()?;
+    reports.sort_by_key(|r| r.worker);
+    anyhow::ensure!(
+        reports.len() == workers,
+        "expected {workers} FLEET_WORKER report(s), got {}",
+        reports.len()
+    );
+
+    // Aggregate throughput over the longest serve phase: the honest
+    // single-box number (workers serve concurrently; summing per-worker
+    // RPS would overcount whenever phases don't fully overlap).
+    let total_requests: usize = reports.iter().map(|r| r.requests).sum();
+    let warmup_steps: usize = reports.iter().map(|r| r.warmup_steps).sum();
+    let max_wall_ms = reports.iter().map(|r| r.serve_wall_ms).fold(0.0f64, f64::max);
+    let agg_rps = total_requests as f64 / (max_wall_ms / 1e3).max(1e-9);
+    for r in &reports {
+        println!(
+            "[fleet] worker {}: {} requests, {:.1} req/s, warm-up training steps: {}",
+            r.worker, r.requests, r.rps, r.warmup_steps
+        );
+    }
+    println!(
+        "[fleet] aggregate: {workers} worker(s), {total_requests} requests, \
+         {agg_rps:.1} req/s, warm-up training steps: {warmup_steps}"
+    );
+    let agg = Json::obj(vec![
+        ("workers", Json::num(workers as f64)),
+        ("requests", Json::num(total_requests as f64)),
+        ("serve_wall_ms", Json::num(max_wall_ms)),
+        ("rps", Json::num(agg_rps)),
+        ("warmup_steps", Json::num(warmup_steps as f64)),
+    ]);
+    println!("FLEET_AGGREGATE {}", agg.to_string());
+    Ok(())
+}
+
+/// One fleet worker (`serve --worker-id I --fleet-tasks a,b`): build the
+/// same [`ServeCore`] the demo uses, train-and-publish the owned tasks,
+/// store-watch until every sibling-owned adapter is hot-loaded, then
+/// serve a mixed stream over the full task set and emit the
+/// machine-readable `FLEET_WORKER` report the supervisor aggregates.
+pub fn run_worker(
+    cfg: &ExpConfig,
+    sc: &ServeConfig,
+    worker_id: usize,
+    owned: &[String],
+) -> anyhow::Result<()> {
+    let tasks = SERVE_TASKS;
+    let owned: Vec<&str> = owned.iter().map(|s| s.as_str()).collect();
+    let siblings: Vec<&str> =
+        tasks.iter().copied().filter(|t| !owned.contains(t)).collect();
+
+    let mut core = ServeCore::new(cfg, sc.adapter_store.as_deref())?;
+    core.prepare(&owned)?;
+    if !siblings.is_empty() {
+        println!(
+            "[serve] store-watching for {} sibling adapter(s): {siblings:?}",
+            siblings.len()
+        );
+        core.adopt_published(&siblings, ADOPT_TIMEOUT)?;
+    }
+
+    // Per-worker stream seed: same distribution shape as the demo, but
+    // distinct request sequences per worker.
+    let stream_seed = cfg.seed ^ 0x5EED ^ ((worker_id as u64 + 1) << 32);
+    let queue = core.build_queue(tasks, sc.requests, stream_seed)?;
+    let (_results, stats) = core.serve_batched(sc, &queue)?;
+    println!(
+        "[serve] worker {worker_id}: served {} request(s) at {:.1} req/s",
+        stats.requests,
+        stats.throughput()
+    );
+    let report = Json::obj(vec![
+        ("worker", Json::num(worker_id as f64)),
+        ("requests", Json::num(stats.requests as f64)),
+        ("serve_wall_ms", Json::num(stats.wall_s * 1e3)),
+        ("rps", Json::num(stats.throughput())),
+        ("warmup_steps", Json::num(core.steps_this_run as f64)),
+    ]);
+    println!("FLEET_WORKER {}", report.to_string());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_routes_deterministically_and_in_range() {
+        let ring = HashRing::new(4);
+        for t in ["sst2", "mrpc", "qnli", "task-x", "task-y"] {
+            let w = ring.route(t);
+            assert!(w < 4);
+            assert_eq!(w, ring.route(t), "routing must be deterministic");
+        }
+    }
+
+    #[test]
+    fn ring_partition_covers_every_task_exactly_once() {
+        let ring = HashRing::new(3);
+        let tasks: Vec<String> = (0..60).map(|i| format!("task{i}")).collect();
+        let refs: Vec<&str> = tasks.iter().map(|s| s.as_str()).collect();
+        let owned = ring.partition(&refs);
+        assert_eq!(owned.len(), 3);
+        let total: usize = owned.iter().map(|o| o.len()).sum();
+        assert_eq!(total, tasks.len());
+        // 64 vnodes/worker spread 60 keys well enough that no worker
+        // should sit at zero (deterministic: fixed hash, fixed labels).
+        for (w, o) in owned.iter().enumerate() {
+            assert!(!o.is_empty(), "worker {w} owns no tasks: {owned:?}");
+        }
+    }
+
+    #[test]
+    fn ring_rebalance_moves_keys_only_to_the_new_worker() {
+        // The consistent-hashing property this stub exists for: growing
+        // the fleet must never shuffle keys between existing workers.
+        let before = HashRing::new(3);
+        let after = HashRing::new(4);
+        for i in 0..200 {
+            let task = format!("task{i}");
+            let (b, a) = (before.route(&task), after.route(&task));
+            assert!(
+                a == b || a == 3,
+                "{task} moved {b} → {a}, not to the new worker"
+            );
+        }
+    }
+
+    #[test]
+    fn single_worker_ring_owns_everything() {
+        let ring = HashRing::new(1);
+        assert_eq!(ring.workers(), 1);
+        assert_eq!(ring.route("anything"), 0);
+    }
+}

@@ -22,20 +22,35 @@
 //! on the forward path is row-local — enforced by
 //! `rust/tests/serve_batched.rs`. See `ARCHITECTURE.md` for the request
 //! lifecycle diagram.
+//!
+//! [`fleet`] scales this out to N worker *processes* sharing one durable
+//! adapter store (`serve --fleet N`): a supervisor partitions tasks over
+//! a consistent-hash ring, workers train-and-publish their partition and
+//! hot-load sibling publishes by store-watching the index generation.
+//! [`ServeCore`] is the per-process serving context both the
+//! single-process [`demo`] and every fleet worker build the same way.
+
+pub mod fleet;
 
 use std::collections::{BTreeMap, VecDeque};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::adapters::{Proj, Scope};
 use crate::data::{metric_kind, task, Batcher, Example, HeadKind, Split};
 use crate::experiments::{ExpConfig, Pipeline};
 use crate::linalg::RankRule;
 use crate::metrics::argmax;
-use crate::runtime::{Backend, Buffer};
+use crate::runtime::{Backend, Buffer, Preset, StateLayout};
 use crate::store::{self, AdapterRecord, Registry, Source, TieredAdapters};
-use crate::training::{Methods, Session, TrainConfig};
+use crate::tensor::Tensor;
+use crate::training::{Method, Methods, Session, TrainConfig};
 use crate::util::cli::Args;
 use crate::util::rng::Rng;
+
+/// The demo task set: one adapter per task over the shared backbone.
+/// The fleet supervisor partitions exactly this set across workers, so
+/// single-process and fleet runs populate the same store keys.
+pub const SERVE_TASKS: &[&str] = &["sst2", "mrpc", "qnli"];
 
 /// One inference request.
 #[derive(Clone)]
@@ -470,79 +485,144 @@ impl ServeConfig {
     }
 }
 
-/// The serving demo: resolves one QR adapter per task through the tiered
-/// store (RAM → durable registry → train-on-miss, publishing back),
-/// routes a mixed request stream through the batched [`Router`], then
-/// replays the same stream through the legacy [`serve_swap`] loop and
-/// reports the warm-start and batching speedups plus per-request
-/// agreement.
-pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
-    let tasks = ["sst2", "mrpc", "qnli"];
-    let mut pipe = Pipeline::new(cfg)?;
-    let preset = pipe.preset.clone();
+/// Per-process serving context: the pipeline (data + warm caches), the
+/// QR method over the warmed backbone, the one serving session, and the
+/// tiered adapter resolver pinned to that session's fingerprints.
+///
+/// Built identically by the single-process [`demo`] and every
+/// [`fleet`] worker, so "what counts as the same adapter" — key fields,
+/// manifest/backbone fingerprints — can never drift between the two
+/// paths (a drift would make workers retrain what a sibling published).
+pub struct ServeCore {
+    pub cfg: ExpConfig,
+    pub pipe: Pipeline,
+    pub preset: Preset,
+    warm_bb: BTreeMap<String, Tensor>,
+    method: Method,
+    pub session: Session<'static>,
+    pub tiers: TieredAdapters,
+    backbone_fp: u64,
+    layout: StateLayout,
+    /// Resolved per-task flat states, ready for [`Router::register`] /
+    /// [`serve_swap`].
+    pub states: BTreeMap<String, Vec<f32>>,
+    n_classes: BTreeMap<String, usize>,
+    from_store: usize,
+    recorded_train_ms: f64,
+    /// Warm-up training steps actually run this process (0 on a full
+    /// warm start — what the fleet smoke test asserts after a restart).
+    pub steps_this_run: usize,
+}
 
-    // 1. Shared warmed backbone + QR method (identical for every task —
-    //    only λ/head differ), and the one serving session. The per-task
-    //    adapters come from the tiered store below.
-    let (warm_bb, _) = pipe.warmed(tasks[0])?;
-    let method = Methods::qr_lora(
-        &warm_bb,
-        &preset,
-        Scope::last_layers((preset.n_layers / 3).max(1), &[Proj::Q, Proj::V]),
-        0.5,
-        RankRule::DiagRatio,
-    )?;
-    let mut session =
-        Session::finetune(pipe.rt, &preset, &method, HeadKind::Cls, &warm_bb, None, cfg.seed)?;
+impl ServeCore {
+    /// Build the shared serving state: warmed backbone + QR method
+    /// (identical for every task — only λ/head differ), the serving
+    /// session, and the tiered resolver over `adapter_store` (None
+    /// disables durability: every resolve trains, nothing persists).
+    pub fn new(cfg: &ExpConfig, adapter_store: Option<&std::path::Path>) -> anyhow::Result<Self> {
+        let mut pipe = Pipeline::new(cfg)?;
+        let preset = pipe.preset.clone();
+        let (warm_bb, _) = pipe.warmed("sst2")?;
+        let method = Methods::qr_lora(
+            &warm_bb,
+            &preset,
+            Scope::last_layers((preset.n_layers / 3).max(1), &[Proj::Q, Proj::V]),
+            0.5,
+            RankRule::DiagRatio,
+        )?;
+        let session =
+            Session::finetune(pipe.rt, &preset, &method, HeadKind::Cls, &warm_bb, None, cfg.seed)?;
+        let registry = match adapter_store {
+            Some(dir) => {
+                let reg = Registry::open(dir)?;
+                println!(
+                    "[serve] adapter store: {} ({} record(s) on disk)",
+                    reg.dir().display(),
+                    reg.len()
+                );
+                Some(reg)
+            }
+            None => {
+                println!("[serve] adapter store: disabled (--no-warm-start)");
+                None
+            }
+        };
+        // The "backbone" fingerprint covers everything frozen: the warmed
+        // backbone tensors AND the method-derived factors/masks, so a
+        // record trained under a different τ/scope (same layout, same
+        // backbone) is still rejected.
+        let backbone_fp = store::fingerprint_extend(
+            store::fingerprint_params(&warm_bb),
+            &method.frozen_inputs(),
+        );
+        let tiers = TieredAdapters::new(
+            registry,
+            store::fingerprint_layout(session.layout()),
+            backbone_fp,
+            session.backend().backbone_repr(),
+            &cfg.preset,
+            method.artifact_name(),
+            cfg.seed,
+        );
+        let layout = session.layout().clone();
+        Ok(ServeCore {
+            cfg: cfg.clone(),
+            pipe,
+            preset,
+            warm_bb,
+            method,
+            session,
+            tiers,
+            backbone_fp,
+            layout,
+            states: BTreeMap::new(),
+            n_classes: BTreeMap::new(),
+            from_store: 0,
+            recorded_train_ms: 0.0,
+            steps_this_run: 0,
+        })
+    }
 
-    // 2. Tiered adapter resolution: registry hits are fingerprint-checked
-    //    against this session's layout and backbone; misses train and
-    //    publish back.
-    println!("[serve] preparing {} task adapters…", tasks.len());
-    let registry = match &sc.adapter_store {
-        Some(dir) => {
-            let reg = Registry::open(dir)?;
+    /// Resolve adapters for `tasks` through the tiered store — registry
+    /// hits are fingerprint-checked against this session's layout and
+    /// backbone; misses train (short budget) and publish back — then
+    /// print the warm-start report.
+    pub fn prepare(&mut self, tasks: &[&str]) -> anyhow::Result<()> {
+        println!("[serve] preparing {} task adapters…", tasks.len());
+        let t_prep = Instant::now();
+        self.tiers.prefetch(&self.layout, tasks);
+        for name in tasks {
+            self.resolve_owned(name)?;
+        }
+        let prep_ms = t_prep.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "[serve] adapter prep: {}/{} from store, {} trained, \
+             warm-up training steps: {}",
+            self.from_store,
+            tasks.len(),
+            self.tiers.stats.trained,
+            self.steps_this_run
+        );
+        if self.from_store == tasks.len() && self.recorded_train_ms > 0.0 {
             println!(
-                "[serve] adapter store: {} ({} record(s) on disk)",
-                reg.dir().display(),
-                reg.len()
+                "[serve]   warm start: {prep_ms:.1} ms (records list {:.0} ms \
+                 of training) → {:.0}x faster startup",
+                self.recorded_train_ms,
+                self.recorded_train_ms / prep_ms.max(1e-3)
             );
-            Some(reg)
         }
-        None => {
-            println!("[serve] adapter store: disabled (--no-warm-start)");
-            None
-        }
-    };
-    // The "backbone" fingerprint covers everything frozen: the warmed
-    // backbone tensors AND the method-derived factors/masks, so a record
-    // trained under a different τ/scope (same layout, same backbone) is
-    // still rejected.
-    let backbone_fp = store::fingerprint_extend(
-        store::fingerprint_params(&warm_bb),
-        &method.frozen_inputs(),
-    );
-    let mut tiers = TieredAdapters::new(
-        registry,
-        store::fingerprint_layout(session.layout()),
-        backbone_fp,
-        session.backend().backbone_repr(),
-        &cfg.preset,
-        method.artifact_name(),
-        cfg.seed,
-    );
-    let t_prep = Instant::now();
-    let layout = session.layout().clone();
-    tiers.prefetch(&layout, &tasks);
-    let mut states: BTreeMap<String, Vec<f32>> = BTreeMap::new();
-    let mut n_classes: BTreeMap<String, usize> = BTreeMap::new();
-    let mut from_store = 0usize;
-    let mut recorded_train_ms = 0f64;
-    let mut steps_this_run = 0usize;
-    for name in tasks {
-        let resolved = tiers.resolve(&layout, name, |key| {
-            // Train-on-miss (short budget — demo), wall-clock measured so
-            // the record carries the cost a warm start saves.
+        Ok(())
+    }
+
+    /// Resolve one task this process is responsible for: RAM → disk →
+    /// train-on-miss (wall-clock measured so the published record carries
+    /// the cost a warm start saves).
+    pub fn resolve_owned(&mut self, name: &str) -> anyhow::Result<()> {
+        let (pipe, tiers) = (&mut self.pipe, &mut self.tiers);
+        let (preset, method, warm_bb) = (&self.preset, &self.method, &self.warm_bb);
+        let (cfg, backbone_fp) = (&self.cfg, self.backbone_fp);
+        let steps_this_run = &mut self.steps_this_run;
+        let resolved = tiers.resolve(&self.layout, name, |key| {
             let t0 = Instant::now();
             let (_, warm_head) = pipe.warmed(name)?;
             let data = pipe.data(name)?;
@@ -554,9 +634,9 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
                 log_every: 1000,
             };
             let mut s = Session::finetune(
-                pipe.rt, &preset, &method, data.spec.head, &warm_bb, Some(&warm_head), cfg.seed,
+                pipe.rt, preset, method, data.spec.head, warm_bb, Some(&warm_head), cfg.seed,
             )?;
-            let batcher = Batcher::new(&preset, false);
+            let batcher = Batcher::new(preset, false);
             let mut rng = Rng::new(cfg.seed ^ 0xD0);
             let mut step = 0;
             'outer: loop {
@@ -571,7 +651,7 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
                     step += 1;
                 }
             }
-            steps_this_run += step;
+            *steps_this_run += step;
             let metric = s
                 .evaluate(&batcher, &data, Split::Dev)?
                 .result
@@ -593,58 +673,122 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
             )
         })?;
         if resolved.source == Source::Disk {
-            from_store += 1;
-            recorded_train_ms += resolved.train_ms;
+            self.from_store += 1;
+            self.recorded_train_ms += resolved.train_ms;
             println!(
                 "[serve]   {name}: adapter loaded from store (dev metric {:.1} on record)",
                 resolved.eval_metric
             );
         }
-        states.insert(name.to_string(), resolved.state.clone());
-        n_classes.insert(name.to_string(), resolved.n_classes);
-    }
-    let prep_ms = t_prep.elapsed().as_secs_f64() * 1e3;
-    println!(
-        "[serve] adapter prep: {from_store}/{} from store, {} trained, \
-         warm-up training steps: {steps_this_run}",
-        tasks.len(),
-        tiers.stats.trained
-    );
-    if from_store == tasks.len() && recorded_train_ms > 0.0 {
-        println!(
-            "[serve]   warm start: {prep_ms:.1} ms (records list {recorded_train_ms:.0} ms \
-             of training) → {:.0}x faster startup",
-            recorded_train_ms / prep_ms.max(1e-3)
-        );
+        self.states.insert(name.to_string(), resolved.state.clone());
+        self.n_classes.insert(name.to_string(), resolved.n_classes);
+        Ok(())
     }
 
-    // 3. Build a mixed request stream.
-    let mut rng = Rng::new(cfg.seed ^ 0x5EED);
-    let mut queue: VecDeque<Request> = VecDeque::new();
-    for id in 0..sc.requests {
-        let tname = *rng.choice(&tasks);
-        let data = pipe.data(tname)?;
-        let ex = data.split(Split::Dev)[rng.below(data.dev.len())].clone();
-        queue.push_back(Request { id, task: tname.to_string(), example: ex });
+    /// Hot-load adapters a sibling process owns: poll the store's index
+    /// generation ([`TieredAdapters::refresh`]) and resolve each task
+    /// through the disk tier as its record appears — never training.
+    /// Errors when `timeout` passes with tasks still missing.
+    pub fn adopt_published(&mut self, tasks: &[&str], timeout: Duration) -> anyhow::Result<()> {
+        let poll = Duration::from_millis(100);
+        let deadline = Instant::now() + timeout;
+        let mut missing: Vec<&str> =
+            tasks.iter().copied().filter(|t| !self.states.contains_key(*t)).collect();
+        loop {
+            let mut still = Vec::new();
+            for t in missing {
+                match self.tiers.resolve_disk_only(&self.layout, t) {
+                    Some(r) => {
+                        let (state, n) = (r.state.clone(), r.n_classes);
+                        println!(
+                            "[serve]   {t}: adapter hot-loaded from sibling publish \
+                             (dev metric {:.1} on record)",
+                            r.eval_metric
+                        );
+                        self.states.insert(t.to_string(), state);
+                        self.n_classes.insert(t.to_string(), n);
+                    }
+                    None => still.push(t),
+                }
+            }
+            missing = still;
+            if missing.is_empty() {
+                return Ok(());
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "timed out after {timeout:?} waiting for sibling-published adapters: \
+                 {missing:?}"
+            );
+            std::thread::sleep(poll);
+            self.tiers.refresh()?;
+        }
     }
-    let batcher = Batcher::new(&preset, false);
 
-    // 4. Batched path: resident bank, mixed batches, no per-request swaps.
-    let (batched_results, batched_stats) = {
-        let mut router =
-            Router::new(&session, batcher.clone(), sc.max_batch, sc.resident_adapters)?;
-        for name in tasks {
-            router.register(name, states[name].clone(), n_classes[name])?;
+    /// A deterministic mixed request stream over `tasks`.
+    pub fn build_queue(
+        &mut self,
+        tasks: &[&str],
+        requests: usize,
+        seed: u64,
+    ) -> anyhow::Result<VecDeque<Request>> {
+        let mut rng = Rng::new(seed);
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        for id in 0..requests {
+            let tname = *rng.choice(tasks);
+            let data = self.pipe.data(tname)?;
+            let ex = data.split(Split::Dev)[rng.below(data.dev.len())].clone();
+            queue.push_back(Request { id, task: tname.to_string(), example: ex });
+        }
+        Ok(queue)
+    }
+
+    /// Serve a queue through the batched [`Router`] with every resolved
+    /// adapter registered. Returns the results and the router's stats.
+    pub fn serve_batched(
+        &self,
+        sc: &ServeConfig,
+        queue: &VecDeque<Request>,
+    ) -> anyhow::Result<(Vec<(Request, Vec<f32>)>, RouterStats)> {
+        let batcher = Batcher::new(&self.preset, false);
+        let mut router = Router::new(&self.session, batcher, sc.max_batch, sc.resident_adapters)?;
+        for (name, state) in &self.states {
+            router.register(name, state.clone(), self.n_classes[name])?;
         }
         let mut q = queue.clone();
         let results = router.serve(&mut q)?;
-        (results, router.stats)
-    };
+        Ok((results, router.stats))
+    }
+}
+
+/// The serving demo: resolves one QR adapter per task through the tiered
+/// store (RAM → durable registry → train-on-miss, publishing back),
+/// routes a mixed request stream through the batched [`Router`], then
+/// replays the same stream through the legacy [`serve_swap`] loop and
+/// reports the warm-start and batching speedups plus per-request
+/// agreement.
+pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
+    let tasks = SERVE_TASKS;
+
+    // 1+2. Shared serving state + tiered adapter resolution (see
+    //      `ServeCore`; the fleet workers build the identical context).
+    let mut core = ServeCore::new(cfg, sc.adapter_store.as_deref())?;
+    core.prepare(tasks)?;
+
+    // 3. Build a mixed request stream.
+    let queue = core.build_queue(tasks, sc.requests, cfg.seed ^ 0x5EED)?;
+    let preset = core.preset.clone();
+    let batcher = Batcher::new(&preset, false);
+
+    // 4. Batched path: resident bank, mixed batches, no per-request swaps.
+    let (batched_results, batched_stats) = core.serve_batched(sc, &queue)?;
 
     // 5. Swap baseline on the identical stream.
     let mut swap_stats = RouterStats::default();
     let mut q = queue.clone();
-    let swap_results = serve_swap(&mut session, &batcher, &states, &mut q, &mut swap_stats)?;
+    let swap_results =
+        serve_swap(&mut core.session, &batcher, &core.states, &mut q, &mut swap_stats)?;
+    let session = &core.session;
 
     // 6. Per-request agreement + accuracy.
     let k = session.layout().param("head/wc")?.shape[1];

@@ -453,7 +453,10 @@ impl AdapterRecord {
                 eval_metric,
                 steps: session.steps_taken(),
                 train_ms,
-                created_unix: super::unix_now(),
+                // A pre-epoch clock warns (in `unix_now_or_zero`) and
+                // stamps 0; gc exempts 0 from age pruning so the record
+                // is kept, not treated as ancient.
+                created_unix: super::unix_now_or_zero(),
             },
             params,
             adam,

@@ -62,10 +62,22 @@ pub fn gc(
     let mut doomed: Vec<AdapterKey> = Vec::new();
     let mut survivors: Vec<&(AdapterKey, u64, u64)> = Vec::new();
     for c in &candidates {
-        let too_old = policy
-            .max_age_secs
-            .map(|max| now_unix.saturating_sub(c.1) > max)
-            .unwrap_or(false);
+        let too_old = match policy.max_age_secs {
+            // created_unix == 0 means "clock was pre-epoch at publish",
+            // not "1970": its age is unknowable, so exempt it from the
+            // age criterion (count/task pruning still applies) instead
+            // of treating it as instantly ancient.
+            Some(_) if c.1 == 0 => {
+                crate::warnln!(
+                    "gc: {} has no creation timestamp (published under a skewed clock); \
+                     skipping the age check for it",
+                    c.0
+                );
+                false
+            }
+            Some(max) => now_unix.saturating_sub(c.1) > max,
+            None => false,
+        };
         if too_old {
             doomed.push(c.0.clone());
         } else {
@@ -167,5 +179,24 @@ mod tests {
         let report = gc(&mut reg, &policy, 500, false).unwrap();
         assert_eq!(report.removed, vec![AdapterKey::new("tiny", "qrlora", "sst2", 9)]);
         assert_eq!(reg.len(), 1, "qnli record must survive a task-scoped prune");
+    }
+
+    #[test]
+    fn gc_age_exempts_records_without_a_timestamp() {
+        let mut reg = tmp_registry("zero_created");
+        reg.publish(&record("sst2", 1, 0)).unwrap(); // skewed-clock publish
+        reg.publish(&record("sst2", 2, 100)).unwrap();
+
+        // Age prune: the dated record (age 900 > 50) goes; the
+        // timestampless one is exempt, not instantly ancient.
+        let policy = GcPolicy { max_age_secs: Some(50), ..Default::default() };
+        let report = gc(&mut reg, &policy, 1_000, false).unwrap();
+        assert_eq!(report.removed, vec![AdapterKey::new("tiny", "qrlora", "sst2", 2)]);
+        assert!(reg.lookup(&AdapterKey::new("tiny", "qrlora", "sst2", 1)).is_some());
+
+        // Count/task pruning still reaches it.
+        let policy = GcPolicy { max_count: Some(0), ..Default::default() };
+        gc(&mut reg, &policy, 1_000, false).unwrap();
+        assert!(reg.is_empty());
     }
 }

@@ -1,0 +1,350 @@
+//! Advisory file lock serializing index mutations across processes.
+//!
+//! `Registry::publish` used to be an unserialized read-modify-write of
+//! `index.json`: two concurrent publishers each rewrote the full index
+//! from their own stale in-memory snapshot, so the last writer silently
+//! dropped the other's entry. [`StoreLock`] closes that race with a
+//! dependency-free lock *file* (`index.lock`) next to the index:
+//!
+//! * **Acquisition** is an atomic `OpenOptions::create_new` — exactly one
+//!   process can create the file. The holder writes its pid, acquisition
+//!   time, and a per-acquisition token into it. Losers retry with a short
+//!   exponential backoff until a timeout.
+//! * **Stale takeover** mirrors the registry's crashed-write recovery
+//!   rules ([`TMP_SWEEP_AGE_SECS`]): a lock file is presumed abandoned
+//!   once its mtime age reaches [`LOCK_STALE_AGE_SECS`], or earlier when
+//!   `/proc` shows the holder pid is gone. Takeover renames the lock
+//!   aside to an `index-steal.tmp<pid>` name (a crashed takeover leaves
+//!   only temp-named debris the open() sweep already clears), re-reads
+//!   the renamed file to confirm it stole the lock it judged stale — a
+//!   live writer may have replaced it in between — and restores it when
+//!   the contents changed.
+//! * **Release** happens on [`Drop`], and only when the on-disk token is
+//!   still ours: after a (mis)takeover, the previous holder must not
+//!   delete the new holder's lock.
+//!
+//! What the lock serializes: every index rewrite — `publish_merged`,
+//! `remove` (and gc through it), and `open()`'s dirty-index recovery.
+//! Record-file writes stay outside the lock: they are per-key named and
+//! individually atomic, so the only shared mutable state is the index.
+//!
+//! Residual hazard, documented on purpose: between the staleness read
+//! and the rename there is a window where a freshly re-acquired live
+//! lock gets renamed aside; the content re-check shrinks that window to
+//! the rename itself but cannot close it without OS lock primitives this
+//! crate deliberately avoids. The stale ages involved (60 s against
+//! millisecond-scale critical sections) make the window practically
+//! unreachable.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::registry::TMP_SWEEP_AGE_SECS;
+use crate::util::json::Json;
+
+/// Lock file name, next to `index.json` in the store directory.
+pub const LOCK_FILE: &str = "index.lock";
+
+/// A lock file this old is presumed abandoned (holder crashed without
+/// dropping it). Mirrors the registry's temp-file sweep age: both answer
+/// "how long until crashed-write debris is demonstrably stale".
+pub const LOCK_STALE_AGE_SECS: u64 = TMP_SWEEP_AGE_SECS;
+
+/// Default time [`StoreLock::acquire`] waits for a busy lock before
+/// giving up. Generous against millisecond-scale critical sections, but
+/// finite so a wedged store surfaces as an error rather than a hang.
+const ACQUIRE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Longest retry backoff while waiting on a busy lock.
+const MAX_BACKOFF: Duration = Duration::from_millis(20);
+
+/// Process-local sequence so two acquisitions by the same pid (e.g. two
+/// threads, or acquire-release-acquire within one clock second) still
+/// carry distinct tokens.
+static TOKEN_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A held advisory lock on one store directory. Released on drop.
+pub struct StoreLock {
+    path: PathBuf,
+    token: String,
+}
+
+impl StoreLock {
+    /// Acquire the lock for `dir`, waiting up to the default timeout.
+    pub fn acquire(dir: &Path) -> anyhow::Result<StoreLock> {
+        Self::acquire_opts(dir, ACQUIRE_TIMEOUT, LOCK_STALE_AGE_SECS)
+    }
+
+    /// Acquire with explicit timeout and staleness age (tests use tiny
+    /// values to exercise takeover without 60-second sleeps).
+    pub fn acquire_opts(
+        dir: &Path,
+        timeout: Duration,
+        stale_age_secs: u64,
+    ) -> anyhow::Result<StoreLock> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("cannot create adapter store {dir:?}: {e}"))?;
+        let path = dir.join(LOCK_FILE);
+        let token = format!(
+            "{}:{}:{}",
+            std::process::id(),
+            TOKEN_SEQ.fetch_add(1, Ordering::Relaxed),
+            super::unix_now_or_zero()
+        );
+        let body = Json::obj(vec![
+            ("pid", Json::num(std::process::id() as f64)),
+            ("acquired_unix", Json::num(super::unix_now_or_zero() as f64)),
+            ("token", Json::str(token.clone())),
+        ])
+        .pretty();
+
+        let start = Instant::now();
+        let mut backoff = Duration::from_millis(1);
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    // We own the file from create_new on; losing the race
+                    // between create and write only leaves the body empty
+                    // for a moment, which waiters tolerate (see
+                    // `takeover_if_stale`: unparseable body falls back to
+                    // age-based staleness only).
+                    f.write_all(body.as_bytes())
+                        .map_err(|e| anyhow::anyhow!("cannot write lock {path:?}: {e}"))?;
+                    return Ok(StoreLock { path, token });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    takeover_if_stale(&path, stale_age_secs);
+                }
+                Err(e) => {
+                    return Err(anyhow::anyhow!("cannot create lock {path:?}: {e}"));
+                }
+            }
+            anyhow::ensure!(
+                start.elapsed() < timeout,
+                "timed out after {timeout:?} waiting for store lock {path:?} \
+                 (holder: {})",
+                describe_holder(&path)
+            );
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(MAX_BACKOFF);
+        }
+    }
+
+    /// This acquisition's unique token (what `Drop` matches on-disk).
+    pub fn token(&self) -> &str {
+        &self.token
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        match std::fs::read_to_string(&self.path) {
+            Ok(text) if lock_token(&text).as_deref() == Some(self.token.as_str()) => {
+                if let Err(e) = std::fs::remove_file(&self.path) {
+                    crate::warnln!("store lock: cannot release {:?}: {e}", self.path);
+                }
+            }
+            Ok(_) => {
+                // Someone judged us stale and took over; the lock on disk
+                // is theirs now and deleting it would unlock their
+                // critical section.
+                crate::warnln!(
+                    "store lock: {:?} is no longer ours (stale takeover while held?); \
+                     leaving it in place",
+                    self.path
+                );
+            }
+            // Already gone: a takeover happened *and* the new holder
+            // released. Nothing left to do.
+            Err(_) => {}
+        }
+    }
+}
+
+/// Parse the token out of a lock file body. `None` for unparseable
+/// content (including the empty-body window between create and write).
+fn lock_token(text: &str) -> Option<String> {
+    let doc = Json::parse(text).ok()?;
+    doc.get("token")?.as_str().map(|s| s.to_string())
+}
+
+/// Best-effort holder description for timeout errors.
+fn describe_holder(path: &Path) -> String {
+    match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(doc) => {
+                let pid = doc.get("pid").and_then(|j| j.as_usize()).unwrap_or(0);
+                let since = doc.get("acquired_unix").and_then(|j| j.as_usize()).unwrap_or(0);
+                format!("pid {pid}, acquired at unix {since}")
+            }
+            Err(_) => "unparseable lock body".to_string(),
+        },
+        Err(_) => "lock vanished (retry may succeed)".to_string(),
+    }
+}
+
+/// If the lock at `path` is demonstrably stale — mtime age at least
+/// `stale_age_secs`, or the holder pid provably dead per `/proc` — steal
+/// it so the caller's next `create_new` attempt can win. Failure modes
+/// all degrade to "didn't steal"; the caller just keeps waiting.
+fn takeover_if_stale(path: &Path, stale_age_secs: u64) {
+    // Snapshot the contents first: the post-rename re-read must prove we
+    // stole the same lock we judged stale, not a fresh one.
+    let content = match std::fs::read(path) {
+        Ok(c) => c,
+        // Vanished: the holder released; retry create_new.
+        Err(_) => return,
+    };
+    let aged = std::fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|t| t.elapsed().ok())
+        .map(|age| age.as_secs() >= stale_age_secs)
+        // Unreadable mtime here means the file vanished under us — not
+        // stale, just retry. (Opposite polarity to the temp-file sweep:
+        // wrongly stealing a live lock loses index entries, wrongly
+        // waiting only costs a timeout.)
+        .unwrap_or(false);
+    if !aged && !holder_dead(&content) {
+        return;
+    }
+    // Rename-steal: move the stale lock to a temp-suffixed name so a
+    // crash mid-takeover leaves only debris the open() sweep clears.
+    let steal = path.with_file_name(format!("index-steal.tmp{}", std::process::id()));
+    if std::fs::rename(path, &steal).is_err() {
+        // Raced another waiter's takeover (or a release); retry.
+        return;
+    }
+    match std::fs::read(&steal) {
+        Ok(stolen) if stolen == content => {
+            crate::warnln!(
+                "store lock: took over stale lock {path:?} ({})",
+                String::from_utf8_lossy(&content).replace('\n', " ")
+            );
+            let _ = std::fs::remove_file(&steal);
+        }
+        _ => {
+            // We renamed a *different* lock than the one we judged stale:
+            // the holder released and a live writer re-acquired between
+            // our read and the rename. Put it back, best effort — if the
+            // restore fails the live writer's Drop will warn and its
+            // waiters will time out loudly rather than corrupt the index.
+            if std::fs::rename(&steal, path).is_err() {
+                crate::warnln!(
+                    "store lock: could not restore live lock {path:?} after a \
+                     misjudged takeover; a waiter may time out"
+                );
+            }
+        }
+    }
+}
+
+/// True only when `/proc` is available and the holder pid in `content`
+/// parses and demonstrably has no process. Unparseable content is *not*
+/// dead — age-based staleness is the only judge then.
+fn holder_dead(content: &[u8]) -> bool {
+    if !Path::new("/proc/self").exists() {
+        return false;
+    }
+    let Ok(text) = std::str::from_utf8(content) else {
+        return false;
+    };
+    let Ok(doc) = Json::parse(text) else {
+        return false;
+    };
+    let Some(pid) = doc.get("pid").and_then(|j| j.as_usize()) else {
+        return false;
+    };
+    if pid == 0 {
+        return false;
+    }
+    !Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("qrlora_lock_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn exclusive_while_held_then_reacquirable() {
+        let dir = tmp_dir("exclusive");
+        let first = StoreLock::acquire(&dir).unwrap();
+        // A fresh, live lock: a second acquire must time out.
+        let busy = StoreLock::acquire_opts(&dir, Duration::from_millis(50), u64::MAX);
+        assert!(busy.is_err(), "second acquire must fail while the lock is held");
+        drop(first);
+        assert!(!dir.join(LOCK_FILE).exists(), "drop must release the lock file");
+        let _second = StoreLock::acquire(&dir).unwrap();
+    }
+
+    #[test]
+    fn aged_lock_is_taken_over() {
+        let dir = tmp_dir("aged");
+        // A lock held by a *live* pid (ours), so only the age rule can
+        // trigger takeover — which stale_age 0 makes immediate.
+        let crashed = StoreLock::acquire(&dir).unwrap();
+        std::mem::forget(crashed); // simulate a crash: no Drop, file stays
+        let lock = StoreLock::acquire_opts(&dir, Duration::from_secs(5), 0).unwrap();
+        drop(lock);
+        assert!(!dir.join(LOCK_FILE).exists());
+    }
+
+    #[test]
+    fn dead_pid_lock_is_taken_over_before_aging() {
+        if !Path::new("/proc/self").exists() {
+            return; // pid liveness is /proc-gated; nothing to test here
+        }
+        let dir = tmp_dir("dead_pid");
+        // Forge a lock held by a pid that cannot exist (> PID_MAX).
+        let body = Json::obj(vec![
+            ("pid", Json::num(999_999_999.0)),
+            ("acquired_unix", Json::num(0.0)),
+            ("token", Json::str("forged")),
+        ])
+        .pretty();
+        std::fs::write(dir.join(LOCK_FILE), body).unwrap();
+        // Huge stale age: only the dead-pid rule can let this through.
+        let lock = StoreLock::acquire_opts(&dir, Duration::from_secs(5), u64::MAX).unwrap();
+        drop(lock);
+        assert!(!dir.join(LOCK_FILE).exists());
+    }
+
+    #[test]
+    fn drop_leaves_a_lock_that_is_no_longer_ours() {
+        let dir = tmp_dir("not_ours");
+        let lock = StoreLock::acquire(&dir).unwrap();
+        // Simulate a takeover while held: replace the body with someone
+        // else's token.
+        let body = Json::obj(vec![
+            ("pid", Json::num(1.0)),
+            ("acquired_unix", Json::num(0.0)),
+            ("token", Json::str("someone-else")),
+        ])
+        .pretty();
+        std::fs::write(dir.join(LOCK_FILE), &body).unwrap();
+        drop(lock);
+        let on_disk = std::fs::read_to_string(dir.join(LOCK_FILE)).unwrap();
+        assert_eq!(lock_token(&on_disk).as_deref(), Some("someone-else"));
+    }
+
+    #[test]
+    fn unparseable_lock_body_waits_for_age() {
+        let dir = tmp_dir("unparseable");
+        std::fs::write(dir.join(LOCK_FILE), b"").unwrap();
+        // Empty body + huge stale age: neither rule fires, so acquire
+        // must time out rather than steal.
+        let busy = StoreLock::acquire_opts(&dir, Duration::from_millis(50), u64::MAX);
+        assert!(busy.is_err());
+        // The same empty body past the age threshold is fair game.
+        let _lock = StoreLock::acquire_opts(&dir, Duration::from_secs(5), 0).unwrap();
+    }
+}

@@ -12,7 +12,12 @@
 //!   named-tensor codec is shared with `model::checkpoint`.
 //! * [`registry`] — the atomic `index.json` over a record directory:
 //!   write-temp-then-rename everywhere, stale-entry recovery and index
-//!   rebuild on open, list/lookup/verify.
+//!   rebuild on open, list/lookup/verify. Index rewrites re-read the
+//!   on-disk index under the store lock and merge into *fresh* entries,
+//!   so concurrent publishers from N processes all land.
+//! * [`lock`] — the dependency-free advisory lock file (`index.lock`)
+//!   serializing those index rewrites across processes, with stale-holder
+//!   takeover mirroring the crashed-write sweep rules.
 //! * [`tier`] — three-tier resolution for serving: RAM-resident → disk
 //!   (fingerprint-checked against the live backbone/manifest, loads
 //!   dispatched on the worker pool) → train-on-miss, which publishes the
@@ -25,6 +30,7 @@
 
 pub mod format;
 pub mod gc;
+pub mod lock;
 pub mod registry;
 pub mod tier;
 
@@ -33,17 +39,33 @@ pub use format::{
     AdapterRecord, RecordMeta,
 };
 pub use gc::{GcPolicy, GcReport};
+pub use lock::{StoreLock, LOCK_FILE, LOCK_STALE_AGE_SECS};
 pub use registry::{Registry, RegistryEntry, VerifyResult, DEFAULT_STORE_DIR};
 pub use tier::{ResolvedAdapter, Source, TierStats, TieredAdapters};
 
 use std::path::Path;
 
-/// Unix seconds now (0 if the clock is before the epoch).
-pub fn unix_now() -> u64 {
+/// Unix seconds now. Errors when the system clock sits before the epoch
+/// instead of clamping to 0 — a silent 0 would stamp records as ancient
+/// and make them instantly eligible for `--max-age-days` gc.
+pub fn unix_now() -> anyhow::Result<u64> {
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
-        .unwrap_or(0)
+        .map_err(|e| {
+            anyhow::anyhow!("system clock is {:?} before the unix epoch", e.duration())
+        })
+}
+
+/// [`unix_now`] for display-only call sites: warns on a pre-epoch clock
+/// and returns 0. Never feed this into age-based gc decisions — `gc`
+/// exempts `created_unix == 0` records from the age criterion precisely
+/// because 0 means "clock was broken", not "1970".
+pub fn unix_now_or_zero() -> u64 {
+    unix_now().unwrap_or_else(|e| {
+        crate::warnln!("adapter store: {e:#}; timestamps will read as 0");
+        0
+    })
 }
 
 /// Write a file atomically: write a `.tmp<pid>` sibling, then rename

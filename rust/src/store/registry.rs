@@ -20,10 +20,21 @@
 //! All writes — record publish and index update — go through
 //! write-temp-then-rename, so a reader never observes a half-written file
 //! under a published name.
+//!
+//! Index *rewrites* additionally serialize on the store's advisory lock
+//! ([`super::lock::StoreLock`]) and re-read the on-disk index before
+//! merging their change — never rewriting from the opener's possibly
+//! stale in-memory snapshot — so N processes publishing into one store
+//! all land ([`Registry::publish_merged`]; `remove` and `open()`'s
+//! dirty-index recovery follow the same protocol). Every locked rewrite
+//! bumps a monotonically increasing `generation` counter in the index
+//! that fleet workers poll ([`Registry::read_generation`]) to hot-reload
+//! adapters a sibling process published.
 
 use std::path::{Path, PathBuf};
 
 use super::format::{fp_hex, parse_fp, AdapterKey, AdapterRecord};
+use super::lock::StoreLock;
 use crate::util::json::Json;
 
 /// Default store location (under the same `runs/` tree as the pipeline's
@@ -128,6 +139,10 @@ pub struct VerifyResult {
 pub struct Registry {
     dir: PathBuf,
     entries: Vec<RegistryEntry>,
+    /// On-disk index generation this in-memory view corresponds to.
+    /// Bumped by every locked index rewrite; fleet workers poll it via
+    /// [`Registry::read_generation`] to notice sibling publishes.
+    generation: u64,
 }
 
 impl Registry {
@@ -167,70 +182,20 @@ impl Registry {
             }
         }
 
-        // 2. Load the index; a corrupt one is rebuilt from the records.
-        let index_path = dir.join("index.json");
-        let mut entries: Vec<RegistryEntry> = Vec::new();
-        let mut dirty = false;
-        if index_path.exists() {
-            match read_index(&index_path) {
-                Ok(read) => entries = read,
-                Err(e) => {
-                    crate::warnln!(
-                        "adapter store: unreadable index {index_path:?} ({e:#}); \
-                         rebuilding from record files"
-                    );
-                    dirty = true;
-                }
-            }
-        }
-
-        // 3. Drop stale entries (record file gone).
-        let before = entries.len();
-        entries.retain(|e| {
-            let ok = dir.join(&e.file).is_file();
-            if !ok {
-                crate::warnln!(
-                    "adapter store: dropping stale index entry {} ({} is missing)",
-                    e.key,
-                    e.file
-                );
-            }
-            ok
-        });
-        dirty |= entries.len() != before;
-
-        // 4. Adopt orphaned record files the index doesn't know.
-        for path in record_dir_files(dir, RECORD_EXT)? {
-            let file = path.file_name().unwrap_or_default().to_string_lossy().to_string();
-            if entries.iter().any(|e| e.file == file) {
-                continue;
-            }
-            match AdapterRecord::load(&path) {
-                Ok(rec) => {
-                    // A key already indexed under another file keeps its
-                    // indexed record (publish names files by key, so this
-                    // only happens with hand-copied files); adopting the
-                    // stray would flip-flop between opens.
-                    if entries.iter().any(|e| e.key == rec.meta.key) {
-                        crate::warnln!(
-                            "adapter store: ignoring duplicate-key record {file} ({})",
-                            rec.meta.key
-                        );
-                        continue;
-                    }
-                    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
-                    crate::debugln!("adapter store: adopting unindexed record {file}");
-                    entries.push(RegistryEntry::from_record(&rec, file, bytes));
-                    dirty = true;
-                }
-                Err(e) => {
-                    crate::warnln!("adapter store: ignoring unreadable record {file}: {e:#}");
-                }
-            }
-        }
-
-        let reg = Registry { dir: dir.to_path_buf(), entries };
-        if dirty {
+        let scanned = scan(dir)?;
+        let mut reg = Registry {
+            dir: dir.to_path_buf(),
+            entries: scanned.entries,
+            generation: scanned.generation,
+        };
+        if scanned.dirty {
+            // The recovery rewrite is itself a read-modify-write of the
+            // index: take the lock and re-scan under it so recovery never
+            // clobbers a sibling's concurrent publish.
+            let _lock = StoreLock::acquire(dir)?;
+            let fresh = scan(dir)?;
+            reg.entries = fresh.entries;
+            reg.generation = fresh.generation + 1;
             reg.write_index()?;
         }
         Ok(reg)
@@ -264,16 +229,58 @@ impl Registry {
         self.dir.join(&entry.file)
     }
 
-    /// Publish a record: atomic record write, then atomic index update.
+    /// The on-disk index generation this in-memory view corresponds to.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Read the index generation counter for `dir` without opening a
+    /// registry — the cheap poll fleet workers run to notice sibling
+    /// publishes. A missing index is generation 0; an unreadable one is
+    /// an error (watchers treat that as "changed" and reopen, which runs
+    /// recovery).
+    pub fn read_generation(dir: &Path) -> anyhow::Result<u64> {
+        let path = dir.join("index.json");
+        if !path.exists() {
+            return Ok(0);
+        }
+        let doc = Json::parse(&std::fs::read_to_string(&path)?)?;
+        Ok(doc.get("generation").and_then(|j| j.as_usize()).unwrap_or(0) as u64)
+    }
+
+    /// Publish a record. Alias for [`Registry::publish_merged`] — every
+    /// publish path merges under the store lock.
+    pub fn publish(&mut self, record: &AdapterRecord) -> anyhow::Result<PathBuf> {
+        self.publish_merged(record)
+    }
+
+    /// Publish a record: atomic record write, then — under the store
+    /// lock — re-read the on-disk index, merge this entry into the
+    /// *fresh* entries, and rewrite. Rewriting from the fresh on-disk
+    /// view (not this opener's snapshot) is what lets N concurrent
+    /// publishers all land instead of last-writer-wins dropping entries.
     /// An existing record for the same key is replaced. Returns the
     /// record's path.
-    pub fn publish(&mut self, record: &AdapterRecord) -> anyhow::Result<PathBuf> {
+    pub fn publish_merged(&mut self, record: &AdapterRecord) -> anyhow::Result<PathBuf> {
         let file = format!("{}.{RECORD_EXT}", record.meta.key.id());
         let path = self.dir.join(&file);
-        record.save(&path)?;
-        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        // Size from the encoded buffer we write, not a re-stat: a
+        // metadata failure used to silently record `bytes = 0`
+        // (under-reporting gc's freed_bytes), and a sibling replacing the
+        // same key could race the stat anyway.
+        let buf = record.encode();
+        super::atomic_write(&path, &buf)?;
+        let bytes = buf.len() as u64;
+
+        // The record write stays outside the lock on purpose: record
+        // files are per-key named and individually atomic, so the index
+        // is the only shared mutable state worth serializing.
+        let _lock = StoreLock::acquire(&self.dir)?;
+        let fresh = scan(&self.dir)?;
+        self.entries = fresh.entries;
         self.entries.retain(|e| e.key != record.meta.key);
         self.entries.push(RegistryEntry::from_record(record, file, bytes));
+        self.generation = fresh.generation + 1;
         self.write_index()?;
         Ok(path)
     }
@@ -290,6 +297,14 @@ impl Registry {
             entry.file,
             rec.meta.key,
             entry.key
+        );
+        // Same fingerprint-vs-index-row invariant `verify` enforces: a
+        // record swapped on disk after indexing is rejected at load time,
+        // not only by an explicit `adapters verify`.
+        anyhow::ensure!(
+            rec.meta.manifest_fp == entry.manifest_fp && rec.meta.backbone_fp == entry.backbone_fp,
+            "adapter store: {} fingerprints drifted from the index row (swapped on disk?)",
+            entry.file
         );
         Ok(rec)
     }
@@ -323,7 +338,15 @@ impl Registry {
     /// deleted is **kept in the index** (and excluded from both) — the
     /// alternative would silently resurrect the record on the next
     /// `open()`, which re-adopts any on-disk record the index forgot.
+    ///
+    /// Takes the store lock and operates on the fresh on-disk index
+    /// (same merge protocol as [`Registry::publish_merged`]), so gc in
+    /// one process never clobbers a sibling's concurrent publish.
     pub fn remove(&mut self, keys: &[AdapterKey]) -> anyhow::Result<(u64, Vec<AdapterKey>)> {
+        let _lock = StoreLock::acquire(&self.dir)?;
+        let fresh = scan(&self.dir)?;
+        self.entries = fresh.entries;
+        self.generation = fresh.generation;
         let mut freed = 0u64;
         let mut removed = Vec::new();
         for key in keys {
@@ -347,6 +370,7 @@ impl Registry {
             }
         }
         if !removed.is_empty() {
+            self.generation += 1;
             self.write_index()?;
         }
         Ok((freed, removed))
@@ -355,13 +379,99 @@ impl Registry {
     fn write_index(&self) -> anyhow::Result<()> {
         let doc = Json::obj(vec![
             ("version", Json::num(super::format::FORMAT_VERSION as f64)),
+            // Read tolerantly (`unwrap_or(0)`), written always: older
+            // indexes without the counter stay readable, no format bump.
+            ("generation", Json::num(self.generation as f64)),
             ("entries", Json::Arr(self.entries.iter().map(|e| e.to_json()).collect())),
         ]);
         super::atomic_write(&self.dir.join("index.json"), doc.pretty().as_bytes())
     }
 }
 
-fn read_index(path: &Path) -> anyhow::Result<Vec<RegistryEntry>> {
+/// What a fresh reconciliation of `dir` found.
+struct Scan {
+    entries: Vec<RegistryEntry>,
+    /// Generation counter read from the on-disk index (0 when absent).
+    generation: u64,
+    /// True when the on-disk index disagreed with the record files (or
+    /// was unreadable) and deserves a recovery rewrite.
+    dirty: bool,
+}
+
+/// Reconcile the on-disk index with the record files: read the index
+/// (rebuilding from records when unreadable), drop rows whose record
+/// vanished, adopt orphaned records. Pure read — the caller decides
+/// whether (and under which lock) to write the result back. This is the
+/// fresh-read half of every locked index rewrite.
+fn scan(dir: &Path) -> anyhow::Result<Scan> {
+    let index_path = dir.join("index.json");
+    let mut entries: Vec<RegistryEntry> = Vec::new();
+    let mut generation = 0u64;
+    let mut dirty = false;
+    if index_path.exists() {
+        match read_index(&index_path) {
+            Ok((read, gen)) => {
+                entries = read;
+                generation = gen;
+            }
+            Err(e) => {
+                crate::warnln!(
+                    "adapter store: unreadable index {index_path:?} ({e:#}); \
+                     rebuilding from record files"
+                );
+                dirty = true;
+            }
+        }
+    }
+
+    // Drop stale entries (record file gone).
+    let before = entries.len();
+    entries.retain(|e| {
+        let ok = dir.join(&e.file).is_file();
+        if !ok {
+            crate::warnln!(
+                "adapter store: dropping stale index entry {} ({} is missing)",
+                e.key,
+                e.file
+            );
+        }
+        ok
+    });
+    dirty |= entries.len() != before;
+
+    // Adopt orphaned record files the index doesn't know.
+    for path in record_dir_files(dir, RECORD_EXT)? {
+        let file = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+        if entries.iter().any(|e| e.file == file) {
+            continue;
+        }
+        match AdapterRecord::load(&path) {
+            Ok(rec) => {
+                // A key already indexed under another file keeps its
+                // indexed record (publish names files by key, so this
+                // only happens with hand-copied files); adopting the
+                // stray would flip-flop between opens.
+                if entries.iter().any(|e| e.key == rec.meta.key) {
+                    crate::warnln!(
+                        "adapter store: ignoring duplicate-key record {file} ({})",
+                        rec.meta.key
+                    );
+                    continue;
+                }
+                let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                crate::debugln!("adapter store: adopting unindexed record {file}");
+                entries.push(RegistryEntry::from_record(&rec, file, bytes));
+                dirty = true;
+            }
+            Err(e) => {
+                crate::warnln!("adapter store: ignoring unreadable record {file}: {e:#}");
+            }
+        }
+    }
+    Ok(Scan { entries, generation, dirty })
+}
+
+fn read_index(path: &Path) -> anyhow::Result<(Vec<RegistryEntry>, u64)> {
     let text = std::fs::read_to_string(path)?;
     let doc = Json::parse(&text)?;
     let version = doc.req("version")?.as_usize().unwrap_or(0);
@@ -370,12 +480,15 @@ fn read_index(path: &Path) -> anyhow::Result<Vec<RegistryEntry>> {
         "index version {version}, this build reads v{}",
         super::format::FORMAT_VERSION
     );
-    doc.req("entries")?
+    let generation = doc.get("generation").and_then(|j| j.as_usize()).unwrap_or(0) as u64;
+    let entries = doc
+        .req("entries")?
         .as_arr()
         .ok_or_else(|| anyhow::anyhow!("index entries must be an array"))?
         .iter()
         .map(RegistryEntry::from_json)
-        .collect()
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok((entries, generation))
 }
 
 /// Files in `dir` with the given extension (non-recursive, sorted for

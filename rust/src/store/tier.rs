@@ -133,6 +133,60 @@ impl TieredAdapters {
         self.ram.contains_key(task)
     }
 
+    /// Re-sync with the on-disk registry: when a sibling process bumped
+    /// the index generation since this resolver's registry was opened,
+    /// reopen it (and forget earlier rejections — a sibling may have
+    /// republished a good record). Returns whether anything was reloaded.
+    /// This is the store-watch half of fleet hot-reloading; pair it with
+    /// [`TieredAdapters::resolve_disk_only`].
+    pub fn refresh(&mut self) -> anyhow::Result<bool> {
+        let Some(reg) = &self.registry else { return Ok(false) };
+        let dir = reg.dir().to_path_buf();
+        // An unreadable generation reads as "changed": reopening runs
+        // the registry's recovery path.
+        let on_disk = Registry::read_generation(&dir).unwrap_or(u64::MAX);
+        if on_disk == reg.generation() {
+            return Ok(false);
+        }
+        self.registry = Some(Registry::open(&dir)?);
+        self.rejected.clear();
+        Ok(true)
+    }
+
+    /// Resolve through the RAM and disk tiers only — never trains.
+    /// `None` means the registry has no acceptable record for `task`
+    /// (yet). Fleet workers use this for tasks a sibling worker owns:
+    /// the owner trains and publishes, everyone else only hot-loads.
+    pub fn resolve_disk_only(
+        &mut self,
+        layout: &StateLayout,
+        task: &str,
+    ) -> Option<&ResolvedAdapter> {
+        if self.ram.contains_key(task) {
+            self.stats.ram_hits += 1;
+            return Some(&self.ram[task]);
+        }
+        let key = self.key(task);
+        let reg = self.registry.as_ref()?;
+        reg.lookup(&key)?;
+        let t0 = std::time::Instant::now();
+        let loaded = reg.load(&key);
+        match self.validate(layout, loaded) {
+            Ok(resolved) => {
+                self.stats.load_ms += t0.elapsed().as_secs_f64() * 1e3;
+                self.stats.disk_hits += 1;
+                self.ram.insert(task.to_string(), resolved);
+                Some(&self.ram[task])
+            }
+            Err(e) => {
+                self.stats.rejected += 1;
+                self.rejected.insert(task.to_string());
+                crate::warnln!("adapter store: record for {task:?} rejected ({e:#})");
+                None
+            }
+        }
+    }
+
     /// Read + decode every registry hit among `tasks` in parallel on the
     /// worker pool, then verify and promote them to the RAM tier in task
     /// order. Rejected records are logged and left for train-on-miss.

@@ -125,6 +125,9 @@ pub const SERVE_FLAGS: &[&str] = &[
     "resident-adapters",
     "adapter-store",
     "no-warm-start",
+    "fleet",
+    "worker-id",
+    "fleet-tasks",
 ];
 
 /// Flags the `adapters` store-management command accepts beyond
@@ -132,7 +135,8 @@ pub const SERVE_FLAGS: &[&str] = &[
 ///
 /// Same lockstep rule: each must appear as `--<flag>` in the README
 /// (enforced by `readme_documents_store_flags` and the matching CI step).
-pub const STORE_FLAGS: &[&str] = &["task", "max-age-days", "max-count", "dry-run"];
+pub const STORE_FLAGS: &[&str] =
+    &["task", "max-age-days", "max-count", "dry-run", "records", "writer-id"];
 
 /// Global performance/memory knobs every subcommand accepts (parsed in
 /// `main.rs`, handed to the backend factory via the environment).

@@ -1,0 +1,56 @@
+//! Multi-process adapter-store stress: concurrent *processes* hammer
+//! `publish_merged` on one shared store directory through the real
+//! binary (`adapters stress-publish`), so the publish race crosses
+//! process boundaries — threads share an address space and can hide
+//! ordering a second process would expose. Before the store lock, the
+//! last writer's index rewrite silently dropped every other writer's
+//! rows; this test pins the fix: zero lost index entries.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use qrlora::store::{AdapterKey, Registry};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("qrlora_fleet_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn concurrent_publisher_processes_lose_no_index_entries() {
+    let dir = tmp_dir("stress_publish");
+    let exe = env!("CARGO_BIN_EXE_qrlora");
+    let writers = 4usize;
+    let records = 8usize;
+    let children: Vec<_> = (0..writers)
+        .map(|w| {
+            Command::new(exe)
+                .args(["adapters", "stress-publish"])
+                .args(["--adapter-store", &dir.display().to_string()])
+                .args(["--records", &records.to_string()])
+                .args(["--writer-id", &w.to_string()])
+                .spawn()
+                .expect("spawn stress-publish writer")
+        })
+        .collect();
+    for mut child in children {
+        let status = child.wait().unwrap();
+        assert!(status.success(), "a stress-publish writer failed: {status}");
+    }
+
+    let reg = Registry::open(&dir).unwrap();
+    assert_eq!(
+        reg.len(),
+        writers * records,
+        "concurrent publishes lost index entries (last-writer-wins regression)"
+    );
+    for w in 0..writers {
+        for j in 0..records {
+            let key = AdapterKey::new("tiny", "stress", &format!("t{j}"), w as u64);
+            assert!(reg.lookup(&key).is_some(), "missing {key:?}");
+        }
+    }
+    // Every surviving entry must also point at an intact record file.
+    assert!(reg.verify().iter().all(|r| r.result.is_ok()));
+}

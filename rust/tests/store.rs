@@ -1,19 +1,22 @@
 //! Integration tests for the durable adapter store: record round-trips
 //! (f32 and int8-backbone-trained adapters), corruption detection,
-//! registry crash recovery, and the warm-start bit-identity contract —
-//! logits served from a store-restored state must equal the freshly
-//! trained session's logits bit for bit, for both adapter methods.
+//! registry crash recovery, concurrent-publish index merging (the
+//! last-writer-wins race the store lock exists for), and the warm-start
+//! bit-identity contract — logits served from a store-restored state
+//! must equal the freshly trained session's logits bit for bit, for both
+//! adapter methods.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::time::Duration;
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::{task, Batch, Batcher, HeadKind, Lexicon, TaskData};
 use qrlora::linalg::RankRule;
 use qrlora::runtime::{Backend, HostBackend};
 use qrlora::store::{
-    fingerprint_layout, fingerprint_params, AdapterKey, AdapterRecord, GcPolicy, Registry,
-    Source, TieredAdapters,
+    fingerprint_layout, fingerprint_params, AdapterKey, AdapterRecord, GcPolicy, RecordMeta,
+    Registry, Source, StoreLock, TieredAdapters, LOCK_FILE,
 };
 use qrlora::tensor::Tensor;
 use qrlora::training::{Method, Methods, Session};
@@ -341,4 +344,151 @@ fn gc_prunes_and_store_stays_consistent() {
     let reg = Registry::open(&dir).unwrap();
     assert_eq!(reg.len(), 2);
     assert!(reg.verify().iter().all(|r| r.result.is_ok()));
+}
+
+/// A tiny record with a distinct (task, seed) key — the publish-race
+/// tests need key volume, not real weights.
+fn synthetic_record(task_name: &str, seed: u64) -> AdapterRecord {
+    let mut params = BTreeMap::new();
+    params.insert("head/wc".to_string(), Tensor::zeros(&[2, 2]));
+    AdapterRecord {
+        meta: RecordMeta {
+            key: AdapterKey::new("tiny", "stress", task_name, seed),
+            manifest_fp: 1,
+            backbone_fp: 2,
+            backbone_repr: "f32".to_string(),
+            n_classes: 2,
+            eval_metric: 0.0,
+            steps: 0,
+            train_ms: 0.0,
+            created_unix: 1,
+        },
+        params,
+        adam: None,
+    }
+}
+
+#[test]
+fn concurrent_publishes_from_many_threads_all_land() {
+    // The race the store lock exists for: N writers, each holding its own
+    // Registry snapshot of one directory, publish concurrently. Before
+    // the locked read-merge-rewrite, every writer rewrote the index from
+    // its stale snapshot and the last one silently dropped the others'
+    // rows. All N×M keys must survive.
+    let dir = tmp_dir("concurrent_publish");
+    drop(Registry::open(&dir).unwrap()); // materialize the store once
+    let writers = 4usize;
+    let per_writer = 6usize;
+    let handles: Vec<_> = (0..writers)
+        .map(|w| {
+            let dir = dir.clone();
+            std::thread::spawn(move || {
+                let mut reg = Registry::open(&dir).unwrap();
+                for j in 0..per_writer {
+                    reg.publish_merged(&synthetic_record(&format!("t{j}"), w as u64)).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let reg = Registry::open(&dir).unwrap();
+    assert_eq!(reg.len(), writers * per_writer, "a concurrent publish lost index entries");
+    for w in 0..writers {
+        for j in 0..per_writer {
+            let key = AdapterKey::new("tiny", "stress", &format!("t{j}"), w as u64);
+            assert!(reg.lookup(&key).is_some(), "lost {key:?}");
+        }
+    }
+    assert!(reg.verify().iter().all(|r| r.result.is_ok()));
+}
+
+#[test]
+fn publish_takes_over_a_crashed_holders_lock() {
+    if !std::path::Path::new("/proc/self").exists() {
+        return; // pid liveness is /proc-gated
+    }
+    let dir = tmp_dir("crashed_holder");
+    let mut reg = Registry::open(&dir).unwrap();
+    reg.publish_merged(&synthetic_record("t0", 0)).unwrap();
+    // Forge a lock whose holder pid cannot exist (> PID_MAX): publish
+    // must take it over via the dead-pid rule instead of timing out.
+    let body = r#"{"pid": 999999999, "acquired_unix": 0, "token": "crashed"}"#;
+    std::fs::write(dir.join(LOCK_FILE), body).unwrap();
+    reg.publish_merged(&synthetic_record("t1", 0)).unwrap();
+    assert_eq!(reg.len(), 2);
+    assert!(!dir.join(LOCK_FILE).exists(), "publish must release the taken-over lock");
+}
+
+#[test]
+fn gc_blocks_on_a_held_lock_then_proceeds() {
+    let dir = tmp_dir("gc_under_lock");
+    let mut reg = Registry::open(&dir).unwrap();
+    for j in 0..3 {
+        reg.publish_merged(&synthetic_record(&format!("t{j}"), 0)).unwrap();
+    }
+    drop(reg);
+
+    let lock = StoreLock::acquire(&dir).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let gc_dir = dir.clone();
+    let gc_thread = std::thread::spawn(move || {
+        let mut reg = Registry::open(&gc_dir).unwrap();
+        let report = qrlora::store::gc::gc(
+            &mut reg,
+            &GcPolicy { max_count: Some(1), ..Default::default() },
+            100,
+            false,
+        )
+        .unwrap();
+        tx.send(report.removed.len()).unwrap();
+    });
+    // While the lock is held, gc's index rewrite must wait on it.
+    assert!(
+        rx.recv_timeout(Duration::from_millis(300)).is_err(),
+        "gc must block on the held store lock"
+    );
+    drop(lock);
+    let removed = rx.recv_timeout(Duration::from_secs(10)).expect("gc must finish post-release");
+    gc_thread.join().unwrap();
+    assert_eq!(removed, 2);
+    assert_eq!(Registry::open(&dir).unwrap().len(), 1);
+}
+
+#[test]
+fn index_generation_bumps_on_every_locked_rewrite() {
+    // The fleet's store-watch polls this counter to notice sibling
+    // publishes without re-reading the whole index.
+    let dir = tmp_dir("generation");
+    let mut reg = Registry::open(&dir).unwrap();
+    let g0 = Registry::read_generation(&dir).unwrap();
+    reg.publish_merged(&synthetic_record("t0", 0)).unwrap();
+    let g1 = Registry::read_generation(&dir).unwrap();
+    assert!(g1 > g0, "publish must bump the generation ({g0} -> {g1})");
+    reg.publish_merged(&synthetic_record("t1", 0)).unwrap();
+    let g2 = Registry::read_generation(&dir).unwrap();
+    assert!(g2 > g1);
+    let (_, removed) =
+        reg.remove(&[AdapterKey::new("tiny", "stress", "t0", 0)]).unwrap();
+    assert_eq!(removed.len(), 1);
+    let g3 = Registry::read_generation(&dir).unwrap();
+    assert!(g3 > g2, "remove must bump the generation too ({g2} -> {g3})");
+}
+
+#[test]
+fn load_rejects_a_record_swapped_behind_the_index() {
+    // `load` must enforce the index row's fingerprints the way `verify`
+    // does: a record file replaced on disk under the same name (checksums
+    // fine, fingerprints different) is an error, not a silent load.
+    let dir = tmp_dir("load_fp_drift");
+    let mut reg = Registry::open(&dir).unwrap();
+    reg.publish_merged(&synthetic_record("t0", 0)).unwrap();
+    let key = AdapterKey::new("tiny", "stress", "t0", 0);
+    let mut drifted = synthetic_record("t0", 0);
+    drifted.meta.backbone_fp = 999;
+    drifted.save(&reg.record_path(reg.lookup(&key).unwrap())).unwrap();
+    let err = reg.load(&key).unwrap_err().to_string();
+    assert!(err.contains("drifted"), "want a fingerprint-drift error, got: {err}");
 }
