@@ -19,7 +19,10 @@
 //!       adapter) — the per-adapter startup win of `qrlora::store`
 //! * P8  serving fleet: aggregate request throughput of `serve --fleet N`
 //!       (real worker processes over one shared adapter store) for
-//!       N = 1, 2, 4, parsed from the supervisor's `FLEET_AGGREGATE` line
+//!       N = 1, 2, 4, parsed from the supervisor's `FLEET_AGGREGATE` line,
+//!       plus a `serve_fleet_degraded` row that prices the supervision
+//!       round trip (crash mid-publish → restart → re-publish) under an
+//!       injected `QRLORA_FAULTS` crash
 //!
 //! Runs on whatever backend `QRLORA_BACKEND` selects (host by default, so
 //! the bench is hermetic) with the pool sized by `QRLORA_THREADS`, and
@@ -656,6 +659,48 @@ fn main() -> anyhow::Result<()> {
             let wall_ms = agg.req("serve_wall_ms")?.as_f64().unwrap_or(0.0);
             let rps = agg.req("rps")?.as_f64().unwrap_or(0.0);
             let name = format!("serve_fleet {workers}w ({fleet_requests} req)");
+            println!("{name:<52} {wall_ms:>9.3} ms  ({rps:.1} req/s aggregate)");
+            let mut stats = Stats::new();
+            stats.push(wall_ms);
+            rec.entries.push(Entry { name, threads: tmax, stats, iters: 1 });
+        }
+
+        // Degraded twin: the same 2-worker fleet with an injected crash
+        // between a record's temp write and its rename (QRLORA_FAULTS).
+        // The aggregate serve wall excludes training/prep by
+        // construction, so this row is a throughput-parity check: after
+        // a crash → restart → re-publish round trip, serving should
+        // still land near the clean `serve_fleet 2w` row above. Fresh
+        // store on purpose: a warm store would never publish, so nothing
+        // would crash.
+        {
+            let workers = 2usize;
+            let degraded_store = std::env::temp_dir().join("qrlora_bench_fleet_degraded");
+            let _ = std::fs::remove_dir_all(&degraded_store);
+            let out = std::process::Command::new(exe)
+                .args(["serve", "--fleet", &workers.to_string(), "--heartbeat-secs", "1"])
+                .args(["--requests", &fleet_requests.to_string()])
+                .args(["--pretrain-steps", "60", "--warmup-steps", "40", "--steps", "40"])
+                .args(["--adapter-store", &degraded_store.display().to_string()])
+                .env("QRLORA_FAULTS", "publish=crash_after_temp")
+                .output()
+                .map_err(|e| anyhow::anyhow!("cannot spawn the degraded fleet bench: {e}"))?;
+            anyhow::ensure!(
+                out.status.success(),
+                "degraded serve --fleet {workers} failed:\n{}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            let line = stdout
+                .lines()
+                .find_map(|l| l.strip_prefix("FLEET_AGGREGATE "))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("degraded fleet bench emitted no FLEET_AGGREGATE line")
+                })?;
+            let agg = Json::parse(line)?;
+            let wall_ms = agg.req("serve_wall_ms")?.as_f64().unwrap_or(0.0);
+            let rps = agg.req("rps")?.as_f64().unwrap_or(0.0);
+            let name = format!("serve_fleet_degraded {workers}w ({fleet_requests} req)");
             println!("{name:<52} {wall_ms:>9.3} ms  ({rps:.1} req/s aggregate)");
             let mut stats = Stats::new();
             stats.push(wall_ms);

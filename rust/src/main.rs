@@ -24,6 +24,12 @@
 //! (`--adapter-store DIR`, default `runs/adapters`; `--no-warm-start`
 //! disables it) and publishes freshly trained adapters back;
 //! `adapters list|verify|gc` manages the records.
+//!
+//! Fault injection: `QRLORA_FAULTS` (see [`qrlora::util::faults`])
+//! deterministically injects crashes, hangs, and transient IO errors at
+//! the store/lock/checkpoint seams so the chaos tests and CI smoke jobs
+//! can exercise supervision, retry, and degraded serving against the
+//! real binary. Unset (the default), every hook is a no-op.
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::ALL_TASKS;

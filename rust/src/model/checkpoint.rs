@@ -20,19 +20,31 @@ use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"QRLORA01";
 
-/// Save a named tensor map.
+/// Save a named tensor map. Atomic: streams magic + body into a
+/// pid-unique temp sibling, then renames into place (same protocol as
+/// the adapter store's `atomic_write`), so a crash mid-write can never
+/// leave a torn file under the published name — concurrent readers (a
+/// fleet sibling warming the same cache) see the old checkpoint or the
+/// new one, never a truncated hybrid.
 pub fn save_params(path: &Path, params: &BTreeMap<String, Tensor>) -> anyhow::Result<()> {
     use std::io::Write;
+    crate::util::faults::io_fault("checkpoint")?;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let body = encode_tensors(params);
-    // Write magic + body separately: concatenating into one Vec would
-    // transiently double the footprint of a full-FT backbone checkpoint.
-    let mut f = std::fs::File::create(path)
-        .map_err(|e| anyhow::anyhow!("cannot write {path:?}: {e}"))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&body)?;
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    {
+        // Write magic + body separately: concatenating into one Vec would
+        // transiently double the footprint of a full-FT backbone checkpoint.
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("cannot write {tmp:?}: {e}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&body)?;
+    }
+    crate::util::faults::crash_point("checkpoint");
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot move {tmp:?} into place at {path:?}: {e}"))?;
     Ok(())
 }
 
@@ -50,10 +62,17 @@ pub fn load_params(path: &Path) -> anyhow::Result<BTreeMap<String, Tensor>> {
 }
 
 /// Save a raw state vector with a tiny JSON sidecar for provenance.
+/// Atomic like [`save_params`]: both the `.npy` and the sidecar go
+/// through temp-then-rename.
 pub fn save_state(path: &Path, state: &[f32], meta: &Json) -> anyhow::Result<()> {
+    crate::util::faults::io_fault("checkpoint")?;
     let t = Tensor::from_vec(&[state.len()], state.to_vec());
-    t.save_npy(path)?;
-    std::fs::write(path.with_extension("json"), meta.pretty())?;
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    t.save_npy(&tmp)?;
+    crate::util::faults::crash_point("checkpoint");
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot move {tmp:?} into place at {path:?}: {e}"))?;
+    crate::store::atomic_write(&path.with_extension("json"), meta.pretty().as_bytes())?;
     Ok(())
 }
 

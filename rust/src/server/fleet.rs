@@ -1,4 +1,6 @@
-//! Multi-process serving fleet over one shared adapter store.
+//! Multi-process serving fleet over one shared adapter store, with
+//! supervision: crashed/hung workers restart under a bounded budget, and
+//! a worker that exhausts it has its tasks failed over to survivors.
 //!
 //! `serve --fleet N` is the single-box dress rehearsal for horizontal
 //! scale: N worker *processes* (re-execs of the current binary) share one
@@ -17,7 +19,12 @@
 //!   store-watch: poll index generation, hot-load sibling publishes
 //!        ▼                                             ▼
 //!   serve a mixed stream over ALL tasks through the batched Router
-//!        └────────── FLEET_WORKER {json} lines ────────┘
+//!        └── FLEET_WORKER / FLEET_HEARTBEAT lines ─────┘
+//!                            ▼
+//!     supervisor poll loop: try_wait + heartbeat liveness
+//!       crash/hang → kill + restart (backoff, ≤ --max-restarts)
+//!       budget exhausted → supervisor trains + publishes the
+//!       orphaned tasks so blocked survivors' adoption completes
 //!                            ▼
 //!        supervisor aggregates → FLEET_AGGREGATE {json}
 //! ```
@@ -25,21 +32,44 @@
 //! Every worker ends up serving every task — ownership only decides who
 //! *trains* an adapter; the store's locked `publish_merged` guarantees
 //! all concurrent publishes land, and the index `generation` counter
-//! gives workers a cheap poll to notice them. The supervisor pre-warms
-//! the pipeline's backbone/warm-up caches before spawning because those
-//! checkpoint writes are not atomic — N workers racing to create them
-//! could corrupt a cache file all of them read.
+//! gives workers a cheap poll to notice them. That same generation-watch
+//! path is the failover mechanism: when an owner dies for good, the
+//! supervisor trains-and-publishes its tasks itself, and the survivors
+//! blocked in [`ServeCore::adopt_published`] pick them up exactly as if
+//! the dead worker had published them. A *restarted* worker reclaims its
+//! tasks the cheap way — its first-incarnation publishes (and any
+//! supervisor failover publishes) warm-start it from the store.
+//!
+//! **Liveness**: workers emit a `FLEET_HEARTBEAT` line every
+//! `--heartbeat-secs` from a detached thread (training is legitimately
+//! stdout-silent for long stretches). The supervisor's relay thread
+//! timestamps every line; a worker silent past 3× the heartbeat period
+//! is declared hung, killed, and goes through the same restart budget as
+//! a crash. Supervision is crash-safe against torn state because every
+//! write a worker can die inside — adapter records, the store index,
+//! `runs/` checkpoints — is temp-then-rename atomic with stale-debris
+//! sweeps on open.
+//!
+//! The supervisor still pre-warms the pipeline's backbone/warm-up caches
+//! before spawning, but since `model::checkpoint` went atomic this is an
+//! optimization (N workers would redundantly compute the same caches,
+//! and on the host backend that is the dominant startup cost), not a
+//! correctness requirement.
 //!
 //! The [`HashRing`] is deliberately a reusable stub for real horizontal
 //! scale: adding a worker only moves the keys the new worker now owns
 //! (`ring_rebalance_moves_keys_only_to_the_new_worker` pins that down).
 
 use std::io::BufRead;
-use std::process::{Command, Stdio};
-use std::time::Duration;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::{ServeConfig, ServeCore, SERVE_TASKS};
 use crate::experiments::{ExpConfig, Pipeline};
+use crate::util::faults;
 use crate::util::hash::fnv1a_str;
 use crate::util::json::Json;
 use crate::util::pool;
@@ -49,8 +79,17 @@ use crate::util::pool;
 pub const VNODES_PER_WORKER: usize = 64;
 
 /// How long a worker store-watches for sibling-published adapters before
-/// giving up (covers the siblings' worst-case training time).
+/// giving up (covers the siblings' worst-case training time *plus* a
+/// sibling crash → restart/failover round trip).
 const ADOPT_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Supervisor poll period: how often `try_wait`/heartbeat liveness runs.
+const SUPERVISE_POLL: Duration = Duration::from_millis(50);
+
+/// Backoff before restart attempt 1; doubles per attempt, capped at
+/// [`RESTART_BACKOFF_MAX`].
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(200);
+const RESTART_BACKOFF_MAX: Duration = Duration::from_secs(2);
 
 /// A consistent-hash ring over worker ids: each worker contributes
 /// [`VNODES_PER_WORKER`] points (FNV-1a of `"w{worker}/v{vnode}"`), and a
@@ -125,17 +164,126 @@ impl WorkerReport {
     }
 }
 
+/// A spawned worker process plus its relay plumbing.
+struct LiveWorker {
+    child: Child,
+    relay: JoinHandle<()>,
+    /// Timestamp of the last line the worker wrote (any line — reports,
+    /// log output, `FLEET_HEARTBEAT`). The supervisor's hang detector
+    /// compares it against 3× the heartbeat period.
+    last_seen: Arc<Mutex<Instant>>,
+}
+
+/// Where one worker slot is in its lifecycle.
+enum SlotState {
+    Running(LiveWorker),
+    /// Crashed/hung; respawn once `until` passes.
+    Backoff { until: Instant, generation: u64 },
+    /// Exited cleanly.
+    Done,
+    /// Restart budget exhausted; tasks failed over.
+    Failed,
+}
+
+/// One worker id's supervision record.
+struct WorkerSlot {
+    id: usize,
+    state: SlotState,
+    restarts: usize,
+}
+
+/// Everything needed to (re)spawn worker `w` with identical flags.
+struct WorkerSpawner<'a> {
+    exe: std::path::PathBuf,
+    cfg: &'a ExpConfig,
+    sc: &'a ServeConfig,
+    owned: &'a [Vec<String>],
+    requests_for: Vec<usize>,
+    threads_per: usize,
+    tx: Sender<(usize, String)>,
+}
+
+impl WorkerSpawner<'_> {
+    /// Spawn worker `w` (restart `generation`; 0 = first incarnation).
+    /// The generation is exported so one-shot injected faults don't
+    /// re-fire forever across restarts (see [`crate::util::faults`]).
+    fn spawn(&self, w: usize, generation: u64) -> anyhow::Result<LiveWorker> {
+        let cfg = self.cfg;
+        let mut cmd = Command::new(&self.exe);
+        cmd.arg("serve")
+            .args(["--worker-id", &w.to_string()])
+            .args(["--fleet-tasks", &self.owned[w].join(",")])
+            .args(["--preset", &cfg.preset])
+            .args(["--pretrain-steps", &cfg.pretrain_steps.to_string()])
+            .args(["--warmup-steps", &cfg.warmup_steps.to_string()])
+            .args(["--steps", &cfg.steps.to_string()])
+            .args(["--train-examples", &cfg.train_examples.to_string()])
+            .args(["--seed", &cfg.seed.to_string()])
+            .args(["--lr-ft", &cfg.lr_ft.to_string()])
+            .args(["--lr", &cfg.lr_adapter.to_string()])
+            .args(["--requests", &self.requests_for[w].to_string()])
+            .args(["--max-batch", &self.sc.max_batch.to_string()])
+            .args(["--resident-adapters", &self.sc.resident_adapters.to_string()])
+            .args(["--heartbeat-secs", &self.sc.heartbeat_secs.to_string()])
+            // Split the host pool across workers instead of oversubscribing
+            // the box N-fold.
+            .env("QRLORA_THREADS", self.threads_per.to_string())
+            .env(faults::ENV_WORKER, w.to_string())
+            .env(faults::ENV_RESTART, generation.to_string())
+            .stdout(Stdio::piped());
+        match &self.sc.adapter_store {
+            Some(dir) => {
+                cmd.args(["--adapter-store", &dir.display().to_string()]);
+            }
+            None => {
+                cmd.arg("--no-warm-start");
+            }
+        }
+        let mut child = cmd
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("cannot spawn fleet worker {w}: {e}"))?;
+        let stdout = child
+            .stdout
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("fleet worker {w}: stdout was not piped"))?;
+        let last_seen = Arc::new(Mutex::new(Instant::now()));
+        let seen = Arc::clone(&last_seen);
+        let tx = self.tx.clone();
+        let relay = std::thread::spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                if let Ok(mut t) = seen.lock() {
+                    *t = Instant::now();
+                }
+                if line == "FLEET_HEARTBEAT" {
+                    continue; // liveness only; not worth echoing
+                }
+                if let Some(json) = line.strip_prefix("FLEET_WORKER ") {
+                    let _ = tx.send((w, json.to_string()));
+                }
+                println!("[w{w}] {line}");
+            }
+        });
+        Ok(LiveWorker { child, relay, last_seen })
+    }
+}
+
 /// Supervisor: pre-warm the shared `runs/` caches, partition
 /// [`SERVE_TASKS`] over the ring, spawn `workers` re-execs of the current
-/// binary, relay their output `[w{i}]`-prefixed, and aggregate their
+/// binary, then run the supervision loop — relay worker output
+/// `[w{i}]`-prefixed, restart crashed/hung workers (exponential backoff,
+/// at most `--max-restarts` each), fail a worker's tasks over to the
+/// survivors once its budget is gone — and aggregate the surviving
 /// reports into a `FLEET_AGGREGATE` line (what the `serve_fleet` bench
 /// and the CI fleet smoke parse).
 pub fn run_fleet(cfg: &ExpConfig, sc: &ServeConfig, workers: usize) -> anyhow::Result<()> {
     let workers = workers.max(1);
     let tasks = SERVE_TASKS;
 
-    // The backbone/warm-up checkpoint writes under runs/ are not atomic;
-    // materialize them once here so workers only ever read them.
+    // Materialize the shared backbone/warm-up caches once so workers only
+    // ever read them. Startup-cost optimization (checkpoint writes are
+    // atomic, so racing workers would be correct, just N× slower), and it
+    // keeps the workers' first heartbeat from racing a cold cache build.
     println!(
         "[fleet] pre-warming shared caches (backbone + {} task warm-up(s))…",
         tasks.len()
@@ -158,74 +306,60 @@ pub fn run_fleet(cfg: &ExpConfig, sc: &ServeConfig, workers: usize) -> anyhow::R
     let threads_per = (pool::threads() / workers).max(1);
     let base = sc.requests / workers;
     let extra = sc.requests % workers;
+    let requests_for: Vec<usize> =
+        (0..workers).map(|w| base + usize::from(w < extra)).collect();
 
     let (tx, rx) = std::sync::mpsc::channel::<(usize, String)>();
-    let mut children = Vec::new();
-    for (w, ts) in owned.iter().enumerate() {
-        let mut cmd = Command::new(&exe);
-        cmd.arg("serve")
-            .args(["--worker-id", &w.to_string()])
-            .args(["--fleet-tasks", &ts.join(",")])
-            .args(["--preset", &cfg.preset])
-            .args(["--pretrain-steps", &cfg.pretrain_steps.to_string()])
-            .args(["--warmup-steps", &cfg.warmup_steps.to_string()])
-            .args(["--steps", &cfg.steps.to_string()])
-            .args(["--train-examples", &cfg.train_examples.to_string()])
-            .args(["--seed", &cfg.seed.to_string()])
-            .args(["--lr-ft", &cfg.lr_ft.to_string()])
-            .args(["--lr", &cfg.lr_adapter.to_string()])
-            .args(["--requests", &(base + usize::from(w < extra)).to_string()])
-            .args(["--max-batch", &sc.max_batch.to_string()])
-            .args(["--resident-adapters", &sc.resident_adapters.to_string()])
-            // Split the host pool across workers instead of oversubscribing
-            // the box N-fold.
-            .env("QRLORA_THREADS", threads_per.to_string())
-            .stdout(Stdio::piped());
-        match &sc.adapter_store {
-            Some(dir) => {
-                cmd.args(["--adapter-store", &dir.display().to_string()]);
-            }
-            None => {
-                cmd.arg("--no-warm-start");
-            }
-        }
-        let mut child = cmd
-            .spawn()
-            .map_err(|e| anyhow::anyhow!("cannot spawn fleet worker {w}: {e}"))?;
-        let stdout = child.stdout.take().expect("stdout was piped");
-        let tx = tx.clone();
-        let relay = std::thread::spawn(move || {
-            for line in std::io::BufReader::new(stdout).lines() {
-                let Ok(line) = line else { break };
-                if let Some(json) = line.strip_prefix("FLEET_WORKER ") {
-                    let _ = tx.send((w, json.to_string()));
-                }
-                println!("[w{w}] {line}");
-            }
-        });
-        children.push((w, child, relay));
-    }
-    drop(tx);
+    let spawner = WorkerSpawner { exe, cfg, sc, owned: &owned, requests_for, threads_per, tx };
 
-    for (w, mut child, relay) in children {
-        let status = child.wait()?;
-        let _ = relay.join();
-        anyhow::ensure!(status.success(), "fleet worker {w} exited with {status}");
+    let mut slots: Vec<WorkerSlot> = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let live = spawner.spawn(w, 0)?;
+        slots.push(WorkerSlot { id: w, state: SlotState::Running(live), restarts: 0 });
     }
-    let mut reports: Vec<WorkerReport> = rx
-        .iter()
-        .map(|(w, json)| WorkerReport::parse(w, &json))
-        .collect::<anyhow::Result<_>>()?;
-    reports.sort_by_key(|r| r.worker);
+
+    let hang_deadline = Duration::from_secs(sc.heartbeat_secs.max(1)) * 3;
+    supervise(&mut slots, &spawner, cfg, sc, &owned, hang_deadline)?;
+
+    // All relay threads joined inside supervise(); dropping the spawner
+    // drops the last sender so the report drain below terminates.
+    let failed: Vec<usize> =
+        slots.iter().filter(|s| matches!(s.state, SlotState::Failed)).map(|s| s.id).collect();
+    drop(spawner);
+
+    // Dedup by worker id, last report wins — a worker that got restarted
+    // after somehow reporting must not be double-counted.
+    let mut by_worker: std::collections::BTreeMap<usize, WorkerReport> =
+        std::collections::BTreeMap::new();
+    for (w, json) in rx.iter() {
+        match WorkerReport::parse(w, &json) {
+            Ok(r) => {
+                by_worker.insert(w, r);
+            }
+            // A malformed report degrades that worker to "no report",
+            // it doesn't abort the fleet.
+            Err(e) => crate::warnln!("[fleet] ignoring malformed report from worker {w}: {e:#}"),
+        }
+    }
+    let reports: Vec<WorkerReport> = by_worker.into_values().collect();
     anyhow::ensure!(
-        reports.len() == workers,
-        "expected {workers} FLEET_WORKER report(s), got {}",
-        reports.len()
+        !reports.is_empty(),
+        "no fleet worker completed serving ({} of {workers} failed permanently)",
+        failed.len()
     );
+    if !failed.is_empty() {
+        crate::warnln!(
+            "[fleet] {} of {workers} worker(s) failed permanently ({failed:?}); \
+             aggregating over the {} survivor(s)",
+            failed.len(),
+            reports.len()
+        );
+    }
 
     // Aggregate throughput over the longest serve phase: the honest
     // single-box number (workers serve concurrently; summing per-worker
     // RPS would overcount whenever phases don't fully overlap).
+    let reported = reports.len();
     let total_requests: usize = reports.iter().map(|r| r.requests).sum();
     let warmup_steps: usize = reports.iter().map(|r| r.warmup_steps).sum();
     let max_wall_ms = reports.iter().map(|r| r.serve_wall_ms).fold(0.0f64, f64::max);
@@ -237,11 +371,11 @@ pub fn run_fleet(cfg: &ExpConfig, sc: &ServeConfig, workers: usize) -> anyhow::R
         );
     }
     println!(
-        "[fleet] aggregate: {workers} worker(s), {total_requests} requests, \
+        "[fleet] aggregate: {reported} worker(s), {total_requests} requests, \
          {agg_rps:.1} req/s, warm-up training steps: {warmup_steps}"
     );
     let agg = Json::obj(vec![
-        ("workers", Json::num(workers as f64)),
+        ("workers", Json::num(reported as f64)),
         ("requests", Json::num(total_requests as f64)),
         ("serve_wall_ms", Json::num(max_wall_ms)),
         ("rps", Json::num(agg_rps)),
@@ -251,17 +385,184 @@ pub fn run_fleet(cfg: &ExpConfig, sc: &ServeConfig, workers: usize) -> anyhow::R
     Ok(())
 }
 
+/// What the per-slot poll decided to do with a slot this tick.
+enum Transition {
+    /// Clean exit: join the relay, mark done.
+    Finished,
+    /// Crashed or killed as hung: restart or fail over.
+    Crashed,
+    /// Backoff elapsed: respawn at this generation.
+    Respawn(u64),
+}
+
+/// The supervision loop: poll every live worker with `try_wait` (never a
+/// blocking `wait` — one dead worker must not stall the fleet), kill
+/// workers silent past `hang_deadline`, restart under budget with
+/// exponential backoff, and fail over the tasks of workers that exhaust
+/// it. Failover happens *inside* the loop because survivors block in
+/// adoption waiting for the dead worker's publishes — deferring it would
+/// deadlock the fleet until the adopt timeout.
+fn supervise(
+    slots: &mut [WorkerSlot],
+    spawner: &WorkerSpawner,
+    cfg: &ExpConfig,
+    sc: &ServeConfig,
+    owned: &[Vec<String>],
+    hang_deadline: Duration,
+) -> anyhow::Result<()> {
+    loop {
+        let mut orphans: Vec<String> = Vec::new();
+        let mut settled = true;
+        for slot in slots.iter_mut() {
+            let transition = match &mut slot.state {
+                SlotState::Running(live) => {
+                    settled = false;
+                    match live.child.try_wait() {
+                        Ok(Some(status)) if status.success() => Some(Transition::Finished),
+                        Ok(Some(status)) => {
+                            crate::warnln!("[fleet] worker {} exited with {status}", slot.id);
+                            Some(Transition::Crashed)
+                        }
+                        Ok(None) => {
+                            let silent = live
+                                .last_seen
+                                .lock()
+                                .map(|t| t.elapsed())
+                                .unwrap_or(Duration::ZERO);
+                            if silent >= hang_deadline {
+                                crate::warnln!(
+                                    "[fleet] worker {} silent for {silent:?} \
+                                     (deadline {hang_deadline:?}); killing as hung",
+                                    slot.id
+                                );
+                                let _ = live.child.kill();
+                                let _ = live.child.wait();
+                                Some(Transition::Crashed)
+                            } else {
+                                None
+                            }
+                        }
+                        Err(e) => {
+                            // Can't poll it — treat like a crash rather
+                            // than spinning on the error forever.
+                            crate::warnln!("[fleet] cannot poll worker {}: {e}", slot.id);
+                            let _ = live.child.kill();
+                            let _ = live.child.wait();
+                            Some(Transition::Crashed)
+                        }
+                    }
+                }
+                SlotState::Backoff { until, generation } => {
+                    settled = false;
+                    if Instant::now() >= *until {
+                        Some(Transition::Respawn(*generation))
+                    } else {
+                        None
+                    }
+                }
+                SlotState::Done | SlotState::Failed => None,
+            };
+            match transition {
+                Some(Transition::Finished) => {
+                    if let SlotState::Running(live) =
+                        std::mem::replace(&mut slot.state, SlotState::Done)
+                    {
+                        let _ = live.relay.join();
+                    }
+                }
+                Some(Transition::Crashed) => {
+                    if let SlotState::Running(live) =
+                        std::mem::replace(&mut slot.state, SlotState::Failed)
+                    {
+                        let _ = live.relay.join();
+                    }
+                    if slot.restarts < sc.max_restarts {
+                        slot.restarts += 1;
+                        let pause = RESTART_BACKOFF_BASE
+                            .saturating_mul(1u32 << (slot.restarts - 1).min(4))
+                            .min(RESTART_BACKOFF_MAX);
+                        crate::warnln!(
+                            "[fleet] restarting worker {} in {pause:?} (attempt {}/{})",
+                            slot.id,
+                            slot.restarts,
+                            sc.max_restarts
+                        );
+                        slot.state = SlotState::Backoff {
+                            until: Instant::now() + pause,
+                            generation: slot.restarts as u64,
+                        };
+                    } else {
+                        crate::warnln!(
+                            "[fleet] worker {} exhausted its restart budget \
+                             ({} restart(s)); failing its tasks over",
+                            slot.id,
+                            sc.max_restarts
+                        );
+                        orphans.extend(owned[slot.id].iter().cloned());
+                    }
+                }
+                Some(Transition::Respawn(generation)) => match spawner.spawn(slot.id, generation) {
+                    Ok(live) => slot.state = SlotState::Running(live),
+                    Err(e) => {
+                        crate::warnln!("[fleet] respawn of worker {} failed: {e:#}", slot.id);
+                        orphans.extend(owned[slot.id].iter().cloned());
+                        slot.state = SlotState::Failed;
+                    }
+                },
+                None => {}
+            }
+        }
+        if !orphans.is_empty() {
+            fail_over(cfg, sc, &orphans)?;
+        }
+        if settled {
+            return Ok(());
+        }
+        std::thread::sleep(SUPERVISE_POLL);
+    }
+}
+
+/// Adopt a dead worker's ring-owned tasks: the supervisor builds the same
+/// [`ServeCore`] a worker would and resolves each orphan — load-from-store
+/// when the dead worker managed to publish, train-on-miss otherwise —
+/// publishing the result. Survivors blocked in adoption then hot-load
+/// them through the ordinary generation-watch path, exactly as if the
+/// dead worker had published.
+fn fail_over(cfg: &ExpConfig, sc: &ServeConfig, orphans: &[String]) -> anyhow::Result<()> {
+    if orphans.is_empty() || sc.adapter_store.is_none() {
+        return Ok(());
+    }
+    crate::warnln!("[fleet] failing over orphaned task(s) {orphans:?} in the supervisor");
+    let refs: Vec<&str> = orphans.iter().map(|s| s.as_str()).collect();
+    let mut core = ServeCore::new(cfg, sc.adapter_store.as_deref())?;
+    core.prepare(&refs)?;
+    core.flush_publishes();
+    Ok(())
+}
+
 /// One fleet worker (`serve --worker-id I --fleet-tasks a,b`): build the
 /// same [`ServeCore`] the demo uses, train-and-publish the owned tasks,
 /// store-watch until every sibling-owned adapter is hot-loaded, then
 /// serve a mixed stream over the full task set and emit the
-/// machine-readable `FLEET_WORKER` report the supervisor aggregates.
+/// machine-readable `FLEET_WORKER` report the supervisor aggregates. A
+/// detached thread emits `FLEET_HEARTBEAT` every `--heartbeat-secs` so
+/// the supervisor can tell "training silently" from "hung".
 pub fn run_worker(
     cfg: &ExpConfig,
     sc: &ServeConfig,
     worker_id: usize,
     owned: &[String],
 ) -> anyhow::Result<()> {
+    // Before the heartbeat thread exists, so an injected hang presents to
+    // the supervisor as a genuinely silent (hung) worker.
+    faults::hang_point("serve");
+    faults::crash_point("serve");
+    let hb = Duration::from_secs(sc.heartbeat_secs.max(1));
+    std::thread::spawn(move || loop {
+        std::thread::sleep(hb);
+        println!("FLEET_HEARTBEAT");
+    });
+
     let tasks = SERVE_TASKS;
     let owned: Vec<&str> = owned.iter().map(|s| s.as_str()).collect();
     let siblings: Vec<&str> =
@@ -282,6 +583,7 @@ pub fn run_worker(
     let stream_seed = cfg.seed ^ 0x5EED ^ ((worker_id as u64 + 1) << 32);
     let queue = core.build_queue(tasks, sc.requests, stream_seed)?;
     let (_results, stats) = core.serve_batched(sc, &queue)?;
+    core.flush_publishes();
     println!(
         "[serve] worker {worker_id}: served {} request(s) at {:.1} req/s",
         stats.requests,

@@ -341,8 +341,16 @@ impl<'s, 'b> Router<'s, 'b> {
             while reqs.len() < self.max_batch {
                 let Some(front) = queue.front() else { break };
                 let tname = front.task.clone();
-                // Guaranteed present by the prescan at serve() entry.
-                let entry = self.library.get(&tname).expect("task validated at serve() entry");
+                // Present by the prescan at serve() entry; checked again
+                // so a future library mutation degrades to an error on
+                // this request, never a server panic.
+                let Some(entry) = self.library.get(&tname) else {
+                    anyhow::bail!(
+                        "adapter for task {tname:?} vanished from the library mid-batch \
+                         (request {})",
+                        front.id
+                    );
+                };
                 let mut pinned: Vec<usize> = row_slots.clone();
                 pinned.sort_unstable();
                 pinned.dedup();
@@ -363,15 +371,20 @@ impl<'s, 'b> Router<'s, 'b> {
                     }
                 }
                 row_slots.push(adm.slot);
-                reqs.push(queue.pop_front().unwrap());
+                let Some(req) = queue.pop_front() else { break };
+                reqs.push(req);
             }
-            debug_assert!(!reqs.is_empty(), "non-empty queue must yield a batch");
+            // A non-empty queue always admits at least one request, but
+            // bail (don't index-panic) if that invariant ever breaks.
+            let Some(&slot0) = row_slots.first() else {
+                anyhow::bail!("batch assembly yielded no requests from a non-empty queue");
+            };
 
             // --- one mixed pass -------------------------------------------
             let refs: Vec<&Example> = reqs.iter().map(|r| &r.example).collect();
             let batch = self.batcher.assemble(&refs);
             let mut slots_padded = row_slots.clone();
-            slots_padded.resize(self.batcher.batch, row_slots[0]);
+            slots_padded.resize(self.batcher.batch, slot0);
             let states = self.bank.states();
             let masks = self.bank.class_masks();
             let t0 = Instant::now();
@@ -450,6 +463,13 @@ pub struct ServeConfig {
     /// are published here and loaded back on restart); `None` disables
     /// the store entirely (`--no-warm-start`).
     pub adapter_store: Option<std::path::PathBuf>,
+    /// Fleet supervision: restarts allowed per worker before its tasks
+    /// fail over to survivors (`--max-restarts`).
+    pub max_restarts: usize,
+    /// Fleet supervision: worker heartbeat period in seconds; a worker
+    /// silent for 3× this is declared hung and killed
+    /// (`--heartbeat-secs`).
+    pub heartbeat_secs: u64,
 }
 
 impl Default for ServeConfig {
@@ -459,6 +479,8 @@ impl Default for ServeConfig {
             max_batch: 0,
             resident_adapters: 8,
             adapter_store: Some(std::path::PathBuf::from(crate::store::DEFAULT_STORE_DIR)),
+            max_restarts: 2,
+            heartbeat_secs: 5,
         }
     }
 }
@@ -481,6 +503,8 @@ impl ServeConfig {
             max_batch: args.usize_or("max-batch", d.max_batch)?,
             resident_adapters: args.usize_or("resident-adapters", d.resident_adapters)?,
             adapter_store,
+            max_restarts: args.usize_or("max-restarts", d.max_restarts)?,
+            heartbeat_secs: args.u64_or("heartbeat-secs", d.heartbeat_secs)?,
         })
     }
 }
@@ -532,15 +556,34 @@ impl ServeCore {
         )?;
         let session =
             Session::finetune(pipe.rt, &preset, &method, HeadKind::Cls, &warm_bb, None, cfg.seed)?;
+        // A store that won't open past the retry budget degrades serving
+        // instead of failing it: RAM tier + train-on-miss keep every
+        // request answerable, and publishes queue until the store is
+        // back ([`TieredAdapters::mark_degraded`]).
+        let mut degraded_dir = None;
         let registry = match adapter_store {
             Some(dir) => {
-                let reg = Registry::open(dir)?;
-                println!(
-                    "[serve] adapter store: {} ({} record(s) on disk)",
-                    reg.dir().display(),
-                    reg.len()
-                );
-                Some(reg)
+                let opened = store::retry::with_retry(Default::default(), "open adapter store", || {
+                    Registry::open(dir)
+                });
+                match opened {
+                    Ok(reg) => {
+                        println!(
+                            "[serve] adapter store: {} ({} record(s) on disk)",
+                            reg.dir().display(),
+                            reg.len()
+                        );
+                        Some(reg)
+                    }
+                    Err(e) => {
+                        crate::warnln!(
+                            "[serve] DEGRADED: adapter store {dir:?} unavailable ({e:#}); \
+                             serving RAM tier + train-on-miss, publishes queued for retry"
+                        );
+                        degraded_dir = Some(dir.to_path_buf());
+                        None
+                    }
+                }
             }
             None => {
                 println!("[serve] adapter store: disabled (--no-warm-start)");
@@ -555,7 +598,7 @@ impl ServeCore {
             store::fingerprint_params(&warm_bb),
             &method.frozen_inputs(),
         );
-        let tiers = TieredAdapters::new(
+        let mut tiers = TieredAdapters::new(
             registry,
             store::fingerprint_layout(session.layout()),
             backbone_fp,
@@ -564,6 +607,9 @@ impl ServeCore {
             method.artifact_name(),
             cfg.seed,
         );
+        if let Some(dir) = &degraded_dir {
+            tiers.mark_degraded(dir);
+        }
         let layout = session.layout().clone();
         Ok(ServeCore {
             cfg: cfg.clone(),
@@ -753,11 +799,35 @@ impl ServeCore {
         let batcher = Batcher::new(&self.preset, false);
         let mut router = Router::new(&self.session, batcher, sc.max_batch, sc.resident_adapters)?;
         for (name, state) in &self.states {
-            router.register(name, state.clone(), self.n_classes[name])?;
+            let n = *self.n_classes.get(name).ok_or_else(|| {
+                anyhow::anyhow!("resolved state for {name:?} has no recorded class count")
+            })?;
+            router.register(name, state.clone(), n)?;
         }
         let mut q = queue.clone();
         let results = router.serve(&mut q)?;
         Ok((results, router.stats))
+    }
+
+    /// Last-chance publish-back before the process exits: reopen the
+    /// store if degraded, retry every queued publish, and warn about
+    /// anything still stuck (those adapters simply retrain next boot —
+    /// degraded mode costs duplicate training, never lost serving).
+    pub fn flush_publishes(&mut self) {
+        if self.tiers.pending_publishes() == 0 {
+            return;
+        }
+        // refresh() reopens + flushes when degraded; flush_pending()
+        // covers the registry-was-live-but-publish-flaked case.
+        let _ = self.tiers.refresh();
+        self.tiers.flush_pending();
+        let left = self.tiers.pending_publishes();
+        if left > 0 {
+            crate::warnln!(
+                "[serve] {left} adapter publish(es) still queued at shutdown (store \
+                 unavailable); those adapters will retrain on the next boot"
+            );
+        }
     }
 }
 
@@ -864,6 +934,7 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
             );
         }
     }
+    core.flush_publishes();
     Ok(())
 }
 

@@ -637,13 +637,19 @@ impl AdapterRecord {
     /// Write atomically (temp file + rename) so a crash mid-write can
     /// never leave a half-record under the published name.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        super::atomic_write(path, &self.encode())
+        super::atomic_write_site(path, &self.encode(), "publish")
     }
 
-    /// Read + verify a record file.
+    /// Read + verify a record file. The read itself retries transient IO
+    /// errors ([`super::retry`]) so a store blip degrades to a warning
+    /// instead of a dropped/retrained adapter; decode failures (corrupt
+    /// record) are permanent and surface immediately.
     pub fn load(path: &Path) -> anyhow::Result<AdapterRecord> {
-        let bytes = std::fs::read(path)
-            .map_err(|e| anyhow::anyhow!("cannot read adapter record {path:?}: {e}"))?;
+        let bytes = super::retry::with_retry(Default::default(), "read adapter record", || {
+            crate::util::faults::io_fault("store.read")?;
+            std::fs::read(path)
+                .map_err(|e| anyhow::anyhow!("cannot read adapter record {path:?}: {e}"))
+        })?;
         AdapterRecord::decode(&path.display().to_string(), &bytes)
     }
 }

@@ -86,6 +86,10 @@ impl StoreLock {
     ) -> anyhow::Result<StoreLock> {
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow::anyhow!("cannot create adapter store {dir:?}: {e}"))?;
+        // Injected "lock" faults render as transient (same marker the
+        // real acquire timeout carries), so chaos specs exercise the
+        // retry/degraded paths a genuinely contended lock would hit.
+        crate::util::faults::io_fault("lock")?;
         let path = dir.join(LOCK_FILE);
         let token = format!(
             "{}:{}:{}",
@@ -140,6 +144,13 @@ impl StoreLock {
 
 impl Drop for StoreLock {
     fn drop(&mut self) {
+        // Fault injection: a `lock=hold_past_stale` clause simulates a
+        // holder dying without release — the file stays and the next
+        // acquirer must go through dead-pid/age takeover.
+        if crate::util::faults::leaks("lock") {
+            crate::warnln!("store lock: injected leak; leaving {:?} held", self.path);
+            return;
+        }
         match std::fs::read_to_string(&self.path) {
             Ok(text) if lock_token(&text).as_deref() == Some(self.token.as_str()) => {
                 if let Err(e) = std::fs::remove_file(&self.path) {

@@ -32,6 +32,7 @@ pub mod format;
 pub mod gc;
 pub mod lock;
 pub mod registry;
+pub mod retry;
 pub mod tier;
 
 pub use format::{
@@ -75,11 +76,22 @@ pub fn unix_now_or_zero() -> u64 {
 /// The pid suffix keeps two processes publishing the same path from
 /// interleaving writes into one temp file.
 pub fn atomic_write(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    atomic_write_site(path, bytes, "store.write")
+}
+
+/// [`atomic_write`] with an explicit fault-injection site (`"publish"`
+/// for adapter records, `"store.write"` for index rewrites): the
+/// injection hooks sit before the temp write (transient IO error) and
+/// between temp write and rename (`crash_after_temp` — dying exactly
+/// inside the torn-write window the recovery sweeps exist for).
+pub fn atomic_write_site(path: &Path, bytes: &[u8], site: &str) -> anyhow::Result<()> {
+    crate::util::faults::io_fault(site)?;
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let tmp = path.with_extension(format!("tmp{}", std::process::id()));
     std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("cannot write {tmp:?}: {e}"))?;
+    crate::util::faults::crash_point(site);
     std::fs::rename(&tmp, path)
         .map_err(|e| anyhow::anyhow!("cannot move {tmp:?} into place at {path:?}: {e}"))?;
     Ok(())

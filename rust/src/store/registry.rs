@@ -149,6 +149,7 @@ impl Registry {
     /// Open (creating the directory if needed), recovering from any
     /// crashed-write debris. See the module docs for the recovery rules.
     pub fn open(dir: &Path) -> anyhow::Result<Registry> {
+        crate::util::faults::io_fault("store.open")?;
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow::anyhow!("cannot create adapter store {dir:?}: {e}"))?;
 
@@ -472,7 +473,13 @@ fn scan(dir: &Path) -> anyhow::Result<Scan> {
 }
 
 fn read_index(path: &Path) -> anyhow::Result<(Vec<RegistryEntry>, u64)> {
-    let text = std::fs::read_to_string(path)?;
+    // Retry *inside* the read: a transient IO blip here would otherwise
+    // look like a corrupt index and trigger a full rebuild — which drops
+    // any entry whose record momentarily fails to re-read.
+    let text = super::retry::with_retry(Default::default(), "read store index", || {
+        crate::util::faults::io_fault("store.read")?;
+        Ok(std::fs::read_to_string(path)?)
+    })?;
     let doc = Json::parse(&text)?;
     let version = doc.req("version")?.as_usize().unwrap_or(0);
     anyhow::ensure!(

@@ -1,0 +1,209 @@
+//! Bounded retry with deterministic jittered backoff for store IO.
+//!
+//! The store's IO seams (index reads, record loads, lock acquisition,
+//! publishes) can fail transiently — NFS hiccups, a lock held a beat too
+//! long, an injected fault from [`crate::util::faults`]. This module
+//! gives every seam the same policy: a handful of attempts, exponential
+//! backoff with deterministic jitter (FNV over `(what, attempt, pid)` —
+//! no `rand`, reproducible per process), and a per-op deadline so a
+//! flapping store cannot stall serving indefinitely.
+//!
+//! Classification is by message because the vendored `anyhow` carries no
+//! downcast: an error is **transient** when its rendered chain contains
+//! one of [`TRANSIENT_MARKERS`] (injected faults are stamped
+//! "(transient)", real lock contention renders as "timed out …").
+//! Everything else — corrupt records, fingerprint mismatches, missing
+//! files — is permanent and fails on the first attempt; retrying those
+//! would only mask bugs and triple the latency of a real error.
+
+use std::time::{Duration, Instant};
+
+use crate::util::hash::{fnv1a, FNV_OFFSET};
+
+/// Lowercase substrings whose presence in a rendered error chain marks
+/// it as transient (worth retrying). Kept deliberately short: when in
+/// doubt an error is permanent.
+pub const TRANSIENT_MARKERS: &[&str] =
+    &["(transient)", "timed out", "interrupted", "temporarily unavailable"];
+
+/// Whether `err`'s rendered chain looks transient (see module docs).
+pub fn is_transient(err: &anyhow::Error) -> bool {
+    let rendered = format!("{err:#}").to_lowercase();
+    TRANSIENT_MARKERS.iter().any(|m| rendered.contains(m))
+}
+
+/// Retry policy: bounded attempts, exponential backoff with
+/// deterministic jitter, and a hard per-op deadline.
+#[derive(Debug, Clone, Copy)]
+pub struct Retry {
+    /// Total attempts (first try included). 1 = no retries.
+    pub attempts: u32,
+    /// Backoff before attempt 2; doubles each further attempt.
+    pub base_backoff: Duration,
+    /// Hard wall-clock budget across all attempts; once exceeded, the
+    /// last error is returned even if attempts remain.
+    pub deadline: Duration,
+}
+
+impl Default for Retry {
+    fn default() -> Self {
+        Retry {
+            attempts: 3,
+            base_backoff: Duration::from_millis(10),
+            deadline: Duration::from_secs(2),
+        }
+    }
+}
+
+impl Retry {
+    /// Backoff before attempt `attempt` (2-based), jittered ×[0.5, 1.5)
+    /// by an FNV hash of `(what, attempt, pid)` — deterministic within a
+    /// process, decorrelated across a fleet of workers.
+    fn backoff(&self, what: &str, attempt: u32) -> Duration {
+        let exp = self.base_backoff.saturating_mul(1 << (attempt - 2).min(16));
+        let mut h = FNV_OFFSET;
+        fnv1a(&mut h, what.as_bytes());
+        fnv1a(&mut h, &attempt.to_le_bytes());
+        fnv1a(&mut h, &std::process::id().to_le_bytes());
+        // h%1000 ∈ [0,1000) → scale ∈ [0.5, 1.5)
+        let scale = 0.5 + (h % 1000) as f64 / 1000.0;
+        exp.mul_f64(scale)
+    }
+}
+
+/// Run `f` under `policy`, retrying transient failures. Permanent errors
+/// return immediately; exhausting attempts or the deadline returns the
+/// last error with a "gave up" context naming `what`. Each retry warns,
+/// so a store limping through transient errors is loud in the logs even
+/// when every op ultimately succeeds.
+pub fn with_retry<T>(
+    policy: Retry,
+    what: &str,
+    mut f: impl FnMut() -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    let start = Instant::now();
+    let mut attempt = 1;
+    loop {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) if !is_transient(&e) => return Err(e),
+            Err(e) => {
+                if attempt >= policy.attempts.max(1) || start.elapsed() >= policy.deadline {
+                    return Err(e.context(format!(
+                        "{what}: gave up after {attempt} attempt(s) in {:?}",
+                        start.elapsed()
+                    )));
+                }
+                attempt += 1;
+                let pause = policy.backoff(what, attempt);
+                crate::warnln!(
+                    "{what}: transient failure ({e:#}); retry {attempt}/{} in {pause:?}",
+                    policy.attempts
+                );
+                std::thread::sleep(pause);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Retry {
+        Retry {
+            attempts: 3,
+            base_backoff: Duration::from_millis(1),
+            deadline: Duration::from_secs(5),
+        }
+    }
+
+    #[test]
+    fn classification_is_marker_based() {
+        assert!(is_transient(&anyhow::anyhow!("injected store.read fault (transient)")));
+        assert!(is_transient(&anyhow::anyhow!("lock acquire timed out after 10s")));
+        assert!(is_transient(
+            &anyhow::anyhow!("io").context("resource temporarily unavailable")
+        ));
+        assert!(!is_transient(&anyhow::anyhow!("checksum mismatch in section 2")));
+        assert!(!is_transient(&anyhow::anyhow!("cannot read record: no such file")));
+    }
+
+    #[test]
+    fn first_success_needs_no_retry() {
+        let mut calls = 0;
+        let v = with_retry(fast(), "op", || {
+            calls += 1;
+            Ok::<_, anyhow::Error>(42)
+        })
+        .unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn transient_errors_retry_until_success() {
+        let mut calls = 0;
+        let v = with_retry(fast(), "op", || {
+            calls += 1;
+            if calls < 3 {
+                anyhow::bail!("flaky (transient)");
+            }
+            Ok(7)
+        })
+        .unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn permanent_errors_fail_fast() {
+        let mut calls = 0;
+        let err = with_retry(fast(), "op", || -> anyhow::Result<()> {
+            calls += 1;
+            anyhow::bail!("corrupt record")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1, "permanent error must not be retried");
+        assert!(format!("{err:#}").contains("corrupt record"));
+    }
+
+    #[test]
+    fn exhausted_attempts_report_the_give_up() {
+        let mut calls = 0;
+        let err = with_retry(fast(), "read index", || -> anyhow::Result<()> {
+            calls += 1;
+            anyhow::bail!("still down (transient)")
+        })
+        .unwrap_err();
+        assert_eq!(calls, 3);
+        let msg = format!("{err:#}");
+        assert!(msg.contains("read index: gave up after 3 attempt(s)"), "got {msg}");
+        assert!(msg.contains("still down"), "original cause preserved: {msg}");
+    }
+
+    #[test]
+    fn deadline_caps_retries_even_with_attempts_left() {
+        let policy = Retry {
+            attempts: 1000,
+            base_backoff: Duration::from_millis(5),
+            deadline: Duration::from_millis(30),
+        };
+        let start = Instant::now();
+        let err = with_retry(policy, "op", || -> anyhow::Result<()> {
+            anyhow::bail!("down (transient)")
+        })
+        .unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(2), "deadline must bound the loop");
+        assert!(format!("{err:#}").contains("gave up"));
+    }
+
+    #[test]
+    fn backoff_is_deterministic_and_grows() {
+        let p = fast();
+        assert_eq!(p.backoff("x", 2), p.backoff("x", 2));
+        // Jitter spans ×[0.5,1.5), so attempt 4 (4× base) always exceeds
+        // attempt 2 (1× base): 4×0.5 > 1×1.5.
+        assert!(p.backoff("x", 4) > p.backoff("x", 2));
+    }
+}

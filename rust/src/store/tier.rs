@@ -19,6 +19,15 @@
 //! parallel, one pool task per record, so router admission never blocks
 //! on a cold file read — by the time requests are admitted the states
 //! are RAM-resident.
+//!
+//! **Degraded mode**: when the store is unavailable (open failed past
+//! the retry budget), the resolver keeps serving from the RAM tier and
+//! train-on-miss ([`TieredAdapters::mark_degraded`]). Records trained
+//! meanwhile — and publishes that fail transiently — queue in a pending
+//! list; every [`TieredAdapters::refresh`] retries the reopen and
+//! flushes the queue once the store is back, so an outage costs
+//! duplicate training at worst, never a failed request or a lost
+//! adapter.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -83,6 +92,13 @@ pub struct TieredAdapters {
     /// validation in `prefetch` is not re-read, re-warned about, and
     /// re-counted before falling through to training.
     rejected: BTreeSet<String>,
+    /// Set when the store went unavailable: the directory to keep trying
+    /// to reopen on [`TieredAdapters::refresh`].
+    degraded_dir: Option<std::path::PathBuf>,
+    /// Records awaiting publish-back: trained while degraded, or whose
+    /// publish failed transiently. Flushed on refresh once the store is
+    /// reachable again.
+    pending: Vec<AdapterRecord>,
     pub stats: TierStats,
 }
 
@@ -115,6 +131,8 @@ impl TieredAdapters {
             seed,
             ram: BTreeMap::new(),
             rejected: BTreeSet::new(),
+            degraded_dir: None,
+            pending: Vec::new(),
             stats: TierStats::default(),
         }
     }
@@ -126,6 +144,57 @@ impl TieredAdapters {
 
     pub fn registry(&self) -> Option<&Registry> {
         self.registry.as_ref()
+    }
+
+    /// True while the store is unavailable and serving falls back to
+    /// RAM-tier → train-on-miss.
+    pub fn degraded(&self) -> bool {
+        self.degraded_dir.is_some()
+    }
+
+    /// Enter degraded mode: serve without the store, keep `dir` to retry
+    /// reopening on every [`TieredAdapters::refresh`], and queue trained
+    /// records for publish-back instead of dropping them.
+    pub fn mark_degraded(&mut self, dir: &std::path::Path) {
+        self.registry = None;
+        self.degraded_dir = Some(dir.to_path_buf());
+    }
+
+    /// Records still waiting for publish-back.
+    pub fn pending_publishes(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Try to publish every queued record. Records that still fail stay
+    /// queued. Returns how many landed.
+    pub fn flush_pending(&mut self) -> usize {
+        if self.pending.is_empty() {
+            return 0;
+        }
+        let queued = std::mem::take(&mut self.pending);
+        let mut still = Vec::new();
+        let mut flushed = 0;
+        if let Some(reg) = self.registry.as_mut() {
+            for record in queued {
+                match reg.publish(&record) {
+                    Ok(path) => {
+                        flushed += 1;
+                        crate::debugln!("adapter store: flushed queued publish {path:?}");
+                    }
+                    Err(e) => {
+                        crate::warnln!(
+                            "adapter store: queued publish for {} still failing ({e:#})",
+                            record.meta.key
+                        );
+                        still.push(record);
+                    }
+                }
+            }
+        } else {
+            still = queued;
+        }
+        self.pending = still;
+        flushed
     }
 
     /// True when `task` is already RAM-resident.
@@ -140,6 +209,27 @@ impl TieredAdapters {
     /// This is the store-watch half of fleet hot-reloading; pair it with
     /// [`TieredAdapters::resolve_disk_only`].
     pub fn refresh(&mut self) -> anyhow::Result<bool> {
+        // Degraded: every refresh is a reopen attempt; failure just
+        // stays degraded (never an error — that's the point).
+        if let Some(dir) = self.degraded_dir.clone() {
+            match Registry::open(&dir) {
+                Ok(reg) => {
+                    self.registry = Some(reg);
+                    self.degraded_dir = None;
+                    self.rejected.clear();
+                    let flushed = self.flush_pending();
+                    crate::warnln!(
+                        "adapter store: {dir:?} reachable again; leaving degraded mode \
+                         ({flushed} queued publish(es) flushed)"
+                    );
+                    return Ok(true);
+                }
+                Err(e) => {
+                    crate::debugln!("adapter store: still unavailable ({e:#}); serving degraded");
+                    return Ok(false);
+                }
+            }
+        }
         let Some(reg) = &self.registry else { return Ok(false) };
         let dir = reg.dir().to_path_buf();
         // An unreadable generation reads as "changed": reopening runs
@@ -150,6 +240,7 @@ impl TieredAdapters {
         }
         self.registry = Some(Registry::open(&dir)?);
         self.rejected.clear();
+        self.flush_pending();
         Ok(true)
     }
 
@@ -213,7 +304,14 @@ impl TieredAdapters {
         }
         pool::join_all(jobs);
         for ((task, _), result) in pending.iter().zip(results) {
-            let loaded = result.expect("prefetch job must fill its slot");
+            // An unfilled slot (pool job died) degrades that task to
+            // train-on-miss rather than panicking the server.
+            let Some(loaded) = result else {
+                self.stats.rejected += 1;
+                self.rejected.insert(task.clone());
+                crate::warnln!("adapter store: prefetch of {task:?} never completed; will retrain");
+                continue;
+            };
             match self.validate(layout, loaded) {
                 Ok(resolved) => {
                     self.stats.disk_hits += 1;
@@ -335,13 +433,27 @@ impl TieredAdapters {
             train_ms: record.meta.train_ms,
             source: Source::Trained,
         };
+        // Publish-back is best-effort for serving but never silently
+        // lossy: a transient failure (or degraded mode) queues the
+        // record so refresh() can land it once the store recovers.
+        let mut queue_record = self.degraded_dir.is_some();
         if let Some(reg) = &mut self.registry {
             match reg.publish(&record) {
                 Ok(path) => crate::debugln!("adapter store: published {path:?}"),
+                Err(e) if super::retry::is_transient(&e) => {
+                    crate::warnln!(
+                        "adapter store: publish for {task:?} failed transiently ({e:#}); \
+                         queued for retry"
+                    );
+                    queue_record = true;
+                }
                 Err(e) => {
                     crate::warnln!("adapter store: cannot publish record for {task:?}: {e:#}")
                 }
             }
+        }
+        if queue_record {
+            self.pending.push(record);
         }
         self.ram.insert(task.to_string(), resolved);
         Ok(&self.ram[task])

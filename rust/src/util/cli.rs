@@ -128,6 +128,8 @@ pub const SERVE_FLAGS: &[&str] = &[
     "fleet",
     "worker-id",
     "fleet-tasks",
+    "max-restarts",
+    "heartbeat-secs",
 ];
 
 /// Flags the `adapters` store-management command accepts beyond

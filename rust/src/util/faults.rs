@@ -1,0 +1,379 @@
+//! Deterministic fault injection for chaos testing (std-only, no `rand`).
+//!
+//! The `QRLORA_FAULTS` environment variable holds a spec of
+//! `;`-separated clauses, each `site=action`:
+//!
+//! ```text
+//! QRLORA_FAULTS="store.read=err#2;publish=crash_after_temp;lock=hold_past_stale"
+//! ```
+//!
+//! Sites are fixed seams threaded through the store/lock/checkpoint/serve
+//! paths (see [`SITES`]); an unknown site or action is a loud parse panic
+//! rather than a chaos test that silently passes vacuously. Actions:
+//!
+//! | action             | effect at the seam                                   |
+//! |--------------------|------------------------------------------------------|
+//! | `err`              | every call fails with a transient-marked IO error    |
+//! | `err#N`            | the first N calls fail, then succeed                 |
+//! | `err@P`            | each call fails with probability P (0..=1)           |
+//! | `crash` / `crash_after_temp` | abort the process (at write seams: after the temp write, before the rename) |
+//! | `hang`             | block forever (exercises hung-worker detection)      |
+//! | `leak` / `hold_past_stale` | skip the store-lock release on drop          |
+//!
+//! Firing is **deterministic**: `err@P` hashes `(seed, site, call#)` with
+//! the shared FNV-1a ([`crate::util::hash`]) — no `rand` dependency, and
+//! the same spec + seed (`QRLORA_FAULTS_SEED`, default 0) always fails
+//! the same calls. Two suffixes refine a clause:
+//!
+//! * `!` (sticky): crash/hang/leak faults are **one-shot** by default —
+//!   they fire only in a process's first incarnation, judged by the
+//!   `QRLORA_FAULTS_RESTART` env the fleet supervisor sets on every
+//!   respawn — so a restarted worker makes progress. `!` makes the fault
+//!   fire in every incarnation (to drive a worker past its restart
+//!   budget into failover).
+//! * `@wN`: fire only in fleet worker N (`QRLORA_WORKER_ID`, set by the
+//!   supervisor), e.g. `serve=hang@w0` hangs worker 0 and nobody else.
+//!
+//! With the spec empty or unset every hook is a no-op behind one
+//! `OnceLock` load — production binaries pay nothing. The spec is parsed
+//! once per process; chaos tests drive real binaries
+//! (`CARGO_BIN_EXE_qrlora`) and vary the env per child process.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::hash::{fnv1a, FNV_OFFSET};
+
+/// Env var holding the fault spec (empty/unset = all hooks no-op).
+pub const ENV_SPEC: &str = "QRLORA_FAULTS";
+/// Env var seeding `err@P` firing (default 0).
+pub const ENV_SEED: &str = "QRLORA_FAULTS_SEED";
+/// Restart generation (0/unset = first incarnation). The fleet
+/// supervisor sets this on every respawn; non-sticky crash/hang/leak
+/// faults fire only at generation 0.
+pub const ENV_RESTART: &str = "QRLORA_FAULTS_RESTART";
+/// Fleet worker id, set per worker by the supervisor; `@wN`-filtered
+/// clauses fire only when it matches.
+pub const ENV_WORKER: &str = "QRLORA_WORKER_ID";
+
+/// Marker substring carried by every injected error. The store's retry
+/// policy ([`crate::store::retry::is_transient`]) classifies on it, so
+/// injected faults exercise exactly the transient-error path.
+pub const TRANSIENT_MARKER: &str = "(transient)";
+
+/// The seams a spec may name. Kept in sync with the `io_fault` /
+/// `crash_point` / `hang_point` / `leaks` call sites:
+///
+/// * `store.open` — `Registry::open` entry (store-unavailable serving)
+/// * `store.read` — record-file and index reads
+/// * `store.write` — generic `atomic_write` (index rewrites)
+/// * `publish` — adapter-record writes (`AdapterRecord::save`)
+/// * `checkpoint` — pipeline checkpoint writes (`model::checkpoint`)
+/// * `lock` — `StoreLock` acquisition (err = simulated lock timeout) and
+///   release (leak = holder dies without releasing)
+/// * `serve` — fleet worker entry (hang = silent worker, crash = death)
+pub const SITES: &[&str] = &[
+    "store.open",
+    "store.read",
+    "store.write",
+    "publish",
+    "checkpoint",
+    "lock",
+    "serve",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Action {
+    /// Fail the first `n` calls at the site (`err` = `u64::MAX`).
+    ErrCount(u64),
+    /// Fail each call with probability permille/1000, deterministically
+    /// from (seed, site, call#).
+    ErrProb(u32),
+    /// Abort the process at the seam.
+    Crash,
+    /// Block forever at the seam.
+    Hang,
+    /// Skip the store-lock release on drop.
+    Leak,
+}
+
+#[derive(Debug)]
+struct Fault {
+    site: String,
+    action: Action,
+    /// `!` suffix: fire in every incarnation, not only restart gen 0.
+    sticky: bool,
+    /// `@wN` suffix: fire only in fleet worker N.
+    worker: Option<u64>,
+    /// Calls seen at this clause (drives `err#N` / `err@P`).
+    calls: AtomicU64,
+}
+
+struct Plan {
+    faults: Vec<Fault>,
+    seed: u64,
+    /// True when `QRLORA_FAULTS_RESTART` says this is a respawn.
+    restarted: bool,
+    worker: Option<u64>,
+}
+
+fn plan() -> &'static Plan {
+    static PLAN: OnceLock<Plan> = OnceLock::new();
+    PLAN.get_or_init(|| {
+        let spec = std::env::var(ENV_SPEC).unwrap_or_default();
+        let faults = match parse_spec(&spec) {
+            Ok(f) => f,
+            // A typo'd chaos spec must not become a vacuously green test.
+            Err(e) => panic!("{ENV_SPEC}: {e}"),
+        };
+        let seed = std::env::var(ENV_SEED).ok().and_then(|v| v.parse().ok()).unwrap_or(0);
+        let restarted = std::env::var(ENV_RESTART)
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(|g| g > 0)
+            .unwrap_or(false);
+        let worker = std::env::var(ENV_WORKER).ok().and_then(|v| v.parse().ok());
+        if !faults.is_empty() {
+            crate::warnln!(
+                "fault injection ACTIVE ({} clause(s) from {ENV_SPEC}={spec:?}, seed {seed})",
+                faults.len()
+            );
+        }
+        Plan { faults, seed, restarted, worker }
+    })
+}
+
+/// Parse a spec into fault clauses. Pure (no env access) so unit tests
+/// cover the grammar without process-global state.
+fn parse_spec(spec: &str) -> Result<Vec<Fault>, String> {
+    let mut out = Vec::new();
+    for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+        let (site, rest) = clause
+            .split_once('=')
+            .ok_or_else(|| format!("bad clause {clause:?} (want site=action)"))?;
+        let site = site.trim();
+        if !SITES.contains(&site) {
+            return Err(format!("unknown site {site:?} (known: {SITES:?})"));
+        }
+        // Suffix order: action[!][@wN]
+        let (rest, worker) = match rest.rfind("@w") {
+            Some(i) if !rest[i + 2..].is_empty()
+                && rest[i + 2..].bytes().all(|b| b.is_ascii_digit()) =>
+            {
+                let w = rest[i + 2..]
+                    .parse()
+                    .map_err(|_| format!("bad worker filter in {clause:?}"))?;
+                (&rest[..i], Some(w))
+            }
+            _ => (rest, None),
+        };
+        let (rest, sticky) = match rest.strip_suffix('!') {
+            Some(r) => (r, true),
+            None => (rest, false),
+        };
+        let action = if let Some(p) = rest.strip_prefix("err@") {
+            let p: f64 =
+                p.parse().map_err(|_| format!("bad probability in {clause:?}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("probability out of [0,1] in {clause:?}"));
+            }
+            Action::ErrProb((p * 1000.0).round() as u32)
+        } else if let Some(n) = rest.strip_prefix("err#") {
+            Action::ErrCount(n.parse().map_err(|_| format!("bad count in {clause:?}"))?)
+        } else {
+            match rest {
+                "err" => Action::ErrCount(u64::MAX),
+                "crash" | "crash_after_temp" => Action::Crash,
+                "hang" => Action::Hang,
+                "leak" | "hold_past_stale" => Action::Leak,
+                other => return Err(format!("unknown action {other:?} in {clause:?}")),
+            }
+        };
+        out.push(Fault {
+            site: site.to_string(),
+            action,
+            sticky,
+            worker,
+            calls: AtomicU64::new(0),
+        });
+    }
+    Ok(out)
+}
+
+/// Whether one clause fires for this call. `oneshot` marks actions that
+/// must be suppressed after a supervisor restart unless sticky.
+fn fires(f: &Fault, seed: u64, restarted: bool, worker: Option<u64>, oneshot: bool) -> bool {
+    if let Some(w) = f.worker {
+        if worker != Some(w) {
+            return false;
+        }
+    }
+    if oneshot && !f.sticky && restarted {
+        return false;
+    }
+    let n = f.calls.fetch_add(1, Ordering::Relaxed);
+    match f.action {
+        Action::ErrCount(k) => n < k,
+        Action::ErrProb(permille) => {
+            let mut h = FNV_OFFSET;
+            fnv1a(&mut h, &seed.to_le_bytes());
+            fnv1a(&mut h, f.site.as_bytes());
+            fnv1a(&mut h, &n.to_le_bytes());
+            h % 1000 < permille as u64
+        }
+        Action::Crash | Action::Hang | Action::Leak => true,
+    }
+}
+
+/// True when a fault spec is active in this process (diagnostics only —
+/// the hooks below are already self-gating).
+pub fn active() -> bool {
+    !plan().faults.is_empty()
+}
+
+/// Error-injection hook for IO seams. Returns `Err` when an `err` clause
+/// fires for `site`; the error message carries [`TRANSIENT_MARKER`] so
+/// retry policies treat it as transient.
+pub fn io_fault(site: &str) -> std::io::Result<()> {
+    let p = plan();
+    for f in p.faults.iter().filter(|f| f.site == site) {
+        if matches!(f.action, Action::ErrCount(_) | Action::ErrProb(_))
+            && fires(f, p.seed, p.restarted, p.worker, false)
+        {
+            return Err(std::io::Error::other(format!(
+                "injected {site} fault {TRANSIENT_MARKER}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Crash hook for write seams: placed between the temp write and the
+/// rename, so a firing `crash_after_temp` clause dies exactly inside the
+/// torn-write window the recovery sweeps exist for. Aborts (no unwind,
+/// no Drop — the closest in-process stand-in for SIGKILL).
+pub fn crash_point(site: &str) {
+    let p = plan();
+    for f in p.faults.iter().filter(|f| f.site == site) {
+        if f.action == Action::Crash && fires(f, p.seed, p.restarted, p.worker, true) {
+            eprintln!("FAULT: injected crash at {site}");
+            std::process::abort();
+        }
+    }
+}
+
+/// Hang hook: blocks forever when a `hang` clause fires for `site`
+/// (exercises the supervisor's silent-worker deadline).
+pub fn hang_point(site: &str) {
+    let p = plan();
+    for f in p.faults.iter().filter(|f| f.site == site) {
+        if f.action == Action::Hang && fires(f, p.seed, p.restarted, p.worker, true) {
+            eprintln!("FAULT: injected hang at {site}");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+    }
+}
+
+/// True when a `leak` clause fires for `site` — the store lock's `Drop`
+/// consults this to simulate a holder that dies without releasing.
+pub fn leaks(site: &str) -> bool {
+    let p = plan();
+    p.faults
+        .iter()
+        .filter(|f| f.site == site)
+        .any(|f| f.action == Action::Leak && fires(f, p.seed, p.restarted, p.worker, true))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_parses_to_no_faults() {
+        assert!(parse_spec("").unwrap().is_empty());
+        assert!(parse_spec("  ;  ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn grammar_roundtrip() {
+        let faults =
+            parse_spec("store.read=err#2; publish=crash_after_temp; lock=hold_past_stale")
+                .unwrap();
+        assert_eq!(faults.len(), 3);
+        assert_eq!(faults[0].action, Action::ErrCount(2));
+        assert_eq!(faults[1].action, Action::Crash);
+        assert_eq!(faults[2].action, Action::Leak);
+        assert!(!faults[0].sticky && faults[0].worker.is_none());
+    }
+
+    #[test]
+    fn suffixes_parse() {
+        let faults = parse_spec("serve=hang@w0;store.read=err@0.5!;publish=crash!@w2").unwrap();
+        assert_eq!(faults[0].worker, Some(0));
+        assert!(!faults[0].sticky);
+        assert_eq!(faults[1].action, Action::ErrProb(500));
+        assert!(faults[1].sticky);
+        assert!(faults[2].sticky);
+        assert_eq!(faults[2].worker, Some(2));
+    }
+
+    #[test]
+    fn bad_specs_error() {
+        assert!(parse_spec("store.read").is_err(), "missing action");
+        assert!(parse_spec("nope=err").is_err(), "unknown site");
+        assert!(parse_spec("store.read=explode").is_err(), "unknown action");
+        assert!(parse_spec("store.read=err@1.5").is_err(), "probability > 1");
+        assert!(parse_spec("store.read=err#x").is_err(), "bad count");
+    }
+
+    #[test]
+    fn err_count_fires_first_n_calls_only() {
+        let f = &parse_spec("store.read=err#2").unwrap()[0];
+        assert!(fires(f, 0, false, None, false));
+        assert!(fires(f, 0, false, None, false));
+        assert!(!fires(f, 0, false, None, false));
+        assert!(!fires(f, 0, false, None, false));
+    }
+
+    #[test]
+    fn err_prob_is_deterministic_and_roughly_calibrated() {
+        let a = &parse_spec("store.read=err@0.5").unwrap()[0];
+        let b = &parse_spec("store.read=err@0.5").unwrap()[0];
+        let hits_a: Vec<bool> = (0..1000).map(|_| fires(a, 7, false, None, false)).collect();
+        let hits_b: Vec<bool> = (0..1000).map(|_| fires(b, 7, false, None, false)).collect();
+        assert_eq!(hits_a, hits_b, "same seed + spec must fire identically");
+        let rate = hits_a.iter().filter(|h| **h).count();
+        assert!((300..700).contains(&rate), "p=0.5 fired {rate}/1000");
+    }
+
+    #[test]
+    fn oneshot_faults_skip_restarted_processes_unless_sticky() {
+        let oneshot = &parse_spec("publish=crash").unwrap()[0];
+        assert!(fires(oneshot, 0, false, None, true), "first incarnation fires");
+        let oneshot = &parse_spec("publish=crash").unwrap()[0];
+        assert!(!fires(oneshot, 0, true, None, true), "restart suppresses");
+        let sticky = &parse_spec("publish=crash!").unwrap()[0];
+        assert!(fires(sticky, 0, true, None, true), "sticky fires after restart");
+    }
+
+    #[test]
+    fn worker_filter_gates_firing() {
+        let f = &parse_spec("serve=hang@w1").unwrap()[0];
+        assert!(!fires(f, 0, false, None, true), "no worker id → no fire");
+        assert!(!fires(f, 0, false, Some(0), true), "wrong worker → no fire");
+        assert!(fires(f, 0, false, Some(1), true), "matching worker fires");
+    }
+
+    #[test]
+    fn hooks_are_noops_without_a_spec() {
+        // The test binary runs without QRLORA_FAULTS (the suite would be
+        // chaos otherwise), so the global hooks must all pass through.
+        assert!(io_fault("store.read").is_ok());
+        assert!(!leaks("lock"));
+        crash_point("publish");
+        hang_point("serve");
+        assert!(!active());
+    }
+}

@@ -2,6 +2,7 @@
 //! All std-only — the offline vendor set contains no serde/clap/rand.
 
 pub mod cli;
+pub mod faults;
 pub mod hash;
 pub mod json;
 pub mod log;

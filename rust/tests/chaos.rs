@@ -1,0 +1,256 @@
+//! Chaos suite: deterministic fault injection (`QRLORA_FAULTS`, see
+//! `qrlora::util::faults`) drives the *real binary* through the failure
+//! modes the supervision / retry / degraded-serving layers exist for:
+//!
+//! * a worker killed mid-publish → the fleet restarts it and still
+//!   completes with a store that passes `adapters verify`,
+//! * a hung worker → heartbeat liveness kills and restarts it,
+//! * transient store reads → absorbed by bounded retry, warm start intact,
+//! * an unreachable store → loud degraded serving, train-on-miss,
+//! * a crash between a checkpoint's temp write and its rename → the torn
+//!   temp never poisons the next run,
+//! * a lock holder dying without release → the next process takes over.
+//!
+//! Every scenario is seeded and env-driven — no `rand`, no timing
+//! dependence beyond generous supervision deadlines.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+use std::sync::Mutex;
+
+use qrlora::store::Registry;
+
+/// Serialize the scenarios: they spawn multi-process fleets running real
+/// training loops, and running two at once would oversubscribe the box
+/// and turn the hang-detection deadlines flaky.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const EXE: &str = env!("CARGO_BIN_EXE_qrlora");
+
+/// One tiny training budget for every scenario, so the serve-based tests
+/// sharing a working directory reuse each other's `runs/` caches instead
+/// of each paying a cold pretrain.
+const BUDGET: &[&str] =
+    &["--pretrain-steps", "20", "--warmup-steps", "10", "--steps", "10", "--requests", "6"];
+
+/// Working directory shared by the serve scenarios (never wiped: the
+/// whole point is cache reuse; correctness never depends on its state
+/// because each scenario gets its own adapter-store directory).
+fn shared_cwd() -> PathBuf {
+    let dir = std::env::temp_dir().join("qrlora_chaos_tests").join("shared");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A scenario-private directory, wiped on entry.
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("qrlora_chaos_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run the binary in `cwd` with an optional fault spec, capturing output.
+/// The fault-plan env vars are scrubbed first so scenarios can't leak
+/// into each other (or inherit anything from the test runner).
+fn run(cwd: &Path, faults: Option<&str>, args: &[&str]) -> Output {
+    let mut cmd = Command::new(EXE);
+    cmd.current_dir(cwd)
+        .args(args)
+        .env_remove("QRLORA_FAULTS")
+        .env_remove("QRLORA_FAULTS_SEED")
+        .env_remove("QRLORA_FAULTS_RESTART")
+        .env_remove("QRLORA_WORKER_ID");
+    if let Some(spec) = faults {
+        cmd.env("QRLORA_FAULTS", spec);
+    }
+    cmd.output().expect("spawn qrlora")
+}
+
+fn out_str(out: &Output) -> (String, String) {
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[track_caller]
+fn assert_success(out: &Output, what: &str) {
+    let (stdout, stderr) = out_str(out);
+    assert!(
+        out.status.success(),
+        "{what} failed ({}):\n--- stdout ---\n{stdout}\n--- stderr ---\n{stderr}",
+        out.status
+    );
+}
+
+#[track_caller]
+fn assert_has(haystack: &str, needle: &str, what: &str) {
+    assert!(haystack.contains(needle), "{what}: missing {needle:?} in:\n{haystack}");
+}
+
+fn serve_args(store: &str, extra: &[&str]) -> Vec<String> {
+    let mut args: Vec<String> = vec!["serve".into()];
+    args.extend(extra.iter().map(|s| s.to_string()));
+    args.extend(BUDGET.iter().map(|s| s.to_string()));
+    args.push("--adapter-store".into());
+    args.push(store.into());
+    args
+}
+
+fn refs(args: &[String]) -> Vec<&str> {
+    args.iter().map(|s| s.as_str()).collect()
+}
+
+/// Tentpole acceptance: a worker dying mid-publish (abort *between* the
+/// record's temp write and its rename) is restarted under the budget, the
+/// fleet completes and aggregates, and the store the crash landed in
+/// passes `adapters verify` with zero failures.
+#[test]
+fn chaos_worker_crash_mid_publish_fleet_completes_and_store_verifies() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_dir("store_kill");
+    let store_s = store.display().to_string();
+
+    let args = serve_args(&store_s, &["--fleet", "2", "--heartbeat-secs", "1"]);
+    let out = run(&cwd, Some("publish=crash_after_temp"), &refs(&args));
+    assert_success(&out, "fleet with mid-publish crash");
+    let (stdout, stderr) = out_str(&out);
+    assert_has(&stdout, "FLEET_AGGREGATE", "fleet must aggregate after restarts");
+    assert_has(&stderr, "FAULT: injected crash at publish", "the fault must actually fire");
+    assert_has(&stderr, "restarting worker", "the crashed worker must be restarted");
+
+    let verify = run(&cwd, None, &["adapters", "verify", "--adapter-store", &store_s]);
+    assert_success(&verify, "adapters verify after a mid-publish crash");
+    let (stdout, _) = out_str(&verify);
+    assert_has(&stdout, "verified 3 record(s), 0 failure(s)", "store must be intact");
+}
+
+/// A worker that hangs before producing any output is detected by the
+/// heartbeat deadline, killed, restarted, and the fleet completes with
+/// both workers reporting.
+#[test]
+fn chaos_hung_worker_is_killed_restarted_and_fleet_completes() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_dir("store_hang");
+    let store_s = store.display().to_string();
+
+    let args = serve_args(&store_s, &["--fleet", "2", "--heartbeat-secs", "1"]);
+    let out = run(&cwd, Some("serve=hang@w0"), &refs(&args));
+    assert_success(&out, "fleet with a hung worker");
+    let (stdout, stderr) = out_str(&out);
+    assert_has(&stderr, "killing as hung", "the silent worker must be killed");
+    assert_has(&stderr, "restarting worker 0", "the hung worker must be restarted");
+    assert_has(&stdout, "aggregate: 2 worker(s), 6 requests", "both workers must report");
+}
+
+/// Transient store-read errors (first two reads fail) are absorbed by the
+/// bounded retry without falling back to index rebuild or retraining: the
+/// warm start still resolves everything from the store.
+#[test]
+fn chaos_transient_store_read_errors_are_absorbed_by_retry() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_dir("store_read");
+    let store_s = store.display().to_string();
+
+    let cold = run(&cwd, None, &refs(&serve_args(&store_s, &[])));
+    assert_success(&cold, "cold serve populating the store");
+    let (stdout, _) = out_str(&cold);
+    assert_has(&stdout, "0/3 from store, 3 trained", "cold run must train everything");
+
+    let warm = run(&cwd, Some("store.read=err#2"), &refs(&serve_args(&store_s, &[])));
+    assert_success(&warm, "warm serve through transient read errors");
+    let (stdout, stderr) = out_str(&warm);
+    assert_has(&stderr, "transient failure", "the retries must be loud");
+    assert_has(&stdout, "3/3 from store", "retry must preserve the full warm start");
+    assert_has(&stdout, "warm-up training steps: 0", "no retraining through a transient blip");
+}
+
+/// With the store unreachable, serving degrades loudly — RAM tier +
+/// train-on-miss — instead of failing, and the queued publishes are
+/// reported at shutdown.
+#[test]
+fn chaos_unavailable_store_serves_degraded_with_train_on_miss() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_dir("store_offline");
+    let store_s = store.display().to_string();
+
+    let out = run(&cwd, Some("store.open=err"), &refs(&serve_args(&store_s, &[])));
+    assert_success(&out, "degraded serve with the store offline");
+    let (stdout, stderr) = out_str(&out);
+    assert_has(&stderr, "DEGRADED", "degraded mode must be loud");
+    assert_has(&stdout, "0/3 from store, 3 trained", "misses must train in RAM");
+    assert!(
+        !stdout.contains("warm-up training steps: 0"),
+        "train-on-miss must run real warm-up steps:\n{stdout}"
+    );
+    assert_has(&stderr, "still queued at shutdown", "unflushed publishes must be reported");
+}
+
+/// A crash between a checkpoint's temp write and its rename leaves only
+/// temp debris: the published name never exists torn, so a clean rerun
+/// succeeds instead of choking on a half-written cache.
+#[test]
+fn chaos_torn_checkpoint_crash_recovers_on_rerun() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = fresh_dir("torn_ckpt");
+    let mut args = vec!["pretrain"];
+    args.extend(&BUDGET[..6]); // training knobs only; pretrain takes no --requests
+
+    let crash = run(&cwd, Some("checkpoint=crash_after_temp"), &args);
+    assert!(!crash.status.success(), "the injected checkpoint crash must kill the run");
+    let (_, stderr) = out_str(&crash);
+    assert_has(&stderr, "FAULT: injected crash at checkpoint", "the fault must actually fire");
+
+    let rerun = run(&cwd, None, &args);
+    assert_success(&rerun, "pretrain rerun after a torn checkpoint");
+    let (stdout, _) = out_str(&rerun);
+    assert_has(&stdout, "backbone ready", "the rerun must complete from a clean slate");
+}
+
+/// A lock holder that dies without releasing (injected leak on drop)
+/// leaves `index.lock` behind; the next publisher takes it over through
+/// the dead-pid rule and the index keeps every record.
+#[test]
+fn chaos_leaked_lock_is_taken_over_by_the_next_process() {
+    if !Path::new("/proc/self").exists() {
+        return; // dead-pid takeover is /proc-gated; aging alone needs 60 s
+    }
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = fresh_dir("leaked_lock");
+    let store = cwd.join("store");
+    let store_s = store.display().to_string();
+    let publish = |faults: Option<&str>, writer: &str| {
+        run(
+            &cwd,
+            faults,
+            &[
+                "adapters",
+                "stress-publish",
+                "--adapter-store",
+                &store_s,
+                "--records",
+                "1",
+                "--writer-id",
+                writer,
+            ],
+        )
+    };
+
+    let leak = publish(Some("lock=hold_past_stale"), "0");
+    assert_success(&leak, "publish with an injected lock leak");
+    assert!(store.join("index.lock").exists(), "the leaked lock must still be on disk");
+
+    let next = publish(None, "1");
+    assert_success(&next, "publish against a leaked lock");
+    let (_, stderr) = out_str(&next);
+    assert_has(&stderr, "took over stale lock", "takeover must go through the dead-pid rule");
+
+    let reg = Registry::open(&store).unwrap();
+    assert_eq!(reg.len(), 2, "both writers' records must survive the takeover");
+    assert!(reg.verify().iter().all(|r| r.result.is_ok()));
+}
