@@ -23,6 +23,9 @@
 //!       plus a `serve_fleet_degraded` row that prices the supervision
 //!       round trip (crash mid-publish → restart → re-publish) under an
 //!       injected `QRLORA_FAULTS` crash
+//! * P9  socket serving: `serve --listen` behind the soak load generator
+//!       (real loopback TCP, line-delimited JSON) — client-observed
+//!       p50/p99/p999 latency and end-to-end RPS
 //!
 //! Runs on whatever backend `QRLORA_BACKEND` selects (host by default, so
 //! the bench is hermetic) with the pool sized by `QRLORA_THREADS`, and
@@ -39,6 +42,7 @@
 //! also emitted as `::warning::` annotations.
 
 use std::collections::BTreeMap;
+use std::io::BufRead;
 use std::time::Instant;
 
 use qrlora::adapters::{factorize, Proj, Scope};
@@ -705,6 +709,72 @@ fn main() -> anyhow::Result<()> {
             let mut stats = Stats::new();
             stats.push(wall_ms);
             rec.entries.push(Entry { name, threads: tmax, stats, iters: 1 });
+        }
+
+        // ---- P9: socket serving — soak latency over real TCP -----------
+        // Spawns `serve --listen` on an ephemeral loopback port and
+        // drives it with the in-process soak generator: real sockets,
+        // line-delimited JSON, shed-and-retry flow control. The rows are
+        // the client-observed latency percentiles — what the network
+        // front-end adds on top of the in-process `serve_fleet` rows.
+        {
+            println!("\n# P9 socket serving (serve --listen + soak load generator)");
+            let soak_store = std::env::temp_dir().join("qrlora_bench_soak");
+            let _ = std::fs::remove_dir_all(&soak_store);
+            let soak_requests = 48usize;
+            let mut child = std::process::Command::new(exe)
+                .args(["serve", "--listen", "127.0.0.1:0"])
+                .args(["--requests", &soak_requests.to_string()])
+                .args(["--pretrain-steps", "60", "--warmup-steps", "40", "--steps", "40"])
+                .args(["--adapter-store", &soak_store.display().to_string()])
+                .stdout(std::process::Stdio::piped())
+                .spawn()
+                .map_err(|e| anyhow::anyhow!("cannot spawn the soak bench server: {e}"))?;
+            let stdout = child.stdout.take().expect("piped stdout");
+            let mut lines = std::io::BufReader::new(stdout).lines();
+            let addr = loop {
+                let Some(line) = lines.next() else {
+                    let _ = child.kill();
+                    anyhow::bail!("soak bench server exited before NET_LISTEN");
+                };
+                if let Some(rest) = line?.strip_prefix("NET_LISTEN ") {
+                    break rest.split_whitespace().next().unwrap_or("").to_string();
+                }
+            };
+            // Keep draining the child's stdout so a full pipe can never
+            // wedge the server mid-soak.
+            let drain = std::thread::spawn(move || lines.for_each(|_| ()));
+            let soak_cfg = qrlora::experiments::ExpConfig {
+                pretrain_steps: 60,
+                warmup_steps: 40,
+                steps: 40,
+                ..Default::default()
+            };
+            let report = qrlora::server::net::soak(&soak_cfg, &[addr], soak_requests, 4)?;
+            let status = child.wait()?;
+            let _ = drain.join();
+            anyhow::ensure!(status.success(), "soak bench server failed after the load run");
+            let num = |k: &str| -> anyhow::Result<f64> {
+                Ok(report.req(k)?.as_f64().unwrap_or(0.0))
+            };
+            anyhow::ensure!(
+                num("protocol_errors")? == 0.0,
+                "soak bench hit protocol errors: {}",
+                report.to_string()
+            );
+            let rps = num("rps")?;
+            for (key, label) in [
+                ("p50_ms", "serve_soak p50"),
+                ("p99_ms", "serve_soak p99"),
+                ("p999_ms", "serve_soak p999"),
+            ] {
+                let ms = num(key)?;
+                let name = format!("{label} ({soak_requests} req, 4 lanes)");
+                println!("{name:<52} {ms:>9.3} ms  ({rps:.1} req/s end-to-end)");
+                let mut stats = Stats::new();
+                stats.push(ms);
+                rec.entries.push(Entry { name, threads: tmax, stats, iters: 1 });
+            }
         }
     }
 

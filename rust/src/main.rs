@@ -48,6 +48,10 @@ const COMMANDS: &[Command] = &[
     Command { name: "exp", about: "regenerate a paper table/figure: table1..table4, figure1, all" },
     Command { name: "serve", about: "batched serving demo (--fleet N spawns a worker fleet)" },
     Command {
+        name: "soak",
+        about: "socket load generator: drive RPS at serve --listen workers, report latency",
+    },
+    Command {
         name: "adapters",
         about: "adapter store: list | verify | gc | stress-publish (--adapter-store DIR)",
     },
@@ -128,6 +132,7 @@ fn main() {
         "ranks" => cmd_ranks(&args),
         "exp" => cmd_exp(&args),
         "serve" => cmd_serve(&args),
+        "soak" => cmd_soak(&args),
         "adapters" => cmd_adapters(&args),
         other => {
             errorln!("unknown command {other:?}");
@@ -347,7 +352,52 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(n >= 1, "--fleet needs at least one worker");
         return qrlora::server::fleet::run_fleet(&cfg, &sc, n);
     }
+    // Socket front-end: bind `--listen`, serve the request budget over
+    // TCP (line-delimited JSON + a minimal HTTP shim), then report.
+    if let Some(listen) = sc.listen.clone() {
+        let mut core =
+            qrlora::server::ServeCore::with_method(&cfg, sc.adapter_store.as_deref(), &sc.method)?;
+        core.prepare(qrlora::server::SERVE_TASKS)?;
+        let stats = qrlora::server::net::serve_listen(&mut core, &sc, &listen)?;
+        core.flush_publishes();
+        println!(
+            "[serve] socket serving done: {} request(s), {} shed, {} rejected, {:.1} req/s",
+            stats.requests,
+            stats.shed,
+            stats.rejected,
+            stats.throughput()
+        );
+        return Ok(());
+    }
     qrlora::server::demo(&cfg, &sc)
+}
+
+/// `soak` — socket load generator for `serve --listen` endpoints.
+///
+/// Opens `--concurrency` persistent connections spread over the
+/// `--connect` address list, drives `--requests` line-protocol requests
+/// sampled from the dev split (seeded, reproducible), retries explicit
+/// 503 sheds, and reports p50/p99/p999 latency plus shed and protocol-
+/// error counts. `--soak-json PATH` additionally writes the full report
+/// (including the latency histogram) as pretty JSON.
+fn cmd_soak(args: &Args) -> anyhow::Result<()> {
+    let cfg = exp_config(args)?;
+    let addrs = args.list_str("connect", &[]);
+    let addrs: Vec<String> = addrs.into_iter().filter(|a| !a.is_empty()).collect();
+    anyhow::ensure!(!addrs.is_empty(), "soak: --connect host:port[,host:port...] is required");
+    let requests = args.usize_or("requests", 64)?;
+    let concurrency = args.usize_or("concurrency", 4)?;
+    let report = qrlora::server::net::soak(&cfg, &addrs, requests, concurrency)?;
+    let line = report.to_string();
+    println!("SOAK {line}");
+    if let Some(path) = args.get("soak-json") {
+        std::fs::write(path, report.pretty())
+            .map_err(|e| anyhow::anyhow!("soak: writing {path}: {e}"))?;
+        println!("[soak] report written to {path}");
+    }
+    let errors = report.req("protocol_errors")?.as_usize().unwrap_or(usize::MAX);
+    anyhow::ensure!(errors == 0, "soak: {errors} protocol error(s) — see SOAK report above");
+    Ok(())
 }
 
 fn cmd_adapters(args: &Args) -> anyhow::Result<()> {

@@ -139,6 +139,20 @@ impl HashRing {
     }
 }
 
+/// Worker `w`'s listen address under `serve --fleet N --listen host:port`:
+/// the supervisor hands out consecutive ports, `host:(port + w)`.
+fn worker_listen_addr(base: &str, w: usize) -> anyhow::Result<String> {
+    let (host, port) = base
+        .rsplit_once(':')
+        .ok_or_else(|| anyhow::anyhow!("--listen expects host:port, got {base:?}"))?;
+    let port: u16 = port
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--listen expects a numeric port, got {base:?}"))?;
+    let port = port as usize + w;
+    anyhow::ensure!(port <= u16::MAX as usize, "--listen {base:?} + worker {w} overflows the port");
+    Ok(format!("{host}:{port}"))
+}
+
 /// One worker's parsed `FLEET_WORKER` report.
 struct WorkerReport {
     worker: usize,
@@ -146,6 +160,10 @@ struct WorkerReport {
     serve_wall_ms: f64,
     rps: f64,
     warmup_steps: usize,
+    /// 503-style sheds (socket front-end only; in-process workers report 0).
+    shed: usize,
+    /// 4xx-style protocol rejections (socket front-end only).
+    rejected: usize,
 }
 
 impl WorkerReport {
@@ -154,12 +172,17 @@ impl WorkerReport {
         let num = |k: &str| -> anyhow::Result<f64> {
             doc.req(k)?.as_f64().ok_or_else(|| anyhow::anyhow!("FLEET_WORKER: bad {k}"))
         };
+        // Tolerant on purpose: absence means zero, never a parse failure,
+        // so a report from an older worker binary still aggregates.
+        let count = |k: &str| doc.get(k).and_then(Json::as_usize).unwrap_or(0);
         Ok(WorkerReport {
             worker,
             requests: num("requests")? as usize,
             serve_wall_ms: num("serve_wall_ms")?,
             rps: num("rps")?,
             warmup_steps: num("warmup_steps")? as usize,
+            shed: count("shed"),
+            rejected: count("rejected"),
         })
     }
 }
@@ -225,6 +248,7 @@ impl WorkerSpawner<'_> {
             .args(["--max-batch", &self.sc.max_batch.to_string()])
             .args(["--resident-adapters", &self.sc.resident_adapters.to_string()])
             .args(["--heartbeat-secs", &self.sc.heartbeat_secs.to_string()])
+            .args(["--method", &self.sc.method])
             // Split the host pool across workers instead of oversubscribing
             // the box N-fold.
             .env("QRLORA_THREADS", self.threads_per.to_string())
@@ -238,6 +262,13 @@ impl WorkerSpawner<'_> {
             None => {
                 cmd.arg("--no-warm-start");
             }
+        }
+        // Socket fleet: the supervisor hands out consecutive ports so a
+        // load generator can enumerate them (`soak --connect`).
+        if let Some(base) = &self.sc.listen {
+            cmd.args(["--listen", &worker_listen_addr(base, w)?])
+                .args(["--reorder-window", &self.sc.reorder_window.to_string()])
+                .args(["--max-queue-depth", &self.sc.max_queue_depth.to_string()]);
         }
         let mut child = cmd
             .spawn()
@@ -356,33 +387,50 @@ pub fn run_fleet(cfg: &ExpConfig, sc: &ServeConfig, workers: usize) -> anyhow::R
         );
     }
 
-    // Aggregate throughput over the longest serve phase: the honest
-    // single-box number (workers serve concurrently; summing per-worker
-    // RPS would overcount whenever phases don't fully overlap).
-    let reported = reports.len();
-    let total_requests: usize = reports.iter().map(|r| r.requests).sum();
-    let warmup_steps: usize = reports.iter().map(|r| r.warmup_steps).sum();
-    let max_wall_ms = reports.iter().map(|r| r.serve_wall_ms).fold(0.0f64, f64::max);
-    let agg_rps = total_requests as f64 / (max_wall_ms / 1e3).max(1e-9);
     for r in &reports {
         println!(
-            "[fleet] worker {}: {} requests, {:.1} req/s, warm-up training steps: {}",
-            r.worker, r.requests, r.rps, r.warmup_steps
+            "[fleet] worker {}: {} requests, {:.1} req/s, {} shed, {} rejected, \
+             warm-up training steps: {}",
+            r.worker, r.requests, r.rps, r.shed, r.rejected, r.warmup_steps
         );
     }
+    let agg = aggregate(&reports);
+    let field = |k: &str| agg.req(k).ok().and_then(Json::as_f64).unwrap_or(0.0);
     println!(
-        "[fleet] aggregate: {reported} worker(s), {total_requests} requests, \
-         {agg_rps:.1} req/s, warm-up training steps: {warmup_steps}"
+        "[fleet] aggregate: {} worker(s), {} requests, {:.1} req/s, {} shed, {} rejected, \
+         warm-up training steps: {}",
+        reports.len(),
+        field("requests") as usize,
+        field("rps"),
+        field("shed") as usize,
+        field("rejected") as usize,
+        field("warmup_steps") as usize,
     );
-    let agg = Json::obj(vec![
-        ("workers", Json::num(reported as f64)),
+    println!("FLEET_AGGREGATE {}", agg.to_string());
+    Ok(())
+}
+
+/// Fold surviving worker reports into the `FLEET_AGGREGATE` body.
+///
+/// Throughput is total requests over the *longest* serve phase — the
+/// honest single-box number (workers serve concurrently; summing
+/// per-worker RPS would overcount whenever phases don't fully overlap).
+/// Shed and rejected counts are summed so the aggregate can never claim
+/// every request succeeded while workers were load-shedding
+/// (`aggregate_carries_shed_and_rejected_counts` pins the fields).
+fn aggregate(reports: &[WorkerReport]) -> Json {
+    let total_requests: usize = reports.iter().map(|r| r.requests).sum();
+    let max_wall_ms = reports.iter().map(|r| r.serve_wall_ms).fold(0.0f64, f64::max);
+    let agg_rps = total_requests as f64 / (max_wall_ms / 1e3).max(1e-9);
+    Json::obj(vec![
+        ("workers", Json::num(reports.len() as f64)),
         ("requests", Json::num(total_requests as f64)),
         ("serve_wall_ms", Json::num(max_wall_ms)),
         ("rps", Json::num(agg_rps)),
-        ("warmup_steps", Json::num(warmup_steps as f64)),
-    ]);
-    println!("FLEET_AGGREGATE {}", agg.to_string());
-    Ok(())
+        ("warmup_steps", Json::num(reports.iter().map(|r| r.warmup_steps).sum::<usize>() as f64)),
+        ("shed", Json::num(reports.iter().map(|r| r.shed).sum::<usize>() as f64)),
+        ("rejected", Json::num(reports.iter().map(|r| r.rejected).sum::<usize>() as f64)),
+    ])
 }
 
 /// What the per-slot poll decided to do with a slot this tick.
@@ -534,7 +582,7 @@ fn fail_over(cfg: &ExpConfig, sc: &ServeConfig, orphans: &[String]) -> anyhow::R
     }
     crate::warnln!("[fleet] failing over orphaned task(s) {orphans:?} in the supervisor");
     let refs: Vec<&str> = orphans.iter().map(|s| s.as_str()).collect();
-    let mut core = ServeCore::new(cfg, sc.adapter_store.as_deref())?;
+    let mut core = ServeCore::with_method(cfg, sc.adapter_store.as_deref(), &sc.method)?;
     core.prepare(&refs)?;
     core.flush_publishes();
     Ok(())
@@ -568,8 +616,30 @@ pub fn run_worker(
     let siblings: Vec<&str> =
         tasks.iter().copied().filter(|t| !owned.contains(t)).collect();
 
-    let mut core = ServeCore::new(cfg, sc.adapter_store.as_deref())?;
+    let mut core = ServeCore::with_method(cfg, sc.adapter_store.as_deref(), &sc.method)?;
     core.prepare(&owned)?;
+
+    // Socket mode: serve over TCP. Sibling adapters are *not* awaited up
+    // front — the engine's generation-watch hot-loads them live, and a
+    // request for a not-yet-published task gets an explicit
+    // `adapter_unavailable` shed instead of blocking the listener.
+    if let Some(base) = &sc.listen {
+        let addr = worker_listen_addr(base, worker_id)?;
+        let stats = super::net::serve_listen(&mut core, sc, &addr)?;
+        core.flush_publishes();
+        println!(
+            "[serve] worker {worker_id}: served {} request(s) at {:.1} req/s \
+             ({} shed, {} rejected)",
+            stats.requests,
+            stats.throughput(),
+            stats.shed,
+            stats.rejected
+        );
+        let report = worker_report_json(worker_id, &stats, core.steps_this_run);
+        println!("FLEET_WORKER {}", report.to_string());
+        return Ok(());
+    }
+
     if !siblings.is_empty() {
         println!(
             "[serve] store-watching for {} sibling adapter(s): {siblings:?}",
@@ -589,15 +659,23 @@ pub fn run_worker(
         stats.requests,
         stats.throughput()
     );
-    let report = Json::obj(vec![
-        ("worker", Json::num(worker_id as f64)),
+    let report = worker_report_json(worker_id, &stats, core.steps_this_run);
+    println!("FLEET_WORKER {}", report.to_string());
+    Ok(())
+}
+
+/// The machine-readable `FLEET_WORKER` report body — one schema for the
+/// in-process and socket paths, so the aggregator parses both.
+fn worker_report_json(worker: usize, stats: &super::RouterStats, warmup_steps: usize) -> Json {
+    Json::obj(vec![
+        ("worker", Json::num(worker as f64)),
         ("requests", Json::num(stats.requests as f64)),
         ("serve_wall_ms", Json::num(stats.wall_s * 1e3)),
         ("rps", Json::num(stats.throughput())),
-        ("warmup_steps", Json::num(core.steps_this_run as f64)),
-    ]);
-    println!("FLEET_WORKER {}", report.to_string());
-    Ok(())
+        ("warmup_steps", Json::num(warmup_steps as f64)),
+        ("shed", Json::num(stats.shed as f64)),
+        ("rejected", Json::num(stats.rejected as f64)),
+    ])
 }
 
 #[cfg(test)]
@@ -651,5 +729,59 @@ mod tests {
         let ring = HashRing::new(1);
         assert_eq!(ring.workers(), 1);
         assert_eq!(ring.route("anything"), 0);
+    }
+
+    fn report(
+        worker: usize,
+        requests: usize,
+        wall_ms: f64,
+        shed: usize,
+        rej: usize,
+    ) -> WorkerReport {
+        WorkerReport {
+            worker,
+            requests,
+            serve_wall_ms: wall_ms,
+            rps: 0.0,
+            warmup_steps: worker + 1,
+            shed,
+            rejected: rej,
+        }
+    }
+
+    /// FLEET_AGGREGATE must carry shed/rejected sums — without them the
+    /// fleet could report every request served while workers were
+    /// load-shedding, and nothing downstream could tell.
+    #[test]
+    fn aggregate_carries_shed_and_rejected_counts() {
+        let agg = aggregate(&[report(0, 10, 2000.0, 2, 1), report(1, 6, 1000.0, 0, 4)]);
+        let field = |k: &str| agg.req(k).unwrap().as_f64().unwrap();
+        assert_eq!(field("workers") as usize, 2);
+        assert_eq!(field("requests") as usize, 16);
+        assert_eq!(field("shed") as usize, 2);
+        assert_eq!(field("rejected") as usize, 5);
+        assert_eq!(field("warmup_steps") as usize, 3);
+        assert_eq!(field("serve_wall_ms"), 2000.0, "wall is the longest phase, not the sum");
+        assert!((field("rps") - 8.0).abs() < 1e-9, "16 requests over the 2 s longest phase");
+    }
+
+    #[test]
+    fn worker_report_parse_tolerates_missing_shed_fields() {
+        let old = r#"{"requests": 4, "serve_wall_ms": 10.0, "rps": 400.0, "warmup_steps": 2}"#;
+        let r = WorkerReport::parse(1, old).unwrap();
+        assert_eq!((r.shed, r.rejected), (0, 0), "absent counts mean zero, not a parse error");
+        let new = r#"{"requests": 4, "serve_wall_ms": 10.0, "rps": 400.0, "warmup_steps": 2,
+                      "shed": 3, "rejected": 1}"#;
+        let r = WorkerReport::parse(2, new).unwrap();
+        assert_eq!((r.shed, r.rejected), (3, 1));
+    }
+
+    #[test]
+    fn fleet_listen_ports_are_consecutive_per_worker() {
+        assert_eq!(worker_listen_addr("127.0.0.1:7311", 0).unwrap(), "127.0.0.1:7311");
+        assert_eq!(worker_listen_addr("127.0.0.1:7311", 3).unwrap(), "127.0.0.1:7314");
+        assert!(worker_listen_addr("noport", 0).is_err());
+        assert!(worker_listen_addr("127.0.0.1:sixty", 0).is_err());
+        assert!(worker_listen_addr("127.0.0.1:65535", 1).is_err());
     }
 }

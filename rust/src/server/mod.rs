@@ -31,6 +31,8 @@
 //! single-process [`demo`] and every fleet worker build the same way.
 
 pub mod fleet;
+pub mod net;
+pub mod queue;
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
@@ -86,6 +88,13 @@ pub struct RouterStats {
     pub infer_ms: f64,
     /// Wall-clock serving time, seconds.
     pub wall_s: f64,
+    /// Requests shed with an explicit 503-style reply (queue full,
+    /// adapter unavailable, shutdown drain). Only the socket front-end
+    /// ([`net::serve_listen`]) sheds; in-process paths leave this 0.
+    pub shed: usize,
+    /// Requests rejected with a 4xx-style protocol error (malformed
+    /// JSON, unknown task, oversized line). Socket front-end only.
+    pub rejected: usize,
 }
 
 impl RouterStats {
@@ -470,6 +479,20 @@ pub struct ServeConfig {
     /// silent for 3× this is declared hung and killed
     /// (`--heartbeat-secs`).
     pub heartbeat_secs: u64,
+    /// Socket front-end: `host:port` to listen on (`--listen`); `None`
+    /// serves the in-memory demo stream. Under `--fleet N`, worker `w`
+    /// listens on `port + w`.
+    pub listen: Option<String>,
+    /// Admission-queue reordering bound (`--reorder-window`): how many
+    /// times a queued request may be overtaken by later same-batch pulls
+    /// before it becomes a barrier (0 = strict FIFO).
+    pub reorder_window: usize,
+    /// Admission-queue depth bound (`--max-queue-depth`): requests past
+    /// it shed with an explicit `queue_full` 503 reply.
+    pub max_queue_depth: usize,
+    /// Adapter method to serve (`--method`): `qrlora` (default) or
+    /// `lora` — both are tiny states over the same frozen backbone.
+    pub method: String,
 }
 
 impl Default for ServeConfig {
@@ -481,6 +504,10 @@ impl Default for ServeConfig {
             adapter_store: Some(std::path::PathBuf::from(crate::store::DEFAULT_STORE_DIR)),
             max_restarts: 2,
             heartbeat_secs: 5,
+            listen: None,
+            reorder_window: 8,
+            max_queue_depth: 256,
+            method: "qrlora".to_string(),
         }
     }
 }
@@ -505,6 +532,10 @@ impl ServeConfig {
             adapter_store,
             max_restarts: args.usize_or("max-restarts", d.max_restarts)?,
             heartbeat_secs: args.u64_or("heartbeat-secs", d.heartbeat_secs)?,
+            listen: args.get("listen").map(str::to_string),
+            reorder_window: args.usize_or("reorder-window", d.reorder_window)?,
+            max_queue_depth: args.usize_or("max-queue-depth", d.max_queue_depth)?,
+            method: args.str_or("method", &d.method).to_string(),
         })
     }
 }
@@ -539,21 +570,37 @@ pub struct ServeCore {
 }
 
 impl ServeCore {
-    /// Build the shared serving state: warmed backbone + QR method
-    /// (identical for every task — only λ/head differ), the serving
-    /// session, and the tiered resolver over `adapter_store` (None
-    /// disables durability: every resolve trains, nothing persists).
+    /// Build the shared serving state with the default `qrlora` method.
     pub fn new(cfg: &ExpConfig, adapter_store: Option<&std::path::Path>) -> anyhow::Result<Self> {
+        ServeCore::with_method(cfg, adapter_store, "qrlora")
+    }
+
+    /// Build the shared serving state: warmed backbone + adapter method
+    /// (identical for every task — only the tiny trainable state and
+    /// head differ), the serving session, and the tiered resolver over
+    /// `adapter_store` (None disables durability: every resolve trains,
+    /// nothing persists). `method_name` picks the adapter family —
+    /// `qrlora` or `lora` — and flows into the store key, so records of
+    /// the two methods never cross-resolve.
+    pub fn with_method(
+        cfg: &ExpConfig,
+        adapter_store: Option<&std::path::Path>,
+        method_name: &str,
+    ) -> anyhow::Result<Self> {
         let mut pipe = Pipeline::new(cfg)?;
         let preset = pipe.preset.clone();
         let (warm_bb, _) = pipe.warmed("sst2")?;
-        let method = Methods::qr_lora(
-            &warm_bb,
-            &preset,
-            Scope::last_layers((preset.n_layers / 3).max(1), &[Proj::Q, Proj::V]),
-            0.5,
-            RankRule::DiagRatio,
-        )?;
+        let method = match method_name {
+            "qrlora" | "qr-lora" => Methods::qr_lora(
+                &warm_bb,
+                &preset,
+                Scope::last_layers((preset.n_layers / 3).max(1), &[Proj::Q, Proj::V]),
+                0.5,
+                RankRule::DiagRatio,
+            )?,
+            "lora" => Methods::lora(&warm_bb, &preset, 2.0, cfg.seed)?,
+            other => anyhow::bail!("serve: unknown --method {other:?} (want qrlora or lora)"),
+        };
         let session =
             Session::finetune(pipe.rt, &preset, &method, HeadKind::Cls, &warm_bb, None, cfg.seed)?;
         // A store that won't open past the retry budget degrades serving
@@ -842,7 +889,7 @@ pub fn demo(cfg: &ExpConfig, sc: &ServeConfig) -> anyhow::Result<()> {
 
     // 1+2. Shared serving state + tiered adapter resolution (see
     //      `ServeCore`; the fleet workers build the identical context).
-    let mut core = ServeCore::new(cfg, sc.adapter_store.as_deref())?;
+    let mut core = ServeCore::with_method(cfg, sc.adapter_store.as_deref(), &sc.method)?;
     core.prepare(tasks)?;
 
     // 3. Build a mixed request stream.

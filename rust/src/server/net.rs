@@ -1,0 +1,1059 @@
+//! Socketed serving front-end: a hand-rolled, dependency-free TCP server
+//! (std-only, in the style of `util/pool.rs` — no tokio) in front of
+//! [`ServeCore`].
+//!
+//! ## Protocol
+//!
+//! The native protocol is line-delimited JSON, one request per line:
+//!
+//! ```text
+//! {"id": 7, "task": "sst2", "a": [12, 904, 3], "b": [], "genre": 0}
+//! ```
+//!
+//! `id` is echoed verbatim (any JSON value); `b` and `genre` are
+//! optional. A success reply is `{"id", "task", "logits"}` with exactly
+//! the task's `n_classes` logits — bit-identical to the in-process
+//! [`super::serve_swap`] path, proven by `rust/tests/serve_net.rs`
+//! (f32→f64→shortest-decimal→f64→f32 round-trips exactly; the −∞ padding
+//! lanes are truncated away, since JSON has no infinities). An error
+//! reply is `{"id", "error", "code"}` with an HTTP-flavored code:
+//!
+//! | error                 | code | meaning                                   |
+//! |-----------------------|------|-------------------------------------------|
+//! | `bad_request`         | 400  | unparseable JSON / bad fields / bad token |
+//! | `unknown_task`        | 404  | task outside [`super::SERVE_TASKS`]       |
+//! | `not_found`           | 404  | HTTP path other than the two routes       |
+//! | `oversized`           | 413  | request line/body over [`MAX_LINE`]       |
+//! | `queue_full`          | 503  | admission queue at `--max-queue-depth`    |
+//! | `adapter_unavailable` | 503  | task known but no adapter resolved yet    |
+//! | `shutting_down`       | 503  | queued behind the final budgeted reply    |
+//! | `internal_error`      | 500  | batch execution failed                    |
+//!
+//! A connection whose first line starts with an HTTP method gets a
+//! minimal HTTP/1.1 shim instead: `POST /infer` (body = one request
+//! object) and `GET /healthz`, one request per connection
+//! (`Connection: close`).
+//!
+//! ## Anatomy
+//!
+//! One detached reader thread per connection parses and validates
+//! requests and admits them into the shared [`AdmissionQueue`]; one
+//! writer thread per connection owns the write half and drains a reply
+//! channel (so a reader wedged by a fault can never block replies); a
+//! single engine thread — the caller of [`serve_listen`] — pops
+//! slot-aware batches, runs them through the batched [`super::Router`],
+//! and every [`RELOAD_POLL`] polls the store generation
+//! ([`crate::store::TieredAdapters::refresh`]) to hot-load adapters a
+//! sibling process publishes, without dropping a single connection.
+//!
+//! Load shedding is everywhere explicit: a full queue, an unresolved
+//! adapter, or shutdown each produce a 503-style reply, counted into
+//! [`RouterStats::shed`]/[`RouterStats::rejected`] so the fleet
+//! aggregate can never claim 100% success while the front-end sheds.
+//!
+//! The serving budget is exact: the engine exits once `--requests`
+//! *successful* replies have been sent. Sheds and rejects never consume
+//! budget, and the [`soak`] client retries 503s, so a soak of N logical
+//! requests against a server with budget N always terminates on both
+//! sides.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::queue::{AdmissionQueue, QueueConfig, Slotted};
+use super::{Request, Router, RouterStats, ServeConfig, ServeCore, SERVE_TASKS};
+use crate::data::{Batcher, Example, Label, Split};
+use crate::experiments::ExpConfig;
+use crate::util::faults;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Longest accepted request line (native protocol) or body (HTTP shim),
+/// bytes. Anything longer gets an `oversized` 413 reply — the line is
+/// discarded without buffering it, so a hostile client can't balloon
+/// memory.
+pub const MAX_LINE: usize = 64 * 1024;
+
+/// Reader/writer poll period: how often blocked socket IO re-checks the
+/// shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+/// Engine idle wait on the admission queue condvar.
+const ENGINE_POLL: Duration = Duration::from_millis(20);
+/// Store-generation poll period for adapter hot-reload.
+const RELOAD_POLL: Duration = Duration::from_millis(200);
+/// Socket write timeout — a client that stops reading is abandoned.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// State shared between the acceptor, per-connection threads, and the
+/// engine loop.
+struct Shared {
+    /// The slot-aware admission queue (see [`super::queue`]).
+    queue: Mutex<AdmissionQueue<Pending>>,
+    /// Signaled on every successful admission.
+    work: Condvar,
+    /// Set once the serving budget is met; every thread winds down.
+    done: AtomicBool,
+    /// Tasks with a resolved adapter — requests for other known tasks
+    /// shed with `adapter_unavailable` until a hot reload registers them.
+    registered: RwLock<BTreeSet<String>>,
+    /// Connection id allocator (per-connection FIFO key in the queue).
+    conn_ids: AtomicU64,
+    /// Successful replies sent — the budget counter.
+    served: AtomicUsize,
+    /// 503 `queue_full` replies.
+    shed_queue_full: AtomicUsize,
+    /// 503 `adapter_unavailable` replies.
+    shed_unavailable: AtomicUsize,
+    /// 4xx protocol rejections (malformed, unknown task, oversized).
+    rejected: AtomicUsize,
+    /// `GET /healthz` hits.
+    healthz: AtomicUsize,
+    /// Vocabulary size; token ids are validated against it at admission.
+    vocab: usize,
+    /// Writer threads, joined at shutdown so buffered final replies are
+    /// flushed before the process exits.
+    writers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// An admitted request waiting for the engine.
+struct Pending {
+    conn: u64,
+    /// The request's `id` field, echoed verbatim in the reply.
+    wire_id: Json,
+    task: String,
+    example: Example,
+    /// The owning connection's reply channel.
+    reply: Sender<(u16, String)>,
+}
+
+impl Slotted for Pending {
+    fn conn(&self) -> u64 {
+        self.conn
+    }
+    fn task(&self) -> &str {
+        &self.task
+    }
+}
+
+/// Reply-side bookkeeping for one in-flight batch row.
+struct Replier {
+    wire_id: Json,
+    task: String,
+    reply: Sender<(u16, String)>,
+}
+
+fn error_body(id: &Json, error: &str, code: u16) -> String {
+    Json::obj(vec![
+        ("id", id.clone()),
+        ("error", Json::str(error)),
+        ("code", Json::num(code)),
+    ])
+    .to_string()
+}
+
+/// Outcome of reading one line off a connection.
+enum Line {
+    /// A complete line (newline stripped, CR trimmed).
+    Ok(String),
+    /// The line exceeded [`MAX_LINE`]; its bytes were discarded.
+    TooLong,
+    /// Peer closed, IO error, or shutdown.
+    Eof,
+}
+
+/// Read one `\n`-terminated line, capped at [`MAX_LINE`] bytes. The
+/// stream has a read timeout of [`READ_POLL`], so a quiet connection
+/// re-checks `done` instead of blocking shutdown forever.
+fn read_line_capped(reader: &mut BufReader<TcpStream>, done: &AtomicBool) -> Line {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut over = false;
+    loop {
+        let (consumed, newline) = {
+            let chunk = match reader.fill_buf() {
+                Ok(c) => c,
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    if done.load(Ordering::SeqCst) {
+                        return Line::Eof;
+                    }
+                    continue;
+                }
+                Err(_) => return Line::Eof,
+            };
+            if chunk.is_empty() {
+                return Line::Eof; // peer closed
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    if !over {
+                        buf.extend_from_slice(&chunk[..i]);
+                    }
+                    (i + 1, true)
+                }
+                None => {
+                    if !over {
+                        buf.extend_from_slice(chunk);
+                    }
+                    (chunk.len(), false)
+                }
+            }
+        };
+        reader.consume(consumed);
+        if buf.len() > MAX_LINE {
+            over = true;
+            buf.clear();
+        }
+        if newline {
+            if over {
+                return Line::TooLong;
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Line::Ok(String::from_utf8_lossy(&buf).into_owned());
+        }
+    }
+}
+
+/// Parse token ids, validating each against the vocabulary (an
+/// out-of-range id would index out of the embedding table).
+fn tokens(v: &Json, vocab: usize) -> Option<Vec<u32>> {
+    let arr = v.as_arr()?;
+    let mut out = Vec::with_capacity(arr.len());
+    for t in arr {
+        let id = t.as_usize()?;
+        if id >= vocab {
+            return None;
+        }
+        out.push(id as u32);
+    }
+    Some(out)
+}
+
+fn parse_example(doc: &Json, vocab: usize) -> Option<Example> {
+    let a = tokens(doc.get("a")?, vocab)?;
+    let b = match doc.get("b") {
+        Some(v) => tokens(v, vocab)?,
+        None => Vec::new(),
+    };
+    let genre = match doc.get("genre") {
+        Some(v) => v.as_usize()?,
+        None => 0,
+    };
+    // The label never reaches the forward pass; a placeholder keeps the
+    // wire protocol label-free.
+    Some(Example { a, b, label: Label::Class(0), genre })
+}
+
+/// Validate + admit one request body. Returns an immediate error reply,
+/// or `None` when the request was queued (the engine replies later).
+fn admit(
+    shared: &Arc<Shared>,
+    conn: u64,
+    text: &str,
+    reply: &Sender<(u16, String)>,
+) -> Option<(u16, String)> {
+    let doc = match Json::parse(text) {
+        Ok(d) => d,
+        Err(_) => {
+            shared.rejected.fetch_add(1, Ordering::SeqCst);
+            return Some((400, error_body(&Json::Null, "bad_request", 400)));
+        }
+    };
+    let wire_id = doc.get("id").cloned().unwrap_or(Json::Null);
+    let Some(task) = doc.get("task").and_then(Json::as_str) else {
+        shared.rejected.fetch_add(1, Ordering::SeqCst);
+        return Some((400, error_body(&wire_id, "bad_request", 400)));
+    };
+    if !SERVE_TASKS.contains(&task) {
+        shared.rejected.fetch_add(1, Ordering::SeqCst);
+        return Some((404, error_body(&wire_id, "unknown_task", 404)));
+    }
+    if !shared.registered.read().expect("net: registered lock poisoned").contains(task) {
+        shared.shed_unavailable.fetch_add(1, Ordering::SeqCst);
+        return Some((503, error_body(&wire_id, "adapter_unavailable", 503)));
+    }
+    let Some(example) = parse_example(&doc, shared.vocab) else {
+        shared.rejected.fetch_add(1, Ordering::SeqCst);
+        return Some((400, error_body(&wire_id, "bad_request", 400)));
+    };
+    let pending = Pending {
+        conn,
+        wire_id: wire_id.clone(),
+        task: task.to_string(),
+        example,
+        reply: reply.clone(),
+    };
+    let mut q = shared.queue.lock().expect("net: queue lock poisoned");
+    // Checked under the queue lock so the shutdown drain can't miss a
+    // racing admission (the drain also takes this lock).
+    if shared.done.load(Ordering::SeqCst) {
+        drop(q);
+        shared.shed_queue_full.fetch_add(1, Ordering::SeqCst);
+        return Some((503, error_body(&wire_id, "shutting_down", 503)));
+    }
+    match q.push(pending) {
+        Ok(()) => {
+            drop(q);
+            shared.work.notify_one();
+            None
+        }
+        Err(_) => {
+            drop(q);
+            shared.shed_queue_full.fetch_add(1, Ordering::SeqCst);
+            Some((503, error_body(&wire_id, "queue_full", 503)))
+        }
+    }
+}
+
+fn http_response(code: u16, body: &str) -> String {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    format!(
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn is_http_request_line(line: &str) -> bool {
+    ["GET ", "POST ", "PUT ", "DELETE ", "HEAD "].iter().any(|m| line.starts_with(m))
+}
+
+/// Read an exact-length HTTP body, polling `done` across read timeouts.
+fn read_body(reader: &mut BufReader<TcpStream>, len: usize, done: &AtomicBool) -> Option<String> {
+    let mut buf = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match reader.read(&mut buf[got..]) {
+            Ok(0) => return None,
+            Ok(n) => got += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if done.load(Ordering::SeqCst) {
+                    return None;
+                }
+            }
+            Err(_) => return None,
+        }
+    }
+    Some(String::from_utf8_lossy(&buf).into_owned())
+}
+
+/// The HTTP/1.1 shim: one request per connection, `Connection: close`.
+fn handle_http(
+    shared: &Arc<Shared>,
+    conn: u64,
+    request_line: &str,
+    reader: &mut BufReader<TcpStream>,
+    tx: &Sender<(u16, String)>,
+) {
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let mut content_length = 0usize;
+    let mut oversized_header = false;
+    loop {
+        match read_line_capped(reader, &shared.done) {
+            Line::Eof => return,
+            Line::TooLong => oversized_header = true,
+            Line::Ok(h) => {
+                if h.is_empty() {
+                    break;
+                }
+                if let Some((k, v)) = h.split_once(':') {
+                    if k.trim().eq_ignore_ascii_case("content-length") {
+                        content_length = v.trim().parse().unwrap_or(0);
+                    }
+                }
+            }
+        }
+    }
+    let reply = match (method, path) {
+        ("GET", "/healthz") => {
+            shared.healthz.fetch_add(1, Ordering::SeqCst);
+            let depth = shared.queue.lock().expect("net: queue lock poisoned").len();
+            let registered: Vec<Json> = shared
+                .registered
+                .read()
+                .expect("net: registered lock poisoned")
+                .iter()
+                .map(|t| Json::str(t.as_str()))
+                .collect();
+            let body = Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("queue_depth", Json::num(depth as f64)),
+                ("served", Json::num(shared.served.load(Ordering::SeqCst) as f64)),
+                ("registered", Json::Arr(registered)),
+            ]);
+            Some((200, body.to_string()))
+        }
+        ("POST", "/infer") => {
+            if oversized_header || content_length > MAX_LINE {
+                shared.rejected.fetch_add(1, Ordering::SeqCst);
+                Some((413, error_body(&Json::Null, "oversized", 413)))
+            } else {
+                match read_body(reader, content_length, &shared.done) {
+                    Some(body) => admit(shared, conn, &body, tx),
+                    None => return,
+                }
+            }
+        }
+        _ => {
+            shared.rejected.fetch_add(1, Ordering::SeqCst);
+            Some((404, error_body(&Json::Null, "not_found", 404)))
+        }
+    };
+    if let Some((code, body)) = reply {
+        let _ = tx.send((code, body));
+    }
+}
+
+/// Writer thread: owns the connection's write half and drains the reply
+/// channel, so replies flow even when the reader thread is wedged (the
+/// `net.conn` hang fault) or mid-parse. Exits once the channel closes,
+/// or once `done` is set and the channel is drained.
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<(u16, String)>,
+    http: bool,
+    shared: Arc<Shared>,
+) {
+    let write = |stream: &mut TcpStream, code: u16, body: &str| -> bool {
+        let payload = if http {
+            http_response(code, body)
+        } else {
+            format!("{body}\n")
+        };
+        stream.write_all(payload.as_bytes()).is_ok() && stream.flush().is_ok()
+    };
+    loop {
+        match rx.recv_timeout(READ_POLL) {
+            Ok((code, body)) => {
+                if !write(&mut stream, code, &body) || http {
+                    break; // dead peer, or HTTP's one-reply-per-connection
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.done.load(Ordering::SeqCst) {
+                    // Final drain: a reply sent between our timeout and
+                    // this check must still reach the wire.
+                    while let Ok((code, body)) = rx.try_recv() {
+                        if !write(&mut stream, code, &body) {
+                            break;
+                        }
+                    }
+                    break;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Per-connection reader: sniffs HTTP vs the native line protocol,
+/// spawns the connection's writer, then parses + admits requests until
+/// EOF or shutdown.
+fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
+    let conn = shared.conn_ids.fetch_add(1, Ordering::SeqCst);
+    // Chaos seam. Gated to the first connection only: fault actions fire
+    // on *every* call within an incarnation, and the isolation test
+    // needs the later connections alive to prove one wedged reader
+    // stalls nobody else.
+    if conn == 0 {
+        faults::hang_point("net.conn");
+    }
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(stream);
+    let first = read_line_capped(&mut reader, &shared.done);
+    let (tx, rx) = mpsc::channel::<(u16, String)>();
+    let http = matches!(&first, Line::Ok(l) if is_http_request_line(l));
+    {
+        let shared2 = Arc::clone(&shared);
+        let writer = std::thread::spawn(move || writer_loop(write_half, rx, http, shared2));
+        shared.writers.lock().expect("net: writers lock poisoned").push(writer);
+    }
+    if http {
+        if let Line::Ok(l) = &first {
+            handle_http(&shared, conn, l, &mut reader, &tx);
+        }
+        return; // dropping tx lets the writer exit after the last reply
+    }
+    let mut next = first;
+    loop {
+        if shared.done.load(Ordering::SeqCst) {
+            return;
+        }
+        match next {
+            Line::Eof => return,
+            Line::TooLong => {
+                shared.rejected.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send((413, error_body(&Json::Null, "oversized", 413)));
+            }
+            Line::Ok(l) => {
+                if !l.trim().is_empty() {
+                    if let Some((code, body)) = admit(&shared, conn, &l, &tx) {
+                        let _ = tx.send((code, body));
+                    }
+                }
+            }
+        }
+        next = read_line_capped(&mut reader, &shared.done);
+    }
+}
+
+/// Accept loop: non-blocking accepts, one detached reader thread per
+/// connection. Detached on purpose — a connection wedged by the
+/// `net.conn` hang fault must not block shutdown; the joined *writer*
+/// threads are what guarantee final replies hit the wire.
+fn acceptor(shared: Arc<Shared>, listener: TcpListener) {
+    loop {
+        if shared.done.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let shared2 = Arc::clone(&shared);
+                std::thread::spawn(move || handle_conn(shared2, stream));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Bind with a bounded retry on `AddrInUse`: a restarted fleet worker
+/// rebinds its old port before the kernel finishes reclaiming it (std
+/// exposes no `SO_REUSEADDR`).
+fn bind_with_retry(addr: &str) -> anyhow::Result<TcpListener> {
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..8u64 {
+        match TcpListener::bind(addr) {
+            Ok(l) => return Ok(l),
+            Err(e) if e.kind() == ErrorKind::AddrInUse => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(250 * (attempt + 1)));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Err(anyhow::anyhow!("bind {addr}: {}", last.expect("retry loop saw AddrInUse")))
+}
+
+/// Serve over a real socket until `sc.requests` successful replies have
+/// been sent, then shut down gracefully (queued stragglers get explicit
+/// `shutting_down` replies; writer threads are joined so every buffered
+/// reply reaches the wire).
+///
+/// Prints `NET_LISTEN <addr> …` once the socket is bound (tests and the
+/// fleet smoke parse the address — bind to port 0 for an ephemeral one)
+/// and `NET_REPORT {json}` at shutdown.
+pub fn serve_listen(
+    core: &mut ServeCore,
+    sc: &ServeConfig,
+    addr: &str,
+) -> anyhow::Result<RouterStats> {
+    let listener = bind_with_retry(addr)?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let eff_batch = if sc.max_batch == 0 {
+        core.preset.batch
+    } else {
+        sc.max_batch.clamp(1, core.preset.batch)
+    };
+    println!(
+        "NET_LISTEN {local} (budget {} request(s), batch ≤{eff_batch}, reorder window {}, \
+         max queue depth {})",
+        sc.requests, sc.reorder_window, sc.max_queue_depth
+    );
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(AdmissionQueue::new(QueueConfig {
+            window: sc.reorder_window,
+            max_depth: sc.max_queue_depth,
+            max_distinct: sc.resident_adapters,
+        })),
+        work: Condvar::new(),
+        done: AtomicBool::new(false),
+        registered: RwLock::new(core.states.keys().cloned().collect()),
+        conn_ids: AtomicU64::new(0),
+        served: AtomicUsize::new(0),
+        shed_queue_full: AtomicUsize::new(0),
+        shed_unavailable: AtomicUsize::new(0),
+        rejected: AtomicUsize::new(0),
+        healthz: AtomicUsize::new(0),
+        vocab: core.preset.vocab,
+        writers: Mutex::new(Vec::new()),
+    });
+
+    // Split disjoint field borrows: the router holds `&core.session` for
+    // the whole serve, while hot reload needs `&mut core.tiers/states`.
+    let core = &mut *core;
+    let session = &core.session;
+    let tiers = &mut core.tiers;
+    let states = &mut core.states;
+    let n_classes = &mut core.n_classes;
+    let layout = &core.layout;
+    let batcher = Batcher::new(&core.preset, false);
+    let mut router = Router::new(session, batcher, sc.max_batch, sc.resident_adapters)?;
+    for (name, state) in states.iter() {
+        let n = *n_classes.get(name).ok_or_else(|| {
+            anyhow::anyhow!("resolved state for {name:?} has no recorded class count")
+        })?;
+        router.register(name, state.clone(), n)?;
+    }
+
+    let acceptor_handle = {
+        let shared2 = Arc::clone(&shared);
+        std::thread::spawn(move || acceptor(shared2, listener))
+    };
+    // Chaos seams: a wedged/killed engine with live connections.
+    faults::hang_point("net.engine");
+    faults::crash_point("net.engine");
+
+    let t_start = Instant::now();
+    let mut fill = vec![0usize; eff_batch + 1];
+    let mut reloads = 0usize;
+    let mut last_reload = Instant::now();
+    while shared.served.load(Ordering::SeqCst) < sc.requests {
+        // Generation-poll adapter hot-reload: a sibling's store publish
+        // swaps in mid-serve, without dropping a connection.
+        if last_reload.elapsed() >= RELOAD_POLL {
+            last_reload = Instant::now();
+            if tiers.refresh().unwrap_or(false) {
+                for t in SERVE_TASKS {
+                    if states.contains_key(*t) {
+                        continue;
+                    }
+                    let resolved =
+                        tiers.resolve_disk_only(layout, t).map(|r| (r.state.clone(), r.n_classes));
+                    if let Some((state, n)) = resolved {
+                        router.register(t, state.clone(), n)?;
+                        states.insert(t.to_string(), state);
+                        n_classes.insert(t.to_string(), n);
+                        shared
+                            .registered
+                            .write()
+                            .expect("net: registered lock poisoned")
+                            .insert(t.to_string());
+                        reloads += 1;
+                        println!("[serve]   {t}: adapter hot-loaded from store publish (live)");
+                    }
+                }
+            }
+        }
+        let batch = {
+            let q = shared.queue.lock().expect("net: queue lock poisoned");
+            let mut q = if q.is_empty() {
+                shared.work.wait_timeout(q, ENGINE_POLL).expect("net: queue lock poisoned").0
+            } else {
+                q
+            };
+            q.pop_batch(eff_batch)
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        fill[batch.len()] += 1;
+        let mut queue: VecDeque<Request> = VecDeque::new();
+        let mut repliers: Vec<Replier> = Vec::with_capacity(batch.len());
+        for (i, p) in batch.into_iter().enumerate() {
+            let Pending { conn: _, wire_id, task, example, reply } = p;
+            queue.push_back(Request { id: i, task: task.clone(), example });
+            repliers.push(Replier { wire_id, task, reply });
+        }
+        match router.serve(&mut queue) {
+            Ok(results) => {
+                for (req, logits) in results {
+                    let r = &repliers[req.id];
+                    // Truncate to the task's classes: the padded lanes
+                    // are −∞, which JSON cannot carry, and clients only
+                    // ever see real logits.
+                    let n = n_classes.get(&r.task).copied().unwrap_or(logits.len());
+                    let body = Json::obj(vec![
+                        ("id", r.wire_id.clone()),
+                        ("task", Json::str(r.task.as_str())),
+                        (
+                            "logits",
+                            Json::arr_num(logits[..n.min(logits.len())].iter().map(|&x| x as f64)),
+                        ),
+                    ])
+                    .to_string();
+                    // A reply to a vanished client still consumes budget
+                    // — the inference ran; anything else wedges the
+                    // server on client death.
+                    let _ = r.reply.send((200, body));
+                    shared.served.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) => {
+                crate::warnln!("[serve] batch failed ({e:#}); replying internal_error");
+                for r in &repliers {
+                    let _ = r.reply.send((500, error_body(&r.wire_id, "internal_error", 500)));
+                }
+            }
+        }
+    }
+
+    // Budget met: stop admissions, shed stragglers explicitly, then join
+    // the writers so every buffered reply is flushed.
+    shared.done.store(true, Ordering::SeqCst);
+    let leftovers = shared.queue.lock().expect("net: queue lock poisoned").drain();
+    let drained = leftovers.len();
+    for p in leftovers {
+        let _ = p.reply.send((503, error_body(&p.wire_id, "shutting_down", 503)));
+    }
+    if acceptor_handle.join().is_err() {
+        crate::warnln!("[serve] acceptor thread panicked");
+    }
+    let writers = std::mem::take(&mut *shared.writers.lock().expect("net: writers lock poisoned"));
+    for w in writers {
+        let _ = w.join();
+    }
+
+    let mut stats = std::mem::take(&mut router.stats);
+    stats.shed = shared.shed_queue_full.load(Ordering::SeqCst)
+        + shared.shed_unavailable.load(Ordering::SeqCst)
+        + drained;
+    stats.rejected = shared.rejected.load(Ordering::SeqCst);
+    // Wall time of the whole socket serve, not just router CPU windows.
+    stats.wall_s = t_start.elapsed().as_secs_f64();
+
+    let batches: usize = fill.iter().skip(1).sum();
+    let rows: usize = fill.iter().enumerate().map(|(n, c)| n * c).sum();
+    let mean_fill = rows as f64 / batches.max(1) as f64;
+    let report = Json::obj(vec![
+        ("served", Json::num(shared.served.load(Ordering::SeqCst) as f64)),
+        ("shed", Json::num(stats.shed as f64)),
+        ("rejected", Json::num(stats.rejected as f64)),
+        ("reloads", Json::num(reloads as f64)),
+        ("healthz", Json::num(shared.healthz.load(Ordering::SeqCst) as f64)),
+        ("batches", Json::num(batches as f64)),
+        ("mean_fill", Json::num(mean_fill)),
+        ("occupancy", Json::num(mean_fill / eff_batch.max(1) as f64)),
+        ("batch_fill", Json::arr_usize(fill[1..].iter())),
+    ]);
+    let report = report.to_string();
+    println!("NET_REPORT {report}");
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
+// Soak load generator (the `soak` CLI subcommand and `serve_soak` bench).
+// ---------------------------------------------------------------------------
+
+/// Upper bounds (ms) of the fixed latency-histogram buckets; one final
+/// unbounded bucket follows. Fixed (not data-dependent) so histograms
+/// from different runs and workers are directly comparable.
+pub const HIST_BOUNDS_MS: &[f64] = &[
+    0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0,
+];
+
+/// One pre-serialized request and where it goes.
+struct Shot {
+    addr: usize,
+    id: usize,
+    task: String,
+    line: String,
+}
+
+struct LaneReport {
+    ok: usize,
+    sheds: usize,
+    errors: usize,
+    latencies_ms: Vec<f64>,
+}
+
+enum Verdict {
+    Ok,
+    Shed,
+    Error,
+}
+
+fn classify(reply: &str, shot: &Shot) -> Verdict {
+    let Ok(doc) = Json::parse(reply) else { return Verdict::Error };
+    if let Some(err) = doc.get("error").and_then(Json::as_str) {
+        return if err == "queue_full" || err == "adapter_unavailable" {
+            Verdict::Shed
+        } else {
+            Verdict::Error
+        };
+    }
+    let id_ok = doc.get("id").and_then(Json::as_usize) == Some(shot.id);
+    let task_ok = doc.get("task").and_then(Json::as_str) == Some(shot.task.as_str());
+    let logits_ok =
+        doc.get("logits").and_then(Json::as_arr).map(|a| !a.is_empty()).unwrap_or(false);
+    if id_ok && task_ok && logits_ok {
+        Verdict::Ok
+    } else {
+        Verdict::Error
+    }
+}
+
+struct LaneConn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+fn connect_with_retry(addr: &str) -> Option<LaneConn> {
+    // Generous deadline: the server trains adapters before it binds when
+    // the store is cold.
+    let deadline = Instant::now() + Duration::from_secs(180);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_read_timeout(Some(Duration::from_secs(60)));
+                let reader = BufReader::new(s.try_clone().ok()?);
+                return Some(LaneConn { stream: s, reader });
+            }
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+fn exchange(conn: &mut LaneConn, line: &str) -> Option<String> {
+    conn.stream.write_all(line.as_bytes()).ok()?;
+    conn.stream.write_all(b"\n").ok()?;
+    conn.stream.flush().ok()?;
+    let mut reply = String::new();
+    match conn.reader.read_line(&mut reply) {
+        Ok(0) | Err(_) => None,
+        Ok(_) => Some(reply.trim_end().to_string()),
+    }
+}
+
+/// Drive one connection's shots in order, retrying sheds (503s) with a
+/// short backoff — a shed is flow control, not failure; only protocol
+/// violations count as errors.
+fn run_lane(addr: &str, shots: Vec<Shot>) -> LaneReport {
+    let mut report = LaneReport { ok: 0, sheds: 0, errors: 0, latencies_ms: Vec::new() };
+    if shots.is_empty() {
+        return report;
+    }
+    let Some(mut conn) = connect_with_retry(addr) else {
+        report.errors += shots.len();
+        return report;
+    };
+    for shot in &shots {
+        let mut tries = 0usize;
+        loop {
+            let t0 = Instant::now();
+            let reply = match exchange(&mut conn, &shot.line) {
+                Some(r) => r,
+                None => {
+                    // One reconnect, then give up on this shot: the
+                    // server may have been restarted under chaos.
+                    let Some(fresh) = connect_with_retry(addr) else {
+                        report.errors += 1;
+                        break;
+                    };
+                    conn = fresh;
+                    match exchange(&mut conn, &shot.line) {
+                        Some(r) => r,
+                        None => {
+                            report.errors += 1;
+                            break;
+                        }
+                    }
+                }
+            };
+            match classify(&reply, shot) {
+                Verdict::Ok => {
+                    report.ok += 1;
+                    report.latencies_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+                    break;
+                }
+                Verdict::Shed => {
+                    report.sheds += 1;
+                    tries += 1;
+                    if tries > 4000 {
+                        report.errors += 1;
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Verdict::Error => {
+                    report.errors += 1;
+                    break;
+                }
+            }
+        }
+    }
+    report
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// The soak load generator: sends exactly `requests` logical requests
+/// round-robin across `addrs` over `concurrency` persistent connections,
+/// retries sheds, and aggregates p50/p99/p999 latency, shed/error
+/// counts, RPS, and a fixed-bucket latency histogram into one JSON
+/// report.
+///
+/// Shot `i` goes to `addrs[i % addrs.len()]` — the exact split the fleet
+/// supervisor uses to hand out per-worker budgets, so every worker's
+/// budget is met and both sides terminate.
+pub fn soak(
+    cfg: &ExpConfig,
+    addrs: &[String],
+    requests: usize,
+    concurrency: usize,
+) -> anyhow::Result<Json> {
+    anyhow::ensure!(!addrs.is_empty(), "soak: no --connect addresses");
+    let mut pipe = crate::experiments::Pipeline::new(cfg)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x50AC);
+    let mut shots: Vec<Shot> = Vec::with_capacity(requests);
+    for id in 0..requests {
+        let tname = *rng.choice(SERVE_TASKS);
+        let data = pipe.data(tname)?;
+        let ex = data.split(Split::Dev)[rng.below(data.dev.len())].clone();
+        let line = Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("task", Json::str(tname)),
+            ("a", Json::arr_num(ex.a.iter().map(|&t| f64::from(t)))),
+            ("b", Json::arr_num(ex.b.iter().map(|&t| f64::from(t)))),
+            ("genre", Json::num(ex.genre as f64)),
+        ])
+        .to_string();
+        shots.push(Shot { addr: id % addrs.len(), id, task: tname.to_string(), line });
+    }
+    // Lanes: `concurrency` persistent connections split evenly across
+    // addresses; a shot stays on one lane so per-connection FIFO holds.
+    let lanes = (concurrency / addrs.len()).max(1);
+    let mut per_lane: Vec<Vec<Shot>> = (0..addrs.len() * lanes).map(|_| Vec::new()).collect();
+    for (i, shot) in shots.into_iter().enumerate() {
+        let lane = (i / addrs.len()) % lanes;
+        per_lane[shot.addr * lanes + lane].push(shot);
+    }
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (li, lane_shots) in per_lane.into_iter().enumerate() {
+        let addr = addrs[li / lanes].clone();
+        handles.push(std::thread::spawn(move || run_lane(&addr, lane_shots)));
+    }
+    let (mut ok, mut sheds, mut errors) = (0usize, 0usize, 0usize);
+    let mut lat: Vec<f64> = Vec::new();
+    for h in handles {
+        match h.join() {
+            Ok(r) => {
+                ok += r.ok;
+                sheds += r.sheds;
+                errors += r.errors;
+                lat.extend(r.latencies_ms);
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let mut hist = vec![0usize; HIST_BOUNDS_MS.len() + 1];
+    for &ms in &lat {
+        let b = HIST_BOUNDS_MS.iter().position(|&ub| ms <= ub).unwrap_or(HIST_BOUNDS_MS.len());
+        hist[b] += 1;
+    }
+    let hist_total: usize = hist.iter().sum();
+    anyhow::ensure!(
+        hist_total == ok,
+        "soak: latency histogram lost samples ({hist_total} of {ok})"
+    );
+    let rps = if wall_ms > 0.0 { ok as f64 / (wall_ms / 1e3) } else { 0.0 };
+    Ok(Json::obj(vec![
+        ("requests", Json::num(requests as f64)),
+        ("ok", Json::num(ok as f64)),
+        ("sheds", Json::num(sheds as f64)),
+        ("protocol_errors", Json::num(errors as f64)),
+        ("wall_ms", Json::num(wall_ms)),
+        ("rps", Json::num(rps)),
+        ("p50_ms", Json::num(percentile(&lat, 0.50))),
+        ("p99_ms", Json::num(percentile(&lat, 0.99))),
+        ("p999_ms", Json::num(percentile(&lat, 0.999))),
+        ("hist_bounds_ms", Json::arr_num(HIST_BOUNDS_MS.iter().copied())),
+        ("hist", Json::arr_usize(hist.iter())),
+        ("addrs", Json::Arr(addrs.iter().map(|a| Json::str(a.as_str())).collect())),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_response_carries_length_and_reason() {
+        let r = http_response(503, "{\"x\":1}");
+        assert!(r.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{r}");
+        assert!(r.contains("Content-Length: 7\r\n"), "{r}");
+        assert!(r.ends_with("\r\n\r\n{\"x\":1}"), "{r}");
+    }
+
+    #[test]
+    fn http_sniff_matches_methods_only() {
+        assert!(is_http_request_line("GET /healthz HTTP/1.1"));
+        assert!(is_http_request_line("POST /infer HTTP/1.1"));
+        assert!(!is_http_request_line("{\"id\": 1}"));
+        assert!(!is_http_request_line("GETAWAY"));
+    }
+
+    #[test]
+    fn error_body_echoes_wire_id() {
+        let b = error_body(&Json::num(7.0), "queue_full", 503);
+        let doc = Json::parse(&b).unwrap();
+        assert_eq!(doc.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(doc.get("error").unwrap().as_str(), Some("queue_full"));
+        assert_eq!(doc.get("code").unwrap().as_usize(), Some(503));
+    }
+
+    #[test]
+    fn parse_example_validates_tokens_against_vocab() {
+        let ok = Json::parse(r#"{"task":"sst2","a":[1,2],"b":[3],"genre":1}"#).unwrap();
+        let ex = parse_example(&ok, 10).unwrap();
+        assert_eq!((ex.a, ex.b, ex.genre), (vec![1, 2], vec![3], 1));
+        let oob = Json::parse(r#"{"task":"sst2","a":[99]}"#).unwrap();
+        assert!(parse_example(&oob, 10).is_none(), "token ≥ vocab must be rejected");
+        let missing = Json::parse(r#"{"task":"sst2"}"#).unwrap();
+        assert!(parse_example(&missing, 10).is_none(), "missing 'a' must be rejected");
+        let bad = Json::parse(r#"{"task":"sst2","a":[-1]}"#).unwrap();
+        assert!(parse_example(&bad, 10).is_none(), "negative token must be rejected");
+    }
+
+    #[test]
+    fn classify_discriminates_ok_shed_error() {
+        let shot = Shot { addr: 0, id: 3, task: "sst2".into(), line: String::new() };
+        let ok = r#"{"id":3,"task":"sst2","logits":[0.5,-0.5]}"#;
+        assert!(matches!(classify(ok, &shot), Verdict::Ok));
+        let shed = r#"{"id":3,"error":"queue_full","code":503}"#;
+        assert!(matches!(classify(shed, &shot), Verdict::Shed));
+        let stale = r#"{"id":4,"task":"sst2","logits":[0.5]}"#;
+        assert!(matches!(classify(stale, &shot), Verdict::Error), "wrong id is a protocol error");
+        assert!(matches!(classify("garbage", &shot), Verdict::Error));
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 0.999), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,299 @@
+//! Slot-aware admission queue with a bounded reordering window.
+//!
+//! The network front-end ([`super::net`]) decouples socket readers from
+//! the single engine thread through this queue. It is the
+//! continuous-batching policy in one pure, wall-clock-free data
+//! structure:
+//!
+//! * **Bounded depth** — [`AdmissionQueue::push`] refuses entries past
+//!   `max_depth` and hands the item back, so the caller can send an
+//!   explicit 503-style rejection (load shedding, never a silent drop).
+//! * **Slot-aware batch assembly** — [`AdmissionQueue::pop_batch`] takes
+//!   the front entry unconditionally, then pulls *later* requests forward
+//!   when they fit the batch: their task is already admitted, or a free
+//!   adapter slot remains under `max_distinct` (the [`super::AdapterBank`]
+//!   capacity). A stream that interleaves many tasks therefore still
+//!   fills batches without ever forcing the bank to evict a pinned slot.
+//! * **Bounded reordering** — every queued entry counts how many times a
+//!   later entry overtook it; a selection that would push any skipped
+//!   entry past `window` overtakes ends the batch instead, so no request
+//!   starves. `window = 0` degrades to strict FIFO prefixes.
+//! * **Per-connection FIFO** — skipping an entry blocks its connection
+//!   for the rest of the scan, so two requests from one connection can
+//!   never be reordered (replies stay in request order per client).
+//!
+//! Pure and deterministic: no clocks, no randomness, no threads. The
+//! property suite (`rust/tests/queue_props.rs`) drives it with seeded
+//! arrival orders from [`crate::util::rng`] and pins the three
+//! invariants above.
+
+use std::collections::VecDeque;
+
+/// What the queue needs to know about an entry to schedule it.
+pub trait Slotted {
+    /// Connection the entry arrived on (per-connection order is kept).
+    fn conn(&self) -> u64;
+    /// Task name (batch assembly groups by task under the slot budget).
+    fn task(&self) -> &str;
+}
+
+/// Queue policy knobs (`--reorder-window`, `--max-queue-depth`, and the
+/// adapter-bank capacity).
+#[derive(Clone, Copy, Debug)]
+pub struct QueueConfig {
+    /// Maximum times any entry may be overtaken by a later entry before
+    /// it becomes a barrier (0 = strict FIFO).
+    pub window: usize,
+    /// Maximum queued entries before [`AdmissionQueue::push`] sheds.
+    pub max_depth: usize,
+    /// Maximum distinct tasks per popped batch — the adapter-bank
+    /// capacity, so a batch can never pin-saturate the bank.
+    pub max_distinct: usize,
+}
+
+struct Entry<T> {
+    item: T,
+    /// Times a later entry was popped before this one. Never exceeds
+    /// `window` (the starvation bound the property suite pins).
+    overtakes: usize,
+}
+
+/// The admission queue. See the module docs for the scheduling policy.
+pub struct AdmissionQueue<T> {
+    cfg: QueueConfig,
+    entries: VecDeque<Entry<T>>,
+}
+
+impl<T: Slotted> AdmissionQueue<T> {
+    /// An empty queue under `cfg` (depth and slot budget are clamped to
+    /// at least 1 so the queue can always make progress).
+    pub fn new(cfg: QueueConfig) -> AdmissionQueue<T> {
+        let cfg = QueueConfig {
+            max_depth: cfg.max_depth.max(1),
+            max_distinct: cfg.max_distinct.max(1),
+            ..cfg
+        };
+        AdmissionQueue { cfg, entries: VecDeque::new() }
+    }
+
+    /// Current queue depth.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Admit an entry, or hand it back when the queue is at `max_depth` —
+    /// the caller owes the client an explicit rejection reply.
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.entries.len() >= self.cfg.max_depth {
+            return Err(item);
+        }
+        self.entries.push_back(Entry { item, overtakes: 0 });
+        Ok(())
+    }
+
+    /// Remove every queued entry in FIFO order (shutdown drain).
+    pub fn drain(&mut self) -> Vec<T> {
+        self.entries.drain(..).map(|e| e.item).collect()
+    }
+
+    /// Assemble the next batch of up to `max_batch` entries.
+    ///
+    /// The front entry is always taken (guaranteed progress). Later
+    /// entries are pulled forward when their connection has nothing
+    /// skipped ahead of them and their task fits the slot budget. Every
+    /// selection past a skipped entry costs that entry one overtake;
+    /// a selection that would push any skipped entry past `window` ends
+    /// the batch instead.
+    pub fn pop_batch(&mut self, max_batch: usize) -> Vec<T> {
+        if self.entries.is_empty() {
+            return Vec::new();
+        }
+        let max_batch = max_batch.max(1);
+        let mut selected: Vec<usize> = Vec::new();
+        let mut tasks: Vec<String> = Vec::new();
+        let mut blocked: Vec<u64> = Vec::new();
+        // Every selection overtakes *every* entry skipped so far, so the
+        // binding constraint is one number: the largest projected
+        // overtake count among skipped entries.
+        let mut worst = 0usize;
+        let mut skipped_any = false;
+        for i in 0..self.entries.len() {
+            if selected.len() == max_batch {
+                break;
+            }
+            let e = &self.entries[i];
+            let task_fits = tasks.iter().any(|t| t == e.item.task())
+                || tasks.len() < self.cfg.max_distinct;
+            if task_fits && !blocked.contains(&e.item.conn()) {
+                if skipped_any && worst + 1 > self.cfg.window {
+                    break; // would starve a skipped entry past the window
+                }
+                if !tasks.iter().any(|t| t == e.item.task()) {
+                    tasks.push(e.item.task().to_string());
+                }
+                selected.push(i);
+                if skipped_any {
+                    worst += 1;
+                }
+            } else {
+                skipped_any = true;
+                worst = worst.max(e.overtakes);
+                let c = e.item.conn();
+                if !blocked.contains(&c) {
+                    blocked.push(c);
+                }
+            }
+        }
+        // Charge one overtake to every entry a selection jumped over,
+        // then extract the batch (`selected` is ascending — scan order).
+        for (j, e) in self.entries.iter_mut().enumerate() {
+            if selected.binary_search(&j).is_err() {
+                e.overtakes += selected.iter().filter(|&&i| i > j).count();
+            }
+        }
+        let mut batch = Vec::with_capacity(selected.len());
+        for (removed, &i) in selected.iter().enumerate() {
+            let e = self.entries.remove(i - removed).expect("selected index in range");
+            batch.push(e.item);
+        }
+        debug_assert!(
+            self.entries.iter().all(|e| e.overtakes <= self.cfg.window),
+            "an entry was overtaken past the window bound"
+        );
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Item {
+        conn: u64,
+        seq: usize,
+        task: &'static str,
+    }
+
+    impl Slotted for Item {
+        fn conn(&self) -> u64 {
+            self.conn
+        }
+        fn task(&self) -> &str {
+            self.task
+        }
+    }
+
+    fn item(conn: u64, seq: usize, task: &'static str) -> Item {
+        Item { conn, seq, task }
+    }
+
+    fn q(window: usize, max_depth: usize, max_distinct: usize) -> AdmissionQueue<Item> {
+        AdmissionQueue::new(QueueConfig { window, max_depth, max_distinct })
+    }
+
+    fn seqs(batch: &[Item]) -> Vec<usize> {
+        batch.iter().map(|i| i.seq).collect()
+    }
+
+    #[test]
+    fn fifo_when_everything_fits() {
+        let mut q = q(4, 64, 8);
+        for s in 0..4 {
+            q.push(item(s as u64, s, "a")).unwrap();
+        }
+        assert_eq!(seqs(&q.pop_batch(8)), vec![0, 1, 2, 3]);
+        assert!(q.is_empty());
+        assert!(q.pop_batch(8).is_empty());
+    }
+
+    #[test]
+    fn push_sheds_past_max_depth() {
+        let mut q = q(4, 2, 8);
+        q.push(item(0, 0, "a")).unwrap();
+        q.push(item(0, 1, "a")).unwrap();
+        let back = q.push(item(0, 2, "a")).unwrap_err();
+        assert_eq!(back.seq, 2, "the refused item comes back to the caller");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pulls_same_task_forward_under_the_slot_budget() {
+        // [a, b, c, a] with 2 slots: c does not fit, the later a does.
+        let mut q = q(4, 64, 2);
+        q.push(item(1, 0, "a")).unwrap();
+        q.push(item(2, 1, "b")).unwrap();
+        q.push(item(3, 2, "c")).unwrap();
+        q.push(item(4, 3, "a")).unwrap();
+        assert_eq!(seqs(&q.pop_batch(8)), vec![0, 1, 3]);
+        assert_eq!(seqs(&q.pop_batch(8)), vec![2], "c is served next, once overtaken");
+    }
+
+    #[test]
+    fn window_zero_never_reorders() {
+        let mut q = q(0, 64, 2);
+        q.push(item(1, 0, "a")).unwrap();
+        q.push(item(2, 1, "b")).unwrap();
+        q.push(item(3, 2, "c")).unwrap();
+        q.push(item(4, 3, "a")).unwrap();
+        assert_eq!(seqs(&q.pop_batch(8)), vec![0, 1], "stops at the first skip");
+        assert_eq!(seqs(&q.pop_batch(8)), vec![2]);
+        assert_eq!(seqs(&q.pop_batch(8)), vec![3]);
+    }
+
+    #[test]
+    fn same_connection_is_never_reordered() {
+        // conn 1 sends a, c, a with one slot: once c is skipped the
+        // connection is blocked, so the second a cannot jump it.
+        let mut q = q(8, 64, 1);
+        q.push(item(1, 0, "a")).unwrap();
+        q.push(item(1, 1, "c")).unwrap();
+        q.push(item(1, 2, "a")).unwrap();
+        assert_eq!(seqs(&q.pop_batch(8)), vec![0]);
+        assert_eq!(seqs(&q.pop_batch(8)), vec![1]);
+        assert_eq!(seqs(&q.pop_batch(8)), vec![2]);
+    }
+
+    #[test]
+    fn window_bounds_overtakes_within_one_batch() {
+        // [a, c, a, a, a] with one slot and window 1: the batch may pull
+        // exactly one a past the skipped c, then c becomes a barrier.
+        let mut q = q(1, 64, 1);
+        q.push(item(1, 0, "a")).unwrap();
+        q.push(item(2, 1, "c")).unwrap();
+        for s in 2..5 {
+            q.push(item(2 + s as u64, s, "a")).unwrap();
+        }
+        assert_eq!(seqs(&q.pop_batch(8)), vec![0, 2], "one overtake allowed, then barrier");
+        assert_eq!(seqs(&q.pop_batch(8)), vec![1], "the overtaken entry is now front");
+    }
+
+    #[test]
+    fn window_bound_carries_across_batches() {
+        // c is overtaken once in batch 1; with window 1 spent, batch 2
+        // must not let the remaining a past it again.
+        let mut q = q(1, 64, 1);
+        q.push(item(1, 0, "a")).unwrap();
+        q.push(item(2, 1, "c")).unwrap();
+        q.push(item(3, 2, "a")).unwrap();
+        q.push(item(4, 3, "a")).unwrap();
+        assert_eq!(seqs(&q.pop_batch(2)), vec![0, 2]);
+        assert_eq!(seqs(&q.pop_batch(2)), vec![1], "spent window blocks further overtakes");
+        assert_eq!(seqs(&q.pop_batch(2)), vec![3]);
+    }
+
+    #[test]
+    fn drain_returns_everything_in_fifo_order() {
+        let mut q = q(4, 64, 1);
+        q.push(item(1, 0, "a")).unwrap();
+        q.push(item(2, 1, "b")).unwrap();
+        q.push(item(3, 2, "c")).unwrap();
+        assert_eq!(seqs(&q.drain()), vec![0, 1, 2]);
+        assert!(q.is_empty());
+    }
+}

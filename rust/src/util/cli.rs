@@ -130,7 +130,19 @@ pub const SERVE_FLAGS: &[&str] = &[
     "fleet-tasks",
     "max-restarts",
     "heartbeat-secs",
+    "listen",
+    "reorder-window",
+    "max-queue-depth",
+    "method",
 ];
+
+/// Flags the `soak` load-generator command accepts beyond the shared
+/// experiment flags.
+///
+/// Same lockstep rule as [`SERVE_FLAGS`]: the README's soak section must
+/// document each as `--<flag>`, enforced by the
+/// `readme_documents_soak_flags` test and the matching CI step.
+pub const SOAK_FLAGS: &[&str] = &["connect", "concurrency", "soak-json"];
 
 /// Flags the `adapters` store-management command accepts beyond
 /// `--adapter-store` (which [`SERVE_FLAGS`] already carries).
@@ -246,6 +258,19 @@ mod tests {
             assert!(
                 readme.contains(&format!("--{flag}")),
                 "README.md must document perf flag --{flag}"
+            );
+        }
+    }
+
+    /// Same lockstep for the soak load-generator flags
+    /// (`soak --connect/--concurrency/--soak-json`).
+    #[test]
+    fn readme_documents_soak_flags() {
+        let readme = include_str!("../../../README.md");
+        for flag in SOAK_FLAGS {
+            assert!(
+                readme.contains(&format!("--{flag}")),
+                "README.md must document soak flag --{flag}"
             );
         }
     }

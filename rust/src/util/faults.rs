@@ -72,6 +72,12 @@ pub const TRANSIENT_MARKER: &str = "(transient)";
 /// * `lock` — `StoreLock` acquisition (err = simulated lock timeout) and
 ///   release (leak = holder dies without releasing)
 /// * `serve` — fleet worker entry (hang = silent worker, crash = death)
+/// * `net.conn` — first accepted socket connection's reader thread
+///   (hang = one wedged client connection; later connections must keep
+///   flowing)
+/// * `net.engine` — socket serving engine, after the listener is bound
+///   and connections are being accepted (hang = accepting-but-dead
+///   server, crash = death mid-connection)
 pub const SITES: &[&str] = &[
     "store.open",
     "store.read",
@@ -80,6 +86,8 @@ pub const SITES: &[&str] = &[
     "checkpoint",
     "lock",
     "serve",
+    "net.conn",
+    "net.engine",
 ];
 
 #[derive(Debug, Clone, Copy, PartialEq)]

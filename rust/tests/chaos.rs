@@ -9,14 +9,22 @@
 //! * an unreachable store → loud degraded serving, train-on-miss,
 //! * a crash between a checkpoint's temp write and its rename → the torn
 //!   temp never poisons the next run,
-//! * a lock holder dying without release → the next process takes over.
+//! * a lock holder dying without release → the next process takes over,
+//! * a socket connection wedged by the `net.conn` hang → later
+//!   connections are still served and the budget completes,
+//! * a server killed mid-connection → the store verifies clean and a
+//!   warm respawn serves straight from it.
 //!
 //! Every scenario is seeded and env-driven — no `rand`, no timing
 //! dependence beyond generous supervision deadlines.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::path::{Path, PathBuf};
-use std::process::{Command, Output};
+use std::process::{Child, Command, Output, Stdio};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use qrlora::store::Registry;
 
@@ -100,6 +108,129 @@ fn serve_args(store: &str, extra: &[&str]) -> Vec<String> {
 
 fn refs(args: &[String]) -> Vec<&str> {
     args.iter().map(|s| s.as_str()).collect()
+}
+
+/// Drain one output pipe into the shared line channel on a relay thread,
+/// so a filling pipe can never wedge the child while the test is busy.
+fn relay(src: impl std::io::Read + Send + 'static, tx: Sender<String>) {
+    std::thread::spawn(move || {
+        let mut reader = BufReader::new(src);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return,
+                Ok(_) => {
+                    let _ = tx.send(line.trim_end().to_string());
+                }
+            }
+        }
+    });
+}
+
+/// A `serve --listen` child under test. `spawn` blocks until the
+/// listener announces its bound address on stdout (`NET_LISTEN`).
+struct NetServer {
+    child: Child,
+    addr: String,
+    lines: Receiver<String>,
+    seen: Vec<String>,
+}
+
+impl NetServer {
+    fn spawn(cwd: &Path, faults: Option<&str>, store: &str, requests: usize) -> NetServer {
+        let req = requests.to_string();
+        let mut args: Vec<String> = vec!["serve".into(), "--listen".into(), "127.0.0.1:0".into()];
+        args.extend(BUDGET[..6].iter().map(|s| s.to_string())); // training knobs
+        args.extend(["--requests".into(), req]);
+        args.extend(["--adapter-store".into(), store.into()]);
+        let mut cmd = Command::new(EXE);
+        cmd.current_dir(cwd)
+            .args(refs(&args))
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .env_remove("QRLORA_FAULTS")
+            .env_remove("QRLORA_FAULTS_SEED")
+            .env_remove("QRLORA_FAULTS_RESTART")
+            .env_remove("QRLORA_WORKER_ID");
+        if let Some(spec) = faults {
+            cmd.env("QRLORA_FAULTS", spec);
+        }
+        let mut child = cmd.spawn().expect("spawn qrlora serve --listen");
+        let (tx, lines) = channel::<String>();
+        relay(child.stdout.take().expect("stdout piped"), tx.clone());
+        relay(child.stderr.take().expect("stderr piped"), tx);
+        let mut seen = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(600);
+        let addr = loop {
+            match lines.recv_timeout(Duration::from_secs(1)) {
+                Ok(line) => {
+                    let found = line.strip_prefix("NET_LISTEN ").map(|rest| {
+                        rest.split_whitespace().next().unwrap_or("").to_string()
+                    });
+                    seen.push(line);
+                    if let Some(addr) = found {
+                        break addr;
+                    }
+                }
+                Err(_) => {
+                    let log = seen.join("\n");
+                    assert!(Instant::now() < deadline, "no NET_LISTEN within 600 s:\n{log}");
+                }
+            }
+        };
+        NetServer { child, addr, lines, seen }
+    }
+
+    /// Wait for a clean exit; returns everything the child printed.
+    fn finish(mut self) -> String {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let status = loop {
+            if let Some(s) = self.child.try_wait().expect("wait qrlora") {
+                break s;
+            }
+            if Instant::now() >= deadline {
+                let _ = self.child.kill();
+                panic!("server did not exit within 120 s:\n{}", self.seen.join("\n"));
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        };
+        while let Ok(line) = self.lines.recv_timeout(Duration::from_millis(500)) {
+            self.seen.push(line);
+        }
+        let all = self.seen.join("\n");
+        assert!(status.success(), "serve --listen failed ({status}):\n{all}");
+        all
+    }
+
+    /// Kill mid-run; returns everything printed up to the kill.
+    fn kill(mut self) -> String {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        while let Ok(line) = self.lines.recv_timeout(Duration::from_millis(500)) {
+            self.seen.push(line);
+        }
+        self.seen.join("\n")
+    }
+}
+
+/// A minimal valid native-protocol request (token ids far inside any
+/// preset's vocabulary).
+fn req_line(id: usize, task: &str) -> String {
+    format!("{{\"id\": {id}, \"task\": {task:?}, \"a\": [1, 2, 3], \"b\": [4, 5]}}")
+}
+
+/// Connect, send one request line, read one reply line.
+fn one_shot(addr: &str, line: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect to serve --listen");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("read reply");
+    reply
 }
 
 /// Tentpole acceptance: a worker dying mid-publish (abort *between* the
@@ -253,4 +384,81 @@ fn chaos_leaked_lock_is_taken_over_by_the_next_process() {
     let reg = Registry::open(&store).unwrap();
     assert_eq!(reg.len(), 2, "both writers' records must survive the takeover");
     assert!(reg.verify().iter().all(|r| r.result.is_ok()));
+}
+
+/// A connection wedged by the `net.conn` hang (fires on the first
+/// connection only) must not stall anyone else: later connections get
+/// real replies and the request budget completes, exiting the server
+/// cleanly — the wedged reader is detached, not joined.
+#[test]
+fn chaos_socket_hang_on_one_connection_does_not_stall_others() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_dir("store_net_hang");
+    let store_s = store.display().to_string();
+
+    let server = NetServer::spawn(&cwd, Some("net.conn=hang"), &store_s, 2);
+
+    // Connection 0: its reader thread hangs before the first read, so
+    // this request can never be answered. Keep the socket open for the
+    // whole scenario — the point is a *live* wedged connection.
+    let mut wedged = TcpStream::connect(&server.addr).expect("conn 0");
+    wedged.write_all(req_line(0, "sst2").as_bytes()).unwrap();
+    wedged.write_all(b"\n").unwrap();
+    wedged.flush().unwrap();
+
+    // Later connections must be served normally and drain the budget.
+    let b = one_shot(&server.addr, &req_line(1, "mrpc"));
+    let c = one_shot(&server.addr, &req_line(2, "qnli"));
+    assert_has(&b, "\"logits\"", "conn 1 must be served while conn 0 is wedged");
+    assert_has(&c, "\"logits\"", "conn 2 must be served while conn 0 is wedged");
+    assert!(!b.contains("\"error\"") && !c.contains("\"error\""), "no error replies:\n{b}\n{c}");
+
+    let all = server.finish();
+    assert_has(&all, "FAULT: injected hang at net.conn", "the fault must actually fire");
+    drop(wedged);
+}
+
+/// Killing the server mid-connection must leave the fleet restartable:
+/// the adapter store still passes `adapters verify` with zero failures,
+/// and a warm respawn serves straight from the surviving records.
+#[test]
+fn chaos_socket_kill_mid_connection_leaves_store_clean_and_restartable() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_dir("store_net_kill");
+    let store_s = store.display().to_string();
+
+    // Populate the store first so the kill lands on real records.
+    let cold = run(&cwd, None, &refs(&serve_args(&store_s, &[])));
+    assert_success(&cold, "cold serve populating the store");
+
+    // Serve one request to prove the connection is live, then kill the
+    // server with the second request still in flight.
+    let server = NetServer::spawn(&cwd, None, &store_s, 6);
+    let mut stream = TcpStream::connect(&server.addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    stream.write_all(req_line(0, "sst2").as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("read first reply");
+    assert_has(&reply, "\"logits\"", "the first request must be served before the kill");
+    stream.write_all(req_line(1, "mrpc").as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+    let _ = server.kill();
+
+    let verify = run(&cwd, None, &["adapters", "verify", "--adapter-store", &store_s]);
+    assert_success(&verify, "adapters verify after killing the server mid-connection");
+    let (stdout, _) = out_str(&verify);
+    assert_has(&stdout, "verified 3 record(s), 0 failure(s)", "store must survive the kill");
+
+    // Warm respawn: the fleet is restartable from the surviving store.
+    let warm = NetServer::spawn(&cwd, None, &store_s, 1);
+    let reply = one_shot(&warm.addr, &req_line(9, "qnli"));
+    assert_has(&reply, "\"logits\"", "the respawned server must serve from the store");
+    let all = warm.finish();
+    assert_has(&all, "3/3 from store", "the respawn must warm-start, not retrain");
 }

@@ -1,0 +1,485 @@
+//! End-to-end socket tests for the network serving front-end
+//! (`serve --listen`, `qrlora::server::net`), driving the *real binary*
+//! over real TCP connections:
+//!
+//! * replies are bit-identical to the in-process [`serve_swap`] oracle,
+//!   for both adapter methods (the wire adds nothing and loses nothing:
+//!   f32 → f64 → shortest-decimal JSON → f64 → f32 round-trips exactly),
+//! * malformed request lines, unknown tasks, and oversized payloads get
+//!   explicit error replies without killing the listener,
+//! * concurrent clients each get their own answers back,
+//! * a full admission queue sheds with an explicit `queue_full` 503 —
+//!   never a silent drop or hang.
+//!
+//! Bit-identity is arranged by construction: the test process trains and
+//! publishes the adapters first, so the spawned server warm-starts from
+//! the very same store records (asserted via its `3/3 from store` line).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use qrlora::data::{task, Batcher, Example, Split};
+use qrlora::experiments::{ExpConfig, Pipeline};
+use qrlora::server::{serve_swap, Request, RouterStats, ServeCore, SERVE_TASKS};
+use qrlora::util::json::Json;
+
+/// Serialize the scenarios: each spawns the real binary (which trains or
+/// warm-starts three adapters) and drives it over loopback; overlapping
+/// them would oversubscribe the box for no coverage gain.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const EXE: &str = env!("CARGO_BIN_EXE_qrlora");
+
+/// Tiny training budget, kept in lockstep with [`budget_cfg`] so the
+/// in-process reference and the spawned server resolve identical
+/// adapters (the warm-start fingerprint check enforces the match).
+const BUDGET: &[&str] = &["--pretrain-steps", "20", "--warmup-steps", "10", "--steps", "10"];
+
+fn budget_cfg() -> ExpConfig {
+    ExpConfig { pretrain_steps: 20, warmup_steps: 10, steps: 10, ..ExpConfig::default() }
+}
+
+/// Working directory shared by every scenario, never wiped: the spawned
+/// servers reuse each other's `runs/` backbone/warm-up caches. Each
+/// scenario gets its own adapter-store directory, so correctness never
+/// depends on this directory's prior state.
+fn shared_cwd() -> PathBuf {
+    let dir = std::env::temp_dir().join("qrlora_serve_net_tests").join("shared");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A scenario-private adapter-store directory, wiped on entry.
+fn fresh_store(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("qrlora_serve_net_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A spawned `serve --listen` process with its output relayed line-wise
+/// (stdout and stderr merged) and the bound address already parsed from
+/// its `NET_LISTEN` line.
+struct Server {
+    child: Child,
+    addr: String,
+    lines: Receiver<String>,
+}
+
+impl Server {
+    /// Spawn the binary on an ephemeral port and wait for `NET_LISTEN`.
+    /// Fault-plan env vars are scrubbed first so scenarios can't leak
+    /// into each other.
+    fn spawn(cwd: &Path, store: &str, extra: &[&str], faults: Option<&str>) -> Server {
+        let mut cmd = Command::new(EXE);
+        cmd.current_dir(cwd)
+            .arg("serve")
+            .args(["--listen", "127.0.0.1:0"])
+            .args(BUDGET)
+            .args(["--adapter-store", store])
+            .args(extra)
+            .env_remove("QRLORA_FAULTS")
+            .env_remove("QRLORA_FAULTS_SEED")
+            .env_remove("QRLORA_FAULTS_RESTART")
+            .env_remove("QRLORA_WORKER_ID")
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped());
+        if let Some(spec) = faults {
+            cmd.env("QRLORA_FAULTS", spec);
+        }
+        let mut child = cmd.spawn().expect("spawn qrlora serve --listen");
+        let (tx, lines) = mpsc::channel::<String>();
+        let stdout = child.stdout.take().expect("stdout piped");
+        let stderr = child.stderr.take().expect("stderr piped");
+        let tx2 = tx.clone();
+        std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines() {
+                let Ok(line) = line else { break };
+                let _ = tx2.send(line);
+            }
+        });
+        std::thread::spawn(move || {
+            for line in BufReader::new(stderr).lines() {
+                let Ok(line) = line else { break };
+                let _ = tx.send(line);
+            }
+        });
+
+        // The server trains (or warm-starts) its adapters before it
+        // binds, so the deadline covers a cold store on a loaded box.
+        let deadline = Instant::now() + Duration::from_secs(600);
+        let mut seen: Vec<String> = Vec::new();
+        let addr = loop {
+            match lines.recv_timeout(Duration::from_millis(200)) {
+                Ok(line) => {
+                    if let Some(rest) = line.strip_prefix("NET_LISTEN ") {
+                        let addr = rest.split_whitespace().next().unwrap_or("").to_string();
+                        seen.push(line);
+                        break addr;
+                    }
+                    seen.push(line);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "server never printed NET_LISTEN; output so far:\n{}",
+                        seen.join("\n")
+                    );
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    let _ = child.wait();
+                    panic!("server exited before NET_LISTEN; output:\n{}", seen.join("\n"));
+                }
+            }
+        };
+        // Re-inject what we read while waiting so `drain` sees it all.
+        let (replay_tx, replay_rx) = mpsc::channel::<String>();
+        for line in seen {
+            let _ = replay_tx.send(line);
+        }
+        std::thread::spawn(move || {
+            for line in lines.iter() {
+                if replay_tx.send(line).is_err() {
+                    break;
+                }
+            }
+        });
+        Server { child, addr, lines: replay_rx }
+    }
+
+    /// Wait for a clean exit (the budget was met), then return every
+    /// output line for assertions.
+    fn finish(mut self) -> Vec<String> {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        loop {
+            match self.child.try_wait().expect("try_wait server") {
+                Some(status) => {
+                    let out: Vec<String> = self.lines.iter().collect();
+                    assert!(
+                        status.success(),
+                        "server exited with {status}; output:\n{}",
+                        out.join("\n")
+                    );
+                    return out;
+                }
+                None => {
+                    assert!(
+                        Instant::now() < deadline,
+                        "server did not exit after its budget was met"
+                    );
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Kill a deliberately-wedged server and return its output lines.
+    fn kill(mut self) -> Vec<String> {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        self.lines.iter().collect()
+    }
+}
+
+/// One native-protocol client connection.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect to serve --listen");
+        stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send_raw(&mut self, line: &str) {
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("read reply line");
+        assert!(n > 0, "server closed the connection instead of replying");
+        Json::parse(line.trim_end()).unwrap_or_else(|e| panic!("bad reply {line:?}: {e:#}"))
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.send_raw(line);
+        self.recv()
+    }
+}
+
+fn request_line(id: usize, task: &str, ex: &Example) -> String {
+    Json::obj(vec![
+        ("id", Json::num(id as f64)),
+        ("task", Json::str(task)),
+        ("a", Json::arr_num(ex.a.iter().map(|&t| f64::from(t)))),
+        ("b", Json::arr_num(ex.b.iter().map(|&t| f64::from(t)))),
+        ("genre", Json::num(ex.genre as f64)),
+    ])
+    .to_string()
+}
+
+/// Two dev-split examples per serving task, with globally unique ids.
+fn dev_examples(pipe: &mut Pipeline) -> Vec<(usize, &'static str, Example)> {
+    let mut out = Vec::new();
+    for t in SERVE_TASKS {
+        let data = pipe.data(t).unwrap();
+        let dev = data.split(Split::Dev);
+        for ex in dev.iter().take(2) {
+            out.push((out.len(), *t, ex.clone()));
+        }
+    }
+    out
+}
+
+fn err_field(doc: &Json, field: &str) -> String {
+    doc.get(field).and_then(Json::as_str).unwrap_or("").to_string()
+}
+
+/// TCP replies vs the in-process [`serve_swap`] oracle, bit for bit.
+fn check_socket_matches_swap(method: &'static str, store_name: &str) {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_store(store_name);
+    let store_s = store.display().to_string();
+
+    // In-process reference first: train + publish the adapters, then run
+    // the swap-per-request oracle over the same examples the socket
+    // client will send.
+    let cfg = budget_cfg();
+    let mut core = ServeCore::with_method(&cfg, Some(store.as_path()), method).unwrap();
+    core.prepare(SERVE_TASKS).unwrap();
+    core.flush_publishes();
+    let examples = dev_examples(&mut core.pipe);
+    let batcher = Batcher::new(&core.preset, false);
+    let mut queue: VecDeque<Request> = examples
+        .iter()
+        .map(|(id, t, ex)| Request { id: *id, task: t.to_string(), example: ex.clone() })
+        .collect();
+    let mut stats = RouterStats::default();
+    let swapped =
+        serve_swap(&mut core.session, &batcher, &core.states, &mut queue, &mut stats).unwrap();
+    let want: BTreeMap<usize, Vec<f32>> = swapped.into_iter().map(|(r, l)| (r.id, l)).collect();
+
+    // The server warm-starts from the same store records.
+    let requests = examples.len().to_string();
+    let server = Server::spawn(
+        &cwd,
+        &store_s,
+        &["--method", method, "--requests", requests.as_str()],
+        None,
+    );
+    let mut client = Client::connect(&server.addr);
+    let replies: Vec<Json> =
+        examples.iter().map(|(id, t, ex)| client.request(&request_line(*id, t, ex))).collect();
+    let out = server.finish();
+    assert!(
+        out.iter().any(|l| l.contains("3/3 from store")),
+        "server must warm-start from the published store (else the oracle \
+         and the server hold different adapters):\n{}",
+        out.join("\n")
+    );
+
+    for ((id, t, _), doc) in examples.iter().zip(&replies) {
+        assert_eq!(doc.get("id").and_then(Json::as_usize), Some(*id), "id echo in {doc:?}");
+        assert_eq!(doc.get("task").and_then(Json::as_str), Some(*t), "task echo in {doc:?}");
+        let logits: Vec<f32> = doc
+            .req("logits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        let n = task(t).unwrap().n_classes;
+        assert_eq!(logits.len(), n, "{method}: reply must carry exactly n_classes logits");
+        for (j, got) in logits.iter().enumerate() {
+            let w = want[id][j];
+            assert_eq!(
+                got.to_bits(),
+                w.to_bits(),
+                "{method}: request {id} logit {j}: socket {got} vs swap {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_replies_bit_identical_to_serve_swap_qrlora() {
+    check_socket_matches_swap("qrlora", "store_bits_qrlora");
+}
+
+#[test]
+fn tcp_replies_bit_identical_to_serve_swap_lora() {
+    check_socket_matches_swap("lora", "store_bits_lora");
+}
+
+/// Protocol abuse gets explicit error replies and never kills the
+/// listener: after garbage, an unknown task, and an oversized line, the
+/// same connection still serves a valid request, and an HTTP client on a
+/// second connection gets a well-formed `/healthz`.
+#[test]
+fn malformed_and_oversized_requests_get_errors_without_killing_the_listener() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_store("store_abuse");
+    let store_s = store.display().to_string();
+
+    let cfg = budget_cfg();
+    let mut pipe = Pipeline::new(&cfg).unwrap();
+    let examples = dev_examples(&mut pipe);
+    let server = Server::spawn(&cwd, &store_s, &["--requests", "1"], None);
+
+    // HTTP shim on its own connection (does not consume serving budget).
+    let mut http = TcpStream::connect(&server.addr).unwrap();
+    http.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    http.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    http.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 200 OK\r\n"), "healthz reply: {raw:?}");
+    let body = raw.split("\r\n\r\n").nth(1).unwrap_or("");
+    let health = Json::parse(body).unwrap();
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(
+        health.get("registered").and_then(Json::as_arr).map(|a| a.len()),
+        Some(SERVE_TASKS.len()),
+        "all serving tasks must be registered: {body}"
+    );
+
+    let mut client = Client::connect(&server.addr);
+    let bad = client.request("{oops");
+    assert_eq!(err_field(&bad, "error"), "bad_request");
+    assert_eq!(bad.get("code").and_then(Json::as_usize), Some(400));
+
+    let unknown = client.request(r#"{"id": 9, "task": "nope", "a": [1]}"#);
+    assert_eq!(err_field(&unknown, "error"), "unknown_task");
+    assert_eq!(unknown.get("id").and_then(Json::as_usize), Some(9), "id must be echoed");
+
+    let oversized = client.request(&"x".repeat(70 * 1024));
+    assert_eq!(err_field(&oversized, "error"), "oversized");
+    assert_eq!(oversized.get("code").and_then(Json::as_usize), Some(413));
+
+    // The listener survived all of it: a valid request still serves.
+    let (id, t, ex) = &examples[0];
+    let ok = client.request(&request_line(*id, t, ex));
+    assert_eq!(ok.get("task").and_then(Json::as_str), Some(*t));
+    assert!(
+        ok.get("logits").and_then(Json::as_arr).map(|a| !a.is_empty()).unwrap_or(false),
+        "valid request after abuse must serve: {ok:?}"
+    );
+
+    let out = server.finish();
+    let report = out
+        .iter()
+        .find_map(|l| l.strip_prefix("NET_REPORT "))
+        .expect("server must print NET_REPORT");
+    let report = Json::parse(report).unwrap();
+    assert_eq!(report.get("served").and_then(Json::as_usize), Some(1));
+    assert_eq!(
+        report.get("rejected").and_then(Json::as_usize),
+        Some(3),
+        "garbage + unknown task + oversized must all be counted: {report:?}"
+    );
+}
+
+/// Three concurrent clients on their own connections: every reply goes to
+/// the client that asked, with its own id and task echoed back.
+#[test]
+fn concurrent_clients_each_get_their_own_answers() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_store("store_concurrent");
+    let store_s = store.display().to_string();
+
+    let cfg = budget_cfg();
+    let mut pipe = Pipeline::new(&cfg).unwrap();
+    let examples = dev_examples(&mut pipe); // 6 = 3 clients × 2 requests
+    let requests = examples.len().to_string();
+    let server = Server::spawn(&cwd, &store_s, &["--requests", requests.as_str()], None);
+
+    let mut handles = Vec::new();
+    for chunk in examples.chunks(2) {
+        let addr = server.addr.clone();
+        let chunk: Vec<(usize, &'static str, Example)> = chunk.to_vec();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr);
+            for (id, t, ex) in &chunk {
+                let doc = client.request(&request_line(*id, t, ex));
+                assert_eq!(doc.get("id").and_then(Json::as_usize), Some(*id), "{doc:?}");
+                assert_eq!(doc.get("task").and_then(Json::as_str), Some(*t), "{doc:?}");
+                let n = task(t).unwrap().n_classes;
+                let len = doc.get("logits").and_then(Json::as_arr).map(|a| a.len());
+                assert_eq!(len, Some(n), "{doc:?}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let out = server.finish();
+    let report = out
+        .iter()
+        .find_map(|l| l.strip_prefix("NET_REPORT "))
+        .expect("server must print NET_REPORT");
+    let report = Json::parse(report).unwrap();
+    assert_eq!(report.get("served").and_then(Json::as_usize), Some(examples.len()));
+    assert_eq!(report.get("rejected").and_then(Json::as_usize), Some(0));
+}
+
+/// Queue overflow is an explicit `queue_full` 503, never a silent drop or
+/// a hang: with the engine wedged (injected fault) and a depth-1 queue,
+/// the first request parks in the queue and the second is shed
+/// immediately — on a different connection, proving the listener and
+/// writers stay live around the dead engine.
+#[test]
+fn full_queue_sheds_with_explicit_queue_full_reply() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_store("store_overflow");
+    let store_s = store.display().to_string();
+
+    let cfg = budget_cfg();
+    let mut pipe = Pipeline::new(&cfg).unwrap();
+    let examples = dev_examples(&mut pipe);
+    let server = Server::spawn(
+        &cwd,
+        &store_s,
+        &["--requests", "1", "--max-queue-depth", "1"],
+        Some("net.engine=hang"),
+    );
+
+    // First request: admitted, then parked forever behind the hung
+    // engine (no reply — that's the point).
+    let mut parked = Client::connect(&server.addr);
+    let (id0, t0, ex0) = &examples[0];
+    parked.send_raw(&request_line(*id0, t0, ex0));
+
+    // Give the admission a moment to land in the queue, then overflow it
+    // from a second connection.
+    std::thread::sleep(Duration::from_millis(300));
+    let mut client = Client::connect(&server.addr);
+    let (id1, t1, ex1) = &examples[1];
+    let shed = client.request(&request_line(*id1, t1, ex1));
+    assert_eq!(err_field(&shed, "error"), "queue_full", "reply: {shed:?}");
+    assert_eq!(shed.get("code").and_then(Json::as_usize), Some(503));
+    assert_eq!(shed.get("id").and_then(Json::as_usize), Some(*id1), "id must be echoed");
+
+    let out = server.kill();
+    assert!(
+        out.iter().any(|l| l.contains("FAULT: injected hang at net.engine")),
+        "the engine hang must actually fire:\n{}",
+        out.join("\n")
+    );
+}
