@@ -28,11 +28,14 @@
 //!       p50/p99/p999 latency and end-to-end RPS
 //!
 //! Runs on whatever backend `QRLORA_BACKEND` selects (host by default, so
-//! the bench is hermetic) with the pool sized by `QRLORA_THREADS`, and
-//! writes one snapshot of every entry — including its thread count — to
+//! the bench is hermetic) with the pool sized by `QRLORA_THREADS` and the
+//! host kernel backend by `QRLORA_SIMD`, and writes one snapshot of every
+//! entry — including its thread count and kernel backend (`simd`) — to
 //! `BENCH_<backend>.json`; the cross-commit trajectory lives in committed
 //! snapshots / the CI artifact, not in the file itself (each run rewrites
-//! it).
+//! it). Kernel-backend twins (`[t=1, scalar]` / `[t=1, relaxed]`) bracket
+//! the default single-thread matmul and qmatmul rows so the SIMD win is
+//! measured in the snapshot itself.
 //!
 //! Baseline comparison: `cargo bench --bench bench_main -- --compare
 //! BENCH_host.json [--threshold 20] [--strict]` diffs this run's means
@@ -47,6 +50,7 @@ use std::time::Instant;
 
 use qrlora::adapters::{factorize, Proj, Scope};
 use qrlora::data::{task, Batcher, Lexicon, TaskData};
+use qrlora::kernels::{self, Kernels};
 use qrlora::linalg::RankRule;
 use qrlora::quant::{self, QuantTensor};
 use qrlora::runtime::{create_backend, Backend, BackendChoice, Buffer, DType, HostBackend};
@@ -62,6 +66,8 @@ use qrlora::util::rng::Rng;
 struct Entry {
     name: String,
     threads: usize,
+    /// Kernel backend active when the entry ran (`kernels::Kernels::describe`).
+    simd: &'static str,
     stats: Stats,
     iters: usize,
 }
@@ -85,6 +91,10 @@ impl Recorder {
         iters: usize,
         mut f: F,
     ) {
+        // Captured before the timing loop: the thread-local kernel override
+        // (`kernels::with_kernels`) set by the caller is what the benched
+        // closure resolves at each call.
+        let simd = kernels::active().describe();
         let stats = pool::with_threads(threads, || {
             for _ in 0..warmup {
                 f();
@@ -104,7 +114,7 @@ impl Recorder {
             stats.min,
             stats.max
         );
-        self.entries.push(Entry { name: name.to_string(), threads, stats, iters });
+        self.entries.push(Entry { name: name.to_string(), threads, simd, stats, iters });
     }
 
     fn write(&self, backend: &str, threads: usize) -> anyhow::Result<()> {
@@ -115,6 +125,7 @@ impl Recorder {
                 Json::obj(vec![
                     ("name", Json::str(e.name.clone())),
                     ("threads", Json::num(e.threads as f64)),
+                    ("simd", Json::str(e.simd)),
                     ("mean_ms", Json::num(e.stats.mean())),
                     ("std_ms", Json::num(e.stats.std())),
                     ("min_ms", Json::num(e.stats.min)),
@@ -126,6 +137,7 @@ impl Recorder {
         let doc = Json::obj(vec![
             ("backend", Json::str(backend)),
             ("threads", Json::num(threads as f64)),
+            ("simd", Json::str(kernels::active().describe())),
             ("entries", Json::Arr(rows)),
         ]);
         let path = format!("BENCH_{backend}.json");
@@ -228,7 +240,8 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(&raw, &["strict", "bench"])?;
 
     let tmax = pool::threads();
-    println!("qrlora bench harness — all times per call (default threads={tmax})\n");
+    println!("qrlora bench harness — all times per call (default threads={tmax})");
+    println!("simd kernels: {}\n", kernels::active().describe());
     let mut rec = Recorder::new();
 
     // ---- P0: host matmul kernels --------------------------------------
@@ -275,23 +288,45 @@ fn main() -> anyhow::Result<()> {
         rec.bench("t_matmul zero-skip 87%-sparse rows [t=1]", 1, 2, 10, || {
             std::hint::black_box(sparse.t_matmul(&c).data[0]);
         });
+        // Kernel-backend twins for the single-thread matmul_t row above:
+        // forced-scalar (the pre-SIMD reference) and relaxed (wide-FMA
+        // dots). default-vs-scalar is the strict SIMD win; relaxed prices
+        // the f32-associativity opt-in on top.
+        kernels::with_kernels(Kernels::scalar(), || {
+            rec.bench("matmul_t 256x128 @ t(256x128) [t=1, scalar]", 1, 2, 10, || {
+                std::hint::black_box(a.matmul_t(&b).data[0]);
+            });
+        });
+        kernels::with_kernels(Kernels::detected(true), || {
+            rec.bench("matmul_t 256x128 @ t(256x128) [t=1, relaxed]", 1, 2, 10, || {
+                std::hint::black_box(a.matmul_t(&b).data[0]);
+            });
+        });
     }
     // Int8 fused kernels vs the f32 `matmul 256x256x256` pair above: the
-    // forward product (`matmul_qt`, dequant after each dot) and the
-    // backward product (`matmul_q`, scaled int8 row axpys).
+    // forward product (`matmul_xw_q` — SIMD backends quantize each
+    // activation row once and accumulate i8×i8 products in i32 lanes, one
+    // scale multiply per group; the scalar backend dequantizes per dot)
+    // and the backward product (`matmul_dyw_t_q`, scaled int8 row axpys).
+    // The `[t=1, scalar]` twin is the integer path's f32-dequant baseline.
     {
         let n = 256usize;
         let a = Tensor::randn(&[n, n], &mut rng, 1.0);
         let w = Tensor::randn(&[n, n], &mut rng, 1.0);
         let wq = QuantTensor::quantize(&w.t(), quant::QUANT_GROUP_ROWS);
         rec.bench("qmatmul int8 256x256x256", tmax, 2, 10, || {
-            std::hint::black_box(quant::matmul_qt(&a, &wq).data[0]);
+            std::hint::black_box(quant::matmul_xw_q(&a, &wq).data[0]);
         });
         rec.bench("qmatmul int8 256x256x256 [t=1]", 1, 2, 10, || {
-            std::hint::black_box(quant::matmul_qt(&a, &wq).data[0]);
+            std::hint::black_box(quant::matmul_xw_q(&a, &wq).data[0]);
+        });
+        kernels::with_kernels(Kernels::scalar(), || {
+            rec.bench("qmatmul int8 256x256x256 [t=1, scalar]", 1, 2, 10, || {
+                std::hint::black_box(quant::matmul_xw_q(&a, &wq).data[0]);
+            });
         });
         rec.bench("qmatmul_bwd int8 256x256x256 [t=1]", 1, 2, 10, || {
-            std::hint::black_box(quant::matmul_q(&a, &wq).data[0]);
+            std::hint::black_box(quant::matmul_dyw_t_q(&a, &wq).data[0]);
         });
     }
 
@@ -666,7 +701,13 @@ fn main() -> anyhow::Result<()> {
             println!("{name:<52} {wall_ms:>9.3} ms  ({rps:.1} req/s aggregate)");
             let mut stats = Stats::new();
             stats.push(wall_ms);
-            rec.entries.push(Entry { name, threads: tmax, stats, iters: 1 });
+            rec.entries.push(Entry {
+                name,
+                threads: tmax,
+                simd: kernels::active().describe(),
+                stats,
+                iters: 1,
+            });
         }
 
         // Degraded twin: the same 2-worker fleet with an injected crash
@@ -708,7 +749,13 @@ fn main() -> anyhow::Result<()> {
             println!("{name:<52} {wall_ms:>9.3} ms  ({rps:.1} req/s aggregate)");
             let mut stats = Stats::new();
             stats.push(wall_ms);
-            rec.entries.push(Entry { name, threads: tmax, stats, iters: 1 });
+            rec.entries.push(Entry {
+                name,
+                threads: tmax,
+                simd: kernels::active().describe(),
+                stats,
+                iters: 1,
+            });
         }
 
         // ---- P9: socket serving — soak latency over real TCP -----------
@@ -773,7 +820,13 @@ fn main() -> anyhow::Result<()> {
                 println!("{name:<52} {ms:>9.3} ms  ({rps:.1} req/s end-to-end)");
                 let mut stats = Stats::new();
                 stats.push(ms);
-                rec.entries.push(Entry { name, threads: tmax, stats, iters: 1 });
+                rec.entries.push(Entry {
+                name,
+                threads: tmax,
+                simd: kernels::active().describe(),
+                stats,
+                iters: 1,
+            });
             }
         }
     }

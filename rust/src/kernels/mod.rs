@@ -1,0 +1,874 @@
+//! Unified CPU microkernel dispatch: one [`Kernels`] surface over scalar,
+//! AVX2, and NEON implementations of every hot inner loop (dense/int8
+//! matmul products, LayerNorm, GELU, softmax, axpy).
+//!
+//! # Layering
+//!
+//! This module is a **leaf**: it sees only raw slices and row counts,
+//! never `Tensor`/`QuantTensor` or the worker pool. The callers
+//! (`tensor.rs`, `quant.rs`, `model/host.rs`) keep the pool orchestration
+//! and hand each worker's contiguous row chunk to one `Kernels` method.
+//! Callers must resolve [`active`] **once, outside the pool closure**, and
+//! let the closure capture the `Copy` handle — pool workers do not inherit
+//! the caller's thread-local [`with_kernels`] override.
+//!
+//! # Backend selection
+//!
+//! `--simd auto|avx2|neon|scalar` (CLI) or `QRLORA_SIMD` (env) pick the
+//! backend; `auto` (the default) uses runtime feature detection, cached
+//! once per process ([`detect`]). Forcing a backend the CPU lacks warns
+//! and falls back to scalar — it never executes an illegal instruction.
+//! Tests and benches can override per thread with [`with_kernels`].
+//!
+//! # Determinism contract
+//!
+//! In the default (strict) mode every method is **bit-identical** across
+//! backends *and* thread counts: SIMD lanes reproduce the scalar
+//! reference's accumulator chains exactly (no FMA, no re-association, no
+//! lane-count change; see `kernels::scalar` for the reference loops), and
+//! transcendentals (`tanh`, `exp`, `sqrt`) always run as scalar libm
+//! calls. One documented exception: [`Kernels::matmul_xw_q`] on a SIMD
+//! backend quantizes the activation row once and accumulates i8×i8
+//! products in i32 lanes — exact integer arithmetic (identical across
+//! AVX2 and NEON, and per-thread deterministic) but a different
+//! *quantization* of the product than the scalar fused-dequant reference,
+//! so its f32 results differ from `QRLORA_SIMD=scalar` within the
+//! documented activation-quantization bound (see the method docs).
+//!
+//! The opt-in **relaxed** mode (`--simd-relaxed` / `QRLORA_SIMD_RELAXED`)
+//! lets dot-product reductions use wide multi-accumulator FMA chains:
+//! ≤1e-5 relative error against strict mode (property-tested in
+//! `rust/tests/kernels.rs`), still per-thread deterministic, but
+//! backend-specific bits.
+
+mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// `sqrt(2/π)` — the tanh-GELU inner coefficient (moved from
+/// `model/host.rs`; the kernels own the GELU loops now).
+const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+
+/// Matrix shapes `(m, k, n)` shared by the kernel parity suite
+/// (`rust/tests/kernels.rs`) and the pool determinism suite
+/// (`rust/tests/pool_determinism.rs`), so the thread-count and simd-mode
+/// matrices compose over the same tall/wide/square/ragged cases. Sizes
+/// straddle the pool's serial cutoff.
+pub const PARITY_SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (3, 257, 5),
+    (64, 64, 64),
+    (130, 67, 33),
+    (5, 8, 512),
+    (256, 31, 7),
+    (97, 128, 130),
+];
+
+/// A concrete SIMD instruction set a [`Kernels`] handle dispatches to.
+///
+/// All variants exist on every architecture (so CLI parsing and tests
+/// compile everywhere); [`backend_available`] says which ones this CPU can
+/// actually run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// The portable reference loops (`kernels::scalar`) — always available
+    /// and the bit-level ground truth for strict mode.
+    Scalar,
+    /// x86-64 AVX2 (+FMA for relaxed mode).
+    Avx2,
+    /// AArch64 NEON.
+    Neon,
+}
+
+impl SimdBackend {
+    /// Lowercase name, matching the `--simd` spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+}
+
+/// A parsed `--simd` / `QRLORA_SIMD` request (before availability
+/// resolution).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdRequest {
+    /// Use the best backend the CPU supports (the default).
+    Auto,
+    /// Force the scalar reference loops.
+    Scalar,
+    /// Request AVX2 (falls back to scalar, with a warning, if absent).
+    Avx2,
+    /// Request NEON (falls back to scalar, with a warning, if absent).
+    Neon,
+}
+
+impl SimdRequest {
+    /// Parse a `--simd` / `QRLORA_SIMD` value. The CLI calls this eagerly
+    /// so a typo fails fast instead of silently serving on the wrong
+    /// kernels.
+    pub fn parse(s: &str) -> anyhow::Result<SimdRequest> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => Ok(SimdRequest::Auto),
+            "scalar" => Ok(SimdRequest::Scalar),
+            "avx2" => Ok(SimdRequest::Avx2),
+            "neon" => Ok(SimdRequest::Neon),
+            other => {
+                anyhow::bail!("unknown simd backend {other:?} (expected auto|avx2|neon|scalar)")
+            }
+        }
+    }
+}
+
+/// Best SIMD backend this CPU supports, detected once per process and
+/// cached. AVX2 additionally requires FMA (relaxed mode uses it, and
+/// every AVX2-era core has both); NEON is mandatory on aarch64.
+pub fn detect() -> SimdBackend {
+    static DETECTED: OnceLock<SimdBackend> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return SimdBackend::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return SimdBackend::Neon;
+            }
+        }
+        SimdBackend::Scalar
+    })
+}
+
+/// Whether this CPU can run `b` (scalar always can; at most one SIMD
+/// backend exists per architecture, so this is `detect() == b` otherwise).
+pub fn backend_available(b: SimdBackend) -> bool {
+    b == SimdBackend::Scalar || detect() == b
+}
+
+fn resolve(req: SimdRequest) -> SimdBackend {
+    let want = match req {
+        SimdRequest::Auto => return detect(),
+        SimdRequest::Scalar => return SimdBackend::Scalar,
+        SimdRequest::Avx2 => SimdBackend::Avx2,
+        SimdRequest::Neon => SimdBackend::Neon,
+    };
+    if backend_available(want) {
+        want
+    } else {
+        crate::warnln!(
+            "kernels: {} not available on this cpu; falling back to scalar",
+            want.name()
+        );
+        SimdBackend::Scalar
+    }
+}
+
+fn from_env() -> Kernels {
+    let req = match std::env::var("QRLORA_SIMD") {
+        Ok(v) => match SimdRequest::parse(&v) {
+            Ok(r) => r,
+            Err(e) => {
+                crate::warnln!("kernels: ignoring QRLORA_SIMD: {e}");
+                SimdRequest::Auto
+            }
+        },
+        Err(_) => SimdRequest::Auto,
+    };
+    // Same truthiness convention as QRLORA_QUANT (`quant_backbone_from_env`).
+    let relaxed = match std::env::var("QRLORA_SIMD_RELAXED") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            !matches!(v.as_str(), "" | "0" | "false" | "off" | "no")
+        }
+        Err(_) => false,
+    };
+    Kernels { backend: resolve(req), relaxed }
+}
+
+thread_local! {
+    static OVERRIDE: Cell<Option<Kernels>> = const { Cell::new(None) };
+}
+
+/// The process-wide kernel selection (`QRLORA_SIMD` / `--simd`, resolved
+/// and cached on first use), unless the current thread is inside a
+/// [`with_kernels`] override. Callers on the pool's hot paths resolve
+/// this once per operation, before dispatching work to pool threads.
+pub fn active() -> Kernels {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(|| {
+        static ENV: OnceLock<Kernels> = OnceLock::new();
+        *ENV.get_or_init(from_env)
+    })
+}
+
+/// Run `f` with [`active`] forced to `k` on this thread (tests/benches).
+/// Mirrors `pool::with_threads`: the override nests and restores on exit.
+/// It is thread-local on purpose — operations capture the handle before
+/// fanning out to pool workers, so the override still governs them.
+pub fn with_kernels<T>(k: Kernels, f: impl FnOnce() -> T) -> T {
+    let prev = OVERRIDE.with(|o| o.replace(Some(k)));
+    let out = f();
+    OVERRIDE.with(|o| o.set(prev));
+    out
+}
+
+/// Dispatch an expression to the active backend. The cfg-gated arms are
+/// stripped on foreign architectures, where the catch-all routes any
+/// (unreachable) SIMD variant to the scalar reference.
+macro_rules! dispatch {
+    ($self:ident, $scalar:expr, $x86:expr, $neon:expr) => {
+        match $self.backend {
+            #[cfg(target_arch = "x86_64")]
+            SimdBackend::Avx2 => unsafe { $x86 },
+            #[cfg(target_arch = "aarch64")]
+            SimdBackend::Neon => unsafe { $neon },
+            _ => $scalar,
+        }
+    };
+}
+
+/// A resolved kernel selection: one backend plus the strict/relaxed mode
+/// bit. `Copy`, so pool closures capture it by value.
+///
+/// Construct via [`active`] (the process selection), [`Kernels::scalar`]
+/// (the reference), [`Kernels::detected`] (best available), or
+/// [`Kernels::new`]. See the module docs for the determinism contract
+/// every method follows; per-method docs state shapes and layouts.
+///
+/// All matrix arguments are dense row-major slices. "Row chunk" methods
+/// take the caller's contiguous span of output rows (`out.len()` must be
+/// a multiple of the row width) plus the matching span of input rows —
+/// exactly how `util::pool::par_rows` partitions work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kernels {
+    backend: SimdBackend,
+    relaxed: bool,
+}
+
+impl Kernels {
+    /// The scalar reference in strict mode — bit-level ground truth.
+    pub fn scalar() -> Kernels {
+        Kernels { backend: SimdBackend::Scalar, relaxed: false }
+    }
+
+    /// The best backend this CPU supports, in the given mode.
+    pub fn detected(relaxed: bool) -> Kernels {
+        Kernels { backend: detect(), relaxed }
+    }
+
+    /// A specific backend/mode; falls back to scalar (like the env path,
+    /// but silently — callers wanting the warning go through the env) if
+    /// the CPU cannot run `backend`.
+    pub fn new(backend: SimdBackend, relaxed: bool) -> Kernels {
+        let backend = if backend_available(backend) { backend } else { SimdBackend::Scalar };
+        Kernels { backend, relaxed }
+    }
+
+    /// The backend this handle dispatches to.
+    pub fn backend(&self) -> SimdBackend {
+        self.backend
+    }
+
+    /// Whether the relaxed (re-associated FMA) mode is on. A no-op on the
+    /// scalar backend.
+    pub fn relaxed(&self) -> bool {
+        self.relaxed
+    }
+
+    /// Human-readable selection for startup banners (`bench`, `serve`,
+    /// `info`).
+    pub fn describe(&self) -> &'static str {
+        match (self.backend, self.relaxed) {
+            (SimdBackend::Scalar, false) => "scalar",
+            (SimdBackend::Scalar, true) => "scalar (relaxed is a no-op)",
+            (SimdBackend::Avx2, false) => "avx2",
+            (SimdBackend::Avx2, true) => "avx2+relaxed",
+            (SimdBackend::Neon, false) => "neon",
+            (SimdBackend::Neon, true) => "neon+relaxed",
+        }
+    }
+
+    // ---- dot-product primitives ---------------------------------------
+
+    /// Dot product of two equal-length slices in the reference
+    /// 4-accumulator order. Strict mode: bit-identical across backends.
+    /// Relaxed mode: wide FMA accumulators, ≤1e-5 relative error.
+    #[inline]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        if self.relaxed {
+            return dispatch!(
+                self,
+                scalar::dot(a, b),
+                x86::dot_relaxed(a, b),
+                neon::dot_relaxed(a, b)
+            );
+        }
+        dispatch!(self, scalar::dot(a, b), x86::dot(a, b), neon::dot(a, b))
+    }
+
+    /// Four dot products sharing the left operand:
+    /// `[dot(a,b0), …, dot(a,b3)]`, each bit-identical to [`Kernels::dot`]
+    /// in strict mode (the column-blocked matmul building block).
+    #[inline]
+    pub fn dot4(&self, a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+        if self.relaxed {
+            return [self.dot(a, b0), self.dot(a, b1), self.dot(a, b2), self.dot(a, b3)];
+        }
+        dispatch!(
+            self,
+            scalar::dot4(a, b0, b1, b2, b3),
+            x86::dot4(a, b0, b1, b2, b3),
+            neon::dot4(a, b0, b1, b2, b3)
+        )
+    }
+
+    /// Dot product in plain sequential single-accumulator order — the
+    /// attention score/probability contraction. Strict mode runs the
+    /// scalar loop on every backend (a vector reduction cannot reproduce a
+    /// sequential chain); relaxed mode uses the wide FMA reduction.
+    #[inline]
+    pub fn dot_seq(&self, a: &[f32], b: &[f32]) -> f32 {
+        if self.relaxed {
+            return dispatch!(
+                self,
+                scalar::dot_seq(a, b),
+                x86::dot_relaxed(a, b),
+                neon::dot_relaxed(a, b)
+            );
+        }
+        scalar::dot_seq(a, b)
+    }
+
+    // ---- elementwise primitives (exact in every mode) -----------------
+
+    /// `y += alpha · x`. Exact in every mode (independent lanes, separate
+    /// mul/add) — gradient/context row accumulation.
+    #[inline]
+    pub fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        dispatch!(self, scalar::axpy(alpha, x, y), x86::axpy(alpha, x, y), neon::axpy(alpha, x, y))
+    }
+
+    /// `y += c · q` with an exact in-register i8→f32 convert — the int8
+    /// backward axpy and embedding-row accumulate. Exact in every mode.
+    #[inline]
+    pub fn axpy_i8(&self, c: f32, q: &[i8], y: &mut [f32]) {
+        dispatch!(self, scalar::axpy_i8(c, q, y), x86::axpy_i8(c, q, y), neon::axpy_i8(c, q, y))
+    }
+
+    /// `y = s · q` (dequantize one int8 row into f32). Exact in every mode.
+    #[inline]
+    pub fn scale_i8(&self, s: f32, q: &[i8], y: &mut [f32]) {
+        dispatch!(self, scalar::scale_i8(s, q, y), x86::scale_i8(s, q, y), neon::scale_i8(s, q, y))
+    }
+
+    /// `y += x` elementwise (bias rows, residual adds, column sums). Exact
+    /// in every mode.
+    #[inline]
+    pub fn vadd(&self, x: &[f32], y: &mut [f32]) {
+        dispatch!(self, scalar::vadd(x, y), x86::vadd(x, y), neon::vadd(x, y))
+    }
+
+    /// `y *= x` elementwise (column scaling). Exact in every mode.
+    #[inline]
+    pub fn vmul(&self, x: &[f32], y: &mut [f32]) {
+        dispatch!(self, scalar::vmul(x, y), x86::vmul(x, y), neon::vmul(x, y))
+    }
+
+    /// `acc += a ⊙ b` elementwise — per-column independent accumulators
+    /// (LayerNorm dγ, λ gradients). Exact in every mode.
+    #[inline]
+    pub fn vmuladd(&self, a: &[f32], b: &[f32], acc: &mut [f32]) {
+        dispatch!(
+            self,
+            scalar::vmuladd(a, b, acc),
+            x86::vmuladd(a, b, acc),
+            neon::vmuladd(a, b, acc)
+        )
+    }
+
+    // ---- f32 matmul row drivers ---------------------------------------
+
+    /// One row chunk of `A (m×k) @ Bᵀ` with `B` stored `(n×k)`:
+    /// `out[r,j] = dot(a_rows[r,:], b[j,:])`. `a_rows` holds the chunk's
+    /// rows of `A` (`out.len()/n` of them, row-major, width `k`); `b` is
+    /// the full `(n×k)` operand. Keeps the reference kernel's column
+    /// blocking; every output element is one [`Kernels::dot`] /
+    /// [`Kernels::dot4`] of the same two slices regardless of chunking, so
+    /// strict mode is bit-identical across backends and partitions.
+    pub fn matmul_xw_t(&self, a_rows: &[f32], b: &[f32], k: usize, n: usize, out: &mut [f32]) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        debug_assert_eq!(rows * n, out.len());
+        debug_assert_eq!(rows * k, a_rows.len());
+        const BLOCK_N: usize = 64;
+        for j0 in (0..n).step_by(BLOCK_N) {
+            let j1 = (j0 + BLOCK_N).min(n);
+            for r in 0..rows {
+                let arow = &a_rows[r * k..(r + 1) * k];
+                let orow = &mut out[r * n..(r + 1) * n];
+                let mut j = j0;
+                while j + 4 <= j1 {
+                    let d4 = self.dot4(
+                        arow,
+                        &b[j * k..(j + 1) * k],
+                        &b[(j + 1) * k..(j + 2) * k],
+                        &b[(j + 2) * k..(j + 3) * k],
+                        &b[(j + 3) * k..(j + 4) * k],
+                    );
+                    orow[j..j + 4].copy_from_slice(&d4);
+                    j += 4;
+                }
+                while j < j1 {
+                    orow[j] = self.dot(arow, &b[j * k..(j + 1) * k]);
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// One row chunk of `Aᵀ (k×m) @ B (m×n)` (the gradient contraction
+    /// `xᵀ·dy`) as a sum of scaled row axpys. `a`/`b` are the full `(m×k)`
+    /// / `(m×n)` operands; the chunk covers output rows
+    /// `[i0, i0 + out.len()/n)`. Accumulation over `m` runs in the serial
+    /// order with the reference's `a == 0.0` skip (zeroed gradient rows
+    /// skip the whole axpy), and the axpy itself is exact in every mode —
+    /// so this method is bit-identical across backends in *both* modes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_xt_y(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        i0: usize,
+        out: &mut [f32],
+    ) {
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(out.len() % n, 0);
+        for mm in 0..m {
+            let arow = &a[mm * k..(mm + 1) * k];
+            let brow = &b[mm * n..(mm + 1) * n];
+            for (ii, orow) in out.chunks_mut(n).enumerate() {
+                let alpha = arow[i0 + ii];
+                if alpha == 0.0 {
+                    continue;
+                }
+                self.axpy(alpha, brow, orow);
+            }
+        }
+    }
+
+    // ---- int8 matmul row drivers --------------------------------------
+
+    /// One row chunk of the forward int8 product `x (m×k) @ W` with the
+    /// weight stored transposed int8 `(n×k)` (`wq` values, `scales` one
+    /// f32 per `group_rows` rows): `out[r,j] ≈ Σ_e x[r,e]·scale(j)·q[j,e]`.
+    ///
+    /// Backend contract — **the one strict-mode exception**:
+    /// * scalar: the fused-dequant reference (`Σ x·(q as f32)`, scaled
+    ///   once after the 4-accumulator reduction) — bit-identical to the
+    ///   pre-kernels implementation;
+    /// * AVX2/NEON (strict *and* relaxed): quantizes each activation row
+    ///   once (symmetric absmax, the same rounding as
+    ///   `QuantTensor::quantize`), then accumulates i8×i8 products in i32
+    ///   lanes and applies `sx·scale(j)` once per output. Integer
+    ///   accumulation is exact, so the result is identical across AVX2 and
+    ///   NEON and bit-stable for any thread count/partition — but it
+    ///   differs from the scalar reference by the activation-quantization
+    ///   error, bounded per element by `0.5·sx·scale(j)·Σ_e|q[j,e]|` plus
+    ///   f32 rounding (property-tested in `rust/tests/kernels.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_xw_q(
+        &self,
+        x_rows: &[f32],
+        k: usize,
+        wq: &[i8],
+        scales: &[f32],
+        group_rows: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        if n == 0 {
+            return;
+        }
+        let rows = out.len() / n;
+        debug_assert_eq!(rows * n, out.len());
+        debug_assert_eq!(rows * k, x_rows.len());
+        let g = group_rows.max(1);
+        const BLOCK_N: usize = 64;
+        if self.backend == SimdBackend::Scalar {
+            // Fused-dequant reference (pre-kernels bits).
+            for j0 in (0..n).step_by(BLOCK_N) {
+                let j1 = (j0 + BLOCK_N).min(n);
+                for r in 0..rows {
+                    let xrow = &x_rows[r * k..(r + 1) * k];
+                    let orow = &mut out[r * n..(r + 1) * n];
+                    for j in j0..j1 {
+                        orow[j] = scales[j / g] * scalar::dot_i8(xrow, &wq[j * k..(j + 1) * k]);
+                    }
+                }
+            }
+            return;
+        }
+        // Integer path: quantize each activation row once, then i8×i8→i32.
+        let mut qx = vec![0i8; rows * k];
+        let mut sx = vec![0f32; rows];
+        for r in 0..rows {
+            sx[r] = scalar::quantize_row(&x_rows[r * k..(r + 1) * k], &mut qx[r * k..(r + 1) * k]);
+        }
+        for j0 in (0..n).step_by(BLOCK_N) {
+            let j1 = (j0 + BLOCK_N).min(n);
+            for r in 0..rows {
+                let qxr = &qx[r * k..(r + 1) * k];
+                let orow = &mut out[r * n..(r + 1) * n];
+                for j in j0..j1 {
+                    let isum = self.dot_i8i8(qxr, &wq[j * k..(j + 1) * k]);
+                    orow[j] = (sx[r] * scales[j / g]) * isum as f32;
+                }
+            }
+        }
+    }
+
+    /// One row chunk of the backward int8 product `dy (m×n) @ W-stored`
+    /// with the weight stored transposed int8 `(n×k)`, i.e. `dy·Wᵀ →
+    /// (m×k)`, as scaled int8 row axpys:
+    /// `out[r,:] += (dy[r,j]·scale(j)) · q[j,:]`. `dy_rows` holds the
+    /// chunk's rows of `dy` (width `n`); `out` the matching rows (width
+    /// `kk`). Keeps the reference's `c == 0.0` skip, and the int8 axpy is
+    /// exact in every mode — bit-identical across backends in both modes
+    /// (gradients stay f32-faithful; only the forward product quantizes
+    /// activations).
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_dyw_t_q(
+        &self,
+        dy_rows: &[f32],
+        n: usize,
+        wq: &[i8],
+        scales: &[f32],
+        group_rows: usize,
+        kk: usize,
+        out: &mut [f32],
+    ) {
+        if kk == 0 {
+            return;
+        }
+        debug_assert_eq!(out.len() % kk, 0);
+        let g = group_rows.max(1);
+        for (r, orow) in out.chunks_mut(kk).enumerate() {
+            let dyr = &dy_rows[r * n..(r + 1) * n];
+            for j in 0..n {
+                let c = dyr[j] * scales[j / g];
+                if c == 0.0 {
+                    continue;
+                }
+                self.axpy_i8(c, &wq[j * kk..(j + 1) * kk], orow);
+            }
+        }
+    }
+
+    #[inline]
+    fn dot_i8i8(&self, a: &[i8], b: &[i8]) -> i32 {
+        dispatch!(self, scalar::dot_i8i8(a, b), x86::dot_i8i8(a, b), neon::dot_i8i8(a, b))
+    }
+
+    // ---- LayerNorm row drivers ----------------------------------------
+
+    /// LayerNorm forward for a chunk of rows of width `d`: per row,
+    /// `xhat = (x-μ)·rstd`, `y = xhat·g + b`, writing `y`/`xhat` (both
+    /// `rows·d`) and `rstd` (one per row). The μ/σ² reductions run as the
+    /// reference's sequential scalar sums in **every** mode (they are
+    /// O(d) and feed `sqrt`); only the normalize/affine writes vectorize,
+    /// exactly — so this method is bit-identical across backends in both
+    /// modes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn ln_fwd_rows(
+        &self,
+        x_rows: &[f32],
+        d: usize,
+        g: &[f32],
+        b: &[f32],
+        y: &mut [f32],
+        xhat: &mut [f32],
+        rstd: &mut [f32],
+    ) {
+        for (ri, rs_out) in rstd.iter_mut().enumerate() {
+            let xi = &x_rows[ri * d..(ri + 1) * d];
+            let mu = xi.iter().sum::<f32>() / d as f32;
+            let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            let rs = 1.0 / (var + 1e-5).sqrt();
+            *rs_out = rs;
+            let lo = ri * d;
+            self.ln_norm_row(xi, mu, rs, g, b, &mut y[lo..lo + d], &mut xhat[lo..lo + d]);
+        }
+    }
+
+    /// LayerNorm backward dx for a chunk of rows: per row, the two moment
+    /// reductions (`m1 = mean(dy·g)`, `m2 = mean(dy·g·xhat)`) run as the
+    /// reference's sequential scalar sums in every mode; the dx write
+    /// `rstd·(dy·g − m1 − xhat·m2)` vectorizes exactly. Bit-identical
+    /// across backends in both modes. (dγ/dβ accumulate separately via
+    /// [`Kernels::vmuladd`]/[`Kernels::vadd`] under the pool's fixed-chunk
+    /// reduction.)
+    #[allow(clippy::too_many_arguments)]
+    pub fn ln_bwd_dx_rows(
+        &self,
+        dy_rows: &[f32],
+        xhat_rows: &[f32],
+        rstd_rows: &[f32],
+        g: &[f32],
+        d: usize,
+        dx: &mut [f32],
+    ) {
+        for (ri, dxrow) in dx.chunks_mut(d).enumerate() {
+            let dyr = &dy_rows[ri * d..(ri + 1) * d];
+            let xh = &xhat_rows[ri * d..(ri + 1) * d];
+            let mut m1 = 0f32;
+            let mut m2 = 0f32;
+            for j in 0..d {
+                let dxh = dyr[j] * g[j];
+                m1 += dxh;
+                m2 += dxh * xh[j];
+            }
+            m1 /= d as f32;
+            m2 /= d as f32;
+            self.ln_dx_row(dyr, xh, g, m1, m2, rstd_rows[ri], dxrow);
+        }
+    }
+
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn ln_norm_row(
+        &self,
+        xi: &[f32],
+        mu: f32,
+        rs: f32,
+        g: &[f32],
+        b: &[f32],
+        y: &mut [f32],
+        xhat: &mut [f32],
+    ) {
+        dispatch!(
+            self,
+            scalar::ln_norm_row(xi, mu, rs, g, b, y, xhat),
+            x86::ln_norm_row(xi, mu, rs, g, b, y, xhat),
+            neon::ln_norm_row(xi, mu, rs, g, b, y, xhat)
+        )
+    }
+
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn ln_dx_row(
+        &self,
+        dyr: &[f32],
+        xh: &[f32],
+        g: &[f32],
+        m1: f32,
+        m2: f32,
+        rstd: f32,
+        dx: &mut [f32],
+    ) {
+        dispatch!(
+            self,
+            scalar::ln_dx_row(dyr, xh, g, m1, m2, rstd, dx),
+            x86::ln_dx_row(dyr, xh, g, m1, m2, rstd, dx),
+            neon::ln_dx_row(dyr, xh, g, m1, m2, rstd, dx)
+        )
+    }
+
+    // ---- GELU / softmax (shared transcendental loops) -----------------
+
+    /// Tanh-GELU forward for a chunk of rows of width `cols`, writing the
+    /// activation into `y` and the tanh cache into `t` (both pre-zeroed by
+    /// the caller). `live`, when present, holds one mask value per chunk
+    /// row: rows with mask `0.0` (padded positions) are **skipped** — their
+    /// `y`/`t` stay exactly `0.0` and no `tanh` is spent on them. The
+    /// `tanh` loop itself is the shared scalar reference on every backend
+    /// and in both modes, so live rows are bit-identical everywhere.
+    pub fn gelu_fwd_rows(
+        &self,
+        x_rows: &[f32],
+        cols: usize,
+        live: Option<&[f32]>,
+        y: &mut [f32],
+        t: &mut [f32],
+    ) {
+        if cols == 0 {
+            return;
+        }
+        let rows = y.len() / cols;
+        debug_assert_eq!(rows * cols, y.len());
+        for r in 0..rows {
+            if let Some(mask) = live {
+                if mask[r] == 0.0 {
+                    continue;
+                }
+            }
+            for i in r * cols..(r + 1) * cols {
+                let v = x_rows[i];
+                let inner = SQRT_2_OVER_PI * (v + 0.044715 * v * v * v);
+                let th = inner.tanh();
+                t[i] = th;
+                y[i] = 0.5 * v * (1.0 + th);
+            }
+        }
+    }
+
+    /// Tanh-GELU backward over a flat element span:
+    /// `dx = dy·(½(1+t) + ½·x·(1−t²)·du)` with the cached tanh `t`. Shared
+    /// scalar loop on every backend (bit-identical everywhere).
+    pub fn gelu_bwd(&self, dy: &[f32], x_pre: &[f32], t: &[f32], dx: &mut [f32]) {
+        for (i, o) in dx.iter_mut().enumerate() {
+            let v = x_pre[i];
+            let th = t[i];
+            let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * v * v);
+            *o = dy[i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * du);
+        }
+    }
+
+    /// Row-wise softmax in place over a chunk of rows of width `cols`,
+    /// restricted to the first `valid` columns; columns `[valid, cols)`
+    /// are written `0.0` without spending `exp` on them. Shared scalar
+    /// loop on every backend (bit-identical everywhere).
+    ///
+    /// Bit-compatibility with a full-width softmax holds whenever the
+    /// masked tail was pushed at least ~104 below the live maximum (the
+    /// model adds `NEG_INF = -1e9` to masked logits): `exp` then
+    /// underflows to exactly `+0.0`, contributing nothing to the
+    /// denominator — precisely what the tail skip produces. Pass
+    /// `valid = cols` for the unmasked case.
+    pub fn softmax_rows(&self, data: &mut [f32], cols: usize, valid: usize) {
+        if cols == 0 {
+            return;
+        }
+        let valid = valid.clamp(1, cols);
+        for row in data.chunks_mut(cols) {
+            let (head, tail) = row.split_at_mut(valid);
+            let mut maxv = f32::NEG_INFINITY;
+            for &v in head.iter() {
+                maxv = maxv.max(v);
+            }
+            let mut denom = 0f32;
+            for v in head.iter_mut() {
+                *v = (*v - maxv).exp();
+                denom += *v;
+            }
+            for v in head.iter_mut() {
+                *v /= denom;
+            }
+            for v in tail.iter_mut() {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_spellings() {
+        assert_eq!(SimdRequest::parse("auto").unwrap(), SimdRequest::Auto);
+        assert_eq!(SimdRequest::parse("").unwrap(), SimdRequest::Auto);
+        assert_eq!(SimdRequest::parse(" Scalar ").unwrap(), SimdRequest::Scalar);
+        assert_eq!(SimdRequest::parse("AVX2").unwrap(), SimdRequest::Avx2);
+        assert_eq!(SimdRequest::parse("neon").unwrap(), SimdRequest::Neon);
+        assert!(SimdRequest::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_detect_is_cached() {
+        assert!(backend_available(SimdBackend::Scalar));
+        assert_eq!(detect(), detect());
+        assert!(backend_available(detect()));
+    }
+
+    #[test]
+    fn new_falls_back_to_scalar_when_unavailable() {
+        // At most one SIMD backend exists per arch, so the other one must
+        // fall back (and on plain scalar hosts, both do).
+        for b in [SimdBackend::Avx2, SimdBackend::Neon] {
+            let k = Kernels::new(b, false);
+            if backend_available(b) {
+                assert_eq!(k.backend(), b);
+            } else {
+                assert_eq!(k.backend(), SimdBackend::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn with_kernels_overrides_and_restores() {
+        let outer = active();
+        let forced = Kernels::scalar();
+        with_kernels(forced, || {
+            assert_eq!(active(), forced);
+            let nested = Kernels::detected(true);
+            with_kernels(nested, || assert_eq!(active(), nested));
+            assert_eq!(active(), forced);
+        });
+        assert_eq!(active(), outer);
+    }
+
+    #[test]
+    fn describe_names_backend_and_mode() {
+        assert_eq!(Kernels::scalar().describe(), "scalar");
+        let k = Kernels::detected(false);
+        assert_eq!(k.describe(), k.backend().name());
+    }
+
+    #[test]
+    fn softmax_masked_tail_matches_neg_inf_full_width() {
+        // A masked tail pushed NEG_INF below the live max must produce
+        // exactly what the tail skip writes: +0.0 and an unchanged head.
+        let k = Kernels::scalar();
+        let head = [0.3f32, -1.2, 2.5, 0.0, 1.1];
+        let cols = 8usize;
+        let mut full: Vec<f32> = head.to_vec();
+        full.extend([0.7 - 1e9, -0.2 - 1e9, 0.05 - 1e9]);
+        let mut masked = full.clone();
+        k.softmax_rows(&mut full, cols, cols);
+        k.softmax_rows(&mut masked, cols, head.len());
+        for (i, (a, b)) in full.iter().zip(&masked).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "col {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gelu_mask_skips_rows_exactly() {
+        let k = Kernels::scalar();
+        let cols = 5usize;
+        let x: Vec<f32> = (0..3 * cols).map(|i| (i as f32) * 0.3 - 2.0).collect();
+        let live = [1.0f32, 0.0, 1.0];
+        let mut y = vec![0f32; x.len()];
+        let mut t = vec![0f32; x.len()];
+        k.gelu_fwd_rows(&x, cols, Some(&live), &mut y, &mut t);
+        let mut y_full = vec![0f32; x.len()];
+        let mut t_full = vec![0f32; x.len()];
+        k.gelu_fwd_rows(&x, cols, None, &mut y_full, &mut t_full);
+        for i in 0..x.len() {
+            if i / cols == 1 {
+                assert_eq!(y[i], 0.0, "dead row must stay zero");
+                assert_eq!(t[i], 0.0, "dead row cache must stay zero");
+            } else {
+                assert_eq!(y[i].to_bits(), y_full[i].to_bits(), "live row changed at {i}");
+                assert_eq!(t[i].to_bits(), t_full[i].to_bits(), "live cache changed at {i}");
+            }
+        }
+    }
+}

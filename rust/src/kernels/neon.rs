@@ -1,0 +1,342 @@
+//! AArch64 NEON kernels.
+//!
+//! Mirrors `kernels::x86` at 128 bits: strict-mode functions reproduce the
+//! scalar reference loops bit for bit (the four `float32x4` lanes carry
+//! exactly the four accumulator chains of `scalar::dot`; `vaddq`/`vmulq`
+//! stay separate instructions — `vfmaq` fuses and is only reachable in the
+//! opt-in relaxed mode), and the horizontal reduction keeps the
+//! `(l0+l1)+(l2+l3)` parenthesization. `dot_i8i8` accumulates i8×i8
+//! products exactly in i32 lanes via `vmull_s8` + pairwise-add.
+//!
+//! NEON is mandatory on AArch64, so these functions are always safe to
+//! call on this architecture; they stay `unsafe fn` for pointer-based
+//! loads and API symmetry with the x86 module.
+
+#![cfg(target_arch = "aarch64")]
+
+use std::arch::aarch64::*;
+
+#[inline]
+unsafe fn hsum4(acc: float32x4_t) -> f32 {
+    (vgetq_lane_f32::<0>(acc) + vgetq_lane_f32::<1>(acc))
+        + (vgetq_lane_f32::<2>(acc) + vgetq_lane_f32::<3>(acc))
+}
+
+/// Strict dot product — bit-matches `scalar::dot`.
+///
+/// # Safety
+/// NEON is baseline on aarch64; callers only need valid slices of equal
+/// length (checked by debug assertion).
+pub(crate) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = vld1q_f32(a.as_ptr().add(i));
+        let vb = vld1q_f32(b.as_ptr().add(i));
+        acc = vaddq_f32(acc, vmulq_f32(va, vb));
+    }
+    let mut s = hsum4(acc);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Four strict dots sharing the `a` loads; each output bit-matches
+/// `scalar::dot(a, b_j)`.
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = vld1q_f32(a.as_ptr().add(i));
+        acc0 = vaddq_f32(acc0, vmulq_f32(va, vld1q_f32(b0.as_ptr().add(i))));
+        acc1 = vaddq_f32(acc1, vmulq_f32(va, vld1q_f32(b1.as_ptr().add(i))));
+        acc2 = vaddq_f32(acc2, vmulq_f32(va, vld1q_f32(b2.as_ptr().add(i))));
+        acc3 = vaddq_f32(acc3, vmulq_f32(va, vld1q_f32(b3.as_ptr().add(i))));
+    }
+    let mut out = [hsum4(acc0), hsum4(acc1), hsum4(acc2), hsum4(acc3)];
+    for i in chunks * 4..n {
+        out[0] += a[i] * b0[i];
+        out[1] += a[i] * b1[i];
+        out[2] += a[i] * b2[i];
+        out[3] += a[i] * b3[i];
+    }
+    out
+}
+
+/// Relaxed dot product: four fused-multiply-add accumulators (16 lanes in
+/// flight). Re-associated and fused — only reachable through the opt-in
+/// relaxed mode (≤1e-5 relative-error contract).
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn dot_relaxed(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(a.as_ptr().add(i + 4)), vld1q_f32(b.as_ptr().add(i + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(a.as_ptr().add(i + 8)), vld1q_f32(b.as_ptr().add(i + 8)));
+        acc3 =
+            vfmaq_f32(acc3, vld1q_f32(a.as_ptr().add(i + 12)), vld1q_f32(b.as_ptr().add(i + 12)));
+        i += 16;
+    }
+    let mut acc = vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3));
+    while i + 4 <= n {
+        acc = vfmaq_f32(acc, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+        i += 4;
+    }
+    let mut s = hsum4(acc);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// Integer i8×i8 dot product: 8 products per step via `vmull_s8`
+/// (i8×i8→i16) + `vpadalq_s16` pairwise accumulate into i32 lanes
+/// (exact — integer addition is associative).
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn dot_i8i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let va = vld1_s8(a.as_ptr().add(i));
+        let vb = vld1_s8(b.as_ptr().add(i));
+        acc = vpadalq_s16(acc, vmull_s8(va, vb));
+        i += 8;
+    }
+    let mut s = vaddvq_s32(acc);
+    while i < n {
+        s += (a[i] as i32) * (b[i] as i32);
+        i += 1;
+    }
+    s
+}
+
+/// `y += alpha · x` (exact — independent lanes, separate mul/add).
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let va = vdupq_n_f32(alpha);
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vy = vld1q_f32(y.as_ptr().add(i));
+        let vx = vld1q_f32(x.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(vy, vmulq_f32(va, vx)));
+        i += 4;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+#[inline]
+unsafe fn cvt_i8x8_to_f32(q: *const i8) -> (float32x4_t, float32x4_t) {
+    let q16 = vmovl_s8(vld1_s8(q));
+    (
+        vcvtq_f32_s32(vmovl_s16(vget_low_s16(q16))),
+        vcvtq_f32_s32(vmovl_s16(vget_high_s16(q16))),
+    )
+}
+
+/// `y += c · q` (int8 operand, exact i8→i32→f32 convert per lane).
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn axpy_i8(c: f32, q: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(q.len(), y.len());
+    let n = y.len();
+    let vc = vdupq_n_f32(c);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let (lo, hi) = cvt_i8x8_to_f32(q.as_ptr().add(i));
+        let y0 = vld1q_f32(y.as_ptr().add(i));
+        let y1 = vld1q_f32(y.as_ptr().add(i + 4));
+        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(y0, vmulq_f32(vc, lo)));
+        vst1q_f32(y.as_mut_ptr().add(i + 4), vaddq_f32(y1, vmulq_f32(vc, hi)));
+        i += 8;
+    }
+    while i < n {
+        y[i] += c * q[i] as f32;
+        i += 1;
+    }
+}
+
+/// `y = s · q` (int8 row dequantize, exact per lane).
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn scale_i8(s: f32, q: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(q.len(), y.len());
+    let n = y.len();
+    let vs = vdupq_n_f32(s);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let (lo, hi) = cvt_i8x8_to_f32(q.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vmulq_f32(vs, lo));
+        vst1q_f32(y.as_mut_ptr().add(i + 4), vmulq_f32(vs, hi));
+        i += 8;
+    }
+    while i < n {
+        y[i] = s * q[i] as f32;
+        i += 1;
+    }
+}
+
+/// `y += x` (exact).
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn vadd(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vy = vld1q_f32(y.as_ptr().add(i));
+        let vx = vld1q_f32(x.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(vy, vx));
+        i += 4;
+    }
+    while i < n {
+        y[i] += x[i];
+        i += 1;
+    }
+}
+
+/// `y *= x` (exact).
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn vmul(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vy = vld1q_f32(y.as_ptr().add(i));
+        let vx = vld1q_f32(x.as_ptr().add(i));
+        vst1q_f32(y.as_mut_ptr().add(i), vmulq_f32(vy, vx));
+        i += 4;
+    }
+    while i < n {
+        y[i] *= x[i];
+        i += 1;
+    }
+}
+
+/// `acc += a ⊙ b` (exact — per-column accumulators are independent).
+///
+/// # Safety
+/// As [`dot`].
+pub(crate) unsafe fn vmuladd(a: &[f32], b: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), acc.len());
+    let n = acc.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let vo = vld1q_f32(acc.as_ptr().add(i));
+        let va = vld1q_f32(a.as_ptr().add(i));
+        let vb = vld1q_f32(b.as_ptr().add(i));
+        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(vo, vmulq_f32(va, vb)));
+        i += 4;
+    }
+    while i < n {
+        acc[i] += a[i] * b[i];
+        i += 1;
+    }
+}
+
+/// LayerNorm forward normalize/affine for one row (exact).
+///
+/// # Safety
+/// As [`dot`]. All slices share one length.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn ln_norm_row(
+    xi: &[f32],
+    mu: f32,
+    rs: f32,
+    g: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    xhat: &mut [f32],
+) {
+    let d = xi.len();
+    let vmu = vdupq_n_f32(mu);
+    let vrs = vdupq_n_f32(rs);
+    let mut j = 0usize;
+    while j + 4 <= d {
+        let vx = vld1q_f32(xi.as_ptr().add(j));
+        let vh = vmulq_f32(vsubq_f32(vx, vmu), vrs);
+        vst1q_f32(xhat.as_mut_ptr().add(j), vh);
+        let vg = vld1q_f32(g.as_ptr().add(j));
+        let vb = vld1q_f32(b.as_ptr().add(j));
+        vst1q_f32(y.as_mut_ptr().add(j), vaddq_f32(vmulq_f32(vh, vg), vb));
+        j += 4;
+    }
+    while j < d {
+        let h = (xi[j] - mu) * rs;
+        xhat[j] = h;
+        y[j] = h * g[j] + b[j];
+        j += 1;
+    }
+}
+
+/// LayerNorm backward dx for one row (exact).
+///
+/// # Safety
+/// As [`dot`]. All slices share one length.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn ln_dx_row(
+    dyr: &[f32],
+    xh: &[f32],
+    g: &[f32],
+    m1: f32,
+    m2: f32,
+    rstd: f32,
+    dx: &mut [f32],
+) {
+    let d = dx.len();
+    let vm1 = vdupq_n_f32(m1);
+    let vm2 = vdupq_n_f32(m2);
+    let vrs = vdupq_n_f32(rstd);
+    let mut j = 0usize;
+    while j + 4 <= d {
+        let vdy = vld1q_f32(dyr.as_ptr().add(j));
+        let vg = vld1q_f32(g.as_ptr().add(j));
+        let vxh = vld1q_f32(xh.as_ptr().add(j));
+        let vdxh = vmulq_f32(vdy, vg);
+        let vt = vsubq_f32(vsubq_f32(vdxh, vm1), vmulq_f32(vxh, vm2));
+        vst1q_f32(dx.as_mut_ptr().add(j), vmulq_f32(vrs, vt));
+        j += 4;
+    }
+    while j < d {
+        let dxh = dyr[j] * g[j];
+        dx[j] = rstd * (dxh - m1 - xh[j] * m2);
+        j += 1;
+    }
+}

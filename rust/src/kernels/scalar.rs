@@ -1,0 +1,199 @@
+//! Scalar reference kernels — the exact loops the pre-SIMD code ran.
+//!
+//! Every function here is the bit-level ground truth for the strict
+//! (default) mode: the SIMD backends must reproduce these results bit for
+//! bit (see the module docs in `kernels::` for the one documented
+//! exception, the int8 integer-accumulate forward path), and
+//! `QRLORA_SIMD=scalar` routes every kernel through this module
+//! unchanged. The bodies are verbatim moves of the original inner loops
+//! from `tensor.rs`, `quant.rs`, and `model/host.rs` — do not "clean up"
+//! their accumulation order.
+
+/// Unrolled dot product with four independent accumulators (keeps the FP
+/// dependency chain short enough for the auto-vectorizer). Moved from
+/// `tensor::dot`.
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = [0f32; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Four dot products sharing one left operand: `[dot(a,b0), …, dot(a,b3)]`,
+/// each bit-identical to [`dot`] on the same pair.
+#[inline]
+pub(crate) fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    [dot(a, b0), dot(a, b1), dot(a, b2), dot(a, b3)]
+}
+
+/// Plain sequential single-accumulator dot product — the attention score /
+/// probability contractions in `model/host.rs` accumulate in this order,
+/// which is *not* the 4-accumulator order of [`dot`].
+#[inline]
+pub(crate) fn dot_seq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Unrolled f32×i8 dot product (four independent accumulators, like
+/// [`dot`]); the i8→f32 convert happens in-register, the scale is applied
+/// once by the caller after the reduction. Moved from `quant::dot_i8`.
+#[inline]
+pub(crate) fn dot_i8(a: &[f32], b: &[i8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = [0f32; 4];
+    for ci in 0..chunks {
+        let i = ci * 4;
+        acc[0] += a[i] * b[i] as f32;
+        acc[1] += a[i + 1] * b[i + 1] as f32;
+        acc[2] += a[i + 2] * b[i + 2] as f32;
+        acc[3] += a[i + 3] * b[i + 3] as f32;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..n {
+        s += a[i] * b[i] as f32;
+    }
+    s
+}
+
+/// Integer i8×i8 dot product accumulated in i32 (exact: `|q| ≤ 127`, so
+/// the sum is exact for any `k` up to `2^31 / 127^2 ≈ 133k`).
+#[inline]
+pub(crate) fn dot_i8i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0i32;
+    for (x, y) in a.iter().zip(b) {
+        s += (*x as i32) * (*y as i32);
+    }
+    s
+}
+
+/// Symmetric absmax int8 quantization of one row — the same rounding as
+/// `QuantTensor::quantize` applied to a single group. Returns the scale.
+#[inline]
+pub(crate) fn quantize_row(x: &[f32], q: &mut [i8]) -> f32 {
+    let mut absmax = 0f32;
+    for v in x {
+        absmax = absmax.max(v.abs());
+    }
+    let scale = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    for (dst, &v) in q.iter_mut().zip(x) {
+        *dst = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// `y += alpha · x`, elementwise in the serial order.
+#[inline]
+pub(crate) fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += alpha * v;
+    }
+}
+
+/// `y += c · q` with an in-register i8→f32 convert (exact — every i8
+/// value is representable in f32). Moved from the `quant::matmul_q` inner
+/// loop / `EmbRef::add_row`.
+#[inline]
+pub(crate) fn axpy_i8(c: f32, q: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(q.len(), y.len());
+    for (o, &qv) in y.iter_mut().zip(q) {
+        *o += c * qv as f32;
+    }
+}
+
+/// `y = s · q` (int8 row dequantize into an f32 row; `EmbRef::write_row`).
+#[inline]
+pub(crate) fn scale_i8(s: f32, q: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(q.len(), y.len());
+    for (o, &qv) in y.iter_mut().zip(q) {
+        *o = s * qv as f32;
+    }
+}
+
+/// `y += x` elementwise.
+#[inline]
+pub(crate) fn vadd(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+/// `y *= x` elementwise.
+#[inline]
+pub(crate) fn vmul(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o *= v;
+    }
+}
+
+/// `acc += a ⊙ b` elementwise (per-column independent accumulators — the
+/// LayerNorm dγ and λ-gradient reductions).
+#[inline]
+pub(crate) fn vmuladd(a: &[f32], b: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), acc.len());
+    for ((o, &x), &y) in acc.iter_mut().zip(a).zip(b) {
+        *o += x * y;
+    }
+}
+
+/// LayerNorm forward normalize/affine for one row:
+/// `xhat[j] = (xi[j]-mu)·rs`, `y[j] = xhat[j]·g[j] + b[j]`.
+#[inline]
+pub(crate) fn ln_norm_row(
+    xi: &[f32],
+    mu: f32,
+    rs: f32,
+    g: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    xhat: &mut [f32],
+) {
+    for j in 0..xi.len() {
+        let h = (xi[j] - mu) * rs;
+        xhat[j] = h;
+        y[j] = h * g[j] + b[j];
+    }
+}
+
+/// LayerNorm backward dx for one row:
+/// `dx[j] = rstd · (dy[j]·g[j] − m1 − xhat[j]·m2)`.
+#[inline]
+pub(crate) fn ln_dx_row(
+    dyr: &[f32],
+    xh: &[f32],
+    g: &[f32],
+    m1: f32,
+    m2: f32,
+    rstd: f32,
+    dx: &mut [f32],
+) {
+    for j in 0..dx.len() {
+        let dxh = dyr[j] * g[j];
+        dx[j] = rstd * (dxh - m1 - xh[j] * m2);
+    }
+}

@@ -1,0 +1,380 @@
+//! x86-64 SIMD kernels (SSE2 baseline + AVX2/FMA).
+//!
+//! Strict-mode functions reproduce the scalar reference loops bit for bit:
+//! the 128-bit accumulator lanes carry exactly the four independent
+//! accumulator chains of `scalar::dot`, multiplies and adds stay separate
+//! instructions (never fused), and the horizontal reduction uses the same
+//! `(l0+l1)+(l2+l3)` parenthesization. Elementwise kernels vectorize at
+//! 256 bits — per-lane operation sequences are unchanged, so they are
+//! exact in every mode. Only `dot_relaxed` (wide FMA accumulators, opt-in
+//! `--simd-relaxed`) and `dot_i8i8` (integer accumulation, exact in i32
+//! but a different *quantization* than the scalar fused-dequant path) may
+//! differ from scalar bits.
+//!
+//! Everything here is `unsafe fn`: AVX2/FMA functions are
+//! `#[target_feature]`-gated and must only be called after runtime
+//! detection (`kernels::detect`), which `Kernels` guarantees by
+//! construction.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+#[inline]
+unsafe fn hsum4(acc: __m128) -> f32 {
+    let mut lanes = [0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+    (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+}
+
+/// Strict dot product: lane `j` of the SSE accumulator runs exactly the
+/// scalar chain `acc[j]`, so the result bit-matches `scalar::dot`.
+///
+/// # Safety
+/// SSE2 is baseline on x86-64; callers only need valid slices of equal
+/// length (checked by debug assertion).
+pub(crate) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = _mm_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = _mm_loadu_ps(a.as_ptr().add(i));
+        let vb = _mm_loadu_ps(b.as_ptr().add(i));
+        acc = _mm_add_ps(acc, _mm_mul_ps(va, vb));
+    }
+    let mut s = hsum4(acc);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Four strict dots sharing the `a` loads (the default-mode matmul
+/// speedup: 4x fewer loads of the left row, four independent accumulator
+/// registers in flight). Each output bit-matches `scalar::dot(a, b_j)`.
+///
+/// # Safety
+/// As [`dot`]: baseline SSE2, equal-length slices.
+pub(crate) unsafe fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc0 = _mm_setzero_ps();
+    let mut acc1 = _mm_setzero_ps();
+    let mut acc2 = _mm_setzero_ps();
+    let mut acc3 = _mm_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 4;
+        let va = _mm_loadu_ps(a.as_ptr().add(i));
+        acc0 = _mm_add_ps(acc0, _mm_mul_ps(va, _mm_loadu_ps(b0.as_ptr().add(i))));
+        acc1 = _mm_add_ps(acc1, _mm_mul_ps(va, _mm_loadu_ps(b1.as_ptr().add(i))));
+        acc2 = _mm_add_ps(acc2, _mm_mul_ps(va, _mm_loadu_ps(b2.as_ptr().add(i))));
+        acc3 = _mm_add_ps(acc3, _mm_mul_ps(va, _mm_loadu_ps(b3.as_ptr().add(i))));
+    }
+    let mut out = [hsum4(acc0), hsum4(acc1), hsum4(acc2), hsum4(acc3)];
+    for i in chunks * 4..n {
+        out[0] += a[i] * b0[i];
+        out[1] += a[i] * b1[i];
+        out[2] += a[i] * b2[i];
+        out[3] += a[i] * b3[i];
+    }
+    out
+}
+
+/// Relaxed dot product: four 256-bit FMA accumulators (32 lanes in
+/// flight). Faster but re-associated — only reachable through the opt-in
+/// relaxed mode (`--simd-relaxed`, ≤1e-5 relative-error contract).
+///
+/// # Safety
+/// Requires AVX2+FMA; `Kernels` only dispatches here after runtime
+/// detection confirmed both.
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn dot_relaxed(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 32 <= n {
+        acc0 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(a.as_ptr().add(i)),
+            _mm256_loadu_ps(b.as_ptr().add(i)),
+            acc0,
+        );
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(a.as_ptr().add(i + 8)),
+            _mm256_loadu_ps(b.as_ptr().add(i + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(a.as_ptr().add(i + 16)),
+            _mm256_loadu_ps(b.as_ptr().add(i + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(a.as_ptr().add(i + 24)),
+            _mm256_loadu_ps(b.as_ptr().add(i + 24)),
+            acc3,
+        );
+        i += 32;
+    }
+    let mut acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    while i + 8 <= n {
+        acc = _mm256_fmadd_ps(
+            _mm256_loadu_ps(a.as_ptr().add(i)),
+            _mm256_loadu_ps(b.as_ptr().add(i)),
+            acc,
+        );
+        i += 8;
+    }
+    let q = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+    let mut s = hsum4(q);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// Integer i8×i8 dot product: 16 products per step via
+/// sign-extend-to-i16 + `madd` pairs, accumulated in i32 lanes (exact —
+/// integer addition is associative, so the lane split cannot change the
+/// sum).
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by `Kernels`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_i8i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(i).cast()));
+        let vb = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(i).cast()));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(va, vb));
+        i += 16;
+    }
+    let q = _mm_add_epi32(_mm256_castsi256_si128(acc), _mm256_extracti128_si256::<1>(acc));
+    let q = _mm_add_epi32(q, _mm_shuffle_epi32::<0x0E>(q)); // lanes [2,3] onto [0,1]
+    let q = _mm_add_epi32(q, _mm_shuffle_epi32::<0x01>(q)); // lane 1 onto 0
+    let mut s = _mm_cvtsi128_si32(q);
+    while i < n {
+        s += (a[i] as i32) * (b[i] as i32);
+        i += 1;
+    }
+    s
+}
+
+/// `y += alpha · x` at 256 bits — exact in every mode (independent lanes,
+/// separate mul/add, same per-element sequence as scalar).
+///
+/// # Safety
+/// Requires AVX (implied by the AVX2 runtime detection `Kernels` does).
+#[target_feature(enable = "avx")]
+pub(crate) unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let va = _mm256_set1_ps(alpha);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+        let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+        i += 8;
+    }
+    while i < n {
+        y[i] += alpha * x[i];
+        i += 1;
+    }
+}
+
+/// `y += c · q` (int8 operand, exact i8→i32→f32 convert per lane).
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by `Kernels`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn axpy_i8(c: f32, q: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(q.len(), y.len());
+    let n = y.len();
+    let vc = _mm256_set1_ps(c);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vq =
+            _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(q.as_ptr().add(i).cast())));
+        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(vc, vq)));
+        i += 8;
+    }
+    while i < n {
+        y[i] += c * q[i] as f32;
+        i += 1;
+    }
+}
+
+/// `y = s · q` (int8 row dequantize, exact per lane).
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by `Kernels`).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn scale_i8(s: f32, q: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(q.len(), y.len());
+    let n = y.len();
+    let vs = _mm256_set1_ps(s);
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vq =
+            _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(q.as_ptr().add(i).cast())));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_mul_ps(vs, vq));
+        i += 8;
+    }
+    while i < n {
+        y[i] = s * q[i] as f32;
+        i += 1;
+    }
+}
+
+/// `y += x` at 256 bits (exact).
+///
+/// # Safety
+/// Requires AVX (runtime-detected by `Kernels`).
+#[target_feature(enable = "avx")]
+pub(crate) unsafe fn vadd(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+        let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, vx));
+        i += 8;
+    }
+    while i < n {
+        y[i] += x[i];
+        i += 1;
+    }
+}
+
+/// `y *= x` at 256 bits (exact).
+///
+/// # Safety
+/// Requires AVX (runtime-detected by `Kernels`).
+#[target_feature(enable = "avx")]
+pub(crate) unsafe fn vmul(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = y.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+        let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+        _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_mul_ps(vy, vx));
+        i += 8;
+    }
+    while i < n {
+        y[i] *= x[i];
+        i += 1;
+    }
+}
+
+/// `acc += a ⊙ b` at 256 bits (exact — per-column accumulators are
+/// independent, mul and add stay separate).
+///
+/// # Safety
+/// Requires AVX (runtime-detected by `Kernels`).
+#[target_feature(enable = "avx")]
+pub(crate) unsafe fn vmuladd(a: &[f32], b: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), acc.len());
+    let n = acc.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let vo = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let va = _mm256_loadu_ps(a.as_ptr().add(i));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(vo, _mm256_mul_ps(va, vb)));
+        i += 8;
+    }
+    while i < n {
+        acc[i] += a[i] * b[i];
+        i += 1;
+    }
+}
+
+/// LayerNorm forward normalize/affine for one row (exact — per-lane
+/// `(x-mu)*rs` then `h*g+b`, same op sequence as scalar).
+///
+/// # Safety
+/// Requires AVX (runtime-detected by `Kernels`). All slices share one
+/// length.
+#[target_feature(enable = "avx")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn ln_norm_row(
+    xi: &[f32],
+    mu: f32,
+    rs: f32,
+    g: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    xhat: &mut [f32],
+) {
+    let d = xi.len();
+    let vmu = _mm256_set1_ps(mu);
+    let vrs = _mm256_set1_ps(rs);
+    let mut j = 0usize;
+    while j + 8 <= d {
+        let vx = _mm256_loadu_ps(xi.as_ptr().add(j));
+        let vh = _mm256_mul_ps(_mm256_sub_ps(vx, vmu), vrs);
+        _mm256_storeu_ps(xhat.as_mut_ptr().add(j), vh);
+        let vg = _mm256_loadu_ps(g.as_ptr().add(j));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(j));
+        _mm256_storeu_ps(y.as_mut_ptr().add(j), _mm256_add_ps(_mm256_mul_ps(vh, vg), vb));
+        j += 8;
+    }
+    while j < d {
+        let h = (xi[j] - mu) * rs;
+        xhat[j] = h;
+        y[j] = h * g[j] + b[j];
+        j += 1;
+    }
+}
+
+/// LayerNorm backward dx for one row (exact — per-lane
+/// `rstd·((dy·g − m1) − xhat·m2)`, same op sequence as scalar).
+///
+/// # Safety
+/// Requires AVX (runtime-detected by `Kernels`). All slices share one
+/// length.
+#[target_feature(enable = "avx")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn ln_dx_row(
+    dyr: &[f32],
+    xh: &[f32],
+    g: &[f32],
+    m1: f32,
+    m2: f32,
+    rstd: f32,
+    dx: &mut [f32],
+) {
+    let d = dx.len();
+    let vm1 = _mm256_set1_ps(m1);
+    let vm2 = _mm256_set1_ps(m2);
+    let vrs = _mm256_set1_ps(rstd);
+    let mut j = 0usize;
+    while j + 8 <= d {
+        let vdy = _mm256_loadu_ps(dyr.as_ptr().add(j));
+        let vg = _mm256_loadu_ps(g.as_ptr().add(j));
+        let vxh = _mm256_loadu_ps(xh.as_ptr().add(j));
+        let vdxh = _mm256_mul_ps(vdy, vg);
+        let vt = _mm256_sub_ps(_mm256_sub_ps(vdxh, vm1), _mm256_mul_ps(vxh, vm2));
+        _mm256_storeu_ps(dx.as_mut_ptr().add(j), _mm256_mul_ps(vrs, vt));
+        j += 8;
+    }
+    while j < d {
+        let dxh = dyr[j] * g[j];
+        dx[j] = rstd * (dxh - m1 - xh[j] * m2);
+        j += 1;
+    }
+}

@@ -30,6 +30,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod experiments;
+pub mod kernels;
 pub mod quant;
 pub mod runtime;
 pub mod server;

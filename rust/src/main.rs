@@ -14,6 +14,13 @@
 //! worker pool; default is the machine's available parallelism. Results
 //! are bit-identical for every thread count.
 //!
+//! Host-backend kernels: `--simd auto|avx2|neon|scalar` (or `QRLORA_SIMD`)
+//! selects the SIMD microkernel backend; `auto` (default) uses runtime
+//! feature detection, and every mode keeps results bit-identical. The
+//! `--simd-relaxed` switch (or `QRLORA_SIMD_RELAXED=1`) additionally opts
+//! into re-associated FMA dot products (faster, ≤1e-5 relative error; see
+//! [`qrlora::kernels`]).
+//!
 //! Memory: `--quantize-backbone` (or `QRLORA_QUANT=1`) holds the frozen
 //! backbone weights int8 on the host backend (embeddings + attention/FFN
 //! projections, per-row-group absmax scales); QR factors, λ, LoRA A/B,
@@ -64,7 +71,8 @@ fn main() {
         return;
     }
     let cmd = raw[0].clone();
-    let switches = ["verbose", "force", "quantize-backbone", "no-warm-start", "dry-run"];
+    let switches =
+        ["verbose", "force", "quantize-backbone", "no-warm-start", "dry-run", "simd-relaxed"];
     let args = match Args::parse(&raw[1..], &switches) {
         Ok(a) => a,
         Err(e) => {
@@ -85,6 +93,19 @@ fn main() {
             std::process::exit(2);
         }
         std::env::set_var("QRLORA_BACKEND", backend);
+    }
+    if let Some(simd) = args.get("simd") {
+        // Validate eagerly (a typo must not silently serve on the wrong
+        // kernels), then hand selection to the cached kernel resolver via
+        // the environment, like --backend.
+        if let Err(e) = qrlora::kernels::SimdRequest::parse(simd) {
+            errorln!("{e:#}");
+            std::process::exit(2);
+        }
+        std::env::set_var("QRLORA_SIMD", simd);
+    }
+    if args.has("simd-relaxed") {
+        std::env::set_var("QRLORA_SIMD_RELAXED", "1");
     }
     if let Some(threads) = args.get("threads") {
         // Size the host-backend worker pool before first use (overrides
@@ -167,6 +188,7 @@ fn cmd_info(_args: &Args) -> anyhow::Result<()> {
     let rt = qrlora::runtime::create_backend(choice, std::path::Path::new(&dir))?;
     println!("backend: {}", rt.name());
     println!("host threads: {}", qrlora::util::pool::threads());
+    println!("simd kernels: {}", qrlora::kernels::active().describe());
     println!(
         "quantized backbone: {}",
         if qrlora::quant::quant_backbone_from_env() { "on (int8)" } else { "off (f32)" }

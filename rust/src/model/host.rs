@@ -21,6 +21,7 @@ use std::collections::BTreeMap;
 use std::rc::Rc;
 
 use crate::data::HeadKind;
+use crate::kernels;
 use crate::quant::{self, QuantTensor};
 use crate::runtime::{Preset, StateLayout};
 use crate::tensor::Tensor;
@@ -38,7 +39,7 @@ pub enum FrozenValue {
     Dense(Rc<Tensor>),
     /// Int8 projection weight `W (k×n)`, stored **transposed** (n×k) with
     /// per-row-group scales; `x·W` and `dy·Wᵀ` run the fused
-    /// `quant::matmul_qt` / `quant::matmul_q` kernels.
+    /// `quant::matmul_xw_q` / `quant::matmul_dyw_t_q` kernels.
     QuantProj(Rc<QuantTensor>),
     /// Int8 row-gather table (embeddings), natural orientation.
     QuantRows(Rc<QuantTensor>),
@@ -103,7 +104,7 @@ impl WeightRef<'_> {
     fn fwd(&self, x: &Tensor) -> Tensor {
         match self {
             WeightRef::Dense(w) => x.matmul(w),
-            WeightRef::Quant(w) => quant::matmul_qt(x, w),
+            WeightRef::Quant(w) => quant::matmul_xw_q(x, w),
         }
     }
 
@@ -111,7 +112,7 @@ impl WeightRef<'_> {
     fn bwd(&self, dy: &Tensor) -> Tensor {
         match self {
             WeightRef::Dense(w) => dy.matmul_t(w),
-            WeightRef::Quant(w) => quant::matmul_q(dy, w),
+            WeightRef::Quant(w) => quant::matmul_dyw_t_q(dy, w),
         }
     }
 }
@@ -124,35 +125,23 @@ enum EmbRef<'a> {
 }
 
 impl EmbRef<'_> {
-    /// `out[e] = row(idx)[e]` — first table of the embedding sum.
+    /// `out[e] = row(idx)[e]` — first table of the embedding sum. `kern`
+    /// comes from the caller because gathers run on pool worker threads,
+    /// which don't see the caller's `kernels::with_kernels` override.
     #[inline]
-    fn write_row(&self, idx: usize, out: &mut [f32]) {
+    fn write_row(&self, kern: kernels::Kernels, idx: usize, out: &mut [f32]) {
         match self {
             EmbRef::Dense(t) => out.copy_from_slice(t.row(idx)),
-            EmbRef::Quant(q) => {
-                let s = q.scale_of_row(idx);
-                for (o, &qv) in out.iter_mut().zip(q.row(idx)) {
-                    *o = s * qv as f32;
-                }
-            }
+            EmbRef::Quant(q) => kern.scale_i8(q.scale_of_row(idx), q.row(idx), out),
         }
     }
 
     /// `out[e] += row(idx)[e]` — subsequent tables, in the serial order.
     #[inline]
-    fn add_row(&self, idx: usize, out: &mut [f32]) {
+    fn add_row(&self, kern: kernels::Kernels, idx: usize, out: &mut [f32]) {
         match self {
-            EmbRef::Dense(t) => {
-                for (o, &v) in out.iter_mut().zip(t.row(idx)) {
-                    *o += v;
-                }
-            }
-            EmbRef::Quant(q) => {
-                let s = q.scale_of_row(idx);
-                for (o, &qv) in out.iter_mut().zip(q.row(idx)) {
-                    *o += s * qv as f32;
-                }
-            }
+            EmbRef::Dense(t) => kern.vadd(t.row(idx), out),
+            EmbRef::Quant(q) => kern.axpy_i8(q.scale_of_row(idx), q.row(idx), out),
         }
     }
 }
@@ -161,7 +150,6 @@ pub const NEG_INF: f32 = -1e9;
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;
-const SQRT_2_OVER_PI: f32 = 0.797_884_6;
 
 /// Which adapter structure the graph carries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -281,7 +269,10 @@ fn ln_fwd(x: &Tensor, g: &[f32], b: &[f32]) -> (Tensor, LnCache) {
     let mut xhat = Tensor::zeros(&[rows, d]);
     let mut rstd = vec![0f32; rows];
     // Rows are independent; parallelize over batch rows (y/xhat/rstd spans
-    // are split on the same row partition, so writes stay disjoint).
+    // are split on the same row partition, so writes stay disjoint). The
+    // μ/σ² reductions stay scalar inside the kernel; only the
+    // normalize/affine writes vectorize (exact in every simd mode).
+    let kern = kernels::active();
     pool::par_parts3(
         &mut y.data,
         d,
@@ -292,21 +283,8 @@ fn ln_fwd(x: &Tensor, g: &[f32], b: &[f32]) -> (Tensor, LnCache) {
         rows,
         rows.saturating_mul(d) * 4,
         |r0, yc, xc, rc| {
-            for (ri, rs_out) in rc.iter_mut().enumerate() {
-                let i = r0 + ri;
-                let xi = x.row(i);
-                let mu = xi.iter().sum::<f32>() / d as f32;
-                let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
-                let rs = 1.0 / (var + 1e-5).sqrt();
-                *rs_out = rs;
-                let yrow = &mut yc[ri * d..(ri + 1) * d];
-                let xrow = &mut xc[ri * d..(ri + 1) * d];
-                for j in 0..d {
-                    let h = (xi[j] - mu) * rs;
-                    xrow[j] = h;
-                    yrow[j] = h * g[j] + b[j];
-                }
-            }
+            let x_rows = &x.data[r0 * d..r0 * d + yc.len()];
+            kern.ln_fwd_rows(x_rows, d, g, b, yc, xc, rc);
         },
     );
     (y, LnCache { xhat, rstd })
@@ -319,57 +297,54 @@ fn ln_bwd(dy: &Tensor, g: &[f32], c: &LnCache) -> (Tensor, Vec<f32>, Vec<f32>) {
     // [dγ | dβ] accumulator per chunk, a single pass over dy/x̂) keep the
     // accumulation order a function of the row count alone, so results
     // are bit-identical for any thread count.
+    let kern = kernels::active();
     let packed = pool::par_reduce_rows(rows, 2 * d, rows.saturating_mul(d) * 4, |r0, n, acc| {
         let (dg_acc, db_acc) = acc.split_at_mut(d);
         for i in r0..r0 + n {
             let dyr = dy.row(i);
-            let xh = c.xhat.row(i);
-            for j in 0..d {
-                dg_acc[j] += dyr[j] * xh[j];
-                db_acc[j] += dyr[j];
-            }
+            // Per-column accumulators are independent, so splitting the
+            // packed pass into two vectorized column sweeps keeps every
+            // column's row-order accumulation — exact in every simd mode.
+            kern.vmuladd(dyr, c.xhat.row(i), dg_acc);
+            kern.vadd(dyr, db_acc);
         }
     });
     let (dg, db) = (packed[..d].to_vec(), packed[d..].to_vec());
-    // dx rows are independent — parallel (m1/m2 are per-row, recomputed in
-    // the serial j order inside each row).
+    // dx rows are independent — parallel (m1/m2 are per-row reductions,
+    // kept scalar-sequential inside the kernel; the dx write vectorizes
+    // exactly).
     pool::par_rows(&mut dx.data, rows, rows.saturating_mul(d) * 6, |r0, chunk| {
-        for (ri, dxrow) in chunk.chunks_mut(d).enumerate() {
-            let i = r0 + ri;
-            let dyr = dy.row(i);
-            let xh = c.xhat.row(i);
-            let mut m1 = 0f32;
-            let mut m2 = 0f32;
-            for j in 0..d {
-                let dxh = dyr[j] * g[j];
-                m1 += dxh;
-                m2 += dxh * xh[j];
-            }
-            m1 /= d as f32;
-            m2 /= d as f32;
-            for j in 0..d {
-                let dxh = dyr[j] * g[j];
-                dxrow[j] = c.rstd[i] * (dxh - m1 - xh[j] * m2);
-            }
-        }
+        let nrows = chunk.len() / d;
+        let dy_rows = &dy.data[r0 * d..(r0 + nrows) * d];
+        let xhat_rows = &c.xhat.data[r0 * d..(r0 + nrows) * d];
+        kern.ln_bwd_dx_rows(dy_rows, xhat_rows, &c.rstd[r0..r0 + nrows], g, d, chunk);
     });
     (dx, dg, db)
 }
 
 /// tanh-approximate GELU (JAX's default). Returns (y, tanh cache).
-/// Elementwise, so the pool split can't change any value.
-fn gelu_fwd(x: &Tensor) -> (Tensor, Tensor) {
+/// Elementwise on live rows, so the pool split can't change any value.
+///
+/// `live`, when present, holds one mask value per row (the batch's
+/// attention mask): padded rows skip the `tanh` entirely and their
+/// `y`/cache stay exactly `0.0`. Padded activations never reach logits or
+/// gradients (attention `p == 0.0` skips masked keys, the Cls head reads
+/// position 0, masked-out MLM rows zero their dlogits), so live-row bits
+/// are unchanged.
+fn gelu_fwd(x: &Tensor, live: Option<&[f32]>) -> (Tensor, Tensor) {
+    let (rows, cols) = (x.rows(), x.cols());
     let mut y = Tensor::zeros(&x.shape);
     let mut t = Tensor::zeros(&x.shape);
+    if cols == 0 {
+        return (y, t);
+    }
     let n = x.data.len();
-    pool::par_parts2(&mut y.data, 1, &mut t.data, 1, n, n * 8, |lo, yc, tc| {
-        for i in 0..yc.len() {
-            let v = x.data[lo + i];
-            let inner = SQRT_2_OVER_PI * (v + 0.044715 * v * v * v);
-            let th = inner.tanh();
-            tc[i] = th;
-            yc[i] = 0.5 * v * (1.0 + th);
-        }
+    let kern = kernels::active();
+    pool::par_parts2(&mut y.data, cols, &mut t.data, cols, rows, n * 8, |r0, yc, tc| {
+        let nrows = yc.len() / cols;
+        let x_rows = &x.data[r0 * cols..(r0 + nrows) * cols];
+        let live_rows = live.map(|m| &m[r0..r0 + nrows]);
+        kern.gelu_fwd_rows(x_rows, cols, live_rows, yc, tc);
     });
     (y, t)
 }
@@ -377,13 +352,10 @@ fn gelu_fwd(x: &Tensor) -> (Tensor, Tensor) {
 fn gelu_bwd(dy: &Tensor, x_pre: &Tensor, t: &Tensor) -> Tensor {
     let mut dx = Tensor::zeros(&dy.shape);
     let n = dy.data.len();
+    let kern = kernels::active();
     pool::par_rows(&mut dx.data, n, n * 8, |lo, chunk| {
-        for (i, o) in chunk.iter_mut().enumerate() {
-            let v = x_pre.data[lo + i];
-            let th = t.data[lo + i];
-            let du = SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * v * v);
-            *o = dy.data[lo + i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * du);
-        }
+        let hi = lo + chunk.len();
+        kern.gelu_bwd(&dy.data[lo..hi], &x_pre.data[lo..hi], &t.data[lo..hi], chunk);
     });
     dx
 }
@@ -395,11 +367,10 @@ fn scale_cols(t: &Tensor, coeff: &[f32]) -> Tensor {
     if cols == 0 {
         return out;
     }
+    let kern = kernels::active();
     pool::par_rows(&mut out.data, rows, rows.saturating_mul(cols), |_, chunk| {
         for r in chunk.chunks_mut(cols) {
-            for (v, &c) in r.iter_mut().zip(coeff) {
-                *v *= c;
-            }
+            kern.vmul(coeff, r);
         }
     });
     out
@@ -411,11 +382,10 @@ fn scale_cols(t: &Tensor, coeff: &[f32]) -> Tensor {
 /// and every output bit — is independent of the thread count.
 fn col_sum(t: &Tensor) -> Vec<f32> {
     let (rows, cols) = (t.rows(), t.cols());
+    let kern = kernels::active();
     pool::par_reduce_rows(rows, cols, rows.saturating_mul(cols), |row0, n, acc| {
         for i in row0..row0 + n {
-            for (a, &v) in acc.iter_mut().zip(t.row(i)) {
-                *a += v;
-            }
+            kern.vadd(t.row(i), acc);
         }
     })
 }
@@ -425,11 +395,10 @@ fn add_bias_rows(t: &mut Tensor, bias: &[f32]) {
     if cols == 0 {
         return;
     }
+    let kern = kernels::active();
     pool::par_rows(&mut t.data, rows, rows.saturating_mul(cols), |_, chunk| {
         for r in chunk.chunks_mut(cols) {
-            for (v, &bv) in r.iter_mut().zip(bias) {
-                *v += bv;
-            }
+            kern.vadd(bias, r);
         }
     });
 }
@@ -526,18 +495,13 @@ fn proj_bwd(
                 let mask = pv.vec(&format!("{base}/mask"));
                 let dyr = dy.matmul_t(r); // dy · R̃ᵀ → (rows, r_max)
                 // dλ_i = mask_i · Σ_rows (x·Q)[·,i] (dy·R̃ᵀ)[·,i]
+                let kern = kernels::active();
                 let rmax = lam.len();
                 let mut dlam = vec![0f32; rmax];
                 for row in 0..xq.rows() {
-                    let a = xq.row(row);
-                    let b = dyr.row(row);
-                    for i in 0..rmax {
-                        dlam[i] += a[i] * b[i];
-                    }
+                    kern.vmuladd(xq.row(row), dyr.row(row), &mut dlam);
                 }
-                for i in 0..rmax {
-                    dlam[i] *= mask[i];
-                }
+                kern.vmul(mask, &mut dlam);
                 grads.add(&format!("{base}/lam"), Tensor::from_vec(&[rmax], dlam));
                 let coeff: Vec<f32> = lam.iter().zip(mask).map(|(l, m)| l * m).collect();
                 dx.add_assign(&scale_cols(&dyr, &coeff).matmul_t(q));
@@ -607,6 +571,7 @@ fn attention_fwd(
     let scale = 1.0 / (dh as f32).sqrt();
     let mut probs = Tensor::zeros(&[b * nh * s, s]);
     let mut ctx = Tensor::zeros(&[b * s, d]);
+    let kern = kernels::active();
     let work = b * nh * s * s * (dh + 4);
     pool::par_parts2(
         &mut probs.data,
@@ -625,15 +590,13 @@ fn attention_fwd(
                         let pr = &mut pchunk[prow * s..(prow + 1) * s];
                         let qrow =
                             &q.data[(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
-                        // scores + additive mask
+                        // scores + additive mask (sequential-order dot:
+                        // the kernel keeps the scalar chain in strict mode)
                         let mut maxv = f32::NEG_INFINITY;
                         for (j, pv) in pr.iter_mut().enumerate() {
                             let krow = &k.data
                                 [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                            let mut sc = 0f32;
-                            for e in 0..dh {
-                                sc += qrow[e] * krow[e];
-                            }
+                            let sc = kern.dot_seq(qrow, krow);
                             let val = sc * scale + amask_add[bb * s + j];
                             *pv = val;
                             maxv = maxv.max(val);
@@ -657,9 +620,7 @@ fn attention_fwd(
                             }
                             let vrow = &v.data
                                 [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                            for e in 0..dh {
-                                crow[e] += p * vrow[e];
-                            }
+                            kern.axpy(p, vrow, crow);
                         }
                     }
                 }
@@ -688,6 +649,7 @@ fn attention_bwd(
     let mut dq = Tensor::zeros(&[b * s, d]);
     let mut dk = Tensor::zeros(&[b * s, d]);
     let mut dv = Tensor::zeros(&[b * s, d]);
+    let kern = kernels::active();
     let work = b * nh * s * s * (3 * dh + 4);
     pool::par_parts3(
         &mut dq.data,
@@ -712,25 +674,16 @@ fn attention_bwd(
                         for (j, dp) in dprobs.iter_mut().enumerate().take(s) {
                             let vrow = &v.data
                                 [(bb * s + j) * d + h * dh..(bb * s + j) * d + (h + 1) * dh];
-                            let mut acc = 0f32;
-                            for e in 0..dh {
-                                acc += dcrow[e] * vrow[e];
-                            }
-                            *dp = acc;
+                            *dp = kern.dot_seq(dcrow, vrow);
                             let p = probs.data[prow * s + j];
                             if p != 0.0 {
                                 let dvrow = &mut dvc
                                     [(bl * s + j) * d + h * dh..(bl * s + j) * d + (h + 1) * dh];
-                                for e in 0..dh {
-                                    dvrow[e] += p * dcrow[e];
-                                }
+                                kern.axpy(p, dcrow, dvrow);
                             }
                         }
                         // softmax backward: ds = p ⊙ (dp − Σ dp·p), then ·scale
-                        let mut inner = 0f32;
-                        for j in 0..s {
-                            inner += dprobs[j] * probs.data[prow * s + j];
-                        }
+                        let inner = kern.dot_seq(&dprobs, &probs.data[prow * s..(prow + 1) * s]);
                         for j in 0..s {
                             let ds = probs.data[prow * s + j] * (dprobs[j] - inner) * scale;
                             if ds == 0.0 {
@@ -742,14 +695,10 @@ fn attention_bwd(
                                 [(bb * s + i) * d + h * dh..(bb * s + i) * d + (h + 1) * dh];
                             let dqrow = &mut dqc
                                 [(bl * s + i) * d + h * dh..(bl * s + i) * d + (h + 1) * dh];
-                            for e in 0..dh {
-                                dqrow[e] += ds * krow[e];
-                            }
+                            kern.axpy(ds, krow, dqrow);
                             let dkrow = &mut dkc
                                 [(bl * s + j) * d + h * dh..(bl * s + j) * d + (h + 1) * dh];
-                            for e in 0..dh {
-                                dkrow[e] += ds * qrow[e];
-                            }
+                            kern.axpy(ds, qrow, dkrow);
                         }
                     }
                 }
@@ -775,15 +724,16 @@ fn encode_fwd(
     // Embedding gather: each output row depends only on its own ids (the
     // three adds keep the serial left-to-right order, so the split can't
     // change any value; quantized tables dequantize per gathered row).
+    let kern = kernels::active();
     pool::par_rows(&mut h.data, b * s, b * s * d, |row0, chunk| {
         for (ri, out) in chunk.chunks_mut(d).enumerate() {
             let row = row0 + ri;
             let ss = row % s;
             let t = ids[row] as usize;
             let ty = type_ids[row] as usize;
-            tok.write_row(t, out);
-            pos.add_row(ss, out);
-            typ.add_row(ty, out);
+            tok.write_row(kern, t, out);
+            pos.add_row(kern, ss, out);
+            typ.add_row(kern, ty, out);
         }
     });
     let (mut h, emb_ln) = {
@@ -814,7 +764,7 @@ fn encode_fwd(
         );
         let mut f1_pre = pv.weight(&format!("layer{l}/ffn/w1")).fwd(&x_ln2);
         add_bias_rows(&mut f1_pre, pv.vec(&format!("layer{l}/ffn/b1")));
-        let (f1, gelu_t) = gelu_fwd(&f1_pre);
+        let (f1, gelu_t) = gelu_fwd(&f1_pre, Some(attn_mask));
         let mut f2 = pv.weight(&format!("layer{l}/ffn/w2")).fwd(&f1);
         add_bias_rows(&mut f2, pv.vec(&format!("layer{l}/ffn/b2")));
         h.add_assign(&f2);
@@ -932,25 +882,23 @@ fn encode_bwd(
 /// Row-wise softmax in place (row-parallel; the MLM path runs this over a
 /// (B·S, V) matrix, the single biggest elementwise op in pretraining).
 fn softmax_rows(t: &mut Tensor) {
+    let cols = t.cols();
+    softmax_rows_masked(t, cols);
+}
+
+/// Row-wise softmax restricted to the first `valid` columns — columns the
+/// caller pushed to `NEG_INF` (padded class slots) skip the `exp` and are
+/// written exactly `0.0`, which is bit-identical to what the full-width
+/// softmax produced on them (`exp` of ≈`-1e9` below the live max
+/// underflows to `+0.0`; see [`kernels::Kernels::softmax_rows`]).
+fn softmax_rows_masked(t: &mut Tensor, valid: usize) {
     let (rows, cols) = (t.rows(), t.cols());
     if cols == 0 {
         return;
     }
+    let kern = kernels::active();
     pool::par_rows(&mut t.data, rows, rows.saturating_mul(cols) * 4, |_, chunk| {
-        for r in chunk.chunks_mut(cols) {
-            let mut m = f32::NEG_INFINITY;
-            for &v in r.iter() {
-                m = m.max(v);
-            }
-            let mut denom = 0f32;
-            for v in r.iter_mut() {
-                *v = (*v - m).exp();
-                denom += *v;
-            }
-            for v in r.iter_mut() {
-                *v /= denom;
-            }
-        }
+        kern.softmax_rows(chunk, cols, valid);
     });
 }
 
@@ -999,7 +947,10 @@ fn task_loss_bwd(
     match head {
         HeadKind::Cls => {
             let mut probs = logits.clone();
-            softmax_rows(&mut probs);
+            // Class slots beyond the task's label count carry
+            // `(1-mask)·NEG_INF` from `head_fwd` — skip their `exp`.
+            let valid = batch.class_mask.iter().rposition(|&m| m != 0.0).map_or(k, |i| i + 1);
+            softmax_rows_masked(&mut probs, valid);
             let mut loss = 0f32;
             let mut dlogits = probs.clone();
             for bb in 0..b {
@@ -1392,15 +1343,16 @@ fn encode_fwd_multi(
     let pos = mv.shared_emb("emb/pos");
     let typ = mv.shared_emb("emb/type");
     let mut h = Tensor::zeros(&[b * s, d]);
+    let kern = kernels::active();
     pool::par_rows(&mut h.data, b * s, b * s * d, |row0, chunk| {
         for (ri, out) in chunk.chunks_mut(d).enumerate() {
             let row = row0 + ri;
             let ss = row % s;
             let t = ids[row] as usize;
             let ty = type_ids[row] as usize;
-            tok.write_row(t, out);
-            pos.add_row(ss, out);
-            typ.add_row(ty, out);
+            tok.write_row(kern, t, out);
+            pos.add_row(kern, ss, out);
+            typ.add_row(kern, ty, out);
         }
     });
     let (mut h, _) = ln_fwd(&h, mv.shared_vec("emb/ln_g"), mv.shared_vec("emb/ln_b"));
@@ -1427,7 +1379,7 @@ fn encode_fwd_multi(
         );
         let mut f1_pre = mv.shared_weight(&format!("layer{l}/ffn/w1")).fwd(&x_ln2);
         add_bias_rows(&mut f1_pre, mv.shared_vec(&format!("layer{l}/ffn/b1")));
-        let (f1, _) = gelu_fwd(&f1_pre);
+        let (f1, _) = gelu_fwd(&f1_pre, Some(attn_mask));
         let mut f2 = mv.shared_weight(&format!("layer{l}/ffn/w2")).fwd(&f1);
         add_bias_rows(&mut f2, mv.shared_vec(&format!("layer{l}/ffn/b2")));
         h.add_assign(&f2);

@@ -8,11 +8,14 @@
 //! * [`QuantTensor`] — symmetric absmax int8 quantization with one f32
 //!   scale per **row group** ([`QUANT_GROUP_ROWS`] rows share a scale), so
 //!   an outlier row can only perturb its own group;
-//! * fused dequant-on-the-fly kernels ([`matmul_qt`], [`matmul_q`]) that
-//!   mirror `Tensor::matmul_t` / the saxpy contraction, row-parallel over
-//!   the worker pool with the same bit-identical-for-any-thread-count
-//!   guarantee (per-output-element evaluation order never depends on the
-//!   partition);
+//! * fused int8 matmuls ([`matmul_xw_q`], [`matmul_dyw_t_q`]) that mirror
+//!   `Tensor::matmul_t` / the saxpy contraction, row-parallel over the
+//!   worker pool and dispatched through [`crate::kernels::Kernels`]. On a
+//!   SIMD backend the forward product runs a true integer inner loop
+//!   (i8×i8 accumulated in i32 lanes, scales applied once per output);
+//!   forced-scalar keeps the fused dequant-on-the-fly reference with the
+//!   same bit-identical-for-any-thread-count guarantee (per-output-element
+//!   evaluation order never depends on the partition);
 //! * the [`plan`] that decides which frozen inputs quantize (embedding
 //!   tables and attention/FFN projection matrices) and in which
 //!   orientation. QR factors, λ, masks, LoRA A/B, task heads, LayerNorm
@@ -32,6 +35,7 @@
 //! README's perf-knobs section and `ARCHITECTURE.md` ("Quantized frozen
 //! cache").
 
+use crate::kernels;
 use crate::tensor::Tensor;
 use crate::util::pool;
 
@@ -180,95 +184,79 @@ impl QuantTensor {
     }
 }
 
-/// Unrolled f32×i8 dot product (four independent accumulators, like
-/// `tensor::dot`); the i8→f32 convert happens in-register, the scale is
-/// applied once by the caller after the reduction.
-#[inline]
-fn dot_i8(a: &[f32], b: &[i8]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let mut acc = [0f32; 4];
-    for ci in 0..chunks {
-        let i = ci * 4;
-        acc[0] += a[i] * b[i] as f32;
-        acc[1] += a[i + 1] * b[i + 1] as f32;
-        acc[2] += a[i + 2] * b[i + 2] as f32;
-        acc[3] += a[i + 3] * b[i + 3] as f32;
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for i in chunks * 4..n {
-        s += a[i] * b[i] as f32;
-    }
-    s
-}
-
-/// Fused `x (m×k) @ Wᵀ-storedᵀ`: `w` holds a weight in transposed int8
-/// form (n×k), so this computes the forward product `x·W → (m×n)` with
-/// `out[i,j] = scale(j) · Σ_e x[i,e]·q[j,e]` — dequantization is one
-/// multiply per output element, after the reduction.
+/// Forward int8 product `x (m×k) @ W` with `w` holding the weight in
+/// transposed int8 form (n×k): `out[i,j] ≈ Σ_e x[i,e]·scale(j)·q[j,e]`,
+/// i.e. `x·W → (m×n)`.
 ///
-/// Row-parallel over output rows with the same column blocking as
-/// `Tensor::matmul_t`; every output element is one [`dot_i8`] of the same
-/// two slices regardless of the partition, so results are bit-identical
-/// for any thread count.
-pub fn matmul_qt(x: &Tensor, w: &QuantTensor) -> Tensor {
+/// Row-parallel over output rows; each pool span is one
+/// [`kernels::Kernels::matmul_xw_q`] call, which keeps the reference's
+/// column blocking. On the scalar backend (`QRLORA_SIMD=scalar`) this is
+/// the fused dequant-on-the-fly reference, bit-identical for any thread
+/// count and to the pre-kernels implementation. On a SIMD backend it is
+/// the true integer inner loop — activations quantized once per row,
+/// i8×i8 accumulated in i32 lanes, scales applied once per output — which
+/// is exact integer arithmetic (identical across AVX2/NEON and bit-stable
+/// for any thread count) but differs from the scalar reference within the
+/// activation-quantization bound documented on the kernel method.
+pub fn matmul_xw_q(x: &Tensor, w: &QuantTensor) -> Tensor {
     let (m, k) = (x.rows(), x.cols());
     let (n, k2) = (w.rows(), w.cols());
-    assert_eq!(k, k2, "matmul_qt shape mismatch: {:?} @ t{:?}", x.shape, w.shape);
+    assert_eq!(k, k2, "matmul_xw_q shape mismatch: {:?} @ t{:?}", x.shape, w.shape);
     let mut out = Tensor::zeros(&[m, n]);
     if m == 0 || n == 0 {
         return out;
     }
+    // Resolve the kernel selection on this thread: pool workers do not see
+    // the caller's `kernels::with_kernels` override.
+    let kern = kernels::active();
     let work = m.saturating_mul(n).saturating_mul(k.max(1));
     pool::par_rows(&mut out.data, m, work, |row0, chunk| {
-        const BLOCK_N: usize = 64;
-        for j0 in (0..n).step_by(BLOCK_N) {
-            let j1 = (j0 + BLOCK_N).min(n);
-            for (ii, orow) in chunk.chunks_mut(n).enumerate() {
-                let xrow = x.row(row0 + ii);
-                for j in j0..j1 {
-                    orow[j] = w.scale_of_row(j) * dot_i8(xrow, w.row(j));
-                }
-            }
-        }
+        let rows = chunk.len() / n;
+        let x_rows = &x.data[row0 * k..(row0 + rows) * k];
+        kern.matmul_xw_q(x_rows, k, &w.q, &w.scales, w.group_rows, n, chunk);
     });
     out
 }
 
-/// Fused `x (m×n) @ W-stored (n×k)`: with `w` holding a weight `W (k×n)`
-/// in transposed int8 form, this is the backward product `dy·Wᵀ → (m×k)`
-/// computed as a sum of scaled int8 row axpys:
-/// `out[i,:] += (x[i,j]·scale(j)) · q[j,:]`.
+/// Backward int8 product `dy (m×n) @ Wᵀ → (m×k)` with `w` holding the
+/// weight `W (k×n)` in transposed int8 form (n×k), computed as a sum of
+/// scaled int8 row axpys: `out[i,:] += (dy[i,j]·scale(j)) · q[j,:]`.
 ///
-/// Row-parallel over output rows; each row accumulates over `j` in the
-/// serial order, so results are bit-identical for any thread count. The
-/// `c == 0.0` skip mirrors `Tensor::t_matmul`'s (gradient rows zeroed by
-/// masking skip the whole axpy).
-pub fn matmul_q(x: &Tensor, w: &QuantTensor) -> Tensor {
-    let (m, n) = (x.rows(), x.cols());
+/// Row-parallel over output rows; each pool span is one
+/// [`kernels::Kernels::matmul_dyw_t_q`] call. Each row accumulates over
+/// `j` in the serial order with an exact int8 axpy on every backend, so
+/// results are bit-identical for any thread count *and* any backend
+/// (gradients stay f32-faithful; only the forward product quantizes
+/// activations). The `c == 0.0` skip mirrors `Tensor::t_matmul`'s
+/// (gradient rows zeroed by masking skip the whole axpy).
+pub fn matmul_dyw_t_q(dy: &Tensor, w: &QuantTensor) -> Tensor {
+    let (m, n) = (dy.rows(), dy.cols());
     let (n2, k) = (w.rows(), w.cols());
-    assert_eq!(n, n2, "matmul_q shape mismatch: {:?} @ {:?}", x.shape, w.shape);
+    assert_eq!(n, n2, "matmul_dyw_t_q shape mismatch: {:?} @ {:?}", dy.shape, w.shape);
     let mut out = Tensor::zeros(&[m, k]);
     if m == 0 || k == 0 {
         return out;
     }
+    let kern = kernels::active();
     let work = m.saturating_mul(n).saturating_mul(k.max(1));
     pool::par_rows(&mut out.data, m, work, |row0, chunk| {
-        for (ii, orow) in chunk.chunks_mut(k).enumerate() {
-            let xrow = x.row(row0 + ii);
-            for j in 0..n {
-                let c = xrow[j] * w.scale_of_row(j);
-                if c == 0.0 {
-                    continue;
-                }
-                for (o, &qv) in orow.iter_mut().zip(w.row(j)) {
-                    *o += c * qv as f32;
-                }
-            }
-        }
+        let rows = chunk.len() / k;
+        let dy_rows = &dy.data[row0 * n..(row0 + rows) * n];
+        kern.matmul_dyw_t_q(dy_rows, n, &w.q, &w.scales, w.group_rows, k, chunk);
     });
     out
+}
+
+/// Former name of [`matmul_xw_q`] (PR-4 era), kept for one PR.
+#[deprecated(note = "renamed to `matmul_xw_q`; routes through kernels::Kernels")]
+pub fn matmul_qt(x: &Tensor, w: &QuantTensor) -> Tensor {
+    matmul_xw_q(x, w)
+}
+
+/// Former name of [`matmul_dyw_t_q`] (PR-4 era), kept for one PR.
+#[deprecated(note = "renamed to `matmul_dyw_t_q`; routes through kernels::Kernels")]
+pub fn matmul_q(x: &Tensor, w: &QuantTensor) -> Tensor {
+    matmul_dyw_t_q(x, w)
 }
 
 #[cfg(test)]

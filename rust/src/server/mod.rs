@@ -681,6 +681,7 @@ impl ServeCore {
     /// backbone; misses train (short budget) and publish back — then
     /// print the warm-start report.
     pub fn prepare(&mut self, tasks: &[&str]) -> anyhow::Result<()> {
+        println!("[serve] simd kernels: {}", crate::kernels::active().describe());
         println!("[serve] preparing {} task adapters…", tasks.len());
         let t_prep = Instant::now();
         self.tiers.prefetch(&self.layout, tasks);

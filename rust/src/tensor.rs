@@ -9,29 +9,8 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::kernels;
 use crate::util::pool;
-
-/// Unrolled dot product with four independent accumulators (keeps the FP
-/// dependency chain short enough for the auto-vectorizer).
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let mut acc = [0f32; 4];
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
-}
 
 /// Dense row-major f32 tensor. Rank ≤ 4 in practice; most linalg paths use
 /// rank-2 views via `rows()`/`cols()`.
@@ -164,9 +143,10 @@ impl Tensor {
     /// Matrix multiply `self (m×k) @ other (k×n)`.
     ///
     /// Transposes `other` once so every output element is a dot product of
-    /// two contiguous slices — the unrolled `dot` kernel then vectorizes,
-    /// which is 2–4× faster than the previous i-k-j saxpy loop at the hot
-    /// shapes (see the `matmul` entries in `benches/bench_main.rs`).
+    /// two contiguous slices — the `kernels` dot microkernel then runs on
+    /// contiguous data, which is 2–4× faster than the previous i-k-j saxpy
+    /// loop at the hot shapes (see the `matmul` entries in
+    /// `benches/bench_main.rs`).
     pub fn matmul(&self, other: &Tensor) -> Tensor {
         let k = self.cols();
         let k2 = other.rows();
@@ -178,9 +158,10 @@ impl Tensor {
     /// both operands stream contiguously.
     ///
     /// Row-parallel: output rows are partitioned into one contiguous span
-    /// per pool lane (`util::pool`), each span keeping the serial kernel's
-    /// column blocking. Every output element is still one `dot` of the
-    /// same two slices, so results are bit-identical for any thread count;
+    /// per pool lane (`util::pool`), each span handed to
+    /// [`kernels::Kernels::matmul_xw_t`] (which keeps the serial kernel's
+    /// column blocking). Every output element is still one dot of the same
+    /// two slices, so results are bit-identical for any thread count;
     /// shapes below the pool's work cutoff stay on the serial path.
     pub fn matmul_t(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
@@ -194,20 +175,14 @@ impl Tensor {
         if m == 0 || n == 0 {
             return out;
         }
+        // Resolve the kernel selection on this thread: pool workers do not
+        // see the caller's `kernels::with_kernels` override.
+        let kern = kernels::active();
         let work = m.saturating_mul(n).saturating_mul(k.max(1));
         pool::par_rows(&mut out.data, m, work, |row0, chunk| {
-            // Block over columns of the output so the active rows of
-            // `other` stay cache-resident while we sweep this span's rows.
-            const BLOCK_N: usize = 64;
-            for j0 in (0..n).step_by(BLOCK_N) {
-                let j1 = (j0 + BLOCK_N).min(n);
-                for (ii, orow) in chunk.chunks_mut(n).enumerate() {
-                    let arow = self.row(row0 + ii);
-                    for j in j0..j1 {
-                        orow[j] = dot(arow, &other.data[j * k..(j + 1) * k]);
-                    }
-                }
-            }
+            let rows = chunk.len() / n;
+            let a_rows = &self.data[row0 * k..(row0 + rows) * k];
+            kern.matmul_xw_t(a_rows, &other.data, k, n, chunk);
         });
         out
     }
@@ -219,12 +194,13 @@ impl Tensor {
     /// accumulates over `m` in the serial order, so results are
     /// bit-identical for any thread count.
     ///
-    /// The `a == 0.0` skip keeps its place on purpose: its cost is one
-    /// compare amortized over an `n`-wide axpy (<1% on dense inputs — see
-    /// the paired `t_matmul … dense/sparse-rows` entries in
-    /// `benches/bench_main.rs`), while the MLM gradient contraction
-    /// `dlogitsᵀ·h` hits it on every masked-out position (typically ~85% of
-    /// rows are exactly zero), skipping the whole axpy there.
+    /// The `a == 0.0` skip inside [`kernels::Kernels::matmul_xt_y`] keeps
+    /// its place on purpose: its cost is one compare amortized over an
+    /// `n`-wide axpy (<1% on dense inputs — see the paired
+    /// `t_matmul … dense/sparse-rows` entries in `benches/bench_main.rs`),
+    /// while the MLM gradient contraction `dlogitsᵀ·h` hits it on every
+    /// masked-out position (typically ~85% of rows are exactly zero),
+    /// skipping the whole axpy there.
     pub fn t_matmul(&self, other: &Tensor) -> Tensor {
         let (m, k) = (self.rows(), self.cols());
         let (m2, n) = (other.rows(), other.cols());
@@ -237,21 +213,10 @@ impl Tensor {
         if k == 0 || n == 0 {
             return out;
         }
+        let kern = kernels::active();
         let work = m.saturating_mul(n).saturating_mul(k.max(1));
         pool::par_rows(&mut out.data, k, work, |i0, chunk| {
-            for mm in 0..m {
-                let arow = self.row(mm);
-                let brow = other.row(mm);
-                for (ii, orow) in chunk.chunks_mut(n).enumerate() {
-                    let a = arow[i0 + ii];
-                    if a == 0.0 {
-                        continue;
-                    }
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += a * bv;
-                    }
-                }
-            }
+            kern.matmul_xt_y(&self.data, &other.data, m, k, n, i0, chunk);
         });
         out
     }

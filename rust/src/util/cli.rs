@@ -159,7 +159,8 @@ pub const STORE_FLAGS: &[&str] =
 /// must document each as `--<flag>`, enforced by the
 /// `readme_documents_perf_flags` test and the matching CI step. Extend
 /// this list whenever `main.rs` learns a new global knob.
-pub const PERF_FLAGS: &[&str] = &["backend", "threads", "quantize-backbone"];
+pub const PERF_FLAGS: &[&str] =
+    &["backend", "threads", "quantize-backbone", "simd", "simd-relaxed"];
 
 /// A subcommand descriptor for help output.
 pub struct Command {
@@ -250,7 +251,7 @@ mod tests {
     }
 
     /// Same lockstep for the global perf/memory knobs (`--backend`,
-    /// `--threads`, `--quantize-backbone`).
+    /// `--threads`, `--quantize-backbone`, `--simd`, `--simd-relaxed`).
     #[test]
     fn readme_documents_perf_flags() {
         let readme = include_str!("../../../README.md");

@@ -1,0 +1,458 @@
+//! SIMD kernel parity property suite for `kernels::Kernels`.
+//!
+//! * **Strict (default) mode** is bit-exact: every backend must match the
+//!   scalar reference bit for bit, at the primitive level and through the
+//!   tensor ops, over tall/wide/square/ragged/empty shapes.
+//! * **Relaxed mode** (`--simd-relaxed`) may re-associate dot reductions,
+//!   but must stay within 1e-5 relative error of strict mode.
+//! * The int8 forward product's integer-accumulate path (the one
+//!   documented strict-mode exception) must stay inside its analytic
+//!   activation-quantization bound on outlier-heavy matrices and stay
+//!   bit-identical across thread counts; the backward int8 product is
+//!   exact on every backend.
+//! * The forced-scalar backend must reproduce the pre-kernels inline
+//!   loops exactly (pins `QRLORA_SIMD=scalar` ≡ pre-refactor bits).
+//! * Model level: padded-batch logits are unaffected by pad content, and
+//!   strict mode is bit-identical scalar-vs-detected through full
+//!   `eval_forward`/`train_step` passes.
+//!
+//! Matmul shapes come from `kernels::PARITY_SHAPES`, shared with
+//! `rust/tests/pool_determinism.rs` so the thread-count and simd-mode
+//! matrices compose over the same cases.
+
+use std::collections::BTreeMap;
+
+use qrlora::data::HeadKind;
+use qrlora::kernels::{self, Kernels, PARITY_SHAPES};
+use qrlora::model::host::{
+    eval_forward, train_step, FrozenMap, FrozenValue, MethodKind, TaskBatchRef,
+};
+use qrlora::quant::{self, QuantTensor, QUANT_GROUP_ROWS};
+use qrlora::runtime::{Manifest, Preset, Role, StateLayout};
+use qrlora::tensor::Tensor;
+use qrlora::util::pool;
+use qrlora::util::rng::Rng;
+
+/// Slice lengths straddling every SIMD width boundary (8/16/32 lanes) plus
+/// ragged tails and the empty slice.
+const LENS: &[usize] = &[0, 1, 2, 3, 4, 5, 7, 8, 15, 16, 31, 33, 64, 100, 257];
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: bit mismatch at {i}: {x} vs {y}"
+        );
+    }
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+fn randq(n: usize, seed: usize) -> Vec<i8> {
+    (0..n).map(|i| (((i * 37 + seed * 13 + 11) % 255) as i32 - 127) as i8).collect()
+}
+
+// ---- strict-mode exact-bits parity ------------------------------------
+
+#[test]
+fn strict_primitives_bit_match_scalar_on_every_backend() {
+    let s = Kernels::scalar();
+    let v = Kernels::detected(false);
+    for &len in LENS {
+        let mut rng = Rng::new(1000 + len as u64);
+        let a = randv(&mut rng, len);
+        let b = randv(&mut rng, len);
+        let b4: Vec<Vec<f32>> = (0..4).map(|_| randv(&mut rng, len)).collect();
+        let q = randq(len, len);
+
+        assert_eq!(s.dot(&a, &b).to_bits(), v.dot(&a, &b).to_bits(), "dot len={len}");
+        assert_eq!(s.dot_seq(&a, &b).to_bits(), v.dot_seq(&a, &b).to_bits(), "dot_seq len={len}");
+        let d4s = s.dot4(&a, &b4[0], &b4[1], &b4[2], &b4[3]);
+        let d4v = v.dot4(&a, &b4[0], &b4[1], &b4[2], &b4[3]);
+        for (i, (x, y)) in d4s.iter().zip(&d4v).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "dot4[{i}] len={len}");
+        }
+        // dot4 lanes must equal the single-dot result exactly.
+        for (i, bi) in b4.iter().enumerate() {
+            assert_eq!(d4s[i].to_bits(), s.dot(&a, bi).to_bits(), "dot4 vs dot lane {i}");
+        }
+
+        let base = randv(&mut rng, len);
+        let mut ys = base.clone();
+        let mut yv = base.clone();
+        s.axpy(1.37, &a, &mut ys);
+        v.axpy(1.37, &a, &mut yv);
+        assert_bits_eq(&ys, &yv, &format!("axpy len={len}"));
+        s.vadd(&a, &mut ys);
+        v.vadd(&a, &mut yv);
+        assert_bits_eq(&ys, &yv, &format!("vadd len={len}"));
+        s.vmul(&b, &mut ys);
+        v.vmul(&b, &mut yv);
+        assert_bits_eq(&ys, &yv, &format!("vmul len={len}"));
+        s.vmuladd(&a, &b, &mut ys);
+        v.vmuladd(&a, &b, &mut yv);
+        assert_bits_eq(&ys, &yv, &format!("vmuladd len={len}"));
+        s.axpy_i8(-0.71, &q, &mut ys);
+        v.axpy_i8(-0.71, &q, &mut yv);
+        assert_bits_eq(&ys, &yv, &format!("axpy_i8 len={len}"));
+        s.scale_i8(0.031, &q, &mut ys);
+        v.scale_i8(0.031, &q, &mut yv);
+        assert_bits_eq(&ys, &yv, &format!("scale_i8 len={len}"));
+    }
+}
+
+#[test]
+fn strict_layernorm_rows_bit_match_scalar_on_every_backend() {
+    let s = Kernels::scalar();
+    let v = Kernels::detected(false);
+    for &d in &[1usize, 5, 8, 33, 64, 100] {
+        let rows = 3usize;
+        let mut rng = Rng::new(2000 + d as u64);
+        let x = randv(&mut rng, rows * d);
+        let g = randv(&mut rng, d);
+        let b = randv(&mut rng, d);
+        let run_fwd = |k: Kernels| {
+            let mut y = vec![0f32; rows * d];
+            let mut xhat = vec![0f32; rows * d];
+            let mut rstd = vec![0f32; rows];
+            k.ln_fwd_rows(&x, d, &g, &b, &mut y, &mut xhat, &mut rstd);
+            (y, xhat, rstd)
+        };
+        let (ys, xs, rs) = run_fwd(s);
+        let (yv, xv, rv) = run_fwd(v);
+        assert_bits_eq(&ys, &yv, &format!("ln_fwd y d={d}"));
+        assert_bits_eq(&xs, &xv, &format!("ln_fwd xhat d={d}"));
+        assert_bits_eq(&rs, &rv, &format!("ln_fwd rstd d={d}"));
+
+        let dy = randv(&mut rng, rows * d);
+        let run_bwd = |k: Kernels| {
+            let mut dx = vec![0f32; rows * d];
+            k.ln_bwd_dx_rows(&dy, &xs, &rs, &g, d, &mut dx);
+            dx
+        };
+        assert_bits_eq(&run_bwd(s), &run_bwd(v), &format!("ln_bwd dx d={d}"));
+    }
+}
+
+#[test]
+fn strict_tensor_ops_bit_match_scalar_backend() {
+    let simd = Kernels::detected(false);
+    for &(m, k, n) in PARITY_SHAPES {
+        let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let bt = Tensor::randn(&[n, k], &mut rng, 1.0);
+        let b = Tensor::randn(&[k, n], &mut rng, 1.0);
+        let c = Tensor::randn(&[m, n], &mut rng, 1.0);
+        let run = |kern: Kernels| {
+            kernels::with_kernels(kern, || (a.matmul_t(&bt), a.matmul(&b), a.t_matmul(&c)))
+        };
+        let (s_mt, s_mm, s_tm) = run(Kernels::scalar());
+        let (v_mt, v_mm, v_tm) = run(simd);
+        assert_bits_eq(&s_mt.data, &v_mt.data, &format!("matmul_t {m}x{k}x{n}"));
+        assert_bits_eq(&s_mm.data, &v_mm.data, &format!("matmul {m}x{k}x{n}"));
+        assert_bits_eq(&s_tm.data, &v_tm.data, &format!("t_matmul {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn empty_inputs_are_no_ops_on_every_backend() {
+    for kern in [Kernels::scalar(), Kernels::detected(false), Kernels::detected(true)] {
+        assert_eq!(kern.dot(&[], &[]), 0.0);
+        assert_eq!(kern.dot_seq(&[], &[]), 0.0);
+        assert_eq!(kern.dot4(&[], &[], &[], &[], &[]), [0.0; 4]);
+        let mut y: [f32; 0] = [];
+        kern.axpy(2.0, &[], &mut y);
+        kern.vadd(&[], &mut y);
+        kern.vmul(&[], &mut y);
+        kern.vmuladd(&[], &[], &mut y);
+        kern.axpy_i8(1.0, &[], &mut y);
+        kern.scale_i8(1.0, &[], &mut y);
+        let mut out: [f32; 0] = [];
+        kern.matmul_xw_t(&[], &[], 4, 0, &mut out); // n == 0
+        kern.matmul_xw_t(&[], &[0.0; 12], 4, 3, &mut out); // zero rows
+        kern.matmul_xt_y(&[], &[], 0, 4, 3, 0, &mut out); // m == 0
+        kern.matmul_xw_q(&[], 4, &[], &[1.0], 8, 0, &mut out);
+        kern.matmul_dyw_t_q(&[], 3, &[], &[1.0], 8, 0, &mut out);
+        kern.softmax_rows(&mut [], 0, 0);
+        kern.gelu_fwd_rows(&[], 3, None, &mut [], &mut []);
+        kern.gelu_bwd(&[], &[], &[], &mut []);
+    }
+}
+
+// ---- relaxed-mode error bound -----------------------------------------
+
+#[test]
+fn relaxed_dots_within_rel_error_of_strict() {
+    let strict = Kernels::scalar();
+    let relaxed = Kernels::detected(true);
+    for &len in LENS {
+        let mut rng = Rng::new(3000 + len as u64);
+        let mut a = randv(&mut rng, len);
+        let b = randv(&mut rng, len);
+        // Mixed magnitudes so re-association actually moves bits.
+        for (i, v) in a.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *v *= 100.0;
+            }
+        }
+        let denom: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        let bound = 1e-5 * denom.max(1e-3);
+        let (ss, rr) = (strict.dot(&a, &b), relaxed.dot(&a, &b));
+        assert!((ss - rr).abs() <= bound, "dot len={len}: |{ss} - {rr}| > {bound}");
+        let (ss, rr) = (strict.dot_seq(&a, &b), relaxed.dot_seq(&a, &b));
+        assert!((ss - rr).abs() <= bound, "dot_seq len={len}: |{ss} - {rr}| > {bound}");
+    }
+}
+
+#[test]
+fn relaxed_matmul_within_rel_error_of_strict() {
+    let (m, k, n) = (64usize, 64usize, 64usize);
+    let mut rng = Rng::new(404);
+    let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+    let bt = Tensor::randn(&[n, k], &mut rng, 1.0);
+    let s = kernels::with_kernels(Kernels::scalar(), || a.matmul_t(&bt));
+    let r = kernels::with_kernels(Kernels::detected(true), || a.matmul_t(&bt));
+    for i in 0..m {
+        for j in 0..n {
+            let denom: f32 = a.row(i).iter().zip(bt.row(j)).map(|(x, y)| (x * y).abs()).sum();
+            let bound = 1e-5 * denom.max(1e-3);
+            let err = (s.at(i, j) - r.at(i, j)).abs();
+            assert!(err <= bound, "({i},{j}): err {err} > bound {bound}");
+        }
+    }
+}
+
+// ---- int8 integer-accumulate path -------------------------------------
+
+/// The integer path quantizes each activation row with the same symmetric
+/// absmax rule the kernel uses; its per-element deviation from the scalar
+/// fused-dequant reference is bounded by the activation rounding error
+/// `0.5·sx·scale(j)·Σ_e|q[j,e]|` plus f32 rounding slack. Outlier-heavy
+/// weight rows make the per-group scales differ wildly, which is exactly
+/// where a sloppy integer path would blow past the bound.
+#[test]
+fn int8_integer_path_within_analytic_bound_on_outliers() {
+    let (m, k, n) = (9usize, 96usize, 40usize);
+    let mut rng = Rng::new(77);
+    let x = Tensor::randn(&[m, k], &mut rng, 1.0);
+    let mut wt = Tensor::randn(&[n, k], &mut rng, 0.5);
+    for j in (0..n).step_by(7) {
+        for v in wt.row_mut(j) {
+            *v *= 100.0;
+        }
+    }
+    let wq = QuantTensor::quantize(&wt, QUANT_GROUP_ROWS);
+    let reference = kernels::with_kernels(Kernels::scalar(), || quant::matmul_xw_q(&x, &wq));
+    let integer = kernels::with_kernels(Kernels::detected(false), || quant::matmul_xw_q(&x, &wq));
+    for r in 0..m {
+        let absmax = x.row(r).iter().fold(0f32, |mx, v| mx.max(v.abs()));
+        let sx = if absmax > 0.0 { absmax / 127.0 } else { 1.0 };
+        for j in 0..n {
+            let qsum: f32 = wq.row(j).iter().map(|&q| (q as i32).abs() as f32).sum();
+            let slack = 1e-3 * reference.at(r, j).abs().max(1.0);
+            let bound = 0.5 * sx * wq.scale_of_row(j) * qsum + slack;
+            let err = (reference.at(r, j) - integer.at(r, j)).abs();
+            assert!(err <= bound, "({r},{j}): err {err} > bound {bound}");
+        }
+    }
+}
+
+#[test]
+fn int8_paths_bit_identical_across_threads_and_exact_backward() {
+    let mut rng = Rng::new(88);
+    let x = Tensor::randn(&[64, 128], &mut rng, 1.0);
+    let w = Tensor::randn(&[128, 96], &mut rng, 1.0);
+    let wq = QuantTensor::quantize(&w.t(), QUANT_GROUP_ROWS);
+    let dy = Tensor::randn(&[64, 96], &mut rng, 1.0);
+    // Integer accumulation is exact, so the forward product must be
+    // bit-stable under any thread partition on every backend.
+    for kern in [Kernels::scalar(), Kernels::detected(false)] {
+        let tag = kern.describe();
+        kernels::with_kernels(kern, || {
+            let fwd1 = pool::with_threads(1, || quant::matmul_xw_q(&x, &wq));
+            let bwd1 = pool::with_threads(1, || quant::matmul_dyw_t_q(&dy, &wq));
+            for t in [2usize, 5] {
+                let fwd = pool::with_threads(t, || quant::matmul_xw_q(&x, &wq));
+                let bwd = pool::with_threads(t, || quant::matmul_dyw_t_q(&dy, &wq));
+                assert_bits_eq(&fwd1.data, &fwd.data, &format!("matmul_xw_q t={t} [{tag}]"));
+                assert_bits_eq(&bwd1.data, &bwd.data, &format!("matmul_dyw_t_q t={t} [{tag}]"));
+            }
+        });
+    }
+    // The backward product never quantizes activations: exact on every
+    // backend in both modes.
+    let b_s = kernels::with_kernels(Kernels::scalar(), || quant::matmul_dyw_t_q(&dy, &wq));
+    let b_v = kernels::with_kernels(Kernels::detected(true), || quant::matmul_dyw_t_q(&dy, &wq));
+    assert_bits_eq(&b_s.data, &b_v.data, "matmul_dyw_t_q scalar vs detected+relaxed");
+}
+
+// ---- forced scalar pins the pre-kernels bits --------------------------
+
+/// Verbatim reimplementation of the pre-kernels `tensor::dot` (four
+/// independent accumulators, `(s0+s1)+(s2+s3)` combine, serial tail).
+fn legacy_dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = [0f32; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Verbatim reimplementation of the pre-kernels `quant::dot_i8`.
+fn legacy_dot_i8(a: &[f32], b: &[i8]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let mut acc = [0f32; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i] as f32;
+        acc[1] += a[i + 1] * b[i + 1] as f32;
+        acc[2] += a[i + 2] * b[i + 2] as f32;
+        acc[3] += a[i + 3] * b[i + 3] as f32;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..n {
+        s += a[i] * b[i] as f32;
+    }
+    s
+}
+
+#[test]
+fn forced_scalar_reproduces_pre_kernels_bits() {
+    for &(m, k, n) in &[(7usize, 33usize, 5usize), (64, 64, 64), (3, 257, 9)] {
+        let mut rng = Rng::new((m * 131 + k * 17 + n) as u64);
+        let a = Tensor::randn(&[m, k], &mut rng, 1.0);
+        let bt = Tensor::randn(&[n, k], &mut rng, 1.0);
+        let got = kernels::with_kernels(Kernels::scalar(), || a.matmul_t(&bt));
+        for i in 0..m {
+            for j in 0..n {
+                let want = legacy_dot(a.row(i), bt.row(j));
+                assert_eq!(got.at(i, j).to_bits(), want.to_bits(), "matmul_t ({i},{j})");
+            }
+        }
+        let wq = QuantTensor::quantize(&bt, QUANT_GROUP_ROWS);
+        let gotq = kernels::with_kernels(Kernels::scalar(), || quant::matmul_xw_q(&a, &wq));
+        for i in 0..m {
+            for j in 0..n {
+                let want = wq.scale_of_row(j) * legacy_dot_i8(a.row(i), wq.row(j));
+                assert_eq!(gotq.at(i, j).to_bits(), want.to_bits(), "matmul_xw_q ({i},{j})");
+            }
+        }
+    }
+}
+
+// ---- model level -------------------------------------------------------
+
+/// Same synthetic setup as `pool_determinism.rs` (test binaries cannot
+/// share a module, so the few lines are duplicated).
+fn setup(key: &str) -> (Preset, StateLayout, Vec<f32>, FrozenMap) {
+    let m = Manifest::builtin();
+    let a = m.artifact(key).unwrap();
+    let p = m.preset(&a.preset).unwrap().clone();
+    let layout = a.layout().unwrap().clone();
+    let mut rng = Rng::new(31);
+    let mut state = vec![0f32; layout.total];
+    for f in &layout.params {
+        for i in 0..f.numel() {
+            state[f.offset + i] = rng.normal() * 0.05;
+        }
+    }
+    let mut frozen: FrozenMap = BTreeMap::new();
+    for (_, t) in a.inputs_with_role(Role::Frozen) {
+        let data: Vec<f32> = if t.name.ends_with("/mask") {
+            vec![1.0; t.numel()]
+        } else {
+            (0..t.numel()).map(|_| rng.normal() * 0.1).collect()
+        };
+        frozen.insert(t.name.clone(), FrozenValue::dense(Tensor::from_vec(&t.shape, data)));
+    }
+    (p, layout, state, frozen)
+}
+
+/// Padded positions (attn_mask 0.0) must not influence classification
+/// logits: the masked softmax skips their keys exactly, the padded-row
+/// GELU skip leaves their activations zero, and the Cls head pools
+/// position 0 only. Scribbling junk token ids into every padded slot must
+/// leave the logits bit-identical.
+#[test]
+fn padded_batch_logits_unchanged_by_pad_content() {
+    let (p, layout, state, frozen) = setup("tiny/train_step_qrlora_cls");
+    let bs = p.batch * p.max_seq;
+    let mut ids: Vec<i32> = (0..bs).map(|i| ((i * 7 + 2) % p.vocab) as i32).collect();
+    let type_ids = vec![0i32; bs];
+    let attn_mask: Vec<f32> =
+        (0..bs).map(|i| if i % p.max_seq < p.max_seq - 3 { 1.0 } else { 0.0 }).collect();
+    let labels: Vec<i32> = (0..p.batch).map(|i| (i % 2) as i32).collect();
+    let class_mask = vec![1.0f32; p.n_classes];
+    let example_w = vec![1.0f32; p.batch];
+    let logits = |ids: &[i32]| {
+        let batch = TaskBatchRef {
+            input_ids: ids,
+            type_ids: &type_ids,
+            attn_mask: &attn_mask,
+            labels_i32: &labels,
+            labels_f32: &[],
+            class_mask: &class_mask,
+            example_w: &example_w,
+        };
+        eval_forward(&p, MethodKind::QrLora, HeadKind::Cls, &layout, &state, &frozen, &batch)
+    };
+    let base = logits(&ids);
+    for (id, &mv) in ids.iter_mut().zip(&attn_mask) {
+        if mv == 0.0 {
+            *id = ((*id as usize * 31 + 17) % p.vocab) as i32;
+        }
+    }
+    let scribbled = logits(&ids);
+    assert_bits_eq(&base, &scribbled, "padded-token content leaked into logits");
+}
+
+#[test]
+fn model_steps_bit_identical_scalar_vs_detected_strict() {
+    let (p, layout, state, frozen) = setup("tiny/train_step_lora_cls");
+    let bs = p.batch * p.max_seq;
+    let ids: Vec<i32> = (0..bs).map(|i| ((i * 7 + 2) % p.vocab) as i32).collect();
+    let type_ids = vec![0i32; bs];
+    // Padded tail so the masked softmax/GELU paths run under both
+    // backends.
+    let attn_mask: Vec<f32> =
+        (0..bs).map(|i| if i % p.max_seq < p.max_seq - 3 { 1.0 } else { 0.0 }).collect();
+    let labels: Vec<i32> = (0..p.batch).map(|i| (i % 2) as i32).collect();
+    let class_mask = vec![1.0f32; p.n_classes];
+    let example_w = vec![1.0f32; p.batch];
+    let batch = TaskBatchRef {
+        input_ids: &ids,
+        type_ids: &type_ids,
+        attn_mask: &attn_mask,
+        labels_i32: &labels,
+        labels_f32: &[],
+        class_mask: &class_mask,
+        example_w: &example_w,
+    };
+    let (mk, hk) = (MethodKind::Lora, HeadKind::Cls);
+    let run = |kern: Kernels| {
+        kernels::with_kernels(kern, || {
+            let st = train_step(&p, mk, hk, &layout, &state, &frozen, &batch, 1e-3, 1.0);
+            let logits = eval_forward(&p, mk, hk, &layout, &state, &frozen, &batch);
+            (st, logits)
+        })
+    };
+    let (st_s, lg_s) = run(Kernels::scalar());
+    let (st_v, lg_v) = run(Kernels::detected(false));
+    assert_bits_eq(&st_s, &st_v, "train_step scalar vs detected");
+    assert_bits_eq(&lg_s, &lg_v, "eval_forward scalar vs detected");
+}

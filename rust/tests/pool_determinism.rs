@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 
 use qrlora::data::HeadKind;
+use qrlora::kernels::{self, Kernels};
 use qrlora::model::host::{
     eval_forward, pretrain_step, train_step, FrozenMap, FrozenValue, MethodKind, MlmBatchRef,
     TaskBatchRef,
@@ -30,32 +31,36 @@ fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
 #[test]
 fn matmul_kernels_bit_identical_across_thread_counts() {
     // Tall, wide, square, and ragged shapes; sizes straddle the serial
-    // cutoff so both paths are exercised.
-    let shapes = [
-        (1usize, 1usize, 1usize),
-        (3, 257, 5),
-        (64, 64, 64),
-        (130, 67, 33),
-        (5, 8, 512),
-        (256, 31, 7),
-        (97, 128, 130),
-    ];
-    for &(m, k, n) in &shapes {
+    // cutoff so both paths are exercised. The shapes are shared with the
+    // SIMD parity suite (`rust/tests/kernels.rs`) via
+    // `kernels::PARITY_SHAPES`, and per-thread bit-identity must hold for
+    // every kernel backend — the SIMD lanes carry the same accumulation
+    // chains the scalar reference does, and the pool partitions rows the
+    // same way regardless of the backend.
+    for &(m, k, n) in kernels::PARITY_SHAPES {
         let mut rng = Rng::new((m * 1_000_003 + k * 1009 + n) as u64);
         let a = Tensor::randn(&[m, k], &mut rng, 1.0);
         let bt = Tensor::randn(&[n, k], &mut rng, 1.0); // matmul_t RHS
         let b = Tensor::randn(&[k, n], &mut rng, 1.0); // matmul RHS
         let c = Tensor::randn(&[m, n], &mut rng, 1.0); // t_matmul RHS
-        let s_mt = pool::with_threads(1, || a.matmul_t(&bt));
-        let s_mm = pool::with_threads(1, || a.matmul(&b));
-        let s_tm = pool::with_threads(1, || a.t_matmul(&c));
-        for t in [2usize, 4, 7] {
-            let p_mt = pool::with_threads(t, || a.matmul_t(&bt));
-            let p_mm = pool::with_threads(t, || a.matmul(&b));
-            let p_tm = pool::with_threads(t, || a.t_matmul(&c));
-            assert_bits_eq(&s_mt.data, &p_mt.data, &format!("matmul_t {m}x{k}x{n} t={t}"));
-            assert_bits_eq(&s_mm.data, &p_mm.data, &format!("matmul {m}x{k}x{n} t={t}"));
-            assert_bits_eq(&s_tm.data, &p_tm.data, &format!("t_matmul {m}x{k}x{n} t={t}"));
+        for kern in [Kernels::scalar(), Kernels::detected(false)] {
+            let tag = kern.describe();
+            kernels::with_kernels(kern, || {
+                let s_mt = pool::with_threads(1, || a.matmul_t(&bt));
+                let s_mm = pool::with_threads(1, || a.matmul(&b));
+                let s_tm = pool::with_threads(1, || a.t_matmul(&c));
+                for t in [2usize, 4, 7] {
+                    let p_mt = pool::with_threads(t, || a.matmul_t(&bt));
+                    let p_mm = pool::with_threads(t, || a.matmul(&b));
+                    let p_tm = pool::with_threads(t, || a.t_matmul(&c));
+                    let what = format!("matmul_t {m}x{k}x{n} t={t} [{tag}]");
+                    assert_bits_eq(&s_mt.data, &p_mt.data, &what);
+                    let what = format!("matmul {m}x{k}x{n} t={t} [{tag}]");
+                    assert_bits_eq(&s_mm.data, &p_mm.data, &what);
+                    let what = format!("t_matmul {m}x{k}x{n} t={t} [{tag}]");
+                    assert_bits_eq(&s_tm.data, &p_tm.data, &what);
+                }
+            });
         }
     }
 }

@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::{task, HeadKind, Lexicon, TaskData};
+use qrlora::kernels::{self, Kernels};
 use qrlora::linalg::RankRule;
 use qrlora::quant::{self, QuantTensor, QUANT_GROUP_ROWS};
 use qrlora::runtime::{Backend, HostBackend};
@@ -80,26 +81,31 @@ fn outlier_rows_do_not_poison_other_groups() {
     assert!(q.scale_of_row(9) > 1.0, "outlier group must carry a large scale");
 }
 
-/// The fused kernels must agree with dequantize-then-matmul (the only
-/// difference is where the scale multiply lands, so tolerance is fp32
-/// rounding, not quantization error).
+/// The fused scalar kernels must agree with dequantize-then-matmul (the
+/// only difference is where the scale multiply lands, so tolerance is fp32
+/// rounding, not quantization error). Pinned to the scalar backend: on
+/// SIMD backends `matmul_xw_q` takes the integer-accumulate path, whose
+/// additional (bounded, documented) activation-quantization error is
+/// covered by `rust/tests/kernels.rs` instead.
 #[test]
 fn fused_kernels_match_dequantized_reference() {
     let mut rng = Rng::new(5);
     let x = Tensor::randn(&[8, 48], &mut rng, 1.0);
     let w = Tensor::randn(&[48, 24], &mut rng, 0.8);
     let wq = QuantTensor::quantize(&w.t(), QUANT_GROUP_ROWS); // stored (24, 48)
-
-    let fwd = quant::matmul_qt(&x, &wq); // x·W via int8
-    let fwd_ref = x.matmul(&wq.dequantize().t());
-    assert_eq!(fwd.shape, vec![8, 24]);
-    assert!(fwd.max_abs_diff(&fwd_ref) < 1e-3, "fwd diff {}", fwd.max_abs_diff(&fwd_ref));
-
     let dy = Tensor::randn(&[8, 24], &mut rng, 1.0);
-    let bwd = quant::matmul_q(&dy, &wq); // dy·Wᵀ via int8
-    let bwd_ref = dy.matmul(&wq.dequantize());
-    assert_eq!(bwd.shape, vec![8, 48]);
-    assert!(bwd.max_abs_diff(&bwd_ref) < 1e-3, "bwd diff {}", bwd.max_abs_diff(&bwd_ref));
+
+    kernels::with_kernels(Kernels::scalar(), || {
+        let fwd = quant::matmul_xw_q(&x, &wq); // x·W via int8
+        let fwd_ref = x.matmul(&wq.dequantize().t());
+        assert_eq!(fwd.shape, vec![8, 24]);
+        assert!(fwd.max_abs_diff(&fwd_ref) < 1e-3, "fwd diff {}", fwd.max_abs_diff(&fwd_ref));
+
+        let bwd = quant::matmul_dyw_t_q(&dy, &wq); // dy·Wᵀ via int8
+        let bwd_ref = dy.matmul(&wq.dequantize());
+        assert_eq!(bwd.shape, vec![8, 48]);
+        assert!(bwd.max_abs_diff(&bwd_ref) < 1e-3, "bwd diff {}", bwd.max_abs_diff(&bwd_ref));
+    });
 }
 
 /// Kernel-level thread-count bit-identity (shapes big enough to clear the
@@ -111,14 +117,28 @@ fn fused_kernels_bit_identical_across_threads() {
     let w = Tensor::randn(&[128, 96], &mut rng, 1.0);
     let wq = QuantTensor::quantize(&w.t(), QUANT_GROUP_ROWS);
     let dy = Tensor::randn(&[64, 96], &mut rng, 1.0);
-    let fwd1 = pool::with_threads(1, || quant::matmul_qt(&x, &wq));
-    let bwd1 = pool::with_threads(1, || quant::matmul_q(&dy, &wq));
+    let fwd1 = pool::with_threads(1, || quant::matmul_xw_q(&x, &wq));
+    let bwd1 = pool::with_threads(1, || quant::matmul_dyw_t_q(&dy, &wq));
     for t in [2usize, 3, 5] {
-        let fwd = pool::with_threads(t, || quant::matmul_qt(&x, &wq));
-        let bwd = pool::with_threads(t, || quant::matmul_q(&dy, &wq));
-        assert_eq!(fwd, fwd1, "matmul_qt t={t}");
-        assert_eq!(bwd, bwd1, "matmul_q t={t}");
+        let fwd = pool::with_threads(t, || quant::matmul_xw_q(&x, &wq));
+        let bwd = pool::with_threads(t, || quant::matmul_dyw_t_q(&dy, &wq));
+        assert_eq!(fwd, fwd1, "matmul_xw_q t={t}");
+        assert_eq!(bwd, bwd1, "matmul_dyw_t_q t={t}");
     }
+}
+
+/// The deprecated `matmul_qt`/`matmul_q` names must stay exact aliases of
+/// `matmul_xw_q`/`matmul_dyw_t_q` for their one-PR deprecation window.
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_alias_renamed_kernels() {
+    let mut rng = Rng::new(11);
+    let x = Tensor::randn(&[6, 40], &mut rng, 1.0);
+    let w = Tensor::randn(&[40, 16], &mut rng, 0.7);
+    let wq = QuantTensor::quantize(&w.t(), QUANT_GROUP_ROWS);
+    let dy = Tensor::randn(&[6, 16], &mut rng, 1.0);
+    assert_eq!(quant::matmul_qt(&x, &wq), quant::matmul_xw_q(&x, &wq));
+    assert_eq!(quant::matmul_q(&dy, &wq), quant::matmul_dyw_t_q(&dy, &wq));
 }
 
 /// Full quantized train/eval steps through the backend must be
