@@ -764,69 +764,87 @@ fn main() -> anyhow::Result<()> {
         // line-delimited JSON, shed-and-retry flow control. The rows are
         // the client-observed latency percentiles — what the network
         // front-end adds on top of the in-process `serve_fleet` rows.
+        // Runs twice: observability registry on (the default) and with
+        // QRLORA_OBS=0 in the server for the `[obs-off]` twin rows. The
+        // pair holds the obs layer's <2% throughput-overhead contract —
+        // advisory here (printed delta, no hard gate): bench numbers on
+        // shared CI boxes are too noisy to assert on.
         {
             println!("\n# P9 socket serving (serve --listen + soak load generator)");
-            let soak_store = std::env::temp_dir().join("qrlora_bench_soak");
-            let _ = std::fs::remove_dir_all(&soak_store);
             let soak_requests = 48usize;
-            let mut child = std::process::Command::new(exe)
-                .args(["serve", "--listen", "127.0.0.1:0"])
-                .args(["--requests", &soak_requests.to_string()])
-                .args(["--pretrain-steps", "60", "--warmup-steps", "40", "--steps", "40"])
-                .args(["--adapter-store", &soak_store.display().to_string()])
-                .stdout(std::process::Stdio::piped())
-                .spawn()
-                .map_err(|e| anyhow::anyhow!("cannot spawn the soak bench server: {e}"))?;
-            let stdout = child.stdout.take().expect("piped stdout");
-            let mut lines = std::io::BufReader::new(stdout).lines();
-            let addr = loop {
-                let Some(line) = lines.next() else {
-                    let _ = child.kill();
-                    anyhow::bail!("soak bench server exited before NET_LISTEN");
-                };
-                if let Some(rest) = line?.strip_prefix("NET_LISTEN ") {
-                    break rest.split_whitespace().next().unwrap_or("").to_string();
+            let mut rps_by_mode: Vec<f64> = Vec::new();
+            for (suffix, obs_on) in [("", true), (" [obs-off]", false)] {
+                let soak_store = std::env::temp_dir()
+                    .join(format!("qrlora_bench_soak{}", if obs_on { "" } else { "_off" }));
+                let _ = std::fs::remove_dir_all(&soak_store);
+                let mut cmd = std::process::Command::new(exe);
+                cmd.args(["serve", "--listen", "127.0.0.1:0"])
+                    .args(["--requests", &soak_requests.to_string()])
+                    .args(["--pretrain-steps", "60", "--warmup-steps", "40", "--steps", "40"])
+                    .args(["--adapter-store", &soak_store.display().to_string()])
+                    .stdout(std::process::Stdio::piped());
+                if !obs_on {
+                    cmd.env("QRLORA_OBS", "0");
                 }
-            };
-            // Keep draining the child's stdout so a full pipe can never
-            // wedge the server mid-soak.
-            let drain = std::thread::spawn(move || lines.for_each(|_| ()));
-            let soak_cfg = qrlora::experiments::ExpConfig {
-                pretrain_steps: 60,
-                warmup_steps: 40,
-                steps: 40,
-                ..Default::default()
-            };
-            let report = qrlora::server::net::soak(&soak_cfg, &[addr], soak_requests, 4)?;
-            let status = child.wait()?;
-            let _ = drain.join();
-            anyhow::ensure!(status.success(), "soak bench server failed after the load run");
-            let num = |k: &str| -> anyhow::Result<f64> {
-                Ok(report.req(k)?.as_f64().unwrap_or(0.0))
-            };
-            anyhow::ensure!(
-                num("protocol_errors")? == 0.0,
-                "soak bench hit protocol errors: {}",
-                report.to_string()
-            );
-            let rps = num("rps")?;
-            for (key, label) in [
-                ("p50_ms", "serve_soak p50"),
-                ("p99_ms", "serve_soak p99"),
-                ("p999_ms", "serve_soak p999"),
-            ] {
-                let ms = num(key)?;
-                let name = format!("{label} ({soak_requests} req, 4 lanes)");
-                println!("{name:<52} {ms:>9.3} ms  ({rps:.1} req/s end-to-end)");
-                let mut stats = Stats::new();
-                stats.push(ms);
-                rec.entries.push(Entry {
-                name,
-                threads: tmax,
-                simd: kernels::active().describe(),
-                stats,
-                iters: 1,
-            });
+                let mut child = cmd
+                    .spawn()
+                    .map_err(|e| anyhow::anyhow!("cannot spawn the soak bench server: {e}"))?;
+                let stdout = child.stdout.take().expect("piped stdout");
+                let mut lines = std::io::BufReader::new(stdout).lines();
+                let addr = loop {
+                    let Some(line) = lines.next() else {
+                        let _ = child.kill();
+                        anyhow::bail!("soak bench server exited before NET_LISTEN");
+                    };
+                    if let Some(rest) = line?.strip_prefix("NET_LISTEN ") {
+                        break rest.split_whitespace().next().unwrap_or("").to_string();
+                    }
+                };
+                // Keep draining the child's stdout so a full pipe can
+                // never wedge the server mid-soak.
+                let drain = std::thread::spawn(move || lines.for_each(|_| ()));
+                let soak_cfg = qrlora::experiments::ExpConfig {
+                    pretrain_steps: 60,
+                    warmup_steps: 40,
+                    steps: 40,
+                    ..Default::default()
+                };
+                let report = qrlora::server::net::soak(&soak_cfg, &[addr], soak_requests, 4)?;
+                let status = child.wait()?;
+                let _ = drain.join();
+                anyhow::ensure!(status.success(), "soak bench server failed after the load run");
+                let num = |k: &str| -> anyhow::Result<f64> {
+                    Ok(report.req(k)?.as_f64().unwrap_or(0.0))
+                };
+                anyhow::ensure!(
+                    num("protocol_errors")? == 0.0,
+                    "soak bench hit protocol errors: {}",
+                    report.to_string()
+                );
+                let rps = num("rps")?;
+                rps_by_mode.push(rps);
+                for (key, label) in [
+                    ("p50_ms", "serve_soak p50"),
+                    ("p99_ms", "serve_soak p99"),
+                    ("p999_ms", "serve_soak p999"),
+                ] {
+                    let ms = num(key)?;
+                    let name = format!("{label} ({soak_requests} req, 4 lanes){suffix}");
+                    println!("{name:<52} {ms:>9.3} ms  ({rps:.1} req/s end-to-end)");
+                    let mut stats = Stats::new();
+                    stats.push(ms);
+                    rec.entries.push(Entry {
+                        name,
+                        threads: tmax,
+                        simd: kernels::active().describe(),
+                        stats,
+                        iters: 1,
+                    });
+                }
+            }
+            if let [on, off] = rps_by_mode[..] {
+                let overhead = (off - on) / off.max(1e-9) * 100.0;
+                println!("serve_soak obs overhead: {overhead:+.2}% rps (contract <2%, advisory)");
             }
         }
     }

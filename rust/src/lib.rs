@@ -29,6 +29,7 @@ pub mod data;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod experiments;
 pub mod kernels;
 pub mod quant;

@@ -37,6 +37,12 @@
 //! the store/lock/checkpoint seams so the chaos tests and CI smoke jobs
 //! can exercise supervision, retry, and degraded serving against the
 //! real binary. Unset (the default), every hook is a no-op.
+//!
+//! Observability: the [`qrlora::obs`] registry instruments serving
+//! end-to-end — `GET /metrics` (Prometheus text), `GET /metrics.json`,
+//! and `serve --metrics-json PATH` export it; `QRLORA_OBS=0` disables
+//! metric mutation. `QRLORA_LOG=error|warn|info|debug` is the env twin
+//! of `--log` (the flag wins when both are given).
 
 use qrlora::adapters::{Proj, Scope};
 use qrlora::data::ALL_TASKS;
@@ -82,6 +88,10 @@ fn main() {
     };
     if let Some(level) = args.get("log") {
         let _ = qrlora::util::log::set_level_str(level);
+    } else if let Ok(level) = std::env::var("QRLORA_LOG") {
+        // Env twin of --log, for contexts where the flag can't be
+        // threaded (fleet workers, CI harnesses). CLI > env > default.
+        let _ = qrlora::util::log::set_level_str(&level);
     } else if args.has("verbose") {
         qrlora::util::log::set_level(qrlora::util::log::Level::Debug);
     }
@@ -350,6 +360,21 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = exp_config(args)?;
     let sc = qrlora::server::ServeConfig::from_args(args)?;
+    let result = run_serve(&cfg, &sc, args);
+    // Final registry snapshot, written even when serving errored —
+    // post-mortem metrics matter most for failed runs. In fleet
+    // supervisor mode this is the supervisor's own (mostly idle)
+    // registry; workers ship theirs in the FLEET_WORKER reports.
+    if let Some(path) = &sc.metrics_json {
+        match std::fs::write(path, qrlora::obs::snapshot().to_json().pretty()) {
+            Ok(()) => println!("[serve] metrics snapshot written to {}", path.display()),
+            Err(e) => errorln!("cannot write --metrics-json {}: {e}", path.display()),
+        }
+    }
+    result
+}
+
+fn run_serve(cfg: &ExpConfig, sc: &qrlora::server::ServeConfig, args: &Args) -> anyhow::Result<()> {
     // Fleet worker mode (spawned by the supervisor, not typed by hand):
     // `--worker-id I --fleet-tasks a,b` trains the owned tasks, store-
     // watches for the rest, then serves the full mixed stream.
@@ -363,7 +388,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .filter(|s| !s.is_empty())
             .map(str::to_string)
             .collect();
-        return qrlora::server::fleet::run_worker(&cfg, &sc, id, &owned);
+        return qrlora::server::fleet::run_worker(cfg, sc, id, &owned);
     }
     // Fleet supervisor mode: partition tasks over N worker processes
     // sharing one adapter store, then aggregate their reports.
@@ -372,15 +397,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .parse()
             .map_err(|_| anyhow::anyhow!("--fleet expects a worker count, got {v:?}"))?;
         anyhow::ensure!(n >= 1, "--fleet needs at least one worker");
-        return qrlora::server::fleet::run_fleet(&cfg, &sc, n);
+        return qrlora::server::fleet::run_fleet(cfg, sc, n);
     }
     // Socket front-end: bind `--listen`, serve the request budget over
     // TCP (line-delimited JSON + a minimal HTTP shim), then report.
     if let Some(listen) = sc.listen.clone() {
         let mut core =
-            qrlora::server::ServeCore::with_method(&cfg, sc.adapter_store.as_deref(), &sc.method)?;
+            qrlora::server::ServeCore::with_method(cfg, sc.adapter_store.as_deref(), &sc.method)?;
         core.prepare(qrlora::server::SERVE_TASKS)?;
-        let stats = qrlora::server::net::serve_listen(&mut core, &sc, &listen)?;
+        let stats = qrlora::server::net::serve_listen(&mut core, sc, &listen)?;
         core.flush_publishes();
         println!(
             "[serve] socket serving done: {} request(s), {} shed, {} rejected, {:.1} req/s",
@@ -391,7 +416,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         );
         return Ok(());
     }
-    qrlora::server::demo(&cfg, &sc)
+    qrlora::server::demo(cfg, sc)
 }
 
 /// `soak` — socket load generator for `serve --listen` endpoints.

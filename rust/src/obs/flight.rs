@@ -1,0 +1,237 @@
+//! The crash flight recorder: a lock-free, fixed-capacity,
+//! overwrite-oldest ring of per-request span records.
+//!
+//! Every request admitted by the socket front-end gets a trace id
+//! ([`crate::obs::next_trace_id`]) and leaves one span per stage it
+//! crosses:
+//!
+//! ```text
+//! admit ──▶ queue ──▶ execute ──▶ write
+//! (reader    (engine    (router     (writer thread,
+//!  thread)    pop)       batch)      before the bytes hit the wire)
+//! ```
+//!
+//! Background work (store loads, train-on-miss) records spans with
+//! trace 0. Writers claim a slot with one `fetch_add` on the ring
+//! cursor, mark it in-progress, fill the fields with relaxed stores, and
+//! publish with a release store of the final sequence number; readers
+//! skip in-progress and empty slots, so a torn read is impossible and
+//! recording never blocks a request.
+//!
+//! The ring holds the last [`CAPACITY`] spans — enough to reconstruct
+//! what every in-flight request was doing when something died. It dumps
+//! as `FLIGHT {json}` JSONL lines to stderr (between `FLIGHT_BEGIN` /
+//! `FLIGHT_END` markers) on three triggers:
+//!
+//! * **panic** — [`install_panic_hook`] wraps the previous hook;
+//! * **injected fault fire** — `util/faults.rs` dumps before a
+//!   `crash`/`hang` action, so every chaos kill leaves a timeline;
+//! * **on demand** — `GET /flight` on the HTTP shim returns the same
+//!   spans as a JSON document.
+//!
+//! Recording is gated on [`crate::obs::enabled`]; dumping is not (an
+//! obs-off process dumps an empty ring, loudly, rather than nothing).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Once, OnceLock};
+
+use crate::util::json::Json;
+
+/// Ring capacity in spans. At four spans per request this covers the
+/// last ~1k requests — far past any in-flight set.
+pub const CAPACITY: usize = 4096;
+
+/// Span stage names, indexed by the `STAGE_*` constants.
+pub const STAGES: &[&str] = &["admit", "queue", "execute", "write", "store.load", "store.train"];
+
+pub const STAGE_ADMIT: usize = 0;
+pub const STAGE_QUEUE: usize = 1;
+pub const STAGE_EXECUTE: usize = 2;
+pub const STAGE_WRITE: usize = 3;
+pub const STAGE_STORE_LOAD: usize = 4;
+pub const STAGE_STORE_TRAIN: usize = 5;
+
+/// Slot sequence value marking "a writer is mid-publish".
+const IN_PROGRESS: u64 = u64::MAX;
+
+/// One ring slot. `seq` is the publication gate: 0 = never written,
+/// [`IN_PROGRESS`] = being written, anything else = the (1-based) global
+/// sequence number of a complete record.
+struct Slot {
+    seq: AtomicU64,
+    trace: AtomicU64,
+    conn: AtomicU64,
+    stage: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+}
+
+struct Ring {
+    cursor: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+fn ring() -> &'static Ring {
+    static RING: OnceLock<Ring> = OnceLock::new();
+    RING.get_or_init(|| Ring {
+        cursor: AtomicU64::new(0),
+        slots: (0..CAPACITY)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                trace: AtomicU64::new(0),
+                conn: AtomicU64::new(0),
+                stage: AtomicU64::new(0),
+                start_us: AtomicU64::new(0),
+                dur_us: AtomicU64::new(0),
+            })
+            .collect(),
+    })
+}
+
+/// Record one span. Lock-free: claim a sequence number, mark the slot
+/// in-progress, fill, publish with a release store. Overwrites the
+/// oldest record once the ring is full. No-op when obs is disabled.
+pub fn record(trace: u64, conn: u64, stage: usize, start_us: u64, dur_us: u64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let r = ring();
+    let seq = r.cursor.fetch_add(1, Ordering::Relaxed) + 1;
+    let slot = &r.slots[(seq - 1) as usize % CAPACITY];
+    slot.seq.store(IN_PROGRESS, Ordering::Release);
+    slot.trace.store(trace, Ordering::Relaxed);
+    slot.conn.store(conn, Ordering::Relaxed);
+    slot.stage.store(stage as u64, Ordering::Relaxed);
+    slot.start_us.store(start_us, Ordering::Relaxed);
+    slot.dur_us.store(dur_us, Ordering::Relaxed);
+    slot.seq.store(seq, Ordering::Release);
+}
+
+/// Snapshot every complete record, oldest first. Skips empty and
+/// in-progress slots; a slot overwritten mid-read shows up as whichever
+/// complete record won — never a torn mix (the fields are re-checked
+/// against an unchanged `seq`).
+pub fn spans() -> Vec<Json> {
+    let r = ring();
+    let mut out: Vec<(u64, Json)> = Vec::new();
+    for slot in &r.slots {
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq == 0 || seq == IN_PROGRESS {
+            continue;
+        }
+        let doc = Json::obj(vec![
+            ("seq", Json::num(seq as f64)),
+            ("trace", Json::num(slot.trace.load(Ordering::Relaxed) as f64)),
+            ("conn", Json::num(slot.conn.load(Ordering::Relaxed) as f64)),
+            (
+                "stage",
+                Json::str(
+                    STAGES.get(slot.stage.load(Ordering::Relaxed) as usize).copied().unwrap_or("?"),
+                ),
+            ),
+            ("start_us", Json::num(slot.start_us.load(Ordering::Relaxed) as f64)),
+            ("dur_us", Json::num(slot.dur_us.load(Ordering::Relaxed) as f64)),
+        ]);
+        if slot.seq.load(Ordering::Acquire) == seq {
+            out.push((seq, doc));
+        }
+    }
+    out.sort_by_key(|(seq, _)| *seq);
+    out.into_iter().map(|(_, doc)| doc).collect()
+}
+
+/// Dump the ring as JSONL to stderr: one `FLIGHT {json}` line per span
+/// between `FLIGHT_BEGIN`/`FLIGHT_END` markers. Called on panic, on an
+/// injected-fault fire, and never blocks recording.
+pub fn dump_stderr(reason: &str) {
+    let spans = spans();
+    eprintln!("FLIGHT_BEGIN reason={reason} spans={}", spans.len());
+    for s in &spans {
+        eprintln!("FLIGHT {}", s.to_string());
+    }
+    eprintln!("FLIGHT_END reason={reason}");
+}
+
+/// The on-demand (`GET /flight`) form: the same spans as one JSON
+/// document.
+pub fn dump_json(reason: &str) -> Json {
+    Json::obj(vec![("reason", Json::str(reason)), ("spans", Json::Arr(spans()))])
+}
+
+/// Install a panic hook that dumps the ring before delegating to the
+/// previous hook. Idempotent (`Once`); called from the serve paths.
+pub fn install_panic_hook() {
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            dump_stderr("panic");
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trace ids in a range no other test uses, so the shared global
+    /// ring can be filtered per test.
+    fn mine(spans: &[Json], base: u64, n: u64) -> Vec<Json> {
+        spans
+            .iter()
+            .filter(|s| {
+                s.get("trace")
+                    .and_then(Json::as_f64)
+                    .map(|t| (t as u64) >= base && (t as u64) < base + n)
+                    .unwrap_or(false)
+            })
+            .cloned()
+            .collect()
+    }
+
+    #[test]
+    fn records_publish_in_sequence_order() {
+        let base = 0xF100_0000u64;
+        for i in 0..4 {
+            record(base + i, 7, STAGE_QUEUE, 100 + i, 10);
+        }
+        let got = mine(&spans(), base, 4);
+        assert_eq!(got.len(), 4);
+        let seqs: Vec<u64> =
+            got.iter().map(|s| s.get("seq").and_then(Json::as_f64).unwrap() as u64).collect();
+        assert!(seqs.windows(2).all(|w| w[0] < w[1]), "spans must come back oldest-first");
+        assert_eq!(got[0].get("stage").and_then(Json::as_str), Some("queue"));
+        assert_eq!(got[0].get("conn").and_then(Json::as_usize), Some(7));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_past_capacity() {
+        let base = 0xF200_0000u64;
+        let n = (CAPACITY + 16) as u64;
+        for i in 0..n {
+            record(base + i, 0, STAGE_EXECUTE, i, 1);
+        }
+        let got = mine(&spans(), base, n);
+        // Other tests share the ring, so some of our spans may have been
+        // overwritten too — but the *early* ones must be gone and the
+        // *latest* must survive.
+        assert!(got.len() <= CAPACITY, "ring must stay bounded");
+        let traces: Vec<u64> =
+            got.iter().map(|s| s.get("trace").and_then(Json::as_f64).unwrap() as u64).collect();
+        assert!(!traces.contains(&base), "the oldest record must be overwritten");
+        assert!(traces.contains(&(base + n - 1)), "the newest record must survive");
+    }
+
+    #[test]
+    fn dump_json_carries_reason_and_spans() {
+        let base = 0xF300_0000u64;
+        record(base, 1, STAGE_WRITE, 5, 2);
+        let doc = dump_json("test");
+        assert_eq!(doc.get("reason").and_then(Json::as_str), Some("test"));
+        let spans = doc.get("spans").and_then(Json::as_arr).unwrap();
+        assert!(!mine(spans, base, 1).is_empty(), "the recorded span must be in the dump");
+        // The JSONL stderr form shares the same span serialization.
+        dump_stderr("test");
+    }
+}

@@ -1,0 +1,201 @@
+//! The one latency-histogram layout for the whole tree: fixed bucket
+//! bounds, the nearest-rank percentile, and a mergeable owned histogram.
+//!
+//! Everything that measures latency — the `soak` client report, the
+//! server-side `net.*_ms` registry histograms, the `/metrics` export, and
+//! the fleet aggregator — shares [`BOUNDS_MS`]. Fixed (not
+//! data-dependent) bounds are what make histograms from different runs,
+//! workers, and processes directly mergeable: merging is an elementwise
+//! bucket-count sum ([`Hist::merge`]), with no re-binning and no loss.
+//! This machinery started life private to `server/net.rs`; it moved here
+//! so the bucket layout can never fork between the client and the server
+//! side of a measurement.
+
+use crate::util::json::Json;
+
+/// Upper bounds (ms) of the fixed latency-histogram buckets; one final
+/// unbounded bucket follows.
+pub const BOUNDS_MS: &[f64] = &[
+    0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0,
+];
+
+/// Total bucket count: every bound's `≤` bucket plus the unbounded tail.
+pub const BUCKETS: usize = BOUNDS_MS.len() + 1;
+
+/// The bucket index a sample in milliseconds falls into.
+pub fn bucket(ms: f64) -> usize {
+    BOUNDS_MS.iter().position(|&ub| ms <= ub).unwrap_or(BOUNDS_MS.len())
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// An owned fixed-bucket histogram — the mergeable snapshot form of a
+/// registry [`crate::obs::HistMetric`], and what the fleet aggregator
+/// folds worker reports into.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    /// Per-bucket sample counts, `BUCKETS` long.
+    pub counts: Vec<u64>,
+    /// Sum of all recorded samples, ms (for mean-latency derivation).
+    pub sum_ms: f64,
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist { counts: vec![0; BUCKETS], sum_ms: 0.0 }
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        self.counts[bucket(ms)] += 1;
+        self.sum_ms += ms;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Fold another histogram in: elementwise bucket-count sum. Sound
+    /// because every histogram in the tree shares [`BOUNDS_MS`].
+    pub fn merge(&mut self, other: &Hist) {
+        for (mine, theirs) in self.counts.iter_mut().zip(&other.counts) {
+            *mine += theirs;
+        }
+        self.sum_ms += other.sum_ms;
+    }
+
+    /// Nearest-rank quantile from bucket counts: the upper bound of the
+    /// bucket holding the target rank. Approximate by construction (a
+    /// bucket only knows its bound, not its samples); the unbounded tail
+    /// reports twice the last bound. 0.0 on an empty histogram.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((total as f64 * q).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return BOUNDS_MS.get(i).copied().unwrap_or(BOUNDS_MS[BOUNDS_MS.len() - 1] * 2.0);
+            }
+        }
+        BOUNDS_MS[BOUNDS_MS.len() - 1] * 2.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.total() as f64)),
+            ("sum_ms", Json::num(self.sum_ms)),
+            ("p50_ms", Json::num(self.quantile_ms(0.50))),
+            ("p99_ms", Json::num(self.quantile_ms(0.99))),
+            ("buckets", Json::arr_num(self.counts.iter().map(|&c| c as f64))),
+        ])
+    }
+
+    /// Tolerant parse of [`Hist::to_json`] output: an absent or
+    /// wrong-shape document is `None`, and a `buckets` array shorter than
+    /// [`BUCKETS`] (an older binary with fewer bounds) zero-extends —
+    /// never a hard error, so a fleet of mixed binaries still aggregates.
+    pub fn from_json(doc: &Json) -> Option<Hist> {
+        let buckets = doc.get("buckets")?.as_arr()?;
+        if buckets.len() > BUCKETS {
+            return None;
+        }
+        let mut h = Hist::new();
+        for (i, b) in buckets.iter().enumerate() {
+            h.counts[i] = b.as_f64()? as u64;
+        }
+        h.sum_ms = doc.get("sum_ms").and_then(Json::as_f64).unwrap_or(0.0);
+        Some(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(f64::from).collect();
+        assert_eq!(percentile(&xs, 0.50), 50.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 0.999), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn bucket_assignment_matches_bounds() {
+        assert_eq!(bucket(0.0), 0);
+        assert_eq!(bucket(0.25), 0, "bounds are inclusive upper bounds");
+        assert_eq!(bucket(0.26), 1);
+        assert_eq!(bucket(4096.0), BOUNDS_MS.len() - 1);
+        assert_eq!(bucket(1e9), BOUNDS_MS.len(), "overflow lands in the unbounded tail");
+    }
+
+    #[test]
+    fn merge_is_elementwise_and_lossless() {
+        let mut a = Hist::new();
+        let mut b = Hist::new();
+        for ms in [0.1, 3.0, 50.0, 5000.0] {
+            a.record(ms);
+        }
+        for ms in [0.2, 3.5, 9999.0] {
+            b.record(ms);
+        }
+        let (ta, tb) = (a.total(), b.total());
+        a.merge(&b);
+        assert_eq!(a.total(), ta + tb, "merge must not lose samples");
+        assert_eq!(a.counts[bucket(3.0)], 2, "both ≤4 ms samples share a bucket");
+        assert_eq!(a.counts[BOUNDS_MS.len()], 2, "both overflow samples share the tail");
+        assert!((a.sum_ms - (0.1 + 3.0 + 50.0 + 5000.0 + 0.2 + 3.5 + 9999.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_reports_bucket_upper_bounds() {
+        let mut h = Hist::new();
+        for _ in 0..99 {
+            h.record(1.5); // bucket ≤2 ms
+        }
+        h.record(100.0); // bucket ≤128 ms
+        assert_eq!(h.quantile_ms(0.50), 2.0);
+        assert_eq!(h.quantile_ms(0.99), 2.0);
+        assert_eq!(h.quantile_ms(1.0), 128.0);
+        assert_eq!(Hist::new().quantile_ms(0.5), 0.0, "empty histogram quantile is 0");
+    }
+
+    #[test]
+    fn json_round_trip_and_tolerant_parse() {
+        let mut h = Hist::new();
+        h.record(0.4);
+        h.record(77.0);
+        let back = Hist::from_json(&h.to_json()).unwrap();
+        assert_eq!(back, h);
+        // Older binaries: shorter bucket arrays zero-extend, absent
+        // fields parse as zero, wrong shapes are None — never a panic.
+        let short = Json::parse(r#"{"buckets": [1, 2]}"#).unwrap();
+        let parsed = Hist::from_json(&short).unwrap();
+        assert_eq!(parsed.counts[..2], [1, 2]);
+        assert_eq!(parsed.total(), 3);
+        assert_eq!(parsed.sum_ms, 0.0);
+        assert!(Hist::from_json(&Json::Null).is_none());
+        assert!(Hist::from_json(&Json::parse("{}").unwrap()).is_none());
+    }
+}

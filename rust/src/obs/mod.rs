@@ -1,0 +1,416 @@
+//! Dependency-free observability: a process-global metrics registry, a
+//! request-trace flight recorder, and export surfaces — std-only (no
+//! tokio, no prometheus crate), in the `util/pool.rs` house style.
+//!
+//! ## Three layers
+//!
+//! * **Metrics registry** (this module): named counters, gauges, and
+//!   fixed-bucket latency histograms, registered once and then updated
+//!   with relaxed atomic ops. Names follow `subsystem.metric{label}`
+//!   (e.g. `net.requests{code="ok"}`, `store.disk_hits`); the label part
+//!   is free-form and carried verbatim into both export formats. Hot
+//!   paths hold `&'static` handles (leaked once at registration) so a
+//!   metric update is one branch + one relaxed atomic — no lock, no hash.
+//! * **Flight recorder** ([`flight`]): a lock-free overwrite-oldest ring
+//!   of per-request span records (stage, start, duration), dumped as
+//!   JSONL to stderr on panic, on an injected-fault fire, and on demand
+//!   (`GET /flight`). See the module docs for the span lifecycle.
+//! * **Histogram plumbing** ([`hist`]): the one fixed bucket layout every
+//!   latency histogram in the tree shares, so client reports, server
+//!   registries, and fleet aggregates merge losslessly.
+//!
+//! ## On/off switch
+//!
+//! `QRLORA_OBS=0` (or `off`/`false`) disables every mutation: updates
+//! early-return before touching an atomic, span records are dropped, and
+//! snapshots come back zeroed. The default is **on** — the registry is
+//! cheap enough to leave enabled (the `serve_soak … [obs-off]` bench twin
+//! holds the contract at <2% throughput overhead). Export never turns
+//! off: `/metrics` and `--metrics-json` always answer, with zeros.
+//!
+//! ## Export
+//!
+//! [`snapshot`] freezes the registry into a [`Snapshot`]:
+//! [`Snapshot::to_json`] is the `GET /metrics.json` body, the
+//! `--metrics-json` file, and the `FLEET_WORKER` `metrics` field;
+//! [`Snapshot::prometheus_text`] is the `GET /metrics` body (`qrlora_`
+//! prefix, dots → underscores, histograms in cumulative
+//! `_bucket{le=…}`/`_sum`/`_count` form).
+
+pub mod flight;
+pub mod hist;
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Whether metric mutation is enabled (`QRLORA_OBS`, default on).
+/// Read once; flipping the env mid-process has no effect.
+pub fn enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        !matches!(
+            std::env::var("QRLORA_OBS").unwrap_or_default().to_ascii_lowercase().as_str(),
+            "0" | "off" | "false"
+        )
+    })
+}
+
+fn base_instant() -> Instant {
+    static BASE: OnceLock<Instant> = OnceLock::new();
+    *BASE.get_or_init(Instant::now)
+}
+
+/// Microseconds since this process first touched the observability layer
+/// — the shared monotonic clock for span timestamps and log lines.
+pub fn uptime_us() -> u64 {
+    base_instant().elapsed().as_micros() as u64
+}
+
+/// [`uptime_us`] in milliseconds (log-line resolution).
+pub fn uptime_ms() -> u64 {
+    base_instant().elapsed().as_millis() as u64
+}
+
+/// Allocate the next request trace id (process-unique, never 0 — 0 marks
+/// "no trace": background work and error replies).
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A monotonically increasing count. Updates are relaxed: totals are
+/// exact (atomic add), only cross-metric ordering is unspecified.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A settable instantaneous value (queue depth, resident adapters,
+/// degraded flag).
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.0.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn add(&self, d: i64) {
+        if enabled() {
+            self.0.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket latency histogram over [`hist::BOUNDS_MS`]. Recording
+/// is two relaxed atomic adds; snapshots are mergeable [`hist::Hist`]s.
+pub struct HistMetric {
+    counts: [AtomicU64; hist::BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl HistMetric {
+    pub fn record_ms(&self, ms: f64) {
+        if !enabled() {
+            return;
+        }
+        self.counts[hist::bucket(ms)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((ms * 1e3).max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> hist::Hist {
+        hist::Hist {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            sum_ms: self.sum_us.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+}
+
+/// A registered metric: a copyable wrapper over the leaked `&'static`
+/// handle, so lookups return it by value (never a reference into the
+/// registry's reallocating `Vec`).
+#[derive(Clone, Copy)]
+enum Metric {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Hist(&'static HistMetric),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist(_) => "histogram",
+        }
+    }
+}
+
+/// The process-global registry: name → metric, insertion under a mutex
+/// (cold path), updates lock-free through the returned `&'static`.
+fn registry() -> &'static Mutex<Vec<(String, Metric)>> {
+    static REGISTRY: OnceLock<Mutex<Vec<(String, Metric)>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn register(name: &str, make: impl FnOnce() -> Metric) -> Metric {
+    let mut reg = registry().lock().expect("obs: registry lock poisoned");
+    if let Some((_, m)) = reg.iter().find(|(n, _)| n == name) {
+        return *m;
+    }
+    let m = make();
+    reg.push((name.to_string(), m));
+    m
+}
+
+/// Register (or look up) a counter by name. Idempotent per name;
+/// registering one name as two different kinds is a programmer error and
+/// panics loudly.
+pub fn counter(name: &str) -> &'static Counter {
+    match register(name, || Metric::Counter(Box::leak(Box::new(Counter(AtomicU64::new(0)))))) {
+        Metric::Counter(c) => c,
+        other => panic!("obs: {name:?} already registered as a {}", other.kind()),
+    }
+}
+
+/// Register (or look up) a gauge by name.
+pub fn gauge(name: &str) -> &'static Gauge {
+    match register(name, || Metric::Gauge(Box::leak(Box::new(Gauge(AtomicI64::new(0)))))) {
+        Metric::Gauge(g) => g,
+        other => panic!("obs: {name:?} already registered as a {}", other.kind()),
+    }
+}
+
+/// Register (or look up) a histogram by name.
+pub fn histogram(name: &str) -> &'static HistMetric {
+    match register(name, || {
+        Metric::Hist(Box::leak(Box::new(HistMetric {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        })))
+    }) {
+        Metric::Hist(h) => h,
+        other => panic!("obs: {name:?} already registered as a {}", other.kind()),
+    }
+}
+
+/// A point-in-time copy of every registered metric, sorted by name.
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<(String, hist::Hist)>,
+}
+
+/// Freeze the registry. Relaxed loads: each value is exact, cross-metric
+/// consistency is best-effort (fine for monitoring, documented as such).
+pub fn snapshot() -> Snapshot {
+    let reg = registry().lock().expect("obs: registry lock poisoned");
+    let mut snap = Snapshot { counters: Vec::new(), gauges: Vec::new(), hists: Vec::new() };
+    for (name, metric) in reg.iter() {
+        match metric {
+            Metric::Counter(c) => snap.counters.push((name.clone(), c.get())),
+            Metric::Gauge(g) => snap.gauges.push((name.clone(), g.get())),
+            Metric::Hist(h) => snap.hists.push((name.clone(), h.snapshot())),
+        }
+    }
+    snap.counters.sort_by(|a, b| a.0.cmp(&b.0));
+    snap.gauges.sort_by(|a, b| a.0.cmp(&b.0));
+    snap.hists.sort_by(|a, b| a.0.cmp(&b.0));
+    snap
+}
+
+/// Convenience: a registered gauge's current value, 0 when the name was
+/// never registered (e.g. obs queried before the store layer ran).
+pub fn gauge_value(name: &str) -> i64 {
+    let reg = registry().lock().expect("obs: registry lock poisoned");
+    match reg.iter().find(|(n, _)| n == name) {
+        Some((_, Metric::Gauge(g))) => g.get(),
+        _ => 0,
+    }
+}
+
+/// Split `subsystem.metric{label}` into the Prometheus base name
+/// (`qrlora_subsystem_metric`) and the verbatim label part (`{label}` or
+/// empty).
+fn prom_name(name: &str) -> (String, String) {
+    let (base, label) = match name.find('{') {
+        Some(i) => (&name[..i], name[i..].to_string()),
+        None => (name, String::new()),
+    };
+    (format!("qrlora_{}", base.replace('.', "_")), label)
+}
+
+/// Inject `le="…"` into a (possibly empty) label part.
+fn with_le(label: &str, le: &str) -> String {
+    if label.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        format!("{},le=\"{le}\"}}", &label[..label.len() - 1])
+    }
+}
+
+impl Snapshot {
+    /// The JSON export form (`GET /metrics.json`, `--metrics-json`, the
+    /// `FLEET_WORKER` `metrics` field). Histograms carry derived
+    /// p50/p99 alongside raw buckets so dashboards need no client math.
+    pub fn to_json(&self) -> Json {
+        let counters = self.counters.iter().map(|(n, v)| (n.clone(), Json::num(*v as f64)));
+        let gauges = self.gauges.iter().map(|(n, v)| (n.clone(), Json::num(*v as f64)));
+        let hists = self.hists.iter().map(|(n, h)| (n.clone(), h.to_json()));
+        Json::obj(vec![
+            ("counters", Json::Obj(counters.collect())),
+            ("gauges", Json::Obj(gauges.collect())),
+            ("hists", Json::Obj(hists.collect())),
+            ("hist_bounds_ms", Json::arr_num(hist::BOUNDS_MS.iter().copied())),
+            ("uptime_ms", Json::num(uptime_ms() as f64)),
+        ])
+    }
+
+    /// Prometheus text exposition (`GET /metrics`): `qrlora_`-prefixed,
+    /// dots → underscores, the `{label}` part carried verbatim,
+    /// histograms as cumulative `_bucket{le=…}` + `_sum` + `_count`.
+    /// `# TYPE` lines are emitted once per base name, so labeled
+    /// variants of one metric share a single family declaration.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        let mut last_typed = String::new();
+        let mut typed = |out: &mut String, base: &str, kind: &str| {
+            if last_typed != base {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                last_typed = base.to_string();
+            }
+        };
+        for (name, v) in &self.counters {
+            let (base, label) = prom_name(name);
+            typed(&mut out, &base, "counter");
+            out.push_str(&format!("{base}{label} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let (base, label) = prom_name(name);
+            typed(&mut out, &base, "gauge");
+            out.push_str(&format!("{base}{label} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            let (base, label) = prom_name(name);
+            typed(&mut out, &base, "histogram");
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = match hist::BOUNDS_MS.get(i) {
+                    Some(ub) => ub.to_string(),
+                    None => "+Inf".to_string(),
+                };
+                out.push_str(&format!("{base}_bucket{} {cum}\n", with_le(&label, &le)));
+            }
+            out.push_str(&format!("{base}_sum{label} {}\n", h.sum_ms));
+            out.push_str(&format!("{base}_count{label} {cum}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// N threads hammer one counter and one histogram; totals are exact
+    /// — the registry's core contract (relaxed ordering loses ordering,
+    /// never increments).
+    #[test]
+    fn concurrent_updates_keep_exact_totals() {
+        let c = counter("test.obs.concurrent_total");
+        let h = histogram("test.obs.concurrent_ms");
+        const THREADS: usize = 8;
+        const PER: usize = 10_000;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                s.spawn(move || {
+                    for i in 0..PER {
+                        c.inc();
+                        h.record_ms(((t * PER + i) % 300) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), (THREADS * PER) as u64);
+        assert_eq!(h.snapshot().total(), (THREADS * PER) as u64);
+    }
+
+    #[test]
+    fn registration_is_idempotent_per_name() {
+        let a = counter("test.obs.idempotent");
+        a.add(3);
+        let b = counter("test.obs.idempotent");
+        assert!(std::ptr::eq(a, b), "same name must yield the same handle");
+        assert_eq!(b.get(), 3);
+    }
+
+    #[test]
+    fn gauges_set_and_read_back() {
+        let g = gauge("test.obs.gauge");
+        g.set(41);
+        g.add(1);
+        assert_eq!(g.get(), 42);
+        assert_eq!(gauge_value("test.obs.gauge"), 42);
+        assert_eq!(gauge_value("test.obs.never_registered"), 0);
+    }
+
+    #[test]
+    fn snapshot_exports_both_formats() {
+        counter("test.obs.export{code=\"ok\"}").add(7);
+        gauge("test.obs.export_depth").set(3);
+        histogram("test.obs.export_ms").record_ms(1.5);
+        let snap = snapshot();
+        let doc = snap.to_json();
+        let ok = doc
+            .req("counters")
+            .unwrap()
+            .get("test.obs.export{code=\"ok\"}")
+            .and_then(Json::as_usize);
+        assert_eq!(ok, Some(7));
+        let round = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(round.req("counters").unwrap().as_obj().map(|o| o.is_empty()), Some(false));
+
+        let text = snap.prometheus_text();
+        assert!(text.contains("# TYPE qrlora_test_obs_export counter"), "{text}");
+        assert!(text.contains("qrlora_test_obs_export{code=\"ok\"} 7"), "{text}");
+        assert!(text.contains("qrlora_test_obs_export_depth 3"), "{text}");
+        assert!(text.contains("qrlora_test_obs_export_ms_bucket{le=\"2\"} 1"), "{text}");
+        assert!(text.contains("qrlora_test_obs_export_ms_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(text.contains("qrlora_test_obs_export_ms_count 1"), "{text}");
+        assert_eq!(
+            text.matches("# TYPE qrlora_test_obs_export counter").count(),
+            1,
+            "one family declaration per base name"
+        );
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+}

@@ -45,7 +45,10 @@
 //! stdout-silent for long stretches). The supervisor's relay thread
 //! timestamps every line; a worker silent past 3× the heartbeat period
 //! is declared hung, killed, and goes through the same restart budget as
-//! a crash. Supervision is crash-safe against torn state because every
+//! a crash. Socket workers get a second liveness channel: once one is
+//! stdout-quiet past a heartbeat period the supervisor probes its HTTP
+//! `GET /healthz`, and an answering worker counts as seen. Supervision
+//! is crash-safe against torn state because every
 //! write a worker can die inside — adapter records, the store index,
 //! `runs/` checkpoints — is temp-then-rename atomic with stale-debris
 //! sweeps on open.
@@ -60,7 +63,8 @@
 //! scale: adding a worker only moves the keys the new worker now owns
 //! (`ring_rebalance_moves_keys_only_to_the_new_worker` pins that down).
 
-use std::io::BufRead;
+use std::io::{BufRead, Read, Write};
+use std::net::TcpStream;
 use std::process::{Child, Command, Stdio};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
@@ -69,6 +73,7 @@ use std::time::{Duration, Instant};
 
 use super::{ServeConfig, ServeCore, SERVE_TASKS};
 use crate::experiments::{ExpConfig, Pipeline};
+use crate::obs::{self, hist};
 use crate::util::faults;
 use crate::util::hash::fnv1a_str;
 use crate::util::json::Json;
@@ -164,6 +169,11 @@ struct WorkerReport {
     shed: usize,
     /// 4xx-style protocol rejections (socket front-end only).
     rejected: usize,
+    /// The worker's [`crate::obs`] registry snapshot (counters, gauges,
+    /// hists), carried verbatim for fleet-wide merging. Absent from
+    /// older binaries' reports; the aggregator treats that as "nothing
+    /// to merge", never an error.
+    metrics: Option<Json>,
 }
 
 impl WorkerReport {
@@ -183,6 +193,7 @@ impl WorkerReport {
             warmup_steps: num("warmup_steps")? as usize,
             shed: count("shed"),
             rejected: count("rejected"),
+            metrics: doc.get("metrics").cloned(),
         })
     }
 }
@@ -195,6 +206,13 @@ struct LiveWorker {
     /// log output, `FLEET_HEARTBEAT`). The supervisor's hang detector
     /// compares it against 3× the heartbeat period.
     last_seen: Arc<Mutex<Instant>>,
+    /// Socket fleet only: the worker's listen address, probed over HTTP
+    /// `/healthz` as a second liveness channel. `None` for in-process
+    /// workers (stdout heartbeats are their only channel).
+    addr: Option<String>,
+    /// When the supervisor last probed `/healthz` (rate limit: at most
+    /// once per heartbeat period, and only once the worker is quiet).
+    last_probe: Instant,
 }
 
 /// Where one worker slot is in its lifecycle.
@@ -265,10 +283,13 @@ impl WorkerSpawner<'_> {
         }
         // Socket fleet: the supervisor hands out consecutive ports so a
         // load generator can enumerate them (`soak --connect`).
+        let mut addr = None;
         if let Some(base) = &self.sc.listen {
-            cmd.args(["--listen", &worker_listen_addr(base, w)?])
+            let worker_addr = worker_listen_addr(base, w)?;
+            cmd.args(["--listen", &worker_addr])
                 .args(["--reorder-window", &self.sc.reorder_window.to_string()])
                 .args(["--max-queue-depth", &self.sc.max_queue_depth.to_string()]);
+            addr = Some(worker_addr);
         }
         let mut child = cmd
             .spawn()
@@ -295,7 +316,31 @@ impl WorkerSpawner<'_> {
                 println!("[w{w}] {line}");
             }
         });
-        Ok(LiveWorker { child, relay, last_seen })
+        Ok(LiveWorker { child, relay, last_seen, addr, last_probe: Instant::now() })
+    }
+}
+
+/// Best-effort HTTP liveness probe of a worker's `GET /healthz`. Short
+/// timeouts throughout — the supervisor's poll loop must never stall on
+/// a wedged socket — and any failure just reads as "not alive via HTTP"
+/// (the stdout heartbeat remains the primary channel).
+fn probe_healthz(addr: &str) -> bool {
+    let Ok(sock) = addr.parse::<std::net::SocketAddr>() else {
+        return false;
+    };
+    let timeout = Duration::from_millis(200);
+    let Ok(mut stream) = TcpStream::connect_timeout(&sock, timeout) else {
+        return false;
+    };
+    let _ = stream.set_read_timeout(Some(timeout));
+    let _ = stream.set_write_timeout(Some(timeout));
+    if stream.write_all(b"GET /healthz HTTP/1.1\r\nHost: fleet\r\n\r\n").is_err() {
+        return false;
+    }
+    let mut buf = [0u8; 512];
+    match stream.read(&mut buf) {
+        Ok(n) if n > 0 => String::from_utf8_lossy(&buf[..n]).contains("200 OK"),
+        _ => false,
     }
 }
 
@@ -418,10 +463,38 @@ pub fn run_fleet(cfg: &ExpConfig, sc: &ServeConfig, workers: usize) -> anyhow::R
 /// Shed and rejected counts are summed so the aggregate can never claim
 /// every request succeeded while workers were load-shedding
 /// (`aggregate_carries_shed_and_rejected_counts` pins the fields).
+///
+/// Worker metric snapshots roll up too: counters sum by name into a
+/// fleet-wide `metrics` object, and the server-side `net.request_ms`
+/// histograms merge bucket-wise (sound because every histogram shares
+/// [`hist::BOUNDS_MS`]) into `hist`/`hist_bounds_ms` with derived
+/// `p50_ms`/`p99_ms`. A report without a `metrics` field (older worker
+/// binary, obs off) contributes nothing to the roll-up.
 fn aggregate(reports: &[WorkerReport]) -> Json {
     let total_requests: usize = reports.iter().map(|r| r.requests).sum();
     let max_wall_ms = reports.iter().map(|r| r.serve_wall_ms).fold(0.0f64, f64::max);
     let agg_rps = total_requests as f64 / (max_wall_ms / 1e3).max(1e-9);
+    let mut counters: std::collections::BTreeMap<String, u64> = std::collections::BTreeMap::new();
+    let mut lat = hist::Hist::new();
+    for r in reports {
+        let Some(m) = &r.metrics else { continue };
+        if let Some(cs) = m.get("counters").and_then(Json::as_obj) {
+            for (name, v) in cs {
+                if let Some(x) = v.as_f64() {
+                    *counters.entry(name.clone()).or_insert(0) += x as u64;
+                }
+            }
+        }
+        if let Some(h) = m
+            .get("hists")
+            .and_then(|hs| hs.get("net.request_ms"))
+            .and_then(hist::Hist::from_json)
+        {
+            lat.merge(&h);
+        }
+    }
+    let merged: Vec<(String, Json)> =
+        counters.into_iter().map(|(n, v)| (n, Json::num(v as f64))).collect();
     Json::obj(vec![
         ("workers", Json::num(reports.len() as f64)),
         ("requests", Json::num(total_requests as f64)),
@@ -430,6 +503,11 @@ fn aggregate(reports: &[WorkerReport]) -> Json {
         ("warmup_steps", Json::num(reports.iter().map(|r| r.warmup_steps).sum::<usize>() as f64)),
         ("shed", Json::num(reports.iter().map(|r| r.shed).sum::<usize>() as f64)),
         ("rejected", Json::num(reports.iter().map(|r| r.rejected).sum::<usize>() as f64)),
+        ("metrics", Json::Obj(merged)),
+        ("p50_ms", Json::num(lat.quantile_ms(0.50))),
+        ("p99_ms", Json::num(lat.quantile_ms(0.99))),
+        ("hist", Json::arr_num(lat.counts.iter().map(|&c| c as f64))),
+        ("hist_bounds_ms", Json::arr_num(hist::BOUNDS_MS.iter().copied())),
     ])
 }
 
@@ -472,6 +550,31 @@ fn supervise(
                             Some(Transition::Crashed)
                         }
                         Ok(None) => {
+                            // Socket workers are legitimately stdout-quiet
+                            // while serving (replies go to connections, not
+                            // the relay), so once one is silent past a
+                            // heartbeat period the supervisor also probes
+                            // its HTTP `/healthz`; an answer counts as
+                            // seen. Probe failures are ignored — the worker
+                            // may simply not have bound its listener yet.
+                            let heartbeat = hang_deadline / 3;
+                            if let Some(addr) = &live.addr {
+                                let quiet = live
+                                    .last_seen
+                                    .lock()
+                                    .map(|t| t.elapsed())
+                                    .unwrap_or(Duration::ZERO);
+                                if quiet >= heartbeat
+                                    && live.last_probe.elapsed() >= heartbeat
+                                {
+                                    live.last_probe = Instant::now();
+                                    if probe_healthz(addr) {
+                                        if let Ok(mut t) = live.last_seen.lock() {
+                                            *t = Instant::now();
+                                        }
+                                    }
+                                }
+                            }
                             let silent = live
                                 .last_seen
                                 .lock()
@@ -675,6 +778,7 @@ fn worker_report_json(worker: usize, stats: &super::RouterStats, warmup_steps: u
         ("warmup_steps", Json::num(warmup_steps as f64)),
         ("shed", Json::num(stats.shed as f64)),
         ("rejected", Json::num(stats.rejected as f64)),
+        ("metrics", obs::snapshot().to_json()),
     ])
 }
 
@@ -746,6 +850,7 @@ mod tests {
             warmup_steps: worker + 1,
             shed,
             rejected: rej,
+            metrics: None,
         }
     }
 
@@ -770,10 +875,51 @@ mod tests {
         let old = r#"{"requests": 4, "serve_wall_ms": 10.0, "rps": 400.0, "warmup_steps": 2}"#;
         let r = WorkerReport::parse(1, old).unwrap();
         assert_eq!((r.shed, r.rejected), (0, 0), "absent counts mean zero, not a parse error");
+        assert!(r.metrics.is_none(), "absent metrics is tolerated, not a parse error");
         let new = r#"{"requests": 4, "serve_wall_ms": 10.0, "rps": 400.0, "warmup_steps": 2,
-                      "shed": 3, "rejected": 1}"#;
+                      "shed": 3, "rejected": 1, "metrics": {"counters": {}}}"#;
         let r = WorkerReport::parse(2, new).unwrap();
         assert_eq!((r.shed, r.rejected), (3, 1));
+        assert!(r.metrics.is_some());
+    }
+
+    /// Counters sum by name and `net.request_ms` merges bucket-wise; a
+    /// report without metrics (older binary, obs off) contributes
+    /// nothing instead of breaking the roll-up.
+    #[test]
+    fn aggregate_merges_worker_metric_snapshots() {
+        let mk = |ok: usize, ms: f64| {
+            let mut h = hist::Hist::new();
+            h.record(ms);
+            Json::obj(vec![
+                (
+                    "counters",
+                    Json::obj(vec![("net.requests{code=\"ok\"}", Json::num(ok as f64))]),
+                ),
+                ("hists", Json::obj(vec![("net.request_ms", h.to_json())])),
+            ])
+        };
+        let mut a = report(0, 10, 2000.0, 0, 0);
+        a.metrics = Some(mk(10, 1.5));
+        let mut b = report(1, 6, 1000.0, 0, 0);
+        b.metrics = Some(mk(6, 100.0));
+        let c = report(2, 0, 0.0, 0, 0);
+        let agg = aggregate(&[a, b, c]);
+        let ok = agg
+            .req("metrics")
+            .unwrap()
+            .get("net.requests{code=\"ok\"}")
+            .and_then(Json::as_usize);
+        assert_eq!(ok, Some(16), "counters sum across workers");
+        let total: f64 =
+            agg.req("hist").unwrap().as_arr().unwrap().iter().filter_map(Json::as_f64).sum();
+        assert_eq!(total as u64, 2, "one latency sample per reporting worker");
+        assert_eq!(agg.req("p50_ms").unwrap().as_f64(), Some(2.0));
+        assert_eq!(agg.req("p99_ms").unwrap().as_f64(), Some(128.0));
+        assert_eq!(
+            agg.req("hist_bounds_ms").unwrap().as_arr().map(|a| a.len()),
+            Some(hist::BOUNDS_MS.len())
+        );
     }
 
     #[test]

@@ -35,9 +35,11 @@ pub mod net;
 pub mod queue;
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use crate::adapters::{Proj, Scope};
+use crate::obs;
 use crate::data::{metric_kind, task, Batcher, Example, HeadKind, Split};
 use crate::experiments::{ExpConfig, Pipeline};
 use crate::linalg::RankRule;
@@ -126,6 +128,39 @@ impl RouterStats {
     }
 }
 
+/// Registry handles for the router/bank hot path, resolved once so
+/// per-batch updates cost one relaxed atomic op each.
+struct RouterMetrics {
+    batches: &'static obs::Counter,
+    batched_requests: &'static obs::Counter,
+    /// Sum of distinct tasks per batch — divide by `router.batches` for
+    /// mean batch occupancy.
+    occupancy_total: &'static obs::Counter,
+    assemble_ms: &'static obs::HistMetric,
+    execute_ms: &'static obs::HistMetric,
+    bank_hits: &'static obs::Counter,
+    bank_uploads: &'static obs::Counter,
+    bank_evictions: &'static obs::Counter,
+    bank_resident: &'static obs::Gauge,
+    bank_pinned: &'static obs::Gauge,
+}
+
+fn router_metrics() -> &'static RouterMetrics {
+    static M: OnceLock<RouterMetrics> = OnceLock::new();
+    M.get_or_init(|| RouterMetrics {
+        batches: obs::counter("router.batches"),
+        batched_requests: obs::counter("router.batched_requests"),
+        occupancy_total: obs::counter("router.occupancy_total"),
+        assemble_ms: obs::histogram("router.assemble_ms"),
+        execute_ms: obs::histogram("router.execute_ms"),
+        bank_hits: obs::counter("bank.hits"),
+        bank_uploads: obs::counter("bank.uploads"),
+        bank_evictions: obs::counter("bank.evictions"),
+        bank_resident: obs::gauge("bank.resident"),
+        bank_pinned: obs::gauge("bank.pinned"),
+    })
+}
+
 /// Backend-resident adapter states, keyed by task.
 ///
 /// Each slot holds one task's flat state vector and padded class mask,
@@ -198,6 +233,7 @@ impl AdapterBank {
         self.clock += 1;
         if let Some(i) = self.slot_of(task) {
             self.slots[i].last_used = self.clock;
+            router_metrics().bank_hits.inc();
             return Ok(Admission { slot: i, uploaded: false, evicted: false });
         }
         // Pick the destination before uploading anything, so the
@@ -221,16 +257,21 @@ impl AdapterBank {
             class_mask: bk.upload_f32(class_mask, &[class_mask.len()])?,
             last_used: self.clock,
         };
-        match victim {
+        let m = router_metrics();
+        m.bank_uploads.inc();
+        let adm = match victim {
             None => {
                 self.slots.push(slot);
-                Ok(Admission { slot: self.slots.len() - 1, uploaded: true, evicted: false })
+                Admission { slot: self.slots.len() - 1, uploaded: true, evicted: false }
             }
             Some(lru) => {
+                m.bank_evictions.inc();
                 self.slots[lru] = slot;
-                Ok(Admission { slot: lru, uploaded: true, evicted: true })
+                Admission { slot: lru, uploaded: true, evicted: true }
             }
-        }
+        };
+        m.bank_resident.set(self.slots.len() as i64);
+        Ok(adm)
     }
 
     /// Per-slot state buffers, index-aligned with slot ids (for
@@ -343,8 +384,10 @@ impl<'s, 'b> Router<'s, 'b> {
         let k = self.head_width;
         let t_wall = Instant::now();
         let mut results = Vec::new();
+        let m = router_metrics();
         while !queue.is_empty() {
             // --- batch assembly + bank admission --------------------------
+            let t_asm = Instant::now();
             let mut reqs: Vec<Request> = Vec::new();
             let mut row_slots: Vec<usize> = Vec::new();
             while reqs.len() < self.max_batch {
@@ -396,12 +439,22 @@ impl<'s, 'b> Router<'s, 'b> {
             slots_padded.resize(self.batcher.batch, slot0);
             let states = self.bank.states();
             let masks = self.bank.class_masks();
+            m.assemble_ms.record_ms(t_asm.elapsed().as_secs_f64() * 1e3);
             let t0 = Instant::now();
             let logits = self.session.forward_multi(&batch, &states, &masks, &slots_padded)?;
-            self.stats.infer_ms += t0.elapsed().as_secs_f64() * 1e3;
+            let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.stats.infer_ms += infer_ms;
             self.stats.batches += 1;
             self.stats.requests += reqs.len();
             self.stats.batched_requests += reqs.len();
+            m.execute_ms.record_ms(infer_ms);
+            m.batches.inc();
+            m.batched_requests.add(reqs.len() as u64);
+            let mut distinct = row_slots.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            m.occupancy_total.add(distinct.len() as u64);
+            m.bank_pinned.set(distinct.len() as i64);
             for (i, r) in reqs.into_iter().enumerate() {
                 results.push((r, logits[i * k..(i + 1) * k].to_vec()));
             }
@@ -493,6 +546,10 @@ pub struct ServeConfig {
     /// Adapter method to serve (`--method`): `qrlora` (default) or
     /// `lora` — both are tiny states over the same frozen backbone.
     pub method: String,
+    /// Write a final [`crate::obs`] metrics snapshot (pretty JSON) here
+    /// at exit (`--metrics-json`); `None` skips the write. The fleet
+    /// supervisor keeps this to itself — workers would race on one path.
+    pub metrics_json: Option<std::path::PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -508,6 +565,7 @@ impl Default for ServeConfig {
             reorder_window: 8,
             max_queue_depth: 256,
             method: "qrlora".to_string(),
+            metrics_json: None,
         }
     }
 }
@@ -536,6 +594,7 @@ impl ServeConfig {
             reorder_window: args.usize_or("reorder-window", d.reorder_window)?,
             max_queue_depth: args.usize_or("max-queue-depth", d.max_queue_depth)?,
             method: args.str_or("method", &d.method).to_string(),
+            metrics_json: args.get("metrics-json").map(std::path::PathBuf::from),
         })
     }
 }

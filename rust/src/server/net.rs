@@ -30,9 +30,26 @@
 //! | `internal_error`      | 500  | batch execution failed                    |
 //!
 //! A connection whose first line starts with an HTTP method gets a
-//! minimal HTTP/1.1 shim instead: `POST /infer` (body = one request
-//! object) and `GET /healthz`, one request per connection
-//! (`Connection: close`).
+//! minimal HTTP/1.1 shim instead — one request per connection
+//! (`Connection: close`): `POST /infer` (body = one request object),
+//! `GET /healthz` (liveness plus a registry snapshot: queue depth, bank
+//! occupancy, store generation, degraded flag), `GET /metrics`
+//! (Prometheus text format), `GET /metrics.json` (the same snapshot as
+//! JSON), and `GET /flight` (the flight-recorder ring as JSON). The
+//! shim has exactly one response shape, so every route — `/metrics`
+//! included — is served with an `application/json` content type;
+//! Prometheus scrapes by path, not content type.
+//!
+//! ## Observability
+//!
+//! Every admitted request gets a trace id ([`crate::obs::next_trace_id`],
+//! echoed as `"trace"` in success replies) and leaves
+//! admit → queue → execute → write spans in the [`crate::obs::flight`]
+//! recorder, so a chaos-killed worker dumps the in-flight requests'
+//! timelines. The same stages feed the `net.*` registry histograms
+//! ([`crate::obs`]): server-side p50/p99 are measured where shedding
+//! happens, not just at the soak client, and every error reply counts
+//! into `net.requests{code="…"}` by error name.
 //!
 //! ## Anatomy
 //!
@@ -62,7 +79,7 @@ use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -70,6 +87,7 @@ use super::queue::{AdmissionQueue, QueueConfig, Slotted};
 use super::{Request, Router, RouterStats, ServeConfig, ServeCore, SERVE_TASKS};
 use crate::data::{Batcher, Example, Label, Split};
 use crate::experiments::ExpConfig;
+use crate::obs::{self, flight, hist};
 use crate::util::faults;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -124,12 +142,17 @@ struct Shared {
 /// An admitted request waiting for the engine.
 struct Pending {
     conn: u64,
+    /// Flight-recorder trace id, assigned at admission.
+    trace: u64,
+    /// When admission started — the anchor for queue-wait and
+    /// whole-request latency.
+    admitted: Instant,
     /// The request's `id` field, echoed verbatim in the reply.
     wire_id: Json,
     task: String,
     example: Example,
     /// The owning connection's reply channel.
-    reply: Sender<(u16, String)>,
+    reply: Sender<Reply>,
 }
 
 impl Slotted for Pending {
@@ -143,12 +166,93 @@ impl Slotted for Pending {
 
 /// Reply-side bookkeeping for one in-flight batch row.
 struct Replier {
+    conn: u64,
+    trace: u64,
+    admitted: Instant,
     wire_id: Json,
     task: String,
-    reply: Sender<(u16, String)>,
+    reply: Sender<Reply>,
 }
 
+/// One reply on its way to a connection's writer thread.
+struct Reply {
+    code: u16,
+    body: String,
+    /// Trace id for the write-stage span; 0 for untraced replies
+    /// (errors, health/metrics responses).
+    trace: u64,
+    /// When the reply was enqueued — the write span's start.
+    queued: Instant,
+}
+
+impl Reply {
+    fn untraced(code: u16, body: String) -> Reply {
+        Reply { code, body, trace: 0, queued: Instant::now() }
+    }
+}
+
+/// Registry handles for the hot serving path, resolved once so every
+/// per-request update is a single relaxed atomic op.
+struct NetMetrics {
+    ok: &'static obs::Counter,
+    bad_request: &'static obs::Counter,
+    unknown_task: &'static obs::Counter,
+    not_found: &'static obs::Counter,
+    oversized: &'static obs::Counter,
+    queue_full: &'static obs::Counter,
+    adapter_unavailable: &'static obs::Counter,
+    shutting_down: &'static obs::Counter,
+    internal_error: &'static obs::Counter,
+    healthz: &'static obs::Counter,
+    queue_depth: &'static obs::Gauge,
+    reorder_pulls: &'static obs::Counter,
+    queue_wait_ms: &'static obs::HistMetric,
+    request_ms: &'static obs::HistMetric,
+    write_ms: &'static obs::HistMetric,
+}
+
+impl NetMetrics {
+    /// The `net.requests{code="…"}` counter for an error-reply name.
+    fn errors(&self, error: &str) -> &'static obs::Counter {
+        match error {
+            "bad_request" => self.bad_request,
+            "unknown_task" => self.unknown_task,
+            "not_found" => self.not_found,
+            "oversized" => self.oversized,
+            "queue_full" => self.queue_full,
+            "adapter_unavailable" => self.adapter_unavailable,
+            "shutting_down" => self.shutting_down,
+            _ => self.internal_error,
+        }
+    }
+}
+
+fn metrics() -> &'static NetMetrics {
+    static M: OnceLock<NetMetrics> = OnceLock::new();
+    M.get_or_init(|| NetMetrics {
+        ok: obs::counter("net.requests{code=\"ok\"}"),
+        bad_request: obs::counter("net.requests{code=\"bad_request\"}"),
+        unknown_task: obs::counter("net.requests{code=\"unknown_task\"}"),
+        not_found: obs::counter("net.requests{code=\"not_found\"}"),
+        oversized: obs::counter("net.requests{code=\"oversized\"}"),
+        queue_full: obs::counter("net.requests{code=\"queue_full\"}"),
+        adapter_unavailable: obs::counter("net.requests{code=\"adapter_unavailable\"}"),
+        shutting_down: obs::counter("net.requests{code=\"shutting_down\"}"),
+        internal_error: obs::counter("net.requests{code=\"internal_error\"}"),
+        healthz: obs::counter("net.healthz"),
+        queue_depth: obs::gauge("queue.depth"),
+        reorder_pulls: obs::counter("queue.reorder_pulls"),
+        queue_wait_ms: obs::histogram("net.queue_wait_ms"),
+        request_ms: obs::histogram("net.request_ms"),
+        write_ms: obs::histogram("net.write_ms"),
+    })
+}
+
+/// Every error reply in the front-end is built here, so this is also
+/// where the per-error-code `net.requests` counters increment — one
+/// site, no error path can forget its metric.
 fn error_body(id: &Json, error: &str, code: u16) -> String {
+    metrics().errors(error).inc();
     Json::obj(vec![
         ("id", id.clone()),
         ("error", Json::str(error)),
@@ -256,8 +360,9 @@ fn admit(
     shared: &Arc<Shared>,
     conn: u64,
     text: &str,
-    reply: &Sender<(u16, String)>,
+    reply: &Sender<Reply>,
 ) -> Option<(u16, String)> {
+    let t0 = Instant::now();
     let doc = match Json::parse(text) {
         Ok(d) => d,
         Err(_) => {
@@ -282,8 +387,11 @@ fn admit(
         shared.rejected.fetch_add(1, Ordering::SeqCst);
         return Some((400, error_body(&wire_id, "bad_request", 400)));
     };
+    let trace = obs::next_trace_id();
     let pending = Pending {
         conn,
+        trace,
+        admitted: t0,
         wire_id: wire_id.clone(),
         task: task.to_string(),
         example,
@@ -297,8 +405,20 @@ fn admit(
         shared.shed_queue_full.fetch_add(1, Ordering::SeqCst);
         return Some((503, error_body(&wire_id, "shutting_down", 503)));
     }
+    // The admit span lands *before* the push: once the request is
+    // visible in the queue, its timeline is already in the flight
+    // recorder, so a fault dump can never show an untraced request.
+    let admit_us = t0.elapsed().as_micros() as u64;
+    flight::record(
+        trace,
+        conn,
+        flight::STAGE_ADMIT,
+        obs::uptime_us().saturating_sub(admit_us),
+        admit_us,
+    );
     match q.push(pending) {
         Ok(()) => {
+            metrics().queue_depth.set(q.len() as i64);
             drop(q);
             shared.work.notify_one();
             None
@@ -356,7 +476,7 @@ fn handle_http(
     conn: u64,
     request_line: &str,
     reader: &mut BufReader<TcpStream>,
-    tx: &Sender<(u16, String)>,
+    tx: &Sender<Reply>,
 ) {
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("");
@@ -382,6 +502,7 @@ fn handle_http(
     let reply = match (method, path) {
         ("GET", "/healthz") => {
             shared.healthz.fetch_add(1, Ordering::SeqCst);
+            metrics().healthz.inc();
             let depth = shared.queue.lock().expect("net: queue lock poisoned").len();
             let registered: Vec<Json> = shared
                 .registered
@@ -390,14 +511,23 @@ fn handle_http(
                 .iter()
                 .map(|t| Json::str(t.as_str()))
                 .collect();
+            // The gauges read 0 when their subsystem hasn't registered
+            // yet (or obs is off) — health stays answerable regardless.
             let body = Json::obj(vec![
                 ("status", Json::str("ok")),
                 ("queue_depth", Json::num(depth as f64)),
                 ("served", Json::num(shared.served.load(Ordering::SeqCst) as f64)),
                 ("registered", Json::Arr(registered)),
+                ("bank_resident", Json::num(obs::gauge_value("bank.resident") as f64)),
+                ("bank_pinned", Json::num(obs::gauge_value("bank.pinned") as f64)),
+                ("store_generation", Json::num(obs::gauge_value("store.generation") as f64)),
+                ("degraded", Json::num(obs::gauge_value("store.degraded") as f64)),
             ]);
             Some((200, body.to_string()))
         }
+        ("GET", "/metrics") => Some((200, obs::snapshot().prometheus_text())),
+        ("GET", "/metrics.json") => Some((200, obs::snapshot().to_json().to_string())),
+        ("GET", "/flight") => Some((200, flight::dump_json("on-demand").to_string())),
         ("POST", "/infer") => {
             if oversized_header || content_length > MAX_LINE {
                 shared.rejected.fetch_add(1, Ordering::SeqCst);
@@ -415,7 +545,7 @@ fn handle_http(
         }
     };
     if let Some((code, body)) = reply {
-        let _ = tx.send((code, body));
+        let _ = tx.send(Reply::untraced(code, body));
     }
 }
 
@@ -425,7 +555,8 @@ fn handle_http(
 /// or once `done` is set and the channel is drained.
 fn writer_loop(
     mut stream: TcpStream,
-    rx: mpsc::Receiver<(u16, String)>,
+    conn: u64,
+    rx: mpsc::Receiver<Reply>,
     http: bool,
     shared: Arc<Shared>,
 ) {
@@ -437,10 +568,27 @@ fn writer_loop(
         };
         stream.write_all(payload.as_bytes()).is_ok() && stream.flush().is_ok()
     };
+    // Write-stage span + histogram, recorded at dequeue (before the
+    // bytes hit the socket) so the span is in the ring strictly before
+    // the client can observe the reply.
+    let note = |reply: &Reply| {
+        if reply.trace != 0 {
+            let wait_us = reply.queued.elapsed().as_micros() as u64;
+            flight::record(
+                reply.trace,
+                conn,
+                flight::STAGE_WRITE,
+                obs::uptime_us().saturating_sub(wait_us),
+                wait_us,
+            );
+            metrics().write_ms.record_ms(wait_us as f64 / 1e3);
+        }
+    };
     loop {
         match rx.recv_timeout(READ_POLL) {
-            Ok((code, body)) => {
-                if !write(&mut stream, code, &body) || http {
+            Ok(reply) => {
+                note(&reply);
+                if !write(&mut stream, reply.code, &reply.body) || http {
                     break; // dead peer, or HTTP's one-reply-per-connection
                 }
             }
@@ -448,8 +596,9 @@ fn writer_loop(
                 if shared.done.load(Ordering::SeqCst) {
                     // Final drain: a reply sent between our timeout and
                     // this check must still reach the wire.
-                    while let Ok((code, body)) = rx.try_recv() {
-                        if !write(&mut stream, code, &body) {
+                    while let Ok(reply) = rx.try_recv() {
+                        note(&reply);
+                        if !write(&mut stream, reply.code, &reply.body) {
                             break;
                         }
                     }
@@ -479,11 +628,11 @@ fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
     let Ok(write_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(stream);
     let first = read_line_capped(&mut reader, &shared.done);
-    let (tx, rx) = mpsc::channel::<(u16, String)>();
+    let (tx, rx) = mpsc::channel::<Reply>();
     let http = matches!(&first, Line::Ok(l) if is_http_request_line(l));
     {
         let shared2 = Arc::clone(&shared);
-        let writer = std::thread::spawn(move || writer_loop(write_half, rx, http, shared2));
+        let writer = std::thread::spawn(move || writer_loop(write_half, conn, rx, http, shared2));
         shared.writers.lock().expect("net: writers lock poisoned").push(writer);
     }
     if http {
@@ -501,12 +650,12 @@ fn handle_conn(shared: Arc<Shared>, stream: TcpStream) {
             Line::Eof => return,
             Line::TooLong => {
                 shared.rejected.fetch_add(1, Ordering::SeqCst);
-                let _ = tx.send((413, error_body(&Json::Null, "oversized", 413)));
+                let _ = tx.send(Reply::untraced(413, error_body(&Json::Null, "oversized", 413)));
             }
             Line::Ok(l) => {
                 if !l.trim().is_empty() {
                     if let Some((code, body)) = admit(&shared, conn, &l, &tx) {
-                        let _ = tx.send((code, body));
+                        let _ = tx.send(Reply::untraced(code, body));
                     }
                 }
             }
@@ -565,6 +714,7 @@ pub fn serve_listen(
     sc: &ServeConfig,
     addr: &str,
 ) -> anyhow::Result<RouterStats> {
+    flight::install_panic_hook();
     let listener = bind_with_retry(addr)?;
     let local = listener.local_addr()?;
     listener.set_nonblocking(true)?;
@@ -618,13 +768,13 @@ pub fn serve_listen(
         let shared2 = Arc::clone(&shared);
         std::thread::spawn(move || acceptor(shared2, listener))
     };
-    // Chaos seams: a wedged/killed engine with live connections.
-    faults::hang_point("net.engine");
-    faults::crash_point("net.engine");
+    let faults_on = faults::active();
 
+    let m = metrics();
     let t_start = Instant::now();
     let mut fill = vec![0usize; eff_batch + 1];
     let mut reloads = 0usize;
+    let mut pulls_seen = 0usize;
     let mut last_reload = Instant::now();
     while shared.served.load(Ordering::SeqCst) < sc.requests {
         // Generation-poll adapter hot-reload: a sibling's store publish
@@ -653,30 +803,55 @@ pub fn serve_listen(
                 }
             }
         }
-        let batch = {
+        // Chaos seams: a wedged/killed engine with live connections.
+        // Fired from inside the loop, once work is actually queued, so
+        // the flight-recorder dump the fault triggers holds the
+        // in-flight requests' admit spans.
+        if faults_on && !shared.queue.lock().map(|q| q.is_empty()).unwrap_or(true) {
+            faults::hang_point("net.engine");
+            faults::crash_point("net.engine");
+        }
+        let (batch, depth, pulls) = {
             let q = shared.queue.lock().expect("net: queue lock poisoned");
             let mut q = if q.is_empty() {
                 shared.work.wait_timeout(q, ENGINE_POLL).expect("net: queue lock poisoned").0
             } else {
                 q
             };
-            q.pop_batch(eff_batch)
+            let batch = q.pop_batch(eff_batch);
+            (batch, q.len(), q.reorder_pulls())
         };
         if batch.is_empty() {
             continue;
         }
+        m.queue_depth.set(depth as i64);
+        m.reorder_pulls.add(pulls.saturating_sub(pulls_seen) as u64);
+        pulls_seen = pulls;
         fill[batch.len()] += 1;
         let mut queue: VecDeque<Request> = VecDeque::new();
         let mut repliers: Vec<Replier> = Vec::with_capacity(batch.len());
         for (i, p) in batch.into_iter().enumerate() {
-            let Pending { conn: _, wire_id, task, example, reply } = p;
+            let Pending { conn, trace, admitted, wire_id, task, example, reply } = p;
+            let wait_us = admitted.elapsed().as_micros() as u64;
+            flight::record(
+                trace,
+                conn,
+                flight::STAGE_QUEUE,
+                obs::uptime_us().saturating_sub(wait_us),
+                wait_us,
+            );
+            m.queue_wait_ms.record_ms(wait_us as f64 / 1e3);
             queue.push_back(Request { id: i, task: task.clone(), example });
-            repliers.push(Replier { wire_id, task, reply });
+            repliers.push(Replier { conn, trace, admitted, wire_id, task, reply });
         }
+        let t_exec = Instant::now();
         match router.serve(&mut queue) {
             Ok(results) => {
+                let exec_us = t_exec.elapsed().as_micros() as u64;
+                let exec_start = obs::uptime_us().saturating_sub(exec_us);
                 for (req, logits) in results {
                     let r = &repliers[req.id];
+                    flight::record(r.trace, r.conn, flight::STAGE_EXECUTE, exec_start, exec_us);
                     // Truncate to the task's classes: the padded lanes
                     // are −∞, which JSON cannot carry, and clients only
                     // ever see real logits.
@@ -688,19 +863,31 @@ pub fn serve_listen(
                             "logits",
                             Json::arr_num(logits[..n.min(logits.len())].iter().map(|&x| x as f64)),
                         ),
+                        ("trace", Json::num(r.trace as f64)),
                     ])
                     .to_string();
+                    // Count before sending: a client that has its reply
+                    // in hand can scrape /metrics and see itself counted
+                    // (the metrics-scrape test relies on this ordering).
+                    m.ok.inc();
+                    m.request_ms.record_ms(r.admitted.elapsed().as_secs_f64() * 1e3);
                     // A reply to a vanished client still consumes budget
                     // — the inference ran; anything else wedges the
                     // server on client death.
-                    let _ = r.reply.send((200, body));
+                    let _ = r.reply.send(Reply {
+                        code: 200,
+                        body,
+                        trace: r.trace,
+                        queued: Instant::now(),
+                    });
                     shared.served.fetch_add(1, Ordering::SeqCst);
                 }
             }
             Err(e) => {
                 crate::warnln!("[serve] batch failed ({e:#}); replying internal_error");
                 for r in &repliers {
-                    let _ = r.reply.send((500, error_body(&r.wire_id, "internal_error", 500)));
+                    let body = error_body(&r.wire_id, "internal_error", 500);
+                    let _ = r.reply.send(Reply::untraced(500, body));
                 }
             }
         }
@@ -712,8 +899,10 @@ pub fn serve_listen(
     let leftovers = shared.queue.lock().expect("net: queue lock poisoned").drain();
     let drained = leftovers.len();
     for p in leftovers {
-        let _ = p.reply.send((503, error_body(&p.wire_id, "shutting_down", 503)));
+        let body = error_body(&p.wire_id, "shutting_down", 503);
+        let _ = p.reply.send(Reply::untraced(503, body));
     }
+    m.queue_depth.set(0);
     if acceptor_handle.join().is_err() {
         crate::warnln!("[serve] acceptor thread panicked");
     }
@@ -752,13 +941,6 @@ pub fn serve_listen(
 // ---------------------------------------------------------------------------
 // Soak load generator (the `soak` CLI subcommand and `serve_soak` bench).
 // ---------------------------------------------------------------------------
-
-/// Upper bounds (ms) of the fixed latency-histogram buckets; one final
-/// unbounded bucket follows. Fixed (not data-dependent) so histograms
-/// from different runs and workers are directly comparable.
-pub const HIST_BOUNDS_MS: &[f64] = &[
-    0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0,
-];
 
 /// One pre-serialized request and where it goes.
 struct Shot {
@@ -896,15 +1078,6 @@ fn run_lane(addr: &str, shots: Vec<Shot>) -> LaneReport {
     report
 }
 
-/// Nearest-rank percentile over an ascending-sorted slice.
-fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let idx = ((sorted.len() as f64 * q).ceil() as usize).saturating_sub(1);
-    sorted[idx.min(sorted.len() - 1)]
-}
-
 /// The soak load generator: sends exactly `requests` logical requests
 /// round-robin across `addrs` over `concurrency` persistent connections,
 /// retries sheds, and aggregates p50/p99/p999 latency, shed/error
@@ -967,12 +1140,14 @@ pub fn soak(
     }
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     lat.sort_by(|a, b| a.total_cmp(b));
-    let mut hist = vec![0usize; HIST_BOUNDS_MS.len() + 1];
+    // The shared fixed-bucket layout (obs::hist) — identical bounds on
+    // the client and the server side of every measurement, so this
+    // histogram merges losslessly with the `/metrics` ones.
+    let mut h = hist::Hist::new();
     for &ms in &lat {
-        let b = HIST_BOUNDS_MS.iter().position(|&ub| ms <= ub).unwrap_or(HIST_BOUNDS_MS.len());
-        hist[b] += 1;
+        h.record(ms);
     }
-    let hist_total: usize = hist.iter().sum();
+    let hist_total = h.total() as usize;
     anyhow::ensure!(
         hist_total == ok,
         "soak: latency histogram lost samples ({hist_total} of {ok})"
@@ -985,11 +1160,11 @@ pub fn soak(
         ("protocol_errors", Json::num(errors as f64)),
         ("wall_ms", Json::num(wall_ms)),
         ("rps", Json::num(rps)),
-        ("p50_ms", Json::num(percentile(&lat, 0.50))),
-        ("p99_ms", Json::num(percentile(&lat, 0.99))),
-        ("p999_ms", Json::num(percentile(&lat, 0.999))),
-        ("hist_bounds_ms", Json::arr_num(HIST_BOUNDS_MS.iter().copied())),
-        ("hist", Json::arr_usize(hist.iter())),
+        ("p50_ms", Json::num(hist::percentile(&lat, 0.50))),
+        ("p99_ms", Json::num(hist::percentile(&lat, 0.99))),
+        ("p999_ms", Json::num(hist::percentile(&lat, 0.999))),
+        ("hist_bounds_ms", Json::arr_num(hist::BOUNDS_MS.iter().copied())),
+        ("hist", Json::arr_num(h.counts.iter().map(|&c| c as f64))),
         ("addrs", Json::Arr(addrs.iter().map(|a| Json::str(a.as_str())).collect())),
     ]))
 }
@@ -1046,14 +1221,5 @@ mod tests {
         let stale = r#"{"id":4,"task":"sst2","logits":[0.5]}"#;
         assert!(matches!(classify(stale, &shot), Verdict::Error), "wrong id is a protocol error");
         assert!(matches!(classify("garbage", &shot), Verdict::Error));
-    }
-
-    #[test]
-    fn percentile_is_nearest_rank() {
-        let xs: Vec<f64> = (1..=100).map(f64::from).collect();
-        assert_eq!(percentile(&xs, 0.50), 50.0);
-        assert_eq!(percentile(&xs, 0.99), 99.0);
-        assert_eq!(percentile(&xs, 0.999), 100.0);
-        assert_eq!(percentile(&[], 0.5), 0.0);
     }
 }

@@ -62,6 +62,10 @@ struct Entry<T> {
 pub struct AdmissionQueue<T> {
     cfg: QueueConfig,
     entries: VecDeque<Entry<T>>,
+    /// Cumulative entries pulled forward past a skipped entry, across
+    /// every batch — a pure counter (no clocks), read by the engine for
+    /// the `queue.reorder_pulls` metric.
+    pulled: usize,
 }
 
 impl<T: Slotted> AdmissionQueue<T> {
@@ -73,12 +77,18 @@ impl<T: Slotted> AdmissionQueue<T> {
             max_distinct: cfg.max_distinct.max(1),
             ..cfg
         };
-        AdmissionQueue { cfg, entries: VecDeque::new() }
+        AdmissionQueue { cfg, entries: VecDeque::new(), pulled: 0 }
     }
 
     /// Current queue depth.
     pub fn len(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Cumulative count of reorder pulls: selections that jumped a
+    /// skipped entry, summed over every [`AdmissionQueue::pop_batch`].
+    pub fn reorder_pulls(&self) -> usize {
+        self.pulled
     }
 
     /// True when nothing is queued.
@@ -139,6 +149,7 @@ impl<T: Slotted> AdmissionQueue<T> {
                 selected.push(i);
                 if skipped_any {
                     worst += 1;
+                    self.pulled += 1;
                 }
             } else {
                 skipped_any = true;
@@ -285,6 +296,22 @@ mod tests {
         assert_eq!(seqs(&q.pop_batch(2)), vec![0, 2]);
         assert_eq!(seqs(&q.pop_batch(2)), vec![1], "spent window blocks further overtakes");
         assert_eq!(seqs(&q.pop_batch(2)), vec![3]);
+    }
+
+    #[test]
+    fn reorder_pulls_accumulate_across_batches() {
+        // [a, b, c, a] with 2 slots: the trailing a jumps the skipped c
+        // — exactly one pull; the follow-up FIFO pop adds none.
+        let mut q = q(4, 64, 2);
+        q.push(item(1, 0, "a")).unwrap();
+        q.push(item(2, 1, "b")).unwrap();
+        q.push(item(3, 2, "c")).unwrap();
+        q.push(item(4, 3, "a")).unwrap();
+        assert_eq!(q.reorder_pulls(), 0);
+        assert_eq!(seqs(&q.pop_batch(8)), vec![0, 1, 3]);
+        assert_eq!(q.reorder_pulls(), 1);
+        assert_eq!(seqs(&q.pop_batch(8)), vec![2]);
+        assert_eq!(q.reorder_pulls(), 1, "a plain FIFO pop adds no pulls");
     }
 
     #[test]

@@ -95,6 +95,7 @@ pub fn with_retry<T>(
                     )));
                 }
                 attempt += 1;
+                crate::obs::counter("store.retries").inc();
                 let pause = policy.backoff(what, attempt);
                 crate::warnln!(
                     "{what}: transient failure ({e:#}); retry {attempt}/{} in {pause:?}",

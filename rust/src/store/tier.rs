@@ -33,8 +33,15 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use super::format::{AdapterKey, AdapterRecord};
 use super::registry::Registry;
+use crate::obs::{self, flight};
 use crate::runtime::StateLayout;
 use crate::util::pool;
+
+/// Record one background (trace 0) flight span of `dur_ms` ending now.
+fn span_ms(stage: usize, dur_ms: f64) {
+    let dur_us = (dur_ms * 1e3).max(0.0) as u64;
+    flight::record(0, 0, stage, obs::uptime_us().saturating_sub(dur_us), dur_us);
+}
 
 /// Where a resolved adapter came from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,6 +128,9 @@ impl TieredAdapters {
         method: &str,
         seed: u64,
     ) -> TieredAdapters {
+        if let Some(reg) = &registry {
+            obs::gauge("store.generation").set(reg.generation() as i64);
+        }
         TieredAdapters {
             registry,
             manifest_fp,
@@ -158,6 +168,7 @@ impl TieredAdapters {
     pub fn mark_degraded(&mut self, dir: &std::path::Path) {
         self.registry = None;
         self.degraded_dir = Some(dir.to_path_buf());
+        obs::gauge("store.degraded").set(1);
     }
 
     /// Records still waiting for publish-back.
@@ -194,6 +205,7 @@ impl TieredAdapters {
             still = queued;
         }
         self.pending = still;
+        obs::gauge("store.pending_publishes").set(self.pending.len() as i64);
         flushed
     }
 
@@ -214,9 +226,11 @@ impl TieredAdapters {
         if let Some(dir) = self.degraded_dir.clone() {
             match Registry::open(&dir) {
                 Ok(reg) => {
+                    obs::gauge("store.generation").set(reg.generation() as i64);
                     self.registry = Some(reg);
                     self.degraded_dir = None;
                     self.rejected.clear();
+                    obs::gauge("store.degraded").set(0);
                     let flushed = self.flush_pending();
                     crate::warnln!(
                         "adapter store: {dir:?} reachable again; leaving degraded mode \
@@ -238,7 +252,9 @@ impl TieredAdapters {
         if on_disk == reg.generation() {
             return Ok(false);
         }
-        self.registry = Some(Registry::open(&dir)?);
+        let reg = Registry::open(&dir)?;
+        obs::gauge("store.generation").set(reg.generation() as i64);
+        self.registry = Some(reg);
         self.rejected.clear();
         self.flush_pending();
         Ok(true)
@@ -255,6 +271,7 @@ impl TieredAdapters {
     ) -> Option<&ResolvedAdapter> {
         if self.ram.contains_key(task) {
             self.stats.ram_hits += 1;
+            obs::counter("store.ram_hits").inc();
             return Some(&self.ram[task]);
         }
         let key = self.key(task);
@@ -264,13 +281,17 @@ impl TieredAdapters {
         let loaded = reg.load(&key);
         match self.validate(layout, loaded) {
             Ok(resolved) => {
-                self.stats.load_ms += t0.elapsed().as_secs_f64() * 1e3;
+                let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+                self.stats.load_ms += load_ms;
                 self.stats.disk_hits += 1;
+                obs::counter("store.disk_hits").inc();
+                span_ms(flight::STAGE_STORE_LOAD, load_ms);
                 self.ram.insert(task.to_string(), resolved);
                 Some(&self.ram[task])
             }
             Err(e) => {
                 self.stats.rejected += 1;
+                obs::counter("store.rejected").inc();
                 self.rejected.insert(task.to_string());
                 crate::warnln!("adapter store: record for {task:?} rejected ({e:#})");
                 None
@@ -308,6 +329,7 @@ impl TieredAdapters {
             // train-on-miss rather than panicking the server.
             let Some(loaded) = result else {
                 self.stats.rejected += 1;
+                obs::counter("store.rejected").inc();
                 self.rejected.insert(task.clone());
                 crate::warnln!("adapter store: prefetch of {task:?} never completed; will retrain");
                 continue;
@@ -315,10 +337,12 @@ impl TieredAdapters {
             match self.validate(layout, loaded) {
                 Ok(resolved) => {
                     self.stats.disk_hits += 1;
+                    obs::counter("store.disk_hits").inc();
                     self.ram.insert(task.clone(), resolved);
                 }
                 Err(e) => {
                     self.stats.rejected += 1;
+                    obs::counter("store.rejected").inc();
                     self.rejected.insert(task.clone());
                     crate::warnln!(
                         "adapter store: record for {task:?} rejected ({e:#}); \
@@ -327,7 +351,9 @@ impl TieredAdapters {
                 }
             }
         }
-        self.stats.load_ms += t0.elapsed().as_secs_f64() * 1e3;
+        let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.load_ms += load_ms;
+        span_ms(flight::STAGE_STORE_LOAD, load_ms);
     }
 
     /// Fingerprint-check a loaded record and unpack its state vector.
@@ -361,6 +387,7 @@ impl TieredAdapters {
         // source; only a repeat resolve counts as a RAM hit.)
         if self.ram.contains_key(task) {
             self.stats.ram_hits += 1;
+            obs::counter("store.ram_hits").inc();
             return Ok(&self.ram[task]);
         }
 
@@ -375,13 +402,17 @@ impl TieredAdapters {
                     let loaded = reg.load(&key);
                     match self.validate(layout, loaded) {
                         Ok(resolved) => {
-                            self.stats.load_ms += t0.elapsed().as_secs_f64() * 1e3;
+                            let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+                            self.stats.load_ms += load_ms;
                             self.stats.disk_hits += 1;
+                            obs::counter("store.disk_hits").inc();
+                            span_ms(flight::STAGE_STORE_LOAD, load_ms);
                             self.ram.insert(task.to_string(), resolved);
                             return Ok(&self.ram[task]);
                         }
                         Err(e) => {
                             self.stats.rejected += 1;
+                            obs::counter("store.rejected").inc();
                             self.rejected.insert(task.to_string());
                             crate::warnln!(
                                 "adapter store: record for {task:?} rejected ({e:#}); \
@@ -396,8 +427,11 @@ impl TieredAdapters {
         // Tier 3: train, then publish back.
         let t0 = std::time::Instant::now();
         let record = train(&key)?;
-        self.stats.train_ms += t0.elapsed().as_secs_f64() * 1e3;
+        let train_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.stats.train_ms += train_ms;
         self.stats.trained += 1;
+        obs::counter("store.trained").inc();
+        span_ms(flight::STAGE_STORE_TRAIN, train_ms);
         anyhow::ensure!(
             record.meta.key == key,
             "trainer returned a record for {}, expected {key}",
@@ -454,6 +488,7 @@ impl TieredAdapters {
         }
         if queue_record {
             self.pending.push(record);
+            obs::gauge("store.pending_publishes").set(self.pending.len() as i64);
         }
         self.ram.insert(task.to_string(), resolved);
         Ok(&self.ram[task])

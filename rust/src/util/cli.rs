@@ -134,6 +134,7 @@ pub const SERVE_FLAGS: &[&str] = &[
     "reorder-window",
     "max-queue-depth",
     "method",
+    "metrics-json",
 ];
 
 /// Flags the `soak` load-generator command accepts beyond the shared

@@ -75,9 +75,10 @@ pub const TRANSIENT_MARKER: &str = "(transient)";
 /// * `net.conn` — first accepted socket connection's reader thread
 ///   (hang = one wedged client connection; later connections must keep
 ///   flowing)
-/// * `net.engine` — socket serving engine, after the listener is bound
-///   and connections are being accepted (hang = accepting-but-dead
-///   server, crash = death mid-connection)
+/// * `net.engine` — socket serving engine loop, firing once work is
+///   queued (hang = accepting-but-dead server, crash = death with
+///   requests in flight — the flight-recorder dump must show their
+///   admit spans)
 pub const SITES: &[&str] = &[
     "store.open",
     "store.read",
@@ -265,6 +266,9 @@ pub fn crash_point(site: &str) {
     for f in p.faults.iter().filter(|f| f.site == site) {
         if f.action == Action::Crash && fires(f, p.seed, p.restarted, p.worker, true) {
             eprintln!("FAULT: injected crash at {site}");
+            // Post-mortem before the abort: the flight recorder's spans
+            // are this process's last words (abort skips Drop and hooks).
+            crate::obs::flight::dump_stderr(site);
             std::process::abort();
         }
     }
@@ -277,6 +281,9 @@ pub fn hang_point(site: &str) {
     for f in p.faults.iter().filter(|f| f.site == site) {
         if f.action == Action::Hang && fires(f, p.seed, p.restarted, p.worker, true) {
             eprintln!("FAULT: injected hang at {site}");
+            // A hung process will be SIGKILLed by its supervisor, so dump
+            // the in-flight spans now while stderr still flows.
+            crate::obs::flight::dump_stderr(site);
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }

@@ -1,8 +1,12 @@
 //! Leveled logging + wall-clock timing utilities (std-only).
 //!
-//! The level is process-global and set once by the CLI (`--log debug`).
+//! The level is process-global and set once by the CLI (`--log debug`,
+//! or its env twin `QRLORA_LOG` — see `main.rs` for the precedence).
 //! Logs go to stderr so stdout stays clean for machine-readable output
-//! (experiment tables, JSONL metrics).
+//! (experiment tables, JSONL metrics). Every line carries a monotonic
+//! `+{ms}ms` process-uptime offset (from [`crate::obs::uptime_ms`]) so
+//! log lines correlate with flight-recorder span timestamps without a
+//! wall clock.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
@@ -45,7 +49,7 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments) {
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
         };
-        eprintln!("[{tag}] {module}: {msg}");
+        eprintln!("[{tag} +{}ms] {module}: {msg}", crate::obs::uptime_ms());
     }
 }
 

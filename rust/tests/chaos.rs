@@ -13,7 +13,9 @@
 //! * a socket connection wedged by the `net.conn` hang → later
 //!   connections are still served and the budget completes,
 //! * a server killed mid-connection → the store verifies clean and a
-//!   warm respawn serves straight from it.
+//!   warm respawn serves straight from it,
+//! * an engine wedged with a request in flight → the flight recorder
+//!   dumps that request's spans to stderr before the process dies.
 //!
 //! Every scenario is seeded and env-driven — no `rand`, no timing
 //! dependence beyond generous supervision deadlines.
@@ -461,4 +463,39 @@ fn chaos_socket_kill_mid_connection_leaves_store_clean_and_restartable() {
     assert_has(&reply, "\"logits\"", "the respawned server must serve from the store");
     let all = warm.finish();
     assert_has(&all, "3/3 from store", "the respawn must warm-start, not retrain");
+}
+
+/// A worker whose engine wedges with a request in flight must leave a
+/// post-mortem: the `net.engine` hang fires only once work is queued, and
+/// the flight recorder dumps the in-flight request's spans (at least its
+/// `admit`) to stderr before the supervisor would SIGKILL it — the black
+/// box that says what the server was doing when it died.
+#[test]
+fn chaos_flight_recorder_dumps_in_flight_spans_on_engine_hang() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_dir("store_flight");
+    let store_s = store.display().to_string();
+
+    let server = NetServer::spawn(&cwd, Some("net.engine=hang"), &store_s, 2);
+
+    // One admitted request: it parks behind the engine (which hangs the
+    // moment the queue is non-empty), so no reply ever comes.
+    let mut stream = TcpStream::connect(&server.addr).expect("connect");
+    stream.write_all(req_line(0, "sst2").as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    stream.flush().unwrap();
+
+    // Give the engine loop a beat to see the queued work, fire the hang,
+    // and flush the dump, then play the supervisor and kill it.
+    std::thread::sleep(Duration::from_secs(1));
+    let all = server.kill();
+    assert_has(&all, "FAULT: injected hang at net.engine", "the fault must actually fire");
+    assert_has(&all, "FLIGHT_BEGIN reason=net.engine", "the dump must open with its reason");
+    assert_has(&all, "FLIGHT_END reason=net.engine", "the dump must close");
+    assert!(
+        all.lines().any(|l| l.starts_with("FLIGHT {") && l.contains("\"stage\":\"admit\"")),
+        "the dump must carry the in-flight request's admit span:\n{all}"
+    );
+    drop(stream);
 }

@@ -483,3 +483,119 @@ fn full_queue_sheds_with_explicit_queue_full_reply() {
         out.join("\n")
     );
 }
+
+/// One HTTP GET on its own connection (the shim serves one request per
+/// connection), returning (status line, body).
+fn http_get(addr: &str, path: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    stream
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes())
+        .unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let status = raw.lines().next().unwrap_or("").to_string();
+    let body = raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+/// The observability surface end to end against a live server: native
+/// replies carry nonzero trace ids, `/metrics.json` counters match what
+/// the client actually sent, the Prometheus text parses, `/flight` holds
+/// the admit→queue→execute→write span chain for every traced request,
+/// and `/healthz` is enriched from the registry — all mid-run, without
+/// consuming serving budget.
+#[test]
+fn metrics_scrape_and_trace_propagation_during_serving() {
+    let _g = SERIAL.lock().unwrap_or_else(|p| p.into_inner());
+    let cwd = shared_cwd();
+    let store = fresh_store("store_obs");
+    let store_s = store.display().to_string();
+
+    let cfg = budget_cfg();
+    let mut pipe = Pipeline::new(&cfg).unwrap();
+    let examples = dev_examples(&mut pipe);
+    let server = Server::spawn(&cwd, &store_s, &["--requests", "3"], None);
+
+    // Two served requests, replies in hand ⇒ their metrics and spans are
+    // already published (the engine counts before sending).
+    let mut client = Client::connect(&server.addr);
+    let mut traces = Vec::new();
+    for (id, t, ex) in examples.iter().take(2) {
+        let doc = client.request(&request_line(*id, t, ex));
+        let trace = doc.get("trace").and_then(Json::as_usize).unwrap_or(0);
+        assert!(trace > 0, "served replies must carry a nonzero trace id: {doc:?}");
+        traces.push(trace);
+    }
+    assert_ne!(traces[0], traces[1], "trace ids must be per-request unique");
+
+    let (status, body) = http_get(&server.addr, "/metrics.json");
+    assert!(status.contains("200 OK"), "{status}");
+    let snap = Json::parse(&body).unwrap();
+    let counters = snap.req("counters").unwrap();
+    assert_eq!(
+        counters.get("net.requests{code=\"ok\"}").and_then(Json::as_usize),
+        Some(2),
+        "ok counter must match the two served requests: {body}"
+    );
+    let hists = snap.req("hists").unwrap();
+    assert_eq!(
+        hists.get("net.request_ms").and_then(|h| h.get("count")).and_then(Json::as_usize),
+        Some(2),
+        "server-side latency histogram must hold both samples: {body}"
+    );
+
+    let (status, text) = http_get(&server.addr, "/metrics");
+    assert!(status.contains("200 OK"), "{status}");
+    assert!(
+        text.contains("qrlora_net_requests{code=\"ok\"} 2"),
+        "Prometheus text must carry the ok counter:\n{text}"
+    );
+    assert!(
+        text.contains("qrlora_net_request_ms_bucket"),
+        "Prometheus text must carry histogram buckets:\n{text}"
+    );
+
+    let (status, body) = http_get(&server.addr, "/flight");
+    assert!(status.contains("200 OK"), "{status}");
+    let flight = Json::parse(&body).unwrap();
+    assert_eq!(flight.get("reason").and_then(Json::as_str), Some("on-demand"));
+    let spans = flight.req("spans").unwrap().as_arr().unwrap().clone();
+    for trace in &traces {
+        let stages: Vec<String> = spans
+            .iter()
+            .filter(|s| s.get("trace").and_then(Json::as_usize) == Some(*trace))
+            .filter_map(|s| s.get("stage").and_then(Json::as_str).map(str::to_string))
+            .collect();
+        for want in ["admit", "queue", "execute", "write"] {
+            assert!(
+                stages.iter().any(|s| s == want),
+                "trace {trace} must have a {want:?} span, got {stages:?}"
+            );
+        }
+    }
+
+    let (status, body) = http_get(&server.addr, "/healthz");
+    assert!(status.contains("200 OK"), "{status}");
+    let health = Json::parse(&body).unwrap();
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    for field in ["bank_resident", "store_generation", "degraded"] {
+        assert!(
+            health.get(field).and_then(Json::as_f64).is_some(),
+            "healthz must carry registry-backed field {field:?}: {body}"
+        );
+    }
+
+    // None of the scrapes consumed budget: the third native request is
+    // still served, and the final report counts exactly three.
+    let (id, t, ex) = &examples[2];
+    let doc = client.request(&request_line(*id, t, ex));
+    assert!(doc.get("trace").and_then(Json::as_usize).unwrap_or(0) > traces[1]);
+    let out = server.finish();
+    let report = out
+        .iter()
+        .find_map(|l| l.strip_prefix("NET_REPORT "))
+        .expect("server must print NET_REPORT");
+    let report = Json::parse(report).unwrap();
+    assert_eq!(report.get("served").and_then(Json::as_usize), Some(3));
+}
